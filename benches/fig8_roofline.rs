@@ -1,0 +1,38 @@
+//! Figure 8: roofline analysis of FP16 / 2-bit / 1-bit-2:4 GEMM across
+//! problem sizes (decode N = batch, prefill N = batch×seq), on the paper's
+//! RTX 4090 device model.
+
+use stbllm::packed::roofline::{predicted_speedup, Kernel, ALL_KERNELS, RTX4090};
+use stbllm::report::Report;
+
+fn main() {
+    let shapes: Vec<(&str, u64, u64, u64)> = vec![
+        ("decode b=1", 4096, 4096, 1),
+        ("decode b=8", 4096, 4096, 8),
+        ("decode b=64", 4096, 4096, 64),
+        ("prefill 512", 4096, 4096, 512),
+        ("prefill 4096", 4096, 4096, 4096),
+        ("prefill 8192", 4096, 4096, 8192),
+        ("prefill 16384", 4096, 4096, 16384),
+    ];
+    let mut rep = Report::new(
+        "Figure 8 — roofline (RTX4090 model): attainable TFLOPS",
+        &["regime", "AI ours", "FP16", "2-bit", "ours(1b 2:4)", "speedup vs FP16", "vs 2-bit"],
+    );
+    for (name, m, k, n) in shapes {
+        let mut row = vec![
+            name.to_string(),
+            format!("{:.1}", Kernel::Sparse1Bit24.intensity(m, k, n)),
+        ];
+        for kern in ALL_KERNELS {
+            row.push(format!("{:.1}", kern.attainable_tflops(&RTX4090, m, k, n)));
+        }
+        row.push(format!("{:.2}x", predicted_speedup(Kernel::Fp16, &RTX4090, m, k, n)));
+        row.push(format!("{:.2}x", predicted_speedup(Kernel::Int2, &RTX4090, m, k, n)));
+        rep.row(row);
+    }
+    rep.print();
+    rep.save("fig8_roofline");
+    println!("\npaper: ours approaches the sparse-tensor-core roofline at large N (263 TFLOPS = 79.7% of peak at seq 8192);");
+    println!("memory-bound at small N where the 1.5-bit weights give the largest win.");
+}

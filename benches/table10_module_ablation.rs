@@ -1,0 +1,40 @@
+//! Table 10: module ablation — Quant-only (binarize, no N:M) vs
+//! Structure-only (N:M prune, keep FP values) vs the combined STBLLM,
+//! on all three corpora.
+
+use stbllm::coordinator::quantizer::{quant_only, structure_only};
+use stbllm::coordinator::Method;
+use stbllm::quant::NmRatio;
+use stbllm::report::bench::BenchCtx;
+use stbllm::report::{fmt_ppl, Report};
+
+fn main() {
+    let mut ctx = BenchCtx::new().expect("artifacts (run `make artifacts`)");
+    let models = ctx.subset(&["llama1-7b", "llama2-7b"], &["llama1-7b", "llama2-7b"]);
+    let nm = NmRatio::new(4, 8);
+    for model in &models {
+        let mut rep = Report::new(
+            &format!("Table 10 — module ablation, {model} @4:8"),
+            &["Dataset", "Quant-Only", "Structure-Only", "Ours"],
+        );
+        let variants: Vec<(&str, Method)> = vec![
+            ("Quant-Only", quant_only(nm)),
+            ("Structure-Only", structure_only(nm)),
+            ("Ours", Method::stbllm(nm)),
+        ];
+        let quants: Vec<_> =
+            variants.iter().map(|(_, m)| ctx.quantize(model, m, "c4s")).collect();
+        for ev in ["ptbs", "c4s", "wikitext2s"] {
+            let mut row = vec![ev.to_string()];
+            for q in &quants {
+                row.push(fmt_ppl(ctx.ppl(model, &q.weights, ev)));
+            }
+            eprintln!("[table10] {model} {ev}: {:?}", row);
+            rep.row(row);
+        }
+        rep.print();
+        rep.save(&format!("table10_module_{model}"));
+    }
+    println!("\npaper shape: each module alone is LESS lossy (quant-only 12.3, structure-only 8.1 vs ours 31.7 on wikitext2)");
+    println!("but only the combination reaches sub-1-bit storage — the ablation shows the cost decomposition.");
+}

@@ -1,0 +1,42 @@
+//! Table 13 / Figure 1: the motivation study — flip the signs of an
+//! increasing fraction of binarized weights (random vs salience-guided) and
+//! watch perplexity. Small non-salient flip ratios barely hurt ⇒ redundancy.
+
+use stbllm::coordinator::Method;
+use stbllm::eval::flip::flip_model;
+use stbllm::report::bench::BenchCtx;
+use stbllm::report::{fmt_ppl, Report};
+
+fn main() {
+    let mut ctx = BenchCtx::new().expect("artifacts (run `make artifacts`)");
+    let model = "llama1-7b";
+    // binarize first (BiLLM-style 1-bit model, as in the paper's experiment)
+    let q = ctx.quantize(model, &Method::BiLlm { nm: None }, "c4s");
+    let base = ctx.ppl(model, &q.weights, "wikitext2s");
+
+    let mut rep = Report::new(
+        "Table 13 / Fig 1 — sign-flip ratio vs wikitext2s ppl (1-bit model)",
+        &["Flip %", "random flips", "least-salient flips", "paper(random)"],
+    );
+    let paper: &[(f64, &str)] = &[
+        (0.01, "27.77"), (0.03, "34.05"), (0.05, "33.82"), (0.08, "39.17"),
+        (0.10, "54.45"), (0.13, "52.13"), (0.16, "62.71"), (0.18, "138.91"),
+    ];
+    rep.row(vec!["0.00".into(), fmt_ppl(base), fmt_ppl(base), "-".into()]);
+    for &(ratio, pref) in paper {
+        let rand = flip_model(&q.weights, ratio, false, 42);
+        let sal = flip_model(&q.weights, ratio, true, 42);
+        let pr = ctx.ppl(model, &rand, "wikitext2s");
+        let ps = ctx.ppl(model, &sal, "wikitext2s");
+        eprintln!("[flip] {ratio}: random={} salient-aware={}", fmt_ppl(pr), fmt_ppl(ps));
+        rep.row(vec![
+            format!("{:.2}", ratio * 100.0),
+            fmt_ppl(pr),
+            fmt_ppl(ps),
+            pref.to_string(),
+        ]);
+    }
+    rep.print();
+    rep.save("table13_fig1_flip");
+    println!("\npaper shape: ppl degrades slowly below ~5-10% flips, then accelerates; flipping least-salient hurts less");
+}

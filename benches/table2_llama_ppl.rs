@@ -1,0 +1,54 @@
+//! Table 2: Wikitext2-analogue perplexity of the LLaMA zoo under RTN / GPTQ /
+//! PB-LLM / BiLLM / BiLLM-N:M / STBLLM-N:M. Calibration on c4s, eval on
+//! wikitext2s — the paper's protocol. Paper reference values are printed
+//! alongside for shape comparison (absolute numbers differ: tiny models,
+//! synthetic corpora — see DESIGN.md §2).
+
+use stbllm::report::bench::{table2_methods, BenchCtx};
+use stbllm::report::{fmt_ppl, Report};
+
+const ALL: [&str; 7] =
+    ["llama1-7b", "llama1-13b", "llama1-30b", "llama1-65b", "llama2-7b", "llama2-13b", "llama3-8b"];
+const FAST: [&str; 2] = ["llama1-7b", "llama2-7b"];
+
+// paper Table 2 rows for LLaMA-1-7B (for the shape check column)
+fn paper_ref(label: &str) -> &'static str {
+    match label {
+        "FullPrecision" => "5.68",
+        "RTN-1bit" => "1.7e5",
+        "GPTQ-1bit" => "2.7e5",
+        "PB-LLM" => "102.36",
+        "BiLLM" => "35.04",
+        "BiLLM(6:8)" => "80.36",
+        "BiLLM(5:8)" => "126.99",
+        "BiLLM(4:8)" => "688.73",
+        "STBLLM(6:8)" => "15.03",
+        "STBLLM(5:8)" => "19.48",
+        "STBLLM(4:8)" => "31.72",
+        _ => "-",
+    }
+}
+
+fn main() {
+    let mut ctx = BenchCtx::new().expect("artifacts (run `make artifacts`)");
+    let models = ctx.subset(&ALL, &FAST);
+    let mut headers = vec!["Method".to_string(), "paper(L1-7B)".to_string()];
+    headers.extend(models.iter().map(|m| m.to_string()));
+    let mut rep = Report::new(
+        "Table 2 — Wikitext2s perplexity, LLaMA family (calib: c4s)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    for method in table2_methods() {
+        let label = method.label();
+        let mut row = vec![label.clone(), paper_ref(&label).to_string()];
+        for m in &models {
+            let t = std::time::Instant::now();
+            let ppl = ctx.cell(m, &method, "c4s", "wikitext2s");
+            eprintln!("[table2] {label} {m}: ppl={} ({:.1}s)", fmt_ppl(ppl), t.elapsed().as_secs_f64());
+            row.push(fmt_ppl(ppl));
+        }
+        rep.row(row);
+    }
+    rep.print();
+    rep.save("table2_llama_ppl");
+}

@@ -1,0 +1,56 @@
+//! Table 4: 7-task zero-shot accuracy under FullPrecision / BiLLM / STBLLM
+//! at 6:8 and 4:8. Tasks are the synthetic likelihood-ranked suite
+//! (chance rates match the paper's benchmarks; see eval::zeroshot).
+
+use stbllm::coordinator::Method;
+use stbllm::eval::zeroshot::{run_task, tasks7};
+use stbllm::quant::NmRatio;
+use stbllm::report::bench::BenchCtx;
+use stbllm::report::Report;
+
+fn main() {
+    let mut ctx = BenchCtx::new().expect("artifacts (run `make artifacts`)");
+    let models = ctx.subset(&["llama1-13b", "llama2-13b", "llama1-30b"], &["llama1-7b"]);
+    // item budget: zero-shot is native-forward bound
+    let scale = if ctx.full { 1.0 } else { 0.33 };
+
+    let mut headers: Vec<String> =
+        vec!["Model".into(), "Method".into()];
+    headers.extend(tasks7().iter().map(|t| t.name.to_string()));
+    headers.push("Mean".into());
+    let mut rep = Report::new(
+        "Table 4 — zero-shot accuracy (%), 7 synthetic tasks",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+
+    let methods: Vec<(String, Method)> = vec![
+        ("FullPrecision".into(), Method::FullPrecision),
+        ("BiLLM(6:8)".into(), Method::BiLlm { nm: Some(NmRatio::new(6, 8)) }),
+        ("BiLLM(4:8)".into(), Method::BiLlm { nm: Some(NmRatio::new(4, 8)) }),
+        ("STBLLM(6:8)".into(), Method::stbllm(NmRatio::new(6, 8))),
+        ("STBLLM(4:8)".into(), Method::stbllm(NmRatio::new(4, 8))),
+    ];
+
+    for model in &models {
+        let cfg = ctx.config(model);
+        for (label, method) in &methods {
+            let q = ctx.quantize(model, method, "c4s");
+            let mut row = vec![model.to_string(), label.clone()];
+            let mut accs = Vec::new();
+            for t in tasks7() {
+                let mut t = t.clone();
+                t.n_items = ((t.n_items as f64 * scale) as usize).max(10);
+                let acc = run_task(&cfg, &q.weights, &t);
+                eprintln!("[table4] {model} {label} {}: {acc:.1}%", t.name);
+                accs.push(acc);
+                row.push(format!("{acc:.2}"));
+            }
+            let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+            row.push(format!("{mean:.2}"));
+            rep.row(row);
+        }
+    }
+    rep.print();
+    rep.save("table4_zeroshot");
+    println!("\npaper shape (LLaMA-1-30B mean): FP 65.38 > STBLLM(6:8) 60.10 > STBLLM(4:8) 51.78 > BiLLM(6:8) 50.32 > BiLLM(4:8) 43.72");
+}

@@ -1,0 +1,29 @@
+//! Table 8: non-salient quantization strategy — BiLLM's Bell-shaped
+//! splitting vs our Non-salient-aware trisection, at 6:8.
+
+use stbllm::coordinator::quantizer::stbllm_with_nonsalient;
+use stbllm::quant::{NmRatio, NonSalientMode};
+use stbllm::report::bench::BenchCtx;
+use stbllm::report::{fmt_ppl, Report};
+
+fn main() {
+    let mut ctx = BenchCtx::new().expect("artifacts (run `make artifacts`)");
+    let models = ctx.subset(&["llama1-7b", "llama2-7b"], &["llama1-7b", "llama2-7b"]);
+    let mut rep = Report::new(
+        "Table 8 — quantization strategy ablation @6:8 (wikitext2s ppl)",
+        &["Model", "Bell-shaped", "Non-salient (ours)", "Plain (extra)"],
+    );
+    for model in &models {
+        let mut row = vec![model.to_string()];
+        for mode in [NonSalientMode::BellShaped, NonSalientMode::Trisection, NonSalientMode::Plain] {
+            let ppl =
+                ctx.cell(model, &stbllm_with_nonsalient(NmRatio::new(6, 8), mode), "c4s", "wikitext2s");
+            eprintln!("[table8] {model} {mode:?}: {}", fmt_ppl(ppl));
+            row.push(fmt_ppl(ppl));
+        }
+        rep.row(row);
+    }
+    rep.print();
+    rep.save("table8_quant_strategy");
+    println!("\npaper: Bell-shaped 80.35/50.25 vs Non-salient 15.03/13.06 — trisection wins on both models");
+}

@@ -1,0 +1,66 @@
+//! Ablation sweep example: one command that reproduces the paper's §4.4
+//! ablation axes on a single model — pruning metric (Table 5), allocation
+//! strategy (Table 6), non-salient quantizer (Table 8) and N:M ratio — and
+//! prints a combined summary.
+//!
+//! Run: `cargo run --release --example ablation_sweep [model]`
+
+use stbllm::coordinator::quantizer::{
+    stbllm_with_allocation, stbllm_with_metric, stbllm_with_nonsalient, stbllm_with_rearrange,
+};
+use stbllm::coordinator::{calibrate, quantize_model, Method};
+use stbllm::eval::perplexity::ppl_native;
+use stbllm::model::corpus;
+use stbllm::quant::{Allocation, Metric, NmRatio, NonSalientMode};
+use stbllm::report::{fmt_ppl, Report};
+use stbllm::runtime::Artifacts;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "llama1-7b".to_string());
+    let arts = Artifacts::load_default()?;
+    let cfg = arts.models[&model].config.clone();
+    let weights = arts.load_weights(&model)?;
+    let calib = calibrate(&cfg, &weights, "c4s", 512, 1234);
+    let toks = corpus::corpus_tokens("wikitext2s", 1161, 999);
+    let mut eval = |method: &Method| -> (f64, f64) {
+        let q = quantize_model(&cfg, &weights, method, Some(&calib), 1);
+        (ppl_native(&cfg, &q.weights, &toks), q.avg_bits)
+    };
+
+    let nm = NmRatio::new(4, 8);
+    let mut rep = Report::new(
+        &format!("Ablation sweep — {model} (wikitext2s ppl)"),
+        &["Axis", "Variant", "bits", "ppl"],
+    );
+
+    for metric in [Metric::Magnitude, Metric::Wanda, Metric::SparseGpt, Metric::Si] {
+        let (ppl, bits) = eval(&stbllm_with_metric(nm, metric));
+        rep.row(vec!["metric".into(), metric.name().into(), format!("{bits:.2}"), fmt_ppl(ppl)]);
+    }
+    for alloc in [Allocation::Uniform, Allocation::SinShape, Allocation::Ours] {
+        let (ppl, bits) = eval(&stbllm_with_allocation(nm, alloc));
+        rep.row(vec!["allocation".into(), alloc.name().into(), format!("{bits:.2}"), fmt_ppl(ppl)]);
+    }
+    for (name, mode) in [
+        ("Bell-shaped", NonSalientMode::BellShaped),
+        ("Trisection", NonSalientMode::Trisection),
+        ("Plain", NonSalientMode::Plain),
+    ] {
+        let (ppl, bits) = eval(&stbllm_with_nonsalient(nm, mode));
+        rep.row(vec!["non-salient".into(), name.into(), format!("{bits:.2}"), fmt_ppl(ppl)]);
+    }
+    {
+        let (ppl, bits) = eval(&stbllm_with_rearrange(nm));
+        rep.row(vec!["rearrange".into(), "on".into(), format!("{bits:.2}"), fmt_ppl(ppl)]);
+        let (ppl, bits) = eval(&Method::stbllm(nm));
+        rep.row(vec!["rearrange".into(), "off".into(), format!("{bits:.2}"), fmt_ppl(ppl)]);
+    }
+    for n in [2usize, 4, 5, 6] {
+        let r = if n == 2 { NmRatio::new(2, 4) } else { NmRatio::new(n, 8) };
+        let (ppl, bits) = eval(&Method::stbllm(r));
+        rep.row(vec!["N:M".into(), r.label(), format!("{bits:.2}"), fmt_ppl(ppl)]);
+    }
+    rep.print();
+    rep.save(&format!("ablation_sweep_{model}"));
+    Ok(())
+}

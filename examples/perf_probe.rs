@@ -1,0 +1,89 @@
+//! Perf probe — the §Perf measurement harness (EXPERIMENTS.md).
+//!
+//! Times the L3 hot-path kernels against their reference implementations in
+//! the same process/run, so machine contention cancels out of the ratios:
+//!   * matmul_bt (4-way unrolled) vs matmul_bt_naive (row-dot)
+//!   * packed 2:4 1-bit GEMM vs dense 2-bit GEMM vs f32
+//!   * end-to-end decode step (serving hot path)
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use stbllm::model::config::ModelConfig;
+use stbllm::model::transformer::DecodeState;
+use stbllm::model::ModelWeights;
+use stbllm::packed::{enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, Dense2Bit, Packed24};
+use stbllm::tensor::{matmul_bt, matmul_bt_naive, Mat};
+use stbllm::util::rng::Pcg32;
+use stbllm::util::timer::BenchStats;
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    println!("== perf probe (ratios are contention-invariant) ==");
+
+    // --- matmul_bt: the native-forward hot loop -------------------------
+    println!("\n[matmul_bt] C = A(BxK) @ W(NxK)^T");
+    for (m, k, n) in [(128usize, 256usize, 704usize), (128, 704, 256), (1, 256, 704)] {
+        let a = Mat::random(m, k, 1.0, &mut rng);
+        let b = Mat::random(n, k, 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let t_opt = BenchStats::measure(1, 7, || {
+            std::hint::black_box(matmul_bt(&a, &b));
+        });
+        let t_ref = BenchStats::measure(1, 7, || {
+            std::hint::black_box(matmul_bt_naive(&a, &b));
+        });
+        println!(
+            "  {m}x{k}x{n}: opt {:.2} GFLOP/s vs naive {:.2} GFLOP/s — {:.2}x",
+            flops / t_opt.min_s() / 1e9,
+            flops / t_ref.min_s() / 1e9,
+            t_ref.min_s() / t_opt.min_s()
+        );
+    }
+
+    // --- packed GEMM family ---------------------------------------------
+    println!("\n[packed gemm] y = x(SxK) @ W(NxK)^T, N=864 K=320");
+    let (n, k) = (864usize, 320usize);
+    let w = Mat::random(n, k, 0.05, &mut rng);
+    let (sb, alpha) = enforce_24(&w);
+    let packed = Packed24::pack(&sb, &alpha).unwrap();
+    let two = Dense2Bit::quantize(&w);
+    for s in [8usize, 128, 1024] {
+        let x = Mat::random(s, k, 1.0, &mut rng);
+        let flops = 2.0 * s as f64 * n as f64 * k as f64;
+        let t_f = BenchStats::measure(1, 5, || {
+            std::hint::black_box(gemm_f32(&x, &w));
+        });
+        let t_2 = BenchStats::measure(1, 5, || {
+            std::hint::black_box(gemm_2bit(&x, &two));
+        });
+        let t_p = BenchStats::measure(1, 5, || {
+            std::hint::black_box(packed_gemm(&x, &packed));
+        });
+        let t_v1 = BenchStats::measure(1, 5, || {
+            std::hint::black_box(packed_gemm_onthefly(&x, &packed));
+        });
+        println!(
+            "  seq {s}: ours {:.2} GFLOP/s-eq | vs v1 {:.2}x | vs 2bit {:.2}x | vs f32 {:.2}x",
+            flops / t_p.min_s() / 1e9,
+            t_v1.min_s() / t_p.min_s(),
+            t_2.min_s() / t_p.min_s(),
+            t_f.min_s() / t_p.min_s()
+        );
+    }
+
+    // --- decode step (serving hot path) ----------------------------------
+    println!("\n[decode] single-token step, llama1-7b synthetic weights");
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let weights = ModelWeights::synthetic(&cfg, 2);
+    let t = BenchStats::measure(2, 5, || {
+        let mut st = DecodeState::new(&cfg, 64);
+        for i in 0..32u8 {
+            std::hint::black_box(st.step(&cfg, &weights, i % 7));
+        }
+    });
+    println!(
+        "  32-token decode: {:.1} ms ({:.1} tok/s single-stream)",
+        t.min_s() * 1e3,
+        32.0 / t.min_s()
+    );
+}

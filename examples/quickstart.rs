@@ -1,0 +1,77 @@
+//! Quickstart — the end-to-end driver (DESIGN.md §"End-to-end validation").
+//!
+//! On a real (in-repo-trained) tiny LLaMA:
+//!   1. print the build-time training loss curve,
+//!   2. calibrate on c4s,
+//!   3. quantize with STBLLM 4:8 (≈0.55 bits) and the BiLLM 4:8 baseline,
+//!   4. evaluate perplexity through the PJRT AOT path (Pallas/JAX HLO
+//!      executed from Rust), falling back to the native forward if needed,
+//!   5. report the bits/ppl trade-off the paper's Table 2 row shows.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use stbllm::coordinator::{calibrate, quantize_model, Method};
+use stbllm::eval::perplexity::{ppl_native, ppl_pjrt};
+use stbllm::model::corpus;
+use stbllm::quant::NmRatio;
+use stbllm::report::fmt_ppl;
+use stbllm::runtime::{Artifacts, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "llama1-7b".to_string());
+    let arts = Artifacts::load_default()?;
+    let ma = &arts.models[&model];
+    let cfg = ma.config.clone();
+    println!("== STBLLM quickstart: {model} ({} params) ==", cfg.n_params());
+
+    // 1. the training loss curve recorded at build time
+    if !ma.loss_curve.is_empty() {
+        println!("\ntraining loss curve (build-time, python/compile/train.py):");
+        for (step, loss) in &ma.loss_curve {
+            println!("  step {:>4}: {:.4}", step, loss);
+        }
+    }
+
+    let weights = arts.load_weights(&model)?;
+
+    // 2. calibration
+    println!("\ncalibrating on c4s (512 tokens)...");
+    let calib = calibrate(&cfg, &weights, "c4s", 512, 1234);
+
+    // 3. quantize: STBLLM vs BiLLM at the same 4:8 sub-1-bit setting
+    let nm = NmRatio::new(4, 8);
+    let stb = quantize_model(&cfg, &weights, &Method::stbllm(nm), Some(&calib), 1);
+    println!(
+        "STBLLM(4:8): {:.3} bits/weight, r_salient {:.3}, {:.1}s",
+        stb.avg_bits, stb.r_salient, stb.seconds
+    );
+    let billm = quantize_model(&cfg, &weights, &Method::BiLlm { nm: Some(nm) }, Some(&calib), 1);
+    println!("BiLLM(4:8) : {:.3} bits/weight, {:.1}s", billm.avg_bits, billm.seconds);
+
+    // 4. evaluate through the AOT PJRT path
+    let toks = corpus::corpus_tokens("wikitext2s", 1161, 999);
+    let rt = Runtime::cpu(&arts.root).ok();
+    let ppl = |w: &stbllm::model::ModelWeights| -> f64 {
+        if let Some(rt) = &rt {
+            if let Ok(p) = ppl_pjrt(rt, &arts, &model, w, &toks) {
+                return p;
+            }
+        }
+        ppl_native(&cfg, w, &toks)
+    };
+    let p_fp = ppl(&weights);
+    let p_stb = ppl(&stb.weights);
+    let p_billm = ppl(&billm.weights);
+
+    // 5. the headline comparison
+    println!("\nwikitext2s perplexity ({}):", if rt.is_some() { "PJRT AOT path" } else { "native path" });
+    println!("  FullPrecision (32 bits): {}", fmt_ppl(p_fp));
+    println!("  STBLLM 4:8  ({:.2} bits): {}", stb.avg_bits, fmt_ppl(p_stb));
+    println!("  BiLLM  4:8  ({:.2} bits): {}", billm.avg_bits, fmt_ppl(p_billm));
+    println!(
+        "\npaper shape check: STBLLM < BiLLM at 0.55 bits — {} ({})",
+        if p_stb < p_billm { "REPRODUCED" } else { "NOT reproduced" },
+        format!("{} vs {}", fmt_ppl(p_stb), fmt_ppl(p_billm)),
+    );
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT driver: train the tiny model zoo, lower the compute graphs, emit artifacts.
+
+Runs ONCE at build time (``make artifacts``); Python is never on the request
+path. Everything the Rust runtime needs lands in ``artifacts/``:
+
+  artifacts/manifest.json            model configs + artifact index + loss curves
+  artifacts/weights/<preset>.bin     trained FP32 weights (custom STBW format)
+  artifacts/<entry>.hlo.txt          HLO *text* modules for the PJRT runtime
+
+HLO text — NOT ``.serialize()`` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1 (the
+version the Rust ``xla`` crate binds) rejects. The text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Lowered entry points:
+  layer_fwd_<preset>      one transformer block, dense FP weights as params.
+                          Rust loops this over layers for PPL eval; the same
+                          artifact serves *every* quantization method because
+                          a quantized layer is fed as its dense reconstruction.
+  layer_fwd_bin_<preset>  the structured-binary block: every projection runs
+                          through the L1 Pallas kernel (llama presets only;
+                          demonstrates the full three-layer composition).
+  lm_head_<preset>        final RMSNorm + tied-embedding logits.
+  nm_binary_gemm_MxKxN    standalone Pallas kernel at benchmark shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    PRESETS, ModelConfig, layer_fwd, binary_layer_fwd, lm_head, config_manifest,
+)
+from compile import train as trainlib
+
+GEMM_SHAPES = [(128, 128, 128), (128, 256, 704), (256, 320, 864)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)  # True: print large constants (RoPE tables); default elides them as {...}
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_layer_fwd(cfg: ModelConfig) -> str:
+    d, s = cfg.dim, cfg.seq_len
+    names = cfg.layer_weight_names()
+
+    def fn(x, ln1, ln2, *weights):
+        layer = {"ln1": ln1, "ln2": ln2, **dict(zip(names, weights))}
+        return (layer_fwd(cfg, x, layer),)
+
+    specs = [_spec(s, d), _spec(d), _spec(d)] + [
+        _spec(*cfg.layer_weight_shape(n)) for n in names
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_layer_fwd_bin(cfg: ModelConfig) -> str:
+    assert cfg.family in ("llama", "mistral")
+    d, s = cfg.dim, cfg.seq_len
+    names = cfg.layer_weight_names()
+
+    def fn(x, ln1, ln2, *packed):
+        sbs = dict(zip(names, packed[: len(names)]))
+        alphas = dict(zip(names, packed[len(names):]))
+        return (binary_layer_fwd(cfg, x, sbs, alphas, {"ln1": ln1, "ln2": ln2}),)
+
+    specs = [_spec(s, d), _spec(d), _spec(d)]
+    specs += [_spec(*cfg.layer_weight_shape(n)) for n in names]
+    specs += [_spec(cfg.layer_weight_shape(n)[0]) for n in names]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_lm_head(cfg: ModelConfig) -> str:
+    def fn(x, ln_f, embed):
+        return (lm_head(cfg, x, ln_f, embed),)
+
+    specs = [_spec(cfg.seq_len, cfg.dim), _spec(cfg.dim), _spec(cfg.vocab, cfg.dim)]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_gemm(m: int, k: int, n: int) -> str:
+    from compile.kernels.binary_gemm import nm_binary_gemm
+
+    def fn(x, sb, alpha):
+        return (nm_binary_gemm(x, sb, alpha),)
+
+    return to_hlo_text(jax.jit(fn).lower(_spec(m, k), _spec(n, k), _spec(n)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="STBLLM AOT artifact builder")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("STBLLM_STEPS", "450")))
+    ap.add_argument("--models", default="all", help="comma list of presets or 'all'")
+    ap.add_argument("--force", action="store_true", help="retrain even if weights exist")
+    args = ap.parse_args()
+
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(os.path.join(out, "weights"), exist_ok=True)
+    wanted = list(PRESETS) if args.models == "all" else args.models.split(",")
+
+    manifest = {"models": {}, "kernels": [], "head_dim": 32, "steps": args.steps}
+    mpath = os.path.join(out, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            try:
+                manifest.update(json.load(f))
+            except json.JSONDecodeError:
+                pass
+
+    for name in wanted:
+        cfg = PRESETS[name]
+        wfile = os.path.join(out, "weights", f"{name}.bin")
+        entry = manifest["models"].get(name, {})
+        if args.force or not os.path.exists(wfile):
+            print(f"training {name} ({cfg.n_params():,} params)")
+            params, curve = trainlib.train_model(cfg, steps=args.steps)
+            trainlib.save_weights(cfg, params, wfile)
+            entry["loss_curve"] = curve
+        entry.update(config_manifest(cfg))
+        entry["weights"] = f"weights/{name}.bin"
+
+        hfile = os.path.join(out, f"layer_fwd_{name}.hlo.txt")
+        if args.force or not os.path.exists(hfile):
+            print(f"lowering layer_fwd_{name}")
+            with open(hfile, "w") as f:
+                f.write(lower_layer_fwd(cfg))
+        entry["layer_fwd"] = f"layer_fwd_{name}.hlo.txt"
+
+        hfile = os.path.join(out, f"lm_head_{name}.hlo.txt")
+        if args.force or not os.path.exists(hfile):
+            print(f"lowering lm_head_{name}")
+            with open(hfile, "w") as f:
+                f.write(lower_lm_head(cfg))
+        entry["lm_head"] = f"lm_head_{name}.hlo.txt"
+
+        if cfg.family in ("llama", "mistral") and name in ("llama1-7b", "llama1-30b"):
+            hfile = os.path.join(out, f"layer_fwd_bin_{name}.hlo.txt")
+            if args.force or not os.path.exists(hfile):
+                print(f"lowering layer_fwd_bin_{name} (Pallas kernel path)")
+                with open(hfile, "w") as f:
+                    f.write(lower_layer_fwd_bin(cfg))
+            entry["layer_fwd_bin"] = f"layer_fwd_bin_{name}.hlo.txt"
+
+        manifest["models"][name] = entry
+
+    manifest["kernels"] = []
+    for (m, k, n) in GEMM_SHAPES:
+        kname = f"nm_binary_gemm_{m}x{k}x{n}"
+        hfile = os.path.join(out, f"{kname}.hlo.txt")
+        if args.force or not os.path.exists(hfile):
+            print(f"lowering {kname}")
+            with open(hfile, "w") as f:
+                f.write(lower_gemm(m, k, n))
+        manifest["kernels"].append({"name": kname, "m": m, "k": k, "n": n,
+                                    "file": f"{kname}.hlo.txt"})
+
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

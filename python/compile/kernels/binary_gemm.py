@@ -1,0 +1,126 @@
+"""Pallas kernel: N:M structured-binary GEMM (the paper's compute hot-spot).
+
+TPU re-think of the paper's CUDA 2:4 sparse-tensor-core kernel (Appendix C):
+on Ampere the win is *skipped MACs*; on TPU there is no sparse MXU, so the
+win is *bytes moved* — the structured-binary weights live in HBM at <1 bit
+per weight and are expanded to dense ±alpha tiles **in VMEM** right before
+hitting the MXU. The BlockSpec below expresses exactly that HBM→VMEM
+schedule: activations and weight tiles are streamed block-by-block; the
+per-channel scale is fused into the epilogue so no dequantized weight tensor
+ever exists in HBM.
+
+Two variants:
+  * ``nm_binary_gemm``          — y = x @ (alpha ⊙ sb)^T, K-tiled with a VMEM
+                                  accumulator (the production schedule).
+  * ``nm_binary_gemm_smallk``   — whole-K blocks, no accumulator; used when K
+                                  fits VMEM alongside the tiles (our configs).
+
+``interpret=True`` always: the CPU PJRT client cannot execute Mosaic
+custom-calls. Real-TPU performance is estimated analytically in
+EXPERIMENTS.md §Perf from the VMEM footprint and MXU utilization of these
+block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel_smallk(x_ref, sb_ref, alpha_ref, o_ref):
+    """Whole-K tile: o[bm, bn] = x[bm, K] @ sb[bn, K]^T * alpha[bn]."""
+    acc = jnp.dot(x_ref[...], sb_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc * alpha_ref[...][None, :]
+
+
+def _gemm_kernel_ktiled(x_ref, sb_ref, alpha_ref, o_ref, *, nk: int):
+    """K-tiled accumulation. Grid = (M/bm, N/bn, K/bk); o_ref is revisited
+    across the K dimension (innermost), so it doubles as the accumulator —
+    the standard Pallas matmul reduction schedule."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], sb_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = o_ref[...] * alpha_ref[...][None, :]
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of ``dim`` that is <= target (VMEM-friendly tiles)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def nm_binary_gemm(x, sb, alpha, *, bm: int = 128, bn: int = 128, bk: int = 256):
+    """y = x @ (alpha ⊙ sb)^T with sb ∈ {-1,0,+1}^(N,K), alpha ∈ R^N.
+
+    Block sizes are clamped to divisors of the problem dims; K is tiled when
+    it exceeds ``bk`` (VMEM budget), otherwise the small-K schedule is used.
+    """
+    m, k = x.shape
+    n, k2 = sb.shape
+    assert k == k2, f"K mismatch {k} vs {k2}"
+    assert alpha.shape == (n,)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    if k <= bk:
+        grid = (m // bm, n // bn)
+        return pl.pallas_call(
+            _gemm_kernel_smallk,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+                pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+                pl.BlockSpec((bn,), lambda i, j: (j,)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x, sb, alpha)
+    bk = _pick_block(k, bk)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel_ktiled, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, sb, alpha)
+
+
+def nm_binary_gemm_residual(x, sb_o, alpha_o, sb_r, alpha_r, **kw):
+    """Residual-approximated GEMM: two structured-binary passes summed.
+
+    The salient-column path of STBLLM (Eq. 4): W ≈ α_o B_o + α_r B_r. Each
+    pass reuses the same VMEM schedule; on real hardware the second pass hits
+    activations already resident in VMEM.
+    """
+    return nm_binary_gemm(x, sb_o, alpha_o, **kw) + nm_binary_gemm(
+        x, sb_r, alpha_r, **kw
+    )
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int) -> int:
+    """Analytic VMEM bytes for one grid step of the K-tiled schedule:
+    x tile + sb tile + alpha + output/accumulator tile (all f32 in interpret;
+    bf16 x + int8 sb on real TPU would halve/quarter this)."""
+    return 4 * (bm * bk + bn * bk + bn + bm * bn)

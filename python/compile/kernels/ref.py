@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package is asserted allclose against the function of the same name here
+(``python/tests/test_kernel.py``), and the Rust-side packed GEMM asserts
+against the same semantics (``rust/src/packed/gemm.rs`` unit tests mirror
+these formulas).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nm_binary_gemm_ref(x, sb, alpha):
+    """y = x @ (alpha ⊙ sb)^T.
+
+    Args:
+      x:     (B, K) f32 activations.
+      sb:    (N, K) f32 structured-binary weights: entries in {-1, 0, +1}
+             (sign ⊙ N:M mask — zeros are the pruned positions).
+      alpha: (N,) f32 per-output-channel scale.
+    Returns:
+      (B, N) f32.
+    """
+    return (x @ sb.T) * alpha[None, :]
+
+
+def nm_binary_gemm_residual_ref(x, sb_o, alpha_o, sb_r, alpha_r):
+    """Residual-approximated binary GEMM (Eq. 4 applied inside the matmul):
+    y = x @ (alpha_o ⊙ sb_o + alpha_r ⊙ sb_r)^T.
+    """
+    w = alpha_o[:, None] * sb_o + alpha_r[:, None] * sb_r
+    return x @ w.T
+
+
+def residual_binarize_ref(w):
+    """Two-stage residual binarization of a weight tile (Eq. 4).
+
+    Row-wise: alpha_o = mean(|w|) per row, B_o = sign(w);
+    residual r = w - alpha_o B_o; alpha_r = mean(|r|), B_r = sign(r).
+    Returns the reconstruction alpha_o*B_o + alpha_r*B_r.
+
+    sign(0) := +1 to match the paper's Eq. 2 and the Rust implementation.
+    """
+    sgn = lambda t: jnp.where(t >= 0, 1.0, -1.0)
+    a_o = jnp.mean(jnp.abs(w), axis=1, keepdims=True)
+    b_o = sgn(w)
+    r = w - a_o * b_o
+    a_r = jnp.mean(jnp.abs(r), axis=1, keepdims=True)
+    b_r = sgn(r)
+    return a_o * b_o + a_r * b_r

@@ -1,0 +1,46 @@
+"""Pallas kernel: row-wise residual binarization (STBLLM Eq. 4).
+
+Used on the salient-weight path. Each grid step owns a block of full rows
+(the alpha reductions are row-wise, so rows never split across tiles); the
+whole row fits VMEM for every config in this repo (K <= 1024 f32 = 4 KiB/row).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _residual_kernel(w_ref, o_ref):
+    w = w_ref[...]
+    sgn = lambda t: jnp.where(t >= 0, 1.0, -1.0)
+    a_o = jnp.mean(jnp.abs(w), axis=1, keepdims=True)
+    b_o = sgn(w)
+    r = w - a_o * b_o
+    a_r = jnp.mean(jnp.abs(r), axis=1, keepdims=True)
+    o_ref[...] = a_o * b_o + a_r * sgn(r)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def residual_binarize(w, *, bm: int = 128):
+    """Reconstruction alpha_o*sign(w) + alpha_r*sign(residual), row-wise."""
+    m, k = w.shape
+    bm = _pick_block(m, bm)
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(w)

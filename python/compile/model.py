@@ -1,0 +1,250 @@
+"""L2: JAX model zoo — tiny LLaMA / OPT / Mistral-style transformers.
+
+This is the build-time model definition. It is the single source of truth
+for model configurations (the Rust side reads ``artifacts/manifest.json``
+emitted by ``aot.py``), the training forward pass (``train.py``), and the
+AOT-lowered per-layer forward / LM-head computations executed by the Rust
+runtime through PJRT.
+
+Architecture families (scaled-down analogues of the paper's model zoo):
+  * ``llama``   — RMSNorm, RoPE, SwiGLU FFN, no biases  (LLaMA-1/2/3 stand-in)
+  * ``opt``     — learned positional embeddings, GELU FFN (OPT stand-in)
+  * ``mistral`` — llama arch + sliding-window causal attention (Mistral stand-in)
+
+All linear weights are stored (out, in); y = x @ W^T. Only these 2-D
+matrices are quantized by STBLLM (norms/embeddings stay FP, as in the paper,
+which binarizes the FFN + MHSA projection weights).
+
+The *binary* layer forward routes every projection through the Pallas
+``nm_binary_gemm`` kernel so that the lowered HLO contains the L1 kernel —
+the three-layer composition the Rust integration tests verify.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.binary_gemm import nm_binary_gemm
+
+HEAD_DIM = 32
+ROPE_THETA = 10000.0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str        # preset name, e.g. "llama1-7b" (paper-scale label)
+    family: str      # llama | opt | mistral
+    dim: int
+    n_layers: int
+    ffn_hidden: int
+    vocab: int = 256
+    seq_len: int = 128
+    window: int = 0      # sliding-window size (mistral); 0 = full causal
+    norm_eps: float = 1e-5
+    seed: int = 0
+
+    @property
+    def n_heads(self) -> int:
+        return self.dim // HEAD_DIM
+
+    def layer_weight_names(self) -> list[str]:
+        """2-D quantizable matrices, in canonical order."""
+        if self.family == "opt":
+            return ["wq", "wk", "wv", "wo", "w1", "w2"]
+        return ["wq", "wk", "wv", "wo", "w1", "w2", "w3"]
+
+    def layer_weight_shape(self, name: str) -> tuple[int, int]:
+        d, h = self.dim, self.ffn_hidden
+        return {
+            "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "w1": (h, d), "w2": (d, h), "w3": (h, d),
+        }[name]
+
+    def n_params(self) -> int:
+        per_layer = sum(
+            a * b for a, b in (self.layer_weight_shape(n) for n in self.layer_weight_names())
+        ) + 2 * self.dim
+        extra = self.vocab * self.dim + self.dim  # embedding + final norm
+        if self.family == "opt":
+            extra += self.seq_len * self.dim  # learned positions
+        return per_layer * self.n_layers + extra
+
+
+# Paper model zoo → tiny analogues. Larger paper models map to wider/deeper
+# tiny models so size-dependent trends (Tables 2-4) are exercised.
+PRESETS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        ModelConfig("llama1-7b", "llama", 128, 4, 352, seed=101),
+        ModelConfig("llama1-13b", "llama", 192, 6, 512, seed=102),
+        ModelConfig("llama1-30b", "llama", 256, 8, 704, seed=103),
+        ModelConfig("llama1-65b", "llama", 320, 10, 864, seed=104),
+        ModelConfig("llama2-7b", "llama", 128, 4, 384, seed=201),
+        ModelConfig("llama2-13b", "llama", 192, 6, 544, seed=202),
+        ModelConfig("llama3-8b", "llama", 160, 5, 448, seed=301),
+        ModelConfig("opt-1.3b", "opt", 128, 4, 512, seed=401),
+        ModelConfig("opt-2.7b", "opt", 160, 5, 640, seed=402),
+        ModelConfig("opt-6.7b", "opt", 192, 6, 768, seed=403),
+        ModelConfig("opt-30b", "opt", 256, 8, 1024, seed=404),
+        ModelConfig("mistral-7b", "mistral", 192, 6, 512, window=64, seed=501),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig) -> dict:
+    """Scaled-normal init (GPT-2 style 1/sqrt(dim) with depth scaling)."""
+    rng = np.random.default_rng(cfg.seed)
+    d = cfg.dim
+
+    def mat(shape, scale):
+        return jnp.asarray(rng.normal(0.0, scale, size=shape).astype(np.float32))
+
+    params: dict = {
+        "embed": mat((cfg.vocab, d), 0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    if cfg.family == "opt":
+        params["pos"] = mat((cfg.seq_len, d), 0.02)
+    proj_scale = 1.0 / np.sqrt(d)
+    out_scale = proj_scale / np.sqrt(2.0 * cfg.n_layers)
+    for _ in range(cfg.n_layers):
+        layer = {"ln1": jnp.ones((d,), jnp.float32), "ln2": jnp.ones((d,), jnp.float32)}
+        for nme in cfg.layer_weight_names():
+            shape = cfg.layer_weight_shape(nme)
+            scale = out_scale if nme in ("wo", "w2") else proj_scale
+            layer[nme] = mat(shape, scale)
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope_tables(seq_len: int):
+    """cos/sin tables, shape (seq, HEAD_DIM/2).
+
+    Computed in numpy at trace time so they lower as CONSTANTS. This is both
+    the right schedule (no per-call trig) and a necessary workaround: the
+    xla_extension 0.5.1 runtime behind the Rust `xla` crate miscompiles the
+    power(theta, iota) frequency chain (all frequencies collapse to the
+    first — verified by probe, see EXPERIMENTS.md §Perf L2).
+    """
+    pos = np.arange(seq_len, dtype=np.float32)[:, None]
+    inv = 1.0 / (ROPE_THETA ** (np.arange(0, HEAD_DIM, 2, dtype=np.float32) / HEAD_DIM))
+    ang = pos * inv[None, :]
+    return jnp.asarray(np.cos(ang)), jnp.asarray(np.sin(ang))
+
+
+def apply_rope(q, cos, sin):
+    """q: (S, H, HEAD_DIM); split-half rotation (matches Rust model/rope.rs)."""
+    h = HEAD_DIM // 2
+    q1, q2 = q[..., :h], q[..., h:]
+    c, s = cos[:, None, :], sin[:, None, :]
+    return jnp.concatenate([q1 * c - q2 * s, q1 * s + q2 * c], axis=-1)
+
+
+def causal_mask(seq: int, window: int):
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (j > i - window)
+    return jnp.where(m, 0.0, -1e9).astype(jnp.float32)
+
+
+def _attention(cfg: ModelConfig, x, q_w, k_w, v_w, o_w, matmul):
+    """matmul(x, w) computes x @ w^T — swapped for the binary path."""
+    s, d = x.shape
+    nh = cfg.n_heads
+    q = matmul(x, "wq", q_w).reshape(s, nh, HEAD_DIM)
+    k = matmul(x, "wk", k_w).reshape(s, nh, HEAD_DIM)
+    v = matmul(x, "wv", v_w).reshape(s, nh, HEAD_DIM)
+    if cfg.family != "opt":
+        cos, sin = rope_tables(s)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    att = jnp.einsum("shd,thd->hst", q, k) / np.sqrt(HEAD_DIM)
+    att = att + causal_mask(s, cfg.window)[None, :, :]
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("hst,thd->shd", att, v).reshape(s, d)
+    return matmul(out, "wo", o_w)
+
+
+def _ffn(cfg: ModelConfig, x, layer, matmul):
+    if cfg.family == "opt":
+        h = jax.nn.gelu(matmul(x, "w1", layer["w1"]))
+        return matmul(h, "w2", layer["w2"])
+    g = jax.nn.silu(matmul(x, "w1", layer["w1"]))
+    u = matmul(x, "w3", layer["w3"])
+    return matmul(g * u, "w2", layer["w2"])
+
+
+def layer_fwd(cfg: ModelConfig, x, layer, matmul=None):
+    """One pre-norm transformer block over x: (S, dim)."""
+    if matmul is None:
+        matmul = lambda t, _n, w: t @ w.T
+    h = x + _attention(
+        cfg, rmsnorm(x, layer["ln1"], cfg.norm_eps),
+        layer["wq"], layer["wk"], layer["wv"], layer["wo"], matmul,
+    )
+    return h + _ffn(cfg, rmsnorm(h, layer["ln2"], cfg.norm_eps), layer, matmul)
+
+
+def binary_layer_fwd(cfg: ModelConfig, x, layer_sb, layer_alpha, norms):
+    """Layer forward with every projection running through the Pallas
+    structured-binary GEMM. ``layer_sb[name]`` ∈ {-1,0,+1}^(out,in),
+    ``layer_alpha[name]`` ∈ R^out, ``norms`` = {"ln1", "ln2"}."""
+    matmul = lambda t, n, _w: nm_binary_gemm(t, layer_sb[n], layer_alpha[n])
+    layer = dict(layer_sb)  # names only; values routed via matmul closure
+    layer["ln1"], layer["ln2"] = norms["ln1"], norms["ln2"]
+    return layer_fwd(cfg, x, layer, matmul)
+
+
+def lm_head(cfg: ModelConfig, x, ln_f, embed):
+    """Final norm + tied-embedding projection to logits."""
+    return rmsnorm(x, ln_f, cfg.norm_eps) @ embed.T
+
+
+def model_fwd(cfg: ModelConfig, params: dict, tokens):
+    """tokens: (S,) int32 → logits (S, vocab)."""
+    x = params["embed"][tokens]
+    if cfg.family == "opt":
+        x = x + params["pos"][: tokens.shape[0]]
+    for layer in params["layers"]:
+        x = layer_fwd(cfg, x, layer)
+    return lm_head(cfg, x, params["ln_f"], params["embed"])
+
+
+def next_token_loss(cfg: ModelConfig, params: dict, tokens):
+    """Mean cross-entropy of next-token prediction over a (B, S) batch."""
+    def one(seq):
+        logits = model_fwd(cfg, params, seq[:-1])
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(lp, seq[1:, None], axis=-1))
+    return jnp.mean(jax.vmap(one)(tokens))
+
+
+def config_manifest(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["n_heads"] = cfg.n_heads
+    d["head_dim"] = HEAD_DIM
+    d["rope_theta"] = ROPE_THETA
+    d["layer_weights"] = {
+        n: list(cfg.layer_weight_shape(n)) for n in cfg.layer_weight_names()
+    }
+    d["n_params"] = cfg.n_params()
+    return d

@@ -1,0 +1,135 @@
+"""Deterministic PCG32 RNG + synthetic corpus generators.
+
+This module is the Python mirror of ``rust/src/util/rng.rs`` and
+``rust/src/model/corpus.rs``. The two implementations are *bit-identical*:
+all corpus construction uses only integer arithmetic on the PCG32 stream, so
+the Python build-time trainer and the Rust run-time evaluator see token
+streams drawn from exactly the same distribution (and, for equal seeds, the
+exact same bytes). This is what makes a perplexity measured in Rust
+commensurable with a loss curve trained in Python.
+
+Corpora (stand-ins for the paper's eval sets, see DESIGN.md §2):
+  * ``wikitext2s`` — order-2 Markov chain, 64-symbol alphabet, 4 successor
+    candidates per context with Zipf-ish integer weights. Clean, low-entropy
+    prose-like stream.
+  * ``c4s``       — order-1 Markov chain, 96 symbols, 8 candidates. Noisier
+    web-like stream with higher entropy.
+  * ``ptbs``      — order-2 Markov chain, 32 symbols, 3 candidates, with a
+    frequent sentence-terminator reset symbol. Short-sentence newswire-like.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MASK64 = (1 << 64) - 1
+MASK32 = (1 << 32) - 1
+PCG_MULT = 6364136223846793005
+
+
+class Pcg32:
+    """Minimal PCG32 (XSH-RR). Mirrors rust/src/util/rng.rs exactly."""
+
+    def __init__(self, seed: int, stream: int = 54):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + (seed & MASK64)) & MASK64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & MASK32
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & MASK32
+
+    def bounded(self, n: int) -> int:
+        """Uniform-ish integer in [0, n). Modulo bias is acceptable here."""
+        return self.next_u32() % n
+
+    def next_f32(self) -> float:
+        """Uniform float in [0, 1) with 24 bits of entropy."""
+        return (self.next_u32() >> 8) * (1.0 / float(1 << 24))
+
+    def normal(self) -> float:
+        """Approximate standard normal via sum of 12 uniforms (Irwin-Hall).
+
+        Matches the Rust implementation; used only for weight init styles
+        that never need cross-language determinism beyond distribution.
+        """
+        s = 0.0
+        for _ in range(12):
+            s += self.next_f32()
+        return s - 6.0
+
+
+@dataclass(frozen=True)
+class CorpusSpec:
+    name: str
+    seed: int
+    alphabet: int
+    order: int  # 1 or 2
+    candidates: int
+    reset_every: int  # 0 = never; else ~geometric sentence resets
+
+
+SPECS = {
+    "wikitext2s": CorpusSpec("wikitext2s", 11, 64, 2, 4, 0),
+    "c4s": CorpusSpec("c4s", 22, 96, 1, 8, 0),
+    "ptbs": CorpusSpec("ptbs", 33, 32, 2, 3, 24),
+}
+
+
+class Corpus:
+    """Markov-chain token stream over byte symbols [0, alphabet).
+
+    Transition tables and sampling are all-integer so the Rust port emits an
+    identical stream for the same spec.
+    """
+
+    def __init__(self, spec: CorpusSpec):
+        self.spec = spec
+        rng = Pcg32(spec.seed, stream=7)
+        a, k = spec.alphabet, spec.candidates
+        n_ctx = a * a if spec.order == 2 else a
+        # For each context: k candidate successors + integer Zipf weights
+        # w_i = 1000 // (i + 1); total = sum(w).
+        self.succ = []
+        self.weights = [1000 // (i + 1) for i in range(k)]
+        self.total_w = sum(self.weights)
+        for _ in range(n_ctx):
+            self.succ.append([rng.bounded(a) for _ in range(k)])
+
+    def generate(self, n: int, seed: int) -> list[int]:
+        """Generate ``n`` tokens with a sampling RNG independent of the table RNG."""
+        spec = self.spec
+        rng = Pcg32(seed, stream=13)
+        a = spec.alphabet
+        prev1 = rng.bounded(a)
+        prev2 = rng.bounded(a)
+        out = []
+        for step in range(n):
+            if spec.reset_every and rng.bounded(spec.reset_every) == 0:
+                # sentence reset: emit terminator symbol 0 and resample state
+                out.append(0)
+                prev1 = rng.bounded(a)
+                prev2 = rng.bounded(a)
+                continue
+            ctx = prev1 * a + prev2 if spec.order == 2 else prev2
+            r = rng.bounded(self.total_w)
+            acc = 0
+            nxt = self.succ[ctx][-1]
+            for cand, w in zip(self.succ[ctx], self.weights):
+                acc += w
+                if r < acc:
+                    nxt = cand
+                    break
+            out.append(nxt)
+            prev1, prev2 = prev2, nxt
+        return out
+
+
+def corpus_tokens(name: str, n: int, seed: int) -> list[int]:
+    """Convenience: build the named corpus and generate ``n`` tokens."""
+    return Corpus(SPECS[name]).generate(n, seed)

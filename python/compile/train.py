@@ -1,0 +1,159 @@
+"""Build-time pre-training of the tiny model zoo.
+
+The paper applies PTQ to *trained* checkpoints; quantization behaviour
+(salient columns, heavy-tailed weights, activation outliers) only emerges on
+trained weights, so we briefly train every preset on the synthetic corpus
+mix before quantizing. This runs once under ``make artifacts`` and the
+resulting weights are stored in ``artifacts/weights/`` for the Rust side.
+
+Hand-rolled Adam (optax is not available in this environment).
+
+Training data is prose-like wikitext2s plus a little ptbs; c4s stays fully
+out-of-domain. This mirrors the paper's in/out-of-domain spread (their PTB
+evals are far-OOD for LLaMA) and is what Tables 7/11 rely on.
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import rngcorpus
+from compile.model import ModelConfig, init_params, next_token_loss
+
+TRAIN_MIX = [("wikitext2s", 0.92), ("ptbs", 0.08)]
+# fixed training corpus size; batches resample it randomly each step (the
+# repetition is what lets tiny models escape the unigram plateau quickly)
+CORPUS_TOKENS = 100_000
+
+
+def _mixed_tokens(seed: int) -> np.ndarray:
+    parts = []
+    for name, frac in TRAIN_MIX:
+        parts.append(
+            np.array(rngcorpus.corpus_tokens(name, int(CORPUS_TOKENS * frac), seed), np.int32)
+        )
+    return np.concatenate(parts)
+
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_model(cfg: ModelConfig, steps: int, batch: int = 8, lr: float = 2e-3,
+                log_every: int = 50) -> tuple[dict, list[tuple[int, float]]]:
+    """Train ``cfg`` for ``steps``; returns (params, loss_curve).
+
+    Constant lr after a 20-step warmup: tiny byte-level models spend ~200
+    steps on a unigram plateau before context learning kicks in, and cosine
+    decay starves exactly that phase (measured — see EXPERIMENTS.md).
+    Batches are sampled with replacement from a fixed mixed corpus.
+    """
+    seq = cfg.seq_len
+    toks = _mixed_tokens(seed=cfg.seed)
+    params = init_params(cfg)
+
+    @jax.jit
+    def step_fn(params, opt, batch_toks, lr):
+        loss, grads = jax.value_and_grad(lambda p: next_token_loss(cfg, p, batch_toks))(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    opt = adam_init(params)
+    curve = []
+    t0 = time.time()
+    rng = np.random.default_rng(cfg.seed)
+    for s in range(steps):
+        idx = rng.integers(0, len(toks) - seq - 1, batch)
+        bt = jnp.asarray(np.stack([toks[i : i + seq + 1] for i in idx]))
+        cur_lr = lr * min(1.0, (s + 1) / 20)
+        params, opt, loss = step_fn(params, opt, bt, cur_lr)
+        if s % log_every == 0 or s == steps - 1:
+            curve.append((s, float(loss)))
+    dt = time.time() - t0
+    print(f"  [{cfg.name}] {steps} steps, final loss {curve[-1][1]:.4f}, {dt:.1f}s")
+    return params, curve
+
+
+# ---------------------------------------------------------------------------
+# Weight serialization: simple tagged binary format read by rust/src/model/io.rs
+#   magic "STBW" | u32 n_tensors | per tensor:
+#   u32 name_len | name bytes | u32 ndim | u32 dims... | f32 LE data
+# ---------------------------------------------------------------------------
+
+def _flatten_named(cfg: ModelConfig, params: dict) -> list[tuple[str, np.ndarray]]:
+    out = [("embed", params["embed"]), ("ln_f", params["ln_f"])]
+    if cfg.family == "opt":
+        out.append(("pos", params["pos"]))
+    for i, layer in enumerate(params["layers"]):
+        out.append((f"layers.{i}.ln1", layer["ln1"]))
+        out.append((f"layers.{i}.ln2", layer["ln2"]))
+        for n in cfg.layer_weight_names():
+            out.append((f"layers.{i}.{n}", layer[n]))
+    return [(n, np.asarray(t, np.float32)) for n, t in out]
+
+
+def save_weights(cfg: ModelConfig, params: dict, path: str) -> None:
+    tensors = _flatten_named(cfg, params)
+    with open(path, "wb") as f:
+        f.write(b"STBW")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, t in tensors:
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", t.ndim))
+            for d in t.shape:
+                f.write(struct.pack("<I", d))
+            f.write(t.astype("<f4").tobytes())
+
+
+def load_weights(path: str) -> dict[str, np.ndarray]:
+    tensors = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"STBW", "bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            (nd,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            cnt = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(f.read(4 * cnt), "<f4").reshape(dims)
+            tensors[name] = data
+    return tensors
+
+
+def params_from_named(cfg: ModelConfig, named: dict[str, np.ndarray]) -> dict:
+    params = {
+        "embed": jnp.asarray(named["embed"]),
+        "ln_f": jnp.asarray(named["ln_f"]),
+        "layers": [],
+    }
+    if cfg.family == "opt":
+        params["pos"] = jnp.asarray(named["pos"])
+    for i in range(cfg.n_layers):
+        layer = {
+            "ln1": jnp.asarray(named[f"layers.{i}.ln1"]),
+            "ln2": jnp.asarray(named[f"layers.{i}.ln2"]),
+        }
+        for n in cfg.layer_weight_names():
+            layer[n] = jnp.asarray(named[f"layers.{i}.{n}"])
+        params["layers"].append(layer)
+    return params

@@ -1,0 +1,53 @@
+"""AOT lowering tests: every artifact kind lowers to parseable HLO text."""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from compile.model import PRESETS
+from compile.aot import lower_layer_fwd, lower_layer_fwd_bin, lower_lm_head, lower_gemm
+
+
+def _check_hlo(text, min_params):
+    assert text.startswith("HloModule"), text[:80]
+    assert "ROOT" in text
+    assert text.count("parameter(") >= min_params
+
+
+def test_lower_layer_fwd_llama():
+    cfg = PRESETS["llama1-7b"]
+    _check_hlo(lower_layer_fwd(cfg), 3 + len(cfg.layer_weight_names()))
+
+
+def test_lower_layer_fwd_opt():
+    cfg = PRESETS["opt-1.3b"]
+    _check_hlo(lower_layer_fwd(cfg), 3 + len(cfg.layer_weight_names()))
+
+
+def test_lower_layer_fwd_mistral_sliding_window():
+    cfg = PRESETS["mistral-7b"]
+    _check_hlo(lower_layer_fwd(cfg), 10)
+
+
+def test_lower_layer_fwd_bin_contains_kernel_body():
+    cfg = PRESETS["llama1-7b"]
+    text = lower_layer_fwd_bin(cfg)
+    _check_hlo(text, 3 + 2 * len(cfg.layer_weight_names()))
+
+
+def test_lower_lm_head():
+    _check_hlo(lower_lm_head(PRESETS["llama1-7b"]), 3)
+
+
+def test_lower_gemm_shapes():
+    text = lower_gemm(16, 32, 24)
+    _check_hlo(text, 3)
+    assert "f32[16,32]" in text and "f32[24,32]" in text
+
+
+def test_hlo_text_has_32bit_friendly_header():
+    # the text parser reassigns ids; just ensure we did NOT emit a proto blob
+    text = lower_gemm(8, 8, 8)
+    assert "\x00" not in text

@@ -1,0 +1,74 @@
+"""Cross-language determinism lock for RNG + corpora.
+
+The known-answer vectors below are ALSO asserted by rust/src/util/rng.rs and
+rust/src/model/corpus.rs unit tests. If either side drifts, both test suites
+fail — guaranteeing the Python trainer and Rust evaluator share one data
+distribution (bit-identical streams for equal seeds).
+"""
+
+import numpy as np
+
+from compile.rngcorpus import Pcg32, Corpus, SPECS, corpus_tokens
+
+KAT_PCG_42_54 = [2707161783, 2068313097, 3122475824, 2211639955, 3215226955, 3421331566]
+KAT_BOUNDED_7_3 = [51, 8, 72, 30, 99, 67, 36, 35]
+KAT_WIKI = [17, 47, 15, 33, 62, 63, 36, 2, 32, 59, 49, 17]
+KAT_C4 = [55, 20, 82, 30, 37, 29, 31, 18, 38, 49, 95, 32]
+KAT_PTB = [8, 25, 27, 8, 29, 15, 23, 8, 20, 24, 2, 17]
+
+
+def test_pcg32_known_answers():
+    r = Pcg32(42, stream=54)
+    assert [r.next_u32() for _ in range(6)] == KAT_PCG_42_54
+
+
+def test_pcg32_bounded_known_answers():
+    r = Pcg32(7, stream=3)
+    assert [r.bounded(100) for _ in range(8)] == KAT_BOUNDED_7_3
+
+
+def test_corpus_known_answers():
+    assert corpus_tokens("wikitext2s", 12, 5) == KAT_WIKI
+    assert corpus_tokens("c4s", 12, 5) == KAT_C4
+    assert corpus_tokens("ptbs", 12, 5) == KAT_PTB
+
+
+def test_corpus_alphabet_bounds():
+    for name, spec in SPECS.items():
+        toks = corpus_tokens(name, 2000, 9)
+        assert min(toks) >= 0 and max(toks) < spec.alphabet, name
+
+
+def test_corpus_determinism_and_seed_sensitivity():
+    a = corpus_tokens("c4s", 256, 1)
+    b = corpus_tokens("c4s", 256, 1)
+    c = corpus_tokens("c4s", 256, 2)
+    assert a == b
+    assert a != c
+
+
+def test_corpora_have_distinct_distributions():
+    """Unigram histograms must differ enough that in/out-of-domain ppl gaps
+    exist (Tables 7/11 depend on this)."""
+    h = {}
+    for name in SPECS:
+        toks = corpus_tokens(name, 8000, 3)
+        hist = np.bincount(toks, minlength=256).astype(np.float64)
+        h[name] = hist / hist.sum()
+    def tv(a, b):
+        return 0.5 * np.abs(a - b).sum()
+    assert tv(h["wikitext2s"], h["c4s"]) > 0.2
+    assert tv(h["wikitext2s"], h["ptbs"]) > 0.2
+
+
+def test_ptbs_has_reset_symbol():
+    toks = corpus_tokens("ptbs", 4000, 4)
+    frac0 = toks.count(0) / len(toks)
+    assert frac0 > 0.02  # terminator appears regularly
+
+
+def test_pcg_float_range():
+    r = Pcg32(9, stream=1)
+    vals = [r.next_f32() for _ in range(1000)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert 0.4 < float(np.mean(vals)) < 0.6

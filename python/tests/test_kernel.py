@@ -1,0 +1,147 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, N:M patterns and block sizes; every case asserts
+allclose against ``ref.py``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.binary_gemm import (
+    nm_binary_gemm,
+    nm_binary_gemm_residual,
+    vmem_footprint_bytes,
+)
+from compile.kernels.residual import residual_binarize
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-5, 1e-4
+
+
+def make_nm_sb(rng, n, k, nn, mm):
+    """Random ±1 signs with an exact N:M mask per row-group of mm."""
+    signs = rng.choice([-1.0, 1.0], size=(n, k)).astype(np.float32)
+    mask = np.zeros((n, k), np.float32)
+    for i in range(n):
+        for g in range(0, k, mm):
+            width = min(mm, k - g)
+            keep = rng.choice(width, size=min(nn, width), replace=False)
+            mask[i, g + keep] = 1.0
+    return signs * mask
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 8, 33, 64]),
+    k=st.sampled_from([8, 32, 96, 256]),
+    n=st.sampled_from([8, 24, 64]),
+    nm=st.sampled_from([(2, 4), (4, 8), (6, 8), (5, 8)]),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_matches_ref_hypothesis(m, k, n, nm, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    sb = make_nm_sb(rng, n, k, *nm)
+    alpha = np.abs(rng.normal(size=(n,))).astype(np.float32)
+    got = nm_binary_gemm(jnp.asarray(x), jnp.asarray(sb), jnp.asarray(alpha))
+    want = ref.nm_binary_gemm_ref(x, sb, alpha)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 16), (16, 32, 32), (128, 128, 64), (64, 64, 256)])
+def test_gemm_block_sizes_agree(bm, bn, bk):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 128)).astype(np.float32)
+    sb = make_nm_sb(rng, 96, 128, 4, 8)
+    alpha = np.abs(rng.normal(size=(96,))).astype(np.float32)
+    got = nm_binary_gemm(jnp.asarray(x), jnp.asarray(sb), jnp.asarray(alpha), bm=bm, bn=bn, bk=bk)
+    want = ref.nm_binary_gemm_ref(x, sb, alpha)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_gemm_ktiled_and_smallk_paths_agree():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(32, 512)).astype(np.float32)
+    sb = make_nm_sb(rng, 64, 512, 2, 4)
+    alpha = np.abs(rng.normal(size=(64,))).astype(np.float32)
+    kt = nm_binary_gemm(jnp.asarray(x), jnp.asarray(sb), jnp.asarray(alpha), bk=128)
+    sk = nm_binary_gemm(jnp.asarray(x), jnp.asarray(sb), jnp.asarray(alpha), bk=1024)
+    np.testing.assert_allclose(kt, sk, rtol=RTOL, atol=ATOL)
+
+
+def test_gemm_zero_alpha_zeroes_channel():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(16, 32)).astype(np.float32)
+    sb = make_nm_sb(rng, 8, 32, 4, 8)
+    alpha = np.ones((8,), np.float32)
+    alpha[3] = 0.0
+    y = np.asarray(nm_binary_gemm(jnp.asarray(x), jnp.asarray(sb), jnp.asarray(alpha)))
+    assert np.all(y[:, 3] == 0.0)
+    assert np.any(y[:, 0] != 0.0)
+
+
+def test_gemm_fully_pruned_rows_are_zero():
+    x = np.ones((4, 16), np.float32)
+    sb = np.zeros((6, 16), np.float32)  # 0:M "mask"
+    alpha = np.ones((6,), np.float32)
+    y = np.asarray(nm_binary_gemm(jnp.asarray(x), jnp.asarray(sb), jnp.asarray(alpha)))
+    assert np.all(y == 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([4, 16, 48]),
+    k=st.sampled_from([16, 64, 160]),
+    n=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_residual_gemm_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    sb_o = make_nm_sb(rng, n, k, 4, 8)
+    sb_r = make_nm_sb(rng, n, k, 4, 8)
+    a_o = np.abs(rng.normal(size=(n,))).astype(np.float32)
+    a_r = np.abs(rng.normal(size=(n,))).astype(np.float32)
+    got = nm_binary_gemm_residual(
+        jnp.asarray(x), jnp.asarray(sb_o), jnp.asarray(a_o),
+        jnp.asarray(sb_r), jnp.asarray(a_r),
+    )
+    want = ref.nm_binary_gemm_residual_ref(x, sb_o, a_o, sb_r, a_r)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([1, 7, 32, 128]),
+    k=st.sampled_from([8, 64, 352]),
+    seed=st.integers(0, 2**16),
+)
+def test_residual_binarize_matches_ref(m, k, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(m, k)).astype(np.float32)
+    got = residual_binarize(jnp.asarray(w))
+    want = ref.residual_binarize_ref(w)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_residual_binarize_reduces_error_vs_plain_sign():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(64, 128)).astype(np.float32)
+    recon = np.asarray(residual_binarize(jnp.asarray(w)))
+    a = np.mean(np.abs(w), axis=1, keepdims=True)
+    plain = a * np.where(w >= 0, 1.0, -1.0)
+    assert np.linalg.norm(w - recon) < np.linalg.norm(w - plain)
+
+
+def test_residual_binarize_sign_zero_is_positive():
+    w = np.zeros((2, 8), np.float32)
+    recon = np.asarray(residual_binarize(jnp.asarray(w)))
+    np.testing.assert_allclose(recon, 0.0)  # alpha = 0 ⇒ reconstruction 0
+
+
+def test_vmem_footprint_monotone():
+    assert vmem_footprint_bytes(128, 128, 256) > vmem_footprint_bytes(64, 64, 128)
+    # production tile must fit a 16 MiB VMEM with room for double-buffering
+    assert vmem_footprint_bytes(128, 128, 256) * 2 < 16 * 1024 * 1024

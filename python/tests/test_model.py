@@ -1,0 +1,136 @@
+"""L2 model tests: shapes, family variants, dense-vs-binary-path parity,
+training signal, loss behaviour."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    PRESETS, ModelConfig, init_params, layer_fwd, binary_layer_fwd, lm_head,
+    model_fwd, next_token_loss, rope_tables, apply_rope, causal_mask,
+    config_manifest, HEAD_DIM,
+)
+
+SMALL = {"llama": PRESETS["llama1-7b"], "opt": PRESETS["opt-1.3b"], "mistral": PRESETS["mistral-7b"]}
+
+
+@pytest.mark.parametrize("family", ["llama", "opt", "mistral"])
+def test_model_fwd_shapes(family):
+    cfg = SMALL[family]
+    params = init_params(cfg)
+    toks = jnp.arange(cfg.seq_len, dtype=jnp.int32) % cfg.vocab
+    logits = model_fwd(cfg, params, toks)
+    assert logits.shape == (cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("family", ["llama", "opt", "mistral"])
+def test_layer_fwd_shapes_and_finite(family):
+    cfg = SMALL[family]
+    params = init_params(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(cfg.seq_len, cfg.dim)).astype(np.float32))
+    y = layer_fwd(cfg, x, params["layers"][0])
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_binary_layer_matches_dense_when_sb_is_weight():
+    """With sb := W and alpha := 1 the Pallas path must reproduce the dense
+    layer exactly — locks kernel wiring (transposes, epilogue) in place."""
+    cfg = SMALL["llama"]
+    params = init_params(cfg)
+    layer = params["layers"][0]
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(cfg.seq_len, cfg.dim)).astype(np.float32))
+    sbs = {n: layer[n] for n in cfg.layer_weight_names()}
+    alphas = {n: jnp.ones((layer[n].shape[0],), jnp.float32) for n in cfg.layer_weight_names()}
+    dense = layer_fwd(cfg, x, layer)
+    binary = binary_layer_fwd(cfg, x, sbs, alphas, {"ln1": layer["ln1"], "ln2": layer["ln2"]})
+    np.testing.assert_allclose(np.asarray(binary), np.asarray(dense), rtol=1e-4, atol=1e-4)
+
+
+def test_causality():
+    """Changing a future token must not change past logits."""
+    cfg = SMALL["llama"]
+    params = init_params(cfg)
+    toks = jnp.arange(cfg.seq_len, dtype=jnp.int32) % cfg.vocab
+    l1 = model_fwd(cfg, params, toks)
+    toks2 = toks.at[-1].set((toks[-1] + 7) % cfg.vocab)
+    l2 = model_fwd(cfg, params, toks2)
+    np.testing.assert_allclose(np.asarray(l1[:-1]), np.asarray(l2[:-1]), rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_differs_from_full_causal():
+    cfg = SMALL["mistral"]
+    assert cfg.window > 0
+    full = ModelConfig(**{**cfg.__dict__, "name": "tmp", "window": 0})
+    params = init_params(cfg)
+    toks = jnp.arange(cfg.seq_len, dtype=jnp.int32) % cfg.vocab
+    a = np.asarray(model_fwd(cfg, params, toks))
+    b = np.asarray(model_fwd(full, params, toks))
+    # early positions identical (window covers whole history), late differ
+    np.testing.assert_allclose(a[: cfg.window - 1], b[: cfg.window - 1], rtol=1e-5, atol=1e-5)
+    assert np.max(np.abs(a[-1] - b[-1])) > 1e-6
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    cos, sin = rope_tables(16)
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.normal(size=(16, 2, HEAD_DIM)).astype(np.float32))
+    r = apply_rope(q, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(r), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1),
+        rtol=1e-5,
+    )
+    # position 0 is identity
+    np.testing.assert_allclose(np.asarray(r[0]), np.asarray(q[0]), rtol=1e-6, atol=1e-6)
+
+
+def test_causal_mask_window():
+    m = np.asarray(causal_mask(8, 3))
+    assert m[5, 5] == 0.0 and m[5, 4] == 0.0 and m[5, 3] == 0.0
+    assert m[5, 2] < -1e8 and m[5, 6] < -1e8
+
+
+def test_loss_decreases_with_training():
+    from compile import train as T
+    cfg = SMALL["llama"]
+    _, curve = T.train_model(cfg, steps=25, log_every=5)
+    assert curve[-1][1] < curve[0][1] - 0.3, curve
+
+
+def test_weight_save_load_roundtrip(tmp_path):
+    from compile import train as T
+    cfg = SMALL["opt"]
+    params = init_params(cfg)
+    p = str(tmp_path / "w.bin")
+    T.save_weights(cfg, params, p)
+    named = T.load_weights(p)
+    back = T.params_from_named(cfg, named)
+    np.testing.assert_array_equal(np.asarray(back["embed"]), np.asarray(params["embed"]))
+    np.testing.assert_array_equal(
+        np.asarray(back["layers"][1]["w1"]), np.asarray(params["layers"][1]["w1"])
+    )
+    toks = jnp.arange(cfg.seq_len, dtype=jnp.int32) % cfg.vocab
+    np.testing.assert_allclose(
+        np.asarray(model_fwd(cfg, back, toks)), np.asarray(model_fwd(cfg, params, toks)),
+        rtol=1e-6,
+    )
+
+
+def test_manifest_fields():
+    m = config_manifest(PRESETS["llama1-30b"])
+    assert m["dim"] == 256 and m["n_heads"] == 8 and m["head_dim"] == HEAD_DIM
+    assert m["layer_weights"]["w1"] == [704, 256]
+    assert m["n_params"] > 0
+
+
+def test_all_presets_consistent():
+    for cfg in PRESETS.values():
+        assert cfg.dim % HEAD_DIM == 0, cfg.name
+        for n in cfg.layer_weight_names():
+            o, i = cfg.layer_weight_shape(n)
+            assert o % 8 == 0 and i % 8 == 0, (cfg.name, n)  # N:M group alignment

@@ -1,0 +1,155 @@
+//! Calibration manager: streams calibration windows through the FP model,
+//! captures the four per-layer activation tap points, and accumulates the
+//! OBC Hessians (`H = 2 XᵀX`) + per-column activation L2 norms for every
+//! quantizable projection.
+//!
+//! Tap → projection mapping (see `model::transformer::LayerTaps`):
+//!   attn_in → wq, wk, wv;  wo_in → wo;  ffn_in → w1 (+w3);  w2_in → w2.
+
+use std::collections::BTreeMap;
+
+use crate::model::config::{Family, ModelConfig};
+use crate::model::corpus;
+use crate::model::transformer::model_fwd_with_taps;
+use crate::model::ModelWeights;
+use crate::quant::LayerCalib;
+use crate::tensor::{gram, Mat};
+
+/// Accumulated calibration for one projection input.
+struct Accum {
+    hessian: Mat,
+    sq_col_sums: Vec<f32>,
+}
+
+impl Accum {
+    fn new(k: usize) -> Accum {
+        Accum { hessian: Mat::zeros(k, k), sq_col_sums: vec![0.0; k] }
+    }
+
+    fn add(&mut self, x: &Mat) {
+        let mut g = gram(x);
+        g.scale(2.0);
+        self.hessian.add_assign(&g);
+        for t in 0..x.rows {
+            for (a, &v) in self.sq_col_sums.iter_mut().zip(x.row(t)) {
+                *a += v * v;
+            }
+        }
+    }
+
+    fn finish(self) -> LayerCalib {
+        LayerCalib {
+            hessian: Some(self.hessian),
+            x_col_norms: Some(self.sq_col_sums.iter().map(|s| s.sqrt()).collect()),
+        }
+    }
+}
+
+/// Calibration output: per layer, per weight-name `LayerCalib`.
+pub struct ModelCalib {
+    pub per_layer: Vec<BTreeMap<String, LayerCalib>>,
+    pub n_tokens: usize,
+    pub corpus: String,
+}
+
+/// Run calibration on `n_tokens` tokens of the named corpus.
+pub fn calibrate(
+    cfg: &ModelConfig,
+    weights: &ModelWeights,
+    corpus_name: &str,
+    n_tokens: usize,
+    seed: u64,
+) -> ModelCalib {
+    let win = cfg.seq_len;
+    let toks = corpus::corpus_tokens(corpus_name, n_tokens.max(win), seed);
+
+    // one accumulator per (layer, tap)
+    let mut attn_in = Vec::new();
+    let mut wo_in = Vec::new();
+    let mut ffn_in = Vec::new();
+    let mut w2_in = Vec::new();
+    for _ in 0..cfg.n_layers {
+        attn_in.push(Accum::new(cfg.dim));
+        wo_in.push(Accum::new(cfg.dim));
+        ffn_in.push(Accum::new(cfg.dim));
+        w2_in.push(Accum::new(cfg.ffn_hidden));
+    }
+
+    let mut i = 0usize;
+    let mut used = 0usize;
+    while i + win <= toks.len() {
+        let (_, taps) = model_fwd_with_taps(cfg, weights, &toks[i..i + win]);
+        for (l, t) in taps.into_iter().enumerate() {
+            attn_in[l].add(t.attn_in.as_ref().unwrap());
+            wo_in[l].add(t.wo_in.as_ref().unwrap());
+            ffn_in[l].add(t.ffn_in.as_ref().unwrap());
+            w2_in[l].add(t.w2_in.as_ref().unwrap());
+        }
+        used += win;
+        i += win;
+    }
+
+    let mut per_layer = Vec::with_capacity(cfg.n_layers);
+    for (((a, o), f), w2) in attn_in
+        .into_iter()
+        .zip(wo_in)
+        .zip(ffn_in)
+        .zip(w2_in)
+    {
+        let a = a.finish();
+        let o = o.finish();
+        let f = f.finish();
+        let w2 = w2.finish();
+        let mut map = BTreeMap::new();
+        for n in ["wq", "wk", "wv"] {
+            map.insert(n.to_string(), a.clone());
+        }
+        map.insert("wo".to_string(), o);
+        map.insert("w1".to_string(), f.clone());
+        if cfg.family != Family::Opt {
+            map.insert("w3".to_string(), f.clone());
+        }
+        map.insert("w2".to_string(), w2);
+        per_layer.push(map);
+    }
+    ModelCalib { per_layer, n_tokens: used, corpus: corpus_name.to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn calibration_shapes_and_positive_diag() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 1);
+        let calib = calibrate(&cfg, &w, "wikitext2s", 256, 3);
+        assert_eq!(calib.per_layer.len(), cfg.n_layers);
+        assert_eq!(calib.n_tokens, 256);
+        let l0 = &calib.per_layer[0];
+        for n in cfg.layer_weight_names() {
+            let c = &l0[n];
+            let h = c.hessian.as_ref().unwrap();
+            let want = cfg.layer_weight_shape(n).1;
+            assert_eq!(h.rows, want, "{n}");
+            for j in 0..h.rows {
+                assert!(h[(j, j)] >= 0.0);
+            }
+            assert_eq!(c.x_col_norms.as_ref().unwrap().len(), want);
+        }
+    }
+
+    #[test]
+    fn more_tokens_larger_hessian_trace() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 2);
+        let c1 = calibrate(&cfg, &w, "c4s", 128, 4);
+        let c2 = calibrate(&cfg, &w, "c4s", 384, 4);
+        let tr = |c: &ModelCalib| -> f32 {
+            let h = c.per_layer[0]["wq"].hessian.as_ref().unwrap();
+            (0..h.rows).map(|i| h[(i, i)]).sum()
+        };
+        assert!(tr(&c2) > tr(&c1));
+    }
+}

@@ -1,0 +1,13 @@
+//! The L3 coordinator: calibration manager, work scheduler, full-model PTQ
+//! driver, and the batched inference server. This module is the system glue
+//! that turns the per-matrix algorithms in [`crate::quant`] into a
+//! deployable compression + serving pipeline.
+
+pub mod calib;
+pub mod quantizer;
+pub mod scheduler;
+pub mod server;
+
+pub use calib::{calibrate, ModelCalib};
+pub use quantizer::{quantize_model, Method, QuantizedModel};
+pub use server::{BatchServer, Request, Response, ServerStats};

@@ -1,0 +1,280 @@
+//! Full-model PTQ driver: applies a quantization `Method` to every
+//! quantizable matrix of a model, with adaptive layer-wise N:M allocation
+//! (§3.3) and the per-matrix calibration gathered by `coordinator::calib`.
+
+use crate::coordinator::calib::ModelCalib;
+use crate::coordinator::scheduler;
+use crate::model::config::ModelConfig;
+use crate::model::ModelWeights;
+use crate::quant::allocate::{assign_layer_ratios, Allocation};
+use crate::quant::baselines::{awq, billm_opts, gptq, pbllm, rtn};
+use crate::quant::pipeline::{structured_binarize, StbOpts};
+use crate::quant::{LayerCalib, Metric, NmRatio, NonSalientMode};
+
+/// A quantization method, as named in the paper's tables.
+#[derive(Clone, Debug)]
+pub enum Method {
+    FullPrecision,
+    Rtn { bits: u32 },
+    Gptq { bits: u32, block: usize },
+    PbLlm { frac_salient: f64, hi_bits: u32 },
+    /// AWQ-style activation-aware scaling + grouped RTN (Fig. 4b baseline)
+    Awq { bits: u32 },
+    /// BiLLM; `nm = None` → vanilla ~1.09 bit, `Some` → sub-1-bit N:M variant
+    BiLlm { nm: Option<NmRatio> },
+    /// STBLLM with explicit options (the default via `Method::stbllm`)
+    Stbllm { opts: StbOpts, allocation: Allocation },
+}
+
+impl Method {
+    pub fn stbllm(nm: NmRatio) -> Method {
+        Method::Stbllm { opts: StbOpts::stbllm(nm), allocation: Allocation::Ours }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Method::FullPrecision => "FullPrecision".into(),
+            Method::Rtn { bits } => format!("RTN-{bits}bit"),
+            Method::Gptq { bits, .. } => format!("GPTQ-{bits}bit"),
+            Method::PbLlm { .. } => "PB-LLM".into(),
+            Method::Awq { bits } => format!("AWQ-{bits}bit"),
+            Method::BiLlm { nm: None } => "BiLLM".into(),
+            Method::BiLlm { nm: Some(r) } => format!("BiLLM({})", r.label()),
+            Method::Stbllm { opts, .. } => format!("STBLLM({})", opts.nm.label()),
+        }
+    }
+}
+
+/// Per-model quantization outcome.
+pub struct QuantizedModel {
+    pub weights: ModelWeights,
+    /// mean value-bits per weight across quantized matrices
+    pub avg_bits: f64,
+    /// mean salient fraction
+    pub r_salient: f64,
+    /// wall-clock seconds spent quantizing
+    pub seconds: f64,
+    /// per-layer assigned N:M (empty for non-N:M methods)
+    pub layer_ratios: Vec<NmRatio>,
+}
+
+/// Layer importance for allocation: L2 norm of the layer's weight matrices.
+pub fn layer_importance(w: &ModelWeights) -> Vec<f32> {
+    w.layers
+        .iter()
+        .map(|l| l.mats.values().map(|m| m.frob_norm().powi(2)).sum::<f32>().sqrt())
+        .collect()
+}
+
+/// Quantize a whole model. `calib = None` runs calibration-free (RTN etc.).
+pub fn quantize_model(
+    cfg: &ModelConfig,
+    weights: &ModelWeights,
+    method: &Method,
+    calib: Option<&ModelCalib>,
+    workers: usize,
+) -> QuantizedModel {
+    let t0 = std::time::Instant::now();
+    if matches!(method, Method::FullPrecision) {
+        return QuantizedModel {
+            weights: weights.clone(),
+            avg_bits: 32.0,
+            r_salient: 0.0,
+            seconds: 0.0,
+            layer_ratios: Vec::new(),
+        };
+    }
+
+    // layer-wise N:M allocation for STBLLM (other methods use uniform masks)
+    let layer_ratios: Vec<NmRatio> = match method {
+        Method::Stbllm { opts, allocation } => {
+            assign_layer_ratios(*allocation, opts.nm, &layer_importance(weights))
+        }
+        Method::BiLlm { nm: Some(r) } => vec![*r; cfg.n_layers],
+        _ => Vec::new(),
+    };
+
+    // flatten jobs: (layer, name, matrix, calib)
+    struct Job<'a> {
+        layer: usize,
+        name: String,
+        w: &'a crate::tensor::Mat,
+        calib: Option<&'a LayerCalib>,
+    }
+    let names = cfg.layer_weight_names();
+    let mut jobs = Vec::new();
+    for (li, lw) in weights.layers.iter().enumerate() {
+        for n in &names {
+            jobs.push(Job {
+                layer: li,
+                name: n.to_string(),
+                w: &lw.mats[*n],
+                calib: calib.map(|c| &c.per_layer[li][*n]),
+            });
+        }
+    }
+
+    let empty_calib = LayerCalib::none();
+    let results = scheduler::run_parallel(jobs, workers, |job| {
+        let lc = job.calib.unwrap_or(&empty_calib);
+        let (recon, bits, r_sal) = match method {
+            Method::FullPrecision => unreachable!(),
+            Method::Rtn { bits } => (rtn::rtn(job.w, *bits), *bits as f64, 0.0),
+            Method::Gptq { bits, block } => (
+                gptq::gptq(job.w, lc.hessian.as_ref(), *bits, *block, 0.01),
+                *bits as f64,
+                0.0,
+            ),
+            Method::PbLlm { frac_salient, hi_bits } => {
+                let (r, b) = pbllm::pbllm(job.w, *frac_salient, *hi_bits);
+                (r, b, *frac_salient)
+            }
+            Method::Awq { bits } => {
+                let ones = vec![1.0f32; job.w.cols];
+                let norms = lc.x_col_norms.as_deref().unwrap_or(&ones);
+                (awq::awq(job.w, norms, *bits, 0.5, 128), *bits as f64, 0.0)
+            }
+            Method::BiLlm { nm } => {
+                let mut opts = billm_opts(*nm);
+                if nm.is_some() {
+                    opts.nm = layer_ratios[job.layer];
+                }
+                let res = structured_binarize(job.w, lc, &opts);
+                (res.recon, res.avg_bits, res.r_salient)
+            }
+            Method::Stbllm { opts, .. } => {
+                let mut o = opts.clone();
+                o.nm = layer_ratios[job.layer];
+                let res = structured_binarize(job.w, lc, &o);
+                (res.recon, res.avg_bits, res.r_salient)
+            }
+        };
+        (job.layer, job.name, recon, bits, r_sal)
+    });
+
+    let mut out = weights.clone();
+    let mut bits_sum = 0.0;
+    let mut sal_sum = 0.0;
+    let n_results = results.len().max(1);
+    for (layer, name, recon, bits, r_sal) in results {
+        out.layers[layer].mats.insert(name, recon);
+        bits_sum += bits;
+        sal_sum += r_sal;
+    }
+    QuantizedModel {
+        weights: out,
+        avg_bits: bits_sum / n_results as f64,
+        r_salient: sal_sum / n_results as f64,
+        seconds: t0.elapsed().as_secs_f64(),
+        layer_ratios,
+    }
+}
+
+/// Convenience: the ablation variants of Table 5/6/8/10 as Method builders.
+pub fn stbllm_with_rearrange(nm: NmRatio) -> Method {
+    let mut opts = StbOpts::stbllm(nm);
+    opts.rearrange = true;
+    Method::Stbllm { opts, allocation: Allocation::Ours }
+}
+
+pub fn stbllm_with_metric(nm: NmRatio, metric: Metric) -> Method {
+    let mut opts = StbOpts::stbllm(nm);
+    opts.metric = metric;
+    Method::Stbllm { opts, allocation: Allocation::Ours }
+}
+
+pub fn stbllm_with_allocation(nm: NmRatio, allocation: Allocation) -> Method {
+    Method::Stbllm { opts: StbOpts::stbllm(nm), allocation }
+}
+
+pub fn stbllm_with_nonsalient(nm: NmRatio, mode: NonSalientMode) -> Method {
+    let mut opts = StbOpts::stbllm(nm);
+    opts.non_salient = mode;
+    Method::Stbllm { opts, allocation: Allocation::Ours }
+}
+
+pub fn stbllm_with_block(nm: NmRatio, block: usize) -> Method {
+    let mut opts = StbOpts::stbllm(nm);
+    opts.block_size = block;
+    Method::Stbllm { opts, allocation: Allocation::Ours }
+}
+
+/// Table 10 variants: quant-only (no N:M) and structure-only (no binarize).
+pub fn quant_only(nm: NmRatio) -> Method {
+    let mut opts = StbOpts::stbllm(nm);
+    opts.structure = false;
+    Method::Stbllm { opts, allocation: Allocation::Ours }
+}
+
+pub fn structure_only(nm: NmRatio) -> Method {
+    let mut opts = StbOpts::stbllm(nm);
+    opts.quantize = false;
+    Method::Stbllm { opts, allocation: Allocation::Ours }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::calib::calibrate;
+
+    fn setup() -> (ModelConfig, ModelWeights, ModelCalib) {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 1);
+        let calib = calibrate(&cfg, &w, "c4s", 256, 2);
+        (cfg, w, calib)
+    }
+
+    #[test]
+    fn stbllm_quantizes_all_matrices() {
+        let (cfg, w, calib) = setup();
+        let q = quantize_model(&cfg, &w, &Method::stbllm(NmRatio::new(4, 8)), Some(&calib), 1);
+        assert!(q.avg_bits < 0.65 && q.avg_bits > 0.4, "bits={}", q.avg_bits);
+        assert!(q.r_salient > 0.0 && q.r_salient < 0.2);
+        assert_eq!(q.layer_ratios.len(), cfg.n_layers);
+        // every matrix now has ~half zeros
+        for l in &q.weights.layers {
+            for m in l.mats.values() {
+                let zeros = m.data.iter().filter(|&&v| v == 0.0).count();
+                let frac = zeros as f64 / m.data.len() as f64;
+                assert!(frac > 0.3, "zeros frac {frac}");
+            }
+        }
+        // embeddings untouched
+        assert_eq!(q.weights.embed.data, w.embed.data);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(Method::stbllm(NmRatio::new(4, 8)).label(), "STBLLM(4:8)");
+        assert_eq!(Method::BiLlm { nm: None }.label(), "BiLLM");
+        assert_eq!(Method::Rtn { bits: 1 }.label(), "RTN-1bit");
+    }
+
+    #[test]
+    fn fp_is_identity() {
+        let (cfg, w, _) = setup();
+        let q = quantize_model(&cfg, &w, &Method::FullPrecision, None, 1);
+        assert_eq!(q.weights.layers[0].mats["wq"].data, w.layers[0].mats["wq"].data);
+    }
+
+    #[test]
+    fn rtn_works_without_calibration() {
+        let (cfg, w, _) = setup();
+        let q = quantize_model(&cfg, &w, &Method::Rtn { bits: 2 }, None, 1);
+        assert!((q.avg_bits - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stbllm_recon_better_than_billm_same_nm() {
+        let (cfg, w, calib) = setup();
+        let nm = NmRatio::new(4, 8);
+        let qs = quantize_model(&cfg, &w, &Method::stbllm(nm), Some(&calib), 1);
+        let qb = quantize_model(&cfg, &w, &Method::BiLlm { nm: Some(nm) }, Some(&calib), 1);
+        let err = |q: &QuantizedModel| -> f32 {
+            let a = &w.layers[0].mats["wq"];
+            let b = &q.weights.layers[0].mats["wq"];
+            a.sub(b).frob_norm()
+        };
+        assert!(err(&qs) <= err(&qb) * 1.1, "stb={} billm={}", err(&qs), err(&qb));
+    }
+}

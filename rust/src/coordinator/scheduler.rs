@@ -1,0 +1,78 @@
+//! Work scheduler: runs per-matrix quantization jobs across a small worker
+//! pool. Layer-parallel PTQ is safe because each job touches one weight
+//! matrix + read-only calibration. On the single-core CI machine this
+//! degrades gracefully to sequential execution; the structure is what a
+//! multi-socket deployment would use.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f` over `jobs` with `workers` threads, preserving input order in the
+/// result vector.
+pub fn run_parallel<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
+where
+    J: Send,
+    R: Send,
+    F: Fn(J) -> R + Sync,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(f).collect();
+    }
+    let jobs: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let job = jobs[i].lock().unwrap().take().unwrap();
+                let r = f(job);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+/// Default worker count: leave one core for the coordinator itself.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get().saturating_sub(1).max(1)).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let jobs: Vec<usize> = (0..37).collect();
+        let out = run_parallel(jobs, 4, |j| j * 2);
+        assert_eq!(out, (0..37).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_path() {
+        let out = run_parallel(vec![1, 2, 3], 1, |j| j + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<i32> = run_parallel(Vec::<i32>::new(), 4, |j| j);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = run_parallel(vec![5], 16, |j| j);
+        assert_eq!(out, vec![5]);
+    }
+}

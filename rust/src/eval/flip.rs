@@ -1,0 +1,99 @@
+//! Sign-flip motivation study (paper Fig. 1, Table 13, Algorithm 3).
+//!
+//! Flip the signs of a fraction of (binarized) weights — either randomly or
+//! the least-significant ones under a score matrix — and measure perplexity.
+//! The paper's observation: small flip ratios of non-salient weights barely
+//! hurt, evidencing redundancy in 1-bit LLMs.
+
+use crate::model::ModelWeights;
+use crate::tensor::Mat;
+use crate::util::rng::Pcg32;
+
+/// Flip the signs of `ratio` of the elements of `w` (Algorithm 3).
+/// When `scores` is given, the elements with the LOWEST scores are flipped
+/// (the non-salient ones); otherwise a random subset.
+pub fn flip_signs(w: &Mat, ratio: f64, scores: Option<&Mat>, rng: &mut Pcg32) -> Mat {
+    let n = w.data.len();
+    let k = ((n as f64) * ratio).round() as usize;
+    let mut out = w.clone();
+    if k == 0 {
+        return out;
+    }
+    match scores {
+        Some(c) => {
+            assert_eq!(c.data.len(), n);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| c.data[a].partial_cmp(&c.data[b]).unwrap_or(std::cmp::Ordering::Equal));
+            for &i in idx.iter().take(k) {
+                out.data[i] = -out.data[i];
+            }
+        }
+        None => {
+            for i in rng.choose_k(n, k) {
+                out.data[i] = -out.data[i];
+            }
+        }
+    }
+    out
+}
+
+/// Flip signs across all quantizable matrices of a model.
+pub fn flip_model(w: &ModelWeights, ratio: f64, salient_aware: bool, seed: u64) -> ModelWeights {
+    let mut rng = Pcg32::seeded(seed);
+    let mut out = w.clone();
+    for layer in out.layers.iter_mut() {
+        for m in layer.mats.values_mut() {
+            let scores = salient_aware.then(|| m.map(f32::abs));
+            *m = flip_signs(m, ratio, scores.as_ref(), &mut rng);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flips_exactly_k_elements() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Mat::from_vec(4, 8, (0..32).map(|i| i as f32 + 1.0).collect());
+        let f = flip_signs(&w, 0.25, None, &mut rng);
+        let flipped = w.data.iter().zip(&f.data).filter(|(a, b)| a.signum() != b.signum()).count();
+        assert_eq!(flipped, 8);
+    }
+
+    #[test]
+    fn score_guided_flips_lowest() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let scores = Mat::from_vec(1, 4, vec![0.9, 0.1, 0.5, 0.7]);
+        let f = flip_signs(&w, 0.5, Some(&scores), &mut rng);
+        assert_eq!(f.data, vec![1.0, -2.0, -3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_ratio_is_identity() {
+        let mut rng = Pcg32::seeded(3);
+        let w = Mat::from_vec(2, 2, vec![1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(flip_signs(&w, 0.0, None, &mut rng).data, w.data);
+    }
+
+    #[test]
+    fn flip_model_touches_all_layers() {
+        let cfg = crate::model::config::ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 4);
+        let f = flip_model(&w, 0.1, false, 5);
+        for (l0, l1) in w.layers.iter().zip(&f.layers) {
+            let changed = l0.mats["wq"]
+                .data
+                .iter()
+                .zip(&l1.mats["wq"].data)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert!(changed > 0);
+        }
+        // embeddings untouched
+        assert_eq!(w.embed.data, f.embed.data);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harnesses: perplexity (native + PJRT paths), the 7-task
+//! zero-shot suite (Table 4), and the sign-flip motivation study (Fig. 1).
+
+pub mod flip;
+pub mod perplexity;
+pub mod zeroshot;
+
+pub use perplexity::{ppl_native, ppl_pjrt};

@@ -1,0 +1,27 @@
+//! # STBLLM — Structured Binary LLMs below 1 bit
+//!
+//! Rust + JAX + Pallas reproduction of *"STBLLM: Breaking the 1-Bit Barrier
+//! with Structured Binary LLMs"* (ICLR 2025). See DESIGN.md for the system
+//! inventory and EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layer map:
+//! * [`quant`] — the paper's PTQ algorithms (SI metric, N:M structured
+//!   binarization, trisection, OBC compensation) + every baseline.
+//! * [`packed`] — sub-1-bit storage format and the 2:4 sparse-binary GEMM
+//!   "sparse tensor core" simulator (paper Appendix C).
+//! * [`model`] — from-scratch tiny LLaMA/OPT/Mistral zoo + corpora.
+//! * [`runtime`] — PJRT client executing AOT-lowered JAX/Pallas artifacts.
+//! * [`coordinator`] — calibration, layer scheduling, the full-model PTQ
+//!   driver and the batched inference server.
+//! * [`eval`] — perplexity, zero-shot harness, sign-flip study.
+//! * [`report`] — table/figure rendering for the bench harness.
+
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod packed;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

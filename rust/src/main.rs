@@ -1,0 +1,302 @@
+//! `stbllm` — the STBLLM coordinator CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         list artifacts / model zoo / loss curves
+//!   quantize  --model M [...]    PTQ one model, report bits + recon error
+//!   eval      --model M [...]    perplexity (PJRT path by default)
+//!   zeroshot  --model M [...]    7-task zero-shot suite
+//!   serve     --model M [...]    batched-serving smoke run with metrics
+//!   flip      --model M [...]    sign-flip motivation study
+//!   selfcheck                    PJRT ⇄ native forward parity
+//!
+//! Common options: --method {fp,rtn,gptq,pbllm,billm,stbllm} --bits B
+//! --nm N:M --metric {magnitude,wanda,sparsegpt,si} --alloc {uniform,sin,ours}
+//! --calib CORPUS --eval CORPUS --calib-tokens N --eval-tokens N
+
+use anyhow::{bail, Context, Result};
+
+use stbllm::coordinator::{calibrate, quantize_model, BatchServer, Method, Request};
+use stbllm::eval::flip::flip_model;
+use stbllm::eval::perplexity::{ppl_native, ppl_pjrt};
+use stbllm::eval::zeroshot;
+use stbllm::model::corpus;
+use stbllm::quant::{Allocation, Metric, NmRatio, StbOpts};
+use stbllm::report::fmt_ppl;
+use stbllm::runtime::{Artifacts, Runtime};
+use stbllm::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => info(args),
+        "quantize" => quantize(args),
+        "eval" => eval(args),
+        "zeroshot" => zeroshot_cmd(args),
+        "serve" => serve(args),
+        "flip" => flip(args),
+        "selfcheck" => selfcheck(args),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+stbllm — Structured Binary LLMs below 1 bit (paper reproduction)
+
+USAGE: stbllm <cmd> [options]
+
+COMMANDS
+  info        list the artifact model zoo (configs, params, loss curves)
+  quantize    PTQ one model; reports avg bits, r_salient, recon error
+  eval        perplexity on a corpus (PJRT AOT path; --native for rust fwd)
+  zeroshot    7-task zero-shot accuracy suite
+  serve       batched-serving smoke run (continuous batching + metrics)
+  flip        sign-flip redundancy study (Fig. 1)
+  selfcheck   PJRT vs native forward parity check
+
+OPTIONS
+  --model M          preset name (default llama1-7b); see `stbllm info`
+  --method X         fp | rtn | gptq | pbllm | billm | stbllm (default stbllm)
+  --bits B           bit-width for rtn/gptq (default 1)
+  --nm N:M           sparsity ratio (default 4:8)
+  --metric X         magnitude | wanda | sparsegpt | si (default si)
+  --alloc X          uniform | sin | ours (default ours)
+  --calib C          calibration corpus (default c4s)
+  --eval C           eval corpus (default wikitext2s)
+  --calib-tokens N   (default 512)    --eval-tokens N (default 1161)
+  --requests N       serve: synthetic request count (default 8)
+  --batch B          serve: max batch size (default 4)
+  --ratio R          flip: fraction of signs to flip (default 0.05)
+  --native           eval via the native rust forward instead of PJRT
+";
+
+fn artifacts() -> Result<Artifacts> {
+    Artifacts::load_default().context("artifacts missing — run `make artifacts` first")
+}
+
+fn parse_method(args: &Args) -> Result<Method> {
+    let nm = NmRatio::parse(args.get_or("nm", "4:8")).context("bad --nm")?;
+    let bits = args.get_usize("bits", 1) as u32;
+    Ok(match args.get_or("method", "stbllm") {
+        "fp" | "fullprecision" => Method::FullPrecision,
+        "rtn" => Method::Rtn { bits },
+        "gptq" => Method::Gptq { bits, block: 128 },
+        "pbllm" => Method::PbLlm { frac_salient: args.get_f64("frac", 0.10), hi_bits: 8 },
+        "billm" => Method::BiLlm { nm: args.get("nm").map(|_| nm) },
+        "stbllm" => {
+            let mut opts = StbOpts::stbllm(nm);
+            if let Some(m) = args.get("metric") {
+                opts.metric = Metric::parse(m).context("bad --metric")?;
+            }
+            opts.block_size = args.get_usize("block", 128);
+            let allocation = Allocation::parse(args.get_or("alloc", "ours")).context("bad --alloc")?;
+            Method::Stbllm { opts, allocation }
+        }
+        other => bail!("unknown method {other}"),
+    })
+}
+
+fn load_model(
+    args: &Args,
+) -> Result<(Artifacts, String, stbllm::model::ModelConfig, stbllm::model::ModelWeights)> {
+    let arts = artifacts()?;
+    let model = args.get_or("model", "llama1-7b").to_string();
+    let ma = arts.models.get(&model).with_context(|| format!("unknown model {model}"))?;
+    let cfg = ma.config.clone();
+    let w = arts.load_weights(&model)?;
+    Ok((arts, model, cfg, w))
+}
+
+/// quantize per CLI args; returns (quantized weights, label, bits)
+fn quantized_weights(
+    args: &Args,
+    arts: &Artifacts,
+    model: &str,
+) -> Result<(stbllm::model::ModelWeights, String, f64)> {
+    let ma = &arts.models[model];
+    let w = arts.load_weights(model)?;
+    let method = parse_method(args)?;
+    if matches!(method, Method::FullPrecision) {
+        return Ok((w, "FullPrecision".into(), 32.0));
+    }
+    let needs_calib = !matches!(method, Method::Rtn { .. });
+    let calib = if needs_calib {
+        let ct = args.get_usize("calib-tokens", 512);
+        eprintln!("calibrating on {} ({ct} tokens)...", args.get_or("calib", "c4s"));
+        Some(calibrate(&ma.config, &w, args.get_or("calib", "c4s"), ct, 1234))
+    } else {
+        None
+    };
+    let q = quantize_model(&ma.config, &w, &method, calib.as_ref(), 1);
+    Ok((q.weights, method.label(), q.avg_bits))
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let arts = artifacts()?;
+    println!("artifacts root: {}", arts.root.display());
+    println!(
+        "{:<14} {:<8} {:>5} {:>7} {:>9} {:>10} {:>12}",
+        "model", "family", "dim", "layers", "ffn", "params", "final loss"
+    );
+    for (name, ma) in &arts.models {
+        let c = &ma.config;
+        let loss = ma.loss_curve.last().map(|(_, l)| format!("{l:.3}")).unwrap_or("-".into());
+        println!(
+            "{:<14} {:<8} {:>5} {:>7} {:>9} {:>10} {:>12}",
+            name,
+            c.family.as_str(),
+            c.dim,
+            c.n_layers,
+            c.ffn_hidden,
+            c.n_params(),
+            loss
+        );
+    }
+    println!("\nkernel artifacts:");
+    for k in &arts.kernels {
+        println!("  {} ({}x{}x{})", k.name, k.m, k.k, k.n);
+    }
+    Ok(())
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let (_arts, model, cfg, w) = load_model(args)?;
+    let method = parse_method(args)?;
+    let needs_calib = !matches!(method, Method::FullPrecision | Method::Rtn { .. });
+    let calib = if needs_calib {
+        let ct = args.get_usize("calib-tokens", 512);
+        eprintln!("calibrating on {} ({ct} tokens)...", args.get_or("calib", "c4s"));
+        Some(calibrate(&cfg, &w, args.get_or("calib", "c4s"), ct, 1234))
+    } else {
+        None
+    };
+    let q = quantize_model(&cfg, &w, &method, calib.as_ref(), args.get_usize("workers", 1));
+    let mut err_num = 0.0f64;
+    let mut err_den = 0.0f64;
+    for (l0, l1) in w.layers.iter().zip(&q.weights.layers) {
+        for (n, m0) in &l0.mats {
+            let d = m0.sub(&l1.mats[n]).frob_norm() as f64;
+            err_num += d * d;
+            err_den += (m0.frob_norm() as f64).powi(2);
+        }
+    }
+    println!("model         : {model}");
+    println!("method        : {}", method.label());
+    println!("avg bits      : {:.3}", q.avg_bits);
+    println!("r_salient     : {:.3}", q.r_salient);
+    println!("rel recon err : {:.4}", (err_num / err_den.max(1e-12)).sqrt());
+    println!("quantize time : {:.2}s", q.seconds);
+    if !q.layer_ratios.is_empty() {
+        let ratios: Vec<String> = q.layer_ratios.iter().map(|r| r.label()).collect();
+        println!("layer N:M     : {}", ratios.join(" "));
+    }
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let (arts, model, cfg, _) = load_model(args)?;
+    let (qw, label, bits) = quantized_weights(args, &arts, &model)?;
+    let toks = corpus::corpus_tokens(
+        args.get_or("eval", "wikitext2s"),
+        args.get_usize("eval-tokens", 1161),
+        999,
+    );
+    let ppl = if args.flag("native") {
+        ppl_native(&cfg, &qw, &toks)
+    } else {
+        let rt = Runtime::cpu(&arts.root)?;
+        ppl_pjrt(&rt, &arts, &model, &qw, &toks)?
+    };
+    println!(
+        "{model} {label} ({bits:.2} bits) ppl[{}] = {}",
+        args.get_or("eval", "wikitext2s"),
+        fmt_ppl(ppl)
+    );
+    Ok(())
+}
+
+fn zeroshot_cmd(args: &Args) -> Result<()> {
+    let (arts, model, cfg, _) = load_model(args)?;
+    let (qw, label, _) = quantized_weights(args, &arts, &model)?;
+    let (per_task, mean) = zeroshot::run_suite(&cfg, &qw);
+    println!("{model} {label} zero-shot:");
+    for (name, acc) in per_task {
+        println!("  {:<14} {:>6.2}%", name, acc);
+    }
+    println!("  {:<14} {:>6.2}%", "Mean", mean);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let (arts, model, cfg, _) = load_model(args)?;
+    let (qw, label, bits) = quantized_weights(args, &arts, &model)?;
+    let n_req = args.get_usize("requests", 8);
+    let batch = args.get_usize("batch", 4);
+    let prompt_len = args.get_usize("prompt", 16);
+    let max_new = args.get_usize("max-new", 16);
+    let toks = corpus::corpus_tokens("wikitext2s", n_req * prompt_len, 5);
+    let reqs: Vec<Request> = (0..n_req)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: toks[i * prompt_len..(i + 1) * prompt_len].to_vec(),
+            max_new,
+        })
+        .collect();
+    let server = BatchServer::new(&cfg, &qw, batch);
+    let (_, stats) = server.run(reqs);
+    println!("serve {model} [{label}, {bits:.2} bits] batch={batch}:");
+    println!("  completed      : {}", stats.completed);
+    println!("  throughput     : {:.1} tok/s", stats.tokens_per_s());
+    println!("  mean latency   : {:.1} ms", stats.mean_latency_s * 1e3);
+    println!("  p95 latency    : {:.1} ms", stats.p95_latency_s * 1e3);
+    println!("  mean TTFT      : {:.1} ms", stats.mean_ttft_s * 1e3);
+    Ok(())
+}
+
+fn flip(args: &Args) -> Result<()> {
+    let (_arts, model, cfg, _) = load_model(args)?;
+    let arts = artifacts()?;
+    let (qw, label, _) = quantized_weights(args, &arts, &model)?;
+    let ratio = args.get_f64("ratio", 0.05);
+    let toks = corpus::corpus_tokens("wikitext2s", args.get_usize("eval-tokens", 1161), 999);
+    let base = ppl_native(&cfg, &qw, &toks);
+    let flipped = flip_model(&qw, ratio, args.flag("salient-aware"), 42);
+    let after = ppl_native(&cfg, &flipped, &toks);
+    println!(
+        "{model} [{label}] flip {:.1}%: ppl {} -> {}",
+        ratio * 100.0,
+        fmt_ppl(base),
+        fmt_ppl(after)
+    );
+    Ok(())
+}
+
+fn selfcheck(args: &Args) -> Result<()> {
+    let (arts, model, cfg, w) = load_model(args)?;
+    let rt = Runtime::cpu(&arts.root)?;
+    println!("PJRT platform: {}", rt.platform());
+    let toks = corpus::corpus_tokens("wikitext2s", cfg.seq_len + 1, 3);
+    let p_native = ppl_native(&cfg, &w, &toks);
+    let p_pjrt = ppl_pjrt(&rt, &arts, &model, &w, &toks)?;
+    let rel = (p_native - p_pjrt).abs() / p_native;
+    println!("{model}: ppl native={p_native:.4} pjrt={p_pjrt:.4} rel-diff={rel:.2e}");
+    if rel > 1e-3 {
+        bail!("parity check FAILED (rel {rel:.2e} > 1e-3)");
+    }
+    println!("selfcheck OK — L1 (Pallas) ∘ L2 (JAX) ∘ L3 (rust) agree");
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Model configuration, parsed from `artifacts/manifest.json` (single source
+//! of truth is `python/compile/model.py`). Presets are also mirrored here so
+//! pure-Rust paths (unit tests, synthetic benches) can run without artifacts.
+
+use crate::util::json::Json;
+
+pub const HEAD_DIM: usize = 32;
+pub const ROPE_THETA: f32 = 10000.0;
+
+/// Architecture family — scaled-down analogues of the paper's model zoo.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Llama,
+    Opt,
+    Mistral,
+}
+
+impl Family {
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "llama" => Some(Family::Llama),
+            "opt" => Some(Family::Opt),
+            "mistral" => Some(Family::Mistral),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Family::Llama => "llama",
+            Family::Opt => "opt",
+            Family::Mistral => "mistral",
+        }
+    }
+}
+
+/// Static model hyperparameters (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: Family,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub ffn_hidden: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub window: usize,
+    pub norm_eps: f32,
+    pub seed: u64,
+}
+
+impl ModelConfig {
+    pub fn n_heads(&self) -> usize {
+        self.dim / HEAD_DIM
+    }
+
+    /// Canonical names of the 2-D quantizable matrices (order matters: it is
+    /// the artifact parameter order).
+    pub fn layer_weight_names(&self) -> Vec<&'static str> {
+        match self.family {
+            Family::Opt => vec!["wq", "wk", "wv", "wo", "w1", "w2"],
+            _ => vec!["wq", "wk", "wv", "wo", "w1", "w2", "w3"],
+        }
+    }
+
+    /// (out, in) shape of a named layer weight.
+    pub fn layer_weight_shape(&self, name: &str) -> (usize, usize) {
+        let (d, h) = (self.dim, self.ffn_hidden);
+        match name {
+            "wq" | "wk" | "wv" | "wo" => (d, d),
+            "w1" | "w3" => (h, d),
+            "w2" => (d, h),
+            _ => panic!("unknown layer weight {name}"),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        let per_layer: usize = self
+            .layer_weight_names()
+            .iter()
+            .map(|n| {
+                let (o, i) = self.layer_weight_shape(n);
+                o * i
+            })
+            .sum::<usize>()
+            + 2 * self.dim;
+        let mut extra = self.vocab * self.dim + self.dim;
+        if self.family == Family::Opt {
+            extra += self.seq_len * self.dim;
+        }
+        per_layer * self.n_layers + extra
+    }
+
+    /// Parse one entry of `manifest.json["models"]`.
+    pub fn from_manifest(name: &str, j: &Json) -> Result<ModelConfig, String> {
+        let family = Family::parse(
+            j.get("family").and_then(|v| v.as_str()).ok_or("missing family")?,
+        )
+        .ok_or("bad family")?;
+        let get = |k: &str| -> Result<usize, String> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or(format!("missing {k}"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            family,
+            dim: get("dim")?,
+            n_layers: get("n_layers")?,
+            ffn_hidden: get("ffn_hidden")?,
+            vocab: get("vocab")?,
+            seq_len: get("seq_len")?,
+            window: get("window")?,
+            norm_eps: j.get("norm_eps").and_then(|v| v.as_f64()).unwrap_or(1e-5) as f32,
+            seed: get("seed")? as u64,
+        })
+    }
+
+    /// Built-in presets (mirror of the Python PRESETS table) for paths that
+    /// must run without artifacts.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let mk = |name: &str, family: Family, dim, n_layers, ffn, window, seed| ModelConfig {
+            name: name.to_string(),
+            family,
+            dim,
+            n_layers,
+            ffn_hidden: ffn,
+            vocab: 256,
+            seq_len: 128,
+            window,
+            norm_eps: 1e-5,
+            seed,
+        };
+        Some(match name {
+            "llama1-7b" => mk(name, Family::Llama, 128, 4, 352, 0, 101),
+            "llama1-13b" => mk(name, Family::Llama, 192, 6, 512, 0, 102),
+            "llama1-30b" => mk(name, Family::Llama, 256, 8, 704, 0, 103),
+            "llama1-65b" => mk(name, Family::Llama, 320, 10, 864, 0, 104),
+            "llama2-7b" => mk(name, Family::Llama, 128, 4, 384, 0, 201),
+            "llama2-13b" => mk(name, Family::Llama, 192, 6, 544, 0, 202),
+            "llama3-8b" => mk(name, Family::Llama, 160, 5, 448, 0, 301),
+            "opt-1.3b" => mk(name, Family::Opt, 128, 4, 512, 0, 401),
+            "opt-2.7b" => mk(name, Family::Opt, 160, 5, 640, 0, 402),
+            "opt-6.7b" => mk(name, Family::Opt, 192, 6, 768, 0, 403),
+            "opt-30b" => mk(name, Family::Opt, 256, 8, 1024, 0, 404),
+            "mistral-7b" => mk(name, Family::Mistral, 192, 6, 512, 64, 501),
+            _ => return None,
+        })
+    }
+
+    pub fn preset_names() -> Vec<&'static str> {
+        vec![
+            "llama1-7b", "llama1-13b", "llama1-30b", "llama1-65b", "llama2-7b",
+            "llama2-13b", "llama3-8b", "opt-1.3b", "opt-2.7b", "opt-6.7b", "opt-30b",
+            "mistral-7b",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_internally_consistent() {
+        for name in ModelConfig::preset_names() {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.dim % HEAD_DIM, 0, "{name}");
+            for w in c.layer_weight_names() {
+                let (o, i) = c.layer_weight_shape(w);
+                assert_eq!(o % 8, 0, "{name}.{w}");
+                assert_eq!(i % 8, 0, "{name}.{w}");
+            }
+            assert!(c.n_params() > 0);
+        }
+    }
+
+    #[test]
+    fn manifest_parse() {
+        let j = Json::parse(
+            r#"{"family": "llama", "dim": 128, "n_layers": 4, "ffn_hidden": 352,
+                "vocab": 256, "seq_len": 128, "window": 0, "norm_eps": 1e-5, "seed": 101}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest("llama1-7b", &j).unwrap();
+        assert_eq!(c.dim, 128);
+        assert_eq!(c.n_heads(), 4);
+        assert_eq!(c.layer_weight_shape("w1"), (352, 128));
+        // matches the preset mirror
+        let p = ModelConfig::preset("llama1-7b").unwrap();
+        assert_eq!(p.n_params(), c.n_params());
+    }
+
+    #[test]
+    fn opt_has_six_weights_llama_seven() {
+        assert_eq!(ModelConfig::preset("opt-1.3b").unwrap().layer_weight_names().len(), 6);
+        assert_eq!(ModelConfig::preset("llama1-7b").unwrap().layer_weight_names().len(), 7);
+    }
+}

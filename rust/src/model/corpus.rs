@@ -1,0 +1,152 @@
+//! Synthetic corpora — bit-identical port of `python/compile/rngcorpus.py`.
+//!
+//! Three Markov-chain corpora stand in for the paper's eval sets (see
+//! DESIGN.md §2): `wikitext2s` (clean prose-like), `c4s` (noisy web-like),
+//! `ptbs` (short-sentence newswire-like). All-integer construction keeps
+//! the Rust and Python streams identical for equal seeds; known-answer
+//! tests are mirrored in `python/tests/test_corpus.py`.
+
+use crate::util::rng::Pcg32;
+
+/// Static description of a corpus distribution.
+#[derive(Clone, Copy, Debug)]
+pub struct CorpusSpec {
+    pub name: &'static str,
+    pub seed: u64,
+    pub alphabet: u32,
+    pub order: u32,
+    pub candidates: usize,
+    pub reset_every: u32,
+}
+
+pub const WIKITEXT2S: CorpusSpec =
+    CorpusSpec { name: "wikitext2s", seed: 11, alphabet: 64, order: 2, candidates: 4, reset_every: 0 };
+pub const C4S: CorpusSpec =
+    CorpusSpec { name: "c4s", seed: 22, alphabet: 96, order: 1, candidates: 8, reset_every: 0 };
+pub const PTBS: CorpusSpec =
+    CorpusSpec { name: "ptbs", seed: 33, alphabet: 32, order: 2, candidates: 3, reset_every: 24 };
+
+pub const ALL: [CorpusSpec; 3] = [WIKITEXT2S, C4S, PTBS];
+
+pub fn spec_by_name(name: &str) -> Option<CorpusSpec> {
+    ALL.iter().copied().find(|s| s.name == name)
+}
+
+/// Instantiated Markov chain with integer transition tables.
+pub struct Corpus {
+    spec: CorpusSpec,
+    succ: Vec<Vec<u32>>,
+    weights: Vec<u32>,
+    total_w: u32,
+}
+
+impl Corpus {
+    pub fn new(spec: CorpusSpec) -> Corpus {
+        let mut rng = Pcg32::new(spec.seed, 7);
+        let a = spec.alphabet;
+        let k = spec.candidates;
+        let n_ctx = if spec.order == 2 { (a * a) as usize } else { a as usize };
+        let weights: Vec<u32> = (0..k).map(|i| 1000 / (i as u32 + 1)).collect();
+        let total_w = weights.iter().sum();
+        let mut succ = Vec::with_capacity(n_ctx);
+        for _ in 0..n_ctx {
+            succ.push((0..k).map(|_| rng.bounded(a)).collect());
+        }
+        Corpus { spec, succ, weights, total_w }
+    }
+
+    /// Generate `n` tokens; sampling RNG is independent of the table RNG.
+    pub fn generate(&self, n: usize, seed: u64) -> Vec<u8> {
+        let spec = self.spec;
+        let mut rng = Pcg32::new(seed, 13);
+        let a = spec.alphabet;
+        let mut prev1 = rng.bounded(a);
+        let mut prev2 = rng.bounded(a);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if spec.reset_every != 0 && rng.bounded(spec.reset_every) == 0 {
+                out.push(0u8);
+                prev1 = rng.bounded(a);
+                prev2 = rng.bounded(a);
+                continue;
+            }
+            let ctx = if spec.order == 2 { (prev1 * a + prev2) as usize } else { prev2 as usize };
+            let r = rng.bounded(self.total_w);
+            let mut acc = 0u32;
+            let cands = &self.succ[ctx];
+            let mut nxt = *cands.last().unwrap();
+            for (cand, w) in cands.iter().zip(&self.weights) {
+                acc += w;
+                if r < acc {
+                    nxt = *cand;
+                    break;
+                }
+            }
+            out.push(nxt as u8);
+            prev1 = prev2;
+            prev2 = nxt;
+        }
+        out
+    }
+}
+
+/// Convenience: build the named corpus and generate `n` tokens.
+pub fn corpus_tokens(name: &str, n: usize, seed: u64) -> Vec<u8> {
+    Corpus::new(spec_by_name(name).unwrap_or_else(|| panic!("unknown corpus {name}"))).generate(n, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Mirrored in python/tests/test_corpus.py — cross-language lock.
+    #[test]
+    fn corpus_known_answers() {
+        assert_eq!(corpus_tokens("wikitext2s", 12, 5), vec![17, 47, 15, 33, 62, 63, 36, 2, 32, 59, 49, 17]);
+        assert_eq!(corpus_tokens("c4s", 12, 5), vec![55, 20, 82, 30, 37, 29, 31, 18, 38, 49, 95, 32]);
+        assert_eq!(corpus_tokens("ptbs", 12, 5), vec![8, 25, 27, 8, 29, 15, 23, 8, 20, 24, 2, 17]);
+    }
+
+    #[test]
+    fn alphabet_bounds() {
+        for spec in ALL {
+            let toks = corpus_tokens(spec.name, 2000, 9);
+            assert!(toks.iter().all(|&t| (t as u32) < spec.alphabet), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = corpus_tokens("c4s", 256, 1);
+        let b = corpus_tokens("c4s", 256, 1);
+        let c = corpus_tokens("c4s", 256, 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn ptbs_resets() {
+        let toks = corpus_tokens("ptbs", 4000, 4);
+        let zeros = toks.iter().filter(|&&t| t == 0).count();
+        assert!(zeros as f64 / toks.len() as f64 > 0.02);
+    }
+
+    #[test]
+    fn distributions_distinct() {
+        let hist = |name: &str| -> Vec<f64> {
+            let toks = corpus_tokens(name, 8000, 3);
+            let mut h = vec![0f64; 256];
+            for t in toks {
+                h[t as usize] += 1.0;
+            }
+            let s: f64 = h.iter().sum();
+            h.iter().map(|x| x / s).collect()
+        };
+        let tv = |a: &[f64], b: &[f64]| -> f64 {
+            0.5 * a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f64>()
+        };
+        let (w, c, p) = (hist("wikitext2s"), hist("c4s"), hist("ptbs"));
+        assert!(tv(&w, &c) > 0.2);
+        assert!(tv(&w, &p) > 0.2);
+    }
+}

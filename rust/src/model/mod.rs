@@ -1,0 +1,12 @@
+//! Model substrate: configs (manifest-driven), synthetic corpora, weight
+//! containers and the native transformer forward (full-sequence + KV-cache
+//! decode). The quantization pipeline treats a model as "a config + a set of
+//! named 2-D matrices"; everything else here exists to *evaluate* the result.
+
+pub mod config;
+pub mod corpus;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{Family, ModelConfig, HEAD_DIM};
+pub use weights::{LayerWeights, ModelWeights};

@@ -1,0 +1,443 @@
+//! Native Rust transformer forward — semantically identical to the JAX
+//! `python/compile/model.py` forward (the integration test
+//! `rust/tests/pjrt_parity.rs` asserts the two paths agree to ~1e-3).
+//!
+//! Two modes:
+//!   * full-sequence forward (perplexity eval, calibration capture);
+//!   * incremental decode with a KV cache (the serving hot path).
+//!
+//! Quantized models are evaluated by substituting each 2-D weight with its
+//! dense reconstruction — the forward is method-agnostic.
+
+use crate::model::config::{Family, ModelConfig, HEAD_DIM, ROPE_THETA};
+use crate::model::weights::{LayerWeights, ModelWeights};
+use crate::tensor::{matmul_bt, Mat};
+
+/// x * rsqrt(mean(x²) + eps) * w, row-wise over (S, D).
+pub fn rmsnorm(x: &Mat, w: &[f32], eps: f32) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let r = x.row(i);
+        let ms = r.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (o, (v, g)) in out.row_mut(i).iter_mut().zip(r.iter().zip(w)) {
+            *o = v * inv * g;
+        }
+    }
+    out
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// tanh-approximate GELU (matches `jax.nn.gelu` default).
+#[inline]
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// RoPE tables for positions `[0, seq)`: (cos, sin), each seq × HEAD_DIM/2.
+pub fn rope_tables(seq: usize) -> (Mat, Mat) {
+    let h = HEAD_DIM / 2;
+    let mut cos = Mat::zeros(seq, h);
+    let mut sin = Mat::zeros(seq, h);
+    for p in 0..seq {
+        for i in 0..h {
+            let inv = 1.0 / ROPE_THETA.powf(2.0 * i as f32 / HEAD_DIM as f32);
+            let ang = p as f32 * inv;
+            cos[(p, i)] = ang.cos();
+            sin[(p, i)] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Split-half rotation applied in place to one head vector at position `p`.
+fn apply_rope_vec(v: &mut [f32], cos: &Mat, sin: &Mat, p: usize) {
+    let h = HEAD_DIM / 2;
+    for i in 0..h {
+        let (c, s) = (cos[(p, i)], sin[(p, i)]);
+        let (a, b) = (v[i], v[i + h]);
+        v[i] = a * c - b * s;
+        v[i + h] = a * s + b * c;
+    }
+}
+
+fn softmax_inplace(row: &mut [f32]) {
+    let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    row.iter_mut().for_each(|v| *v *= inv);
+}
+
+/// Per-layer activation taps captured during calibration — the inputs of
+/// each quantizable projection group (see `coordinator::calib`).
+#[derive(Clone, Debug, Default)]
+pub struct LayerTaps {
+    /// input to wq/wk/wv: rmsnorm(x, ln1) — (S, dim)
+    pub attn_in: Option<Mat>,
+    /// input to wo: concatenated attention output — (S, dim)
+    pub wo_in: Option<Mat>,
+    /// input to w1/w3: rmsnorm(h, ln2) — (S, dim)
+    pub ffn_in: Option<Mat>,
+    /// input to w2: the FFN hidden activation — (S, ffn_hidden)
+    pub w2_in: Option<Mat>,
+}
+
+/// One transformer block over a full sequence. When `taps` is Some, the four
+/// projection inputs are recorded (cloned) for Hessian accumulation.
+pub fn layer_fwd(
+    cfg: &ModelConfig,
+    x: &Mat,
+    lw: &LayerWeights,
+    taps: Option<&mut LayerTaps>,
+) -> Mat {
+    let s = x.rows;
+    let d = cfg.dim;
+    let nh = cfg.n_heads();
+    let mut taps = taps;
+
+    // ---- attention -------------------------------------------------------
+    let xn = rmsnorm(x, &lw.ln1, cfg.norm_eps);
+    if let Some(t) = taps.as_deref_mut() {
+        t.attn_in = Some(xn.clone());
+    }
+    let mut q = matmul_bt(&xn, &lw.mats["wq"]);
+    let mut k = matmul_bt(&xn, &lw.mats["wk"]);
+    let v = matmul_bt(&xn, &lw.mats["wv"]);
+    if cfg.family != Family::Opt {
+        let (cos, sin) = rope_tables(s);
+        for p in 0..s {
+            for h in 0..nh {
+                apply_rope_vec(&mut q.row_mut(p)[h * HEAD_DIM..(h + 1) * HEAD_DIM], &cos, &sin, p);
+                apply_rope_vec(&mut k.row_mut(p)[h * HEAD_DIM..(h + 1) * HEAD_DIM], &cos, &sin, p);
+            }
+        }
+    }
+    let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+    let mut attn_out = Mat::zeros(s, d);
+    let mut att = vec![0.0f32; s];
+    for h in 0..nh {
+        let hoff = h * HEAD_DIM;
+        for i in 0..s {
+            let lo = if cfg.window > 0 { (i + 1).saturating_sub(cfg.window) } else { 0 };
+            let qi = &q.row(i)[hoff..hoff + HEAD_DIM];
+            for j in lo..=i {
+                let kj = &k.row(j)[hoff..hoff + HEAD_DIM];
+                att[j] = crate::tensor::dot(qi, kj) * scale;
+            }
+            softmax_inplace(&mut att[lo..=i]);
+            let orow = &mut attn_out.row_mut(i)[hoff..hoff + HEAD_DIM];
+            for j in lo..=i {
+                let w = att[j];
+                let vj = &v.row(j)[hoff..hoff + HEAD_DIM];
+                for (o, vv) in orow.iter_mut().zip(vj) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    if let Some(t) = taps.as_deref_mut() {
+        t.wo_in = Some(attn_out.clone());
+    }
+    let proj = matmul_bt(&attn_out, &lw.mats["wo"]);
+    let mut hidden = x.clone();
+    hidden.add_assign(&proj);
+
+    // ---- FFN ---------------------------------------------------------------
+    let hn = rmsnorm(&hidden, &lw.ln2, cfg.norm_eps);
+    if let Some(t) = taps.as_deref_mut() {
+        t.ffn_in = Some(hn.clone());
+    }
+    let ffn = if cfg.family == Family::Opt {
+        let mut a = matmul_bt(&hn, &lw.mats["w1"]);
+        a.data.iter_mut().for_each(|x| *x = gelu(*x));
+        if let Some(t) = taps.as_deref_mut() {
+            t.w2_in = Some(a.clone());
+        }
+        matmul_bt(&a, &lw.mats["w2"])
+    } else {
+        let mut g = matmul_bt(&hn, &lw.mats["w1"]);
+        let u = matmul_bt(&hn, &lw.mats["w3"]);
+        for (gi, ui) in g.data.iter_mut().zip(&u.data) {
+            *gi = silu(*gi) * ui;
+        }
+        if let Some(t) = taps.as_deref_mut() {
+            t.w2_in = Some(g.clone());
+        }
+        matmul_bt(&g, &lw.mats["w2"])
+    };
+    hidden.add_assign(&ffn);
+    hidden
+}
+
+/// Embedding lookup (+ learned positions for OPT).
+pub fn embed(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
+    let mut x = Mat::zeros(tokens.len(), cfg.dim);
+    for (i, &t) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(w.embed.row(t as usize));
+    }
+    if let Some(pos) = &w.pos {
+        for i in 0..tokens.len() {
+            let p = pos.row(i % pos.rows);
+            for (a, b) in x.row_mut(i).iter_mut().zip(p) {
+                *a += b;
+            }
+        }
+    }
+    x
+}
+
+/// Final norm + tied-embedding logits.
+pub fn lm_head(cfg: &ModelConfig, w: &ModelWeights, x: &Mat) -> Mat {
+    matmul_bt(&rmsnorm(x, &w.ln_f, cfg.norm_eps), &w.embed)
+}
+
+/// Full-model forward: tokens → logits (S, vocab).
+pub fn model_fwd(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
+    let mut x = embed(cfg, w, tokens);
+    for lw in &w.layers {
+        x = layer_fwd(cfg, &x, lw, None);
+    }
+    lm_head(cfg, w, &x)
+}
+
+/// Forward capturing per-layer calibration taps.
+pub fn model_fwd_with_taps(
+    cfg: &ModelConfig,
+    w: &ModelWeights,
+    tokens: &[u8],
+) -> (Mat, Vec<LayerTaps>) {
+    let mut x = embed(cfg, w, tokens);
+    let mut taps = Vec::with_capacity(w.layers.len());
+    for lw in &w.layers {
+        let mut t = LayerTaps::default();
+        x = layer_fwd(cfg, &x, lw, Some(&mut t));
+        taps.push(t);
+    }
+    (lm_head(cfg, w, &x), taps)
+}
+
+// ---------------------------------------------------------------------------
+// Incremental decoding (serving hot path)
+// ---------------------------------------------------------------------------
+
+/// Per-layer KV cache for one sequence.
+pub struct KvCache {
+    pub k: Mat, // (capacity, dim)
+    pub v: Mat,
+    pub len: usize,
+}
+
+/// Decode state: caches for all layers + current position.
+pub struct DecodeState {
+    pub caches: Vec<KvCache>,
+    pub pos: usize,
+    capacity: usize,
+    /// RoPE tables precomputed to capacity (§Perf L3: recomputing per step
+    /// made decode quadratic in position)
+    rope: (Mat, Mat),
+}
+
+impl DecodeState {
+    pub fn new(cfg: &ModelConfig, capacity: usize) -> DecodeState {
+        DecodeState {
+            caches: (0..cfg.n_layers)
+                .map(|_| KvCache {
+                    k: Mat::zeros(capacity, cfg.dim),
+                    v: Mat::zeros(capacity, cfg.dim),
+                    len: 0,
+                })
+                .collect(),
+            pos: 0,
+            capacity,
+            rope: rope_tables(capacity),
+        }
+    }
+
+    /// Process one token; returns logits over the vocab.
+    pub fn step(&mut self, cfg: &ModelConfig, w: &ModelWeights, token: u8) -> Vec<f32> {
+        assert!(self.pos < self.capacity, "KV cache capacity exceeded");
+        let d = cfg.dim;
+        let nh = cfg.n_heads();
+        let p = self.pos;
+        let (cos, sin) = (&self.rope.0, &self.rope.1);
+
+        // embedding
+        let mut x: Vec<f32> = w.embed.row(token as usize).to_vec();
+        if let Some(pos_emb) = &w.pos {
+            for (a, b) in x.iter_mut().zip(pos_emb.row(p % pos_emb.rows)) {
+                *a += b;
+            }
+        }
+
+        for (li, lw) in w.layers.iter().enumerate() {
+            let xn = rmsnorm_vec(&x, &lw.ln1, cfg.norm_eps);
+            let mut q = crate::tensor::matvec(&lw.mats["wq"], &xn);
+            let mut k = crate::tensor::matvec(&lw.mats["wk"], &xn);
+            let v = crate::tensor::matvec(&lw.mats["wv"], &xn);
+            if cfg.family != Family::Opt {
+                for h in 0..nh {
+                    apply_rope_vec(&mut q[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
+                    apply_rope_vec(&mut k[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
+                }
+            }
+            let cache = &mut self.caches[li];
+            cache.k.row_mut(p).copy_from_slice(&k);
+            cache.v.row_mut(p).copy_from_slice(&v);
+            cache.len = p + 1;
+
+            let lo = if cfg.window > 0 { (p + 1).saturating_sub(cfg.window) } else { 0 };
+            let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+            let mut attn_out = vec![0.0f32; d];
+            let mut att = vec![0.0f32; p + 1];
+            for h in 0..nh {
+                let hoff = h * HEAD_DIM;
+                let qh = &q[hoff..hoff + HEAD_DIM];
+                for j in lo..=p {
+                    att[j] = crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
+                }
+                softmax_inplace(&mut att[lo..=p]);
+                for j in lo..=p {
+                    let wgt = att[j];
+                    let vj = &cache.v.row(j)[hoff..hoff + HEAD_DIM];
+                    for (o, vv) in attn_out[hoff..hoff + HEAD_DIM].iter_mut().zip(vj) {
+                        *o += wgt * vv;
+                    }
+                }
+            }
+            let proj = crate::tensor::matvec(&lw.mats["wo"], &attn_out);
+            for (a, b) in x.iter_mut().zip(&proj) {
+                *a += b;
+            }
+
+            let hn = rmsnorm_vec(&x, &lw.ln2, cfg.norm_eps);
+            let ffn = if cfg.family == Family::Opt {
+                let mut a = crate::tensor::matvec(&lw.mats["w1"], &hn);
+                a.iter_mut().for_each(|t| *t = gelu(*t));
+                crate::tensor::matvec(&lw.mats["w2"], &a)
+            } else {
+                let mut g = crate::tensor::matvec(&lw.mats["w1"], &hn);
+                let u = crate::tensor::matvec(&lw.mats["w3"], &hn);
+                for (gi, ui) in g.iter_mut().zip(&u) {
+                    *gi = silu(*gi) * ui;
+                }
+                crate::tensor::matvec(&lw.mats["w2"], &g)
+            };
+            for (a, b) in x.iter_mut().zip(&ffn) {
+                *a += b;
+            }
+        }
+        self.pos += 1;
+        let xn = rmsnorm_vec(&x, &w.ln_f, cfg.norm_eps);
+        crate::tensor::matvec(&w.embed, &xn)
+    }
+}
+
+fn rmsnorm_vec(x: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    x.iter().zip(w).map(|(v, g)| v * inv * g).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(name: &str) -> (ModelConfig, ModelWeights) {
+        let cfg = ModelConfig::preset(name).unwrap();
+        let w = ModelWeights::synthetic(&cfg, 7);
+        (cfg, w)
+    }
+
+    #[test]
+    fn fwd_shapes_all_families() {
+        for name in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+            let (cfg, w) = tiny(name);
+            let toks: Vec<u8> = (0..32u8).collect();
+            let logits = model_fwd(&cfg, &w, &toks);
+            assert_eq!((logits.rows, logits.cols), (32, cfg.vocab), "{name}");
+            assert!(logits.data.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn causality_holds() {
+        let (cfg, w) = tiny("llama1-7b");
+        let mut toks: Vec<u8> = (0..24u8).collect();
+        let l1 = model_fwd(&cfg, &w, &toks);
+        toks[23] = 99;
+        let l2 = model_fwd(&cfg, &w, &toks);
+        for i in 0..23 {
+            for j in 0..cfg.vocab {
+                assert!((l1[(i, j)] - l2[(i, j)]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        for name in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+            let (cfg, w) = tiny(name);
+            let toks: Vec<u8> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8];
+            let full = model_fwd(&cfg, &w, &toks);
+            let mut st = DecodeState::new(&cfg, 32);
+            let mut last = Vec::new();
+            for &t in &toks {
+                last = st.step(&cfg, &w, t);
+            }
+            let want = full.row(toks.len() - 1);
+            for (a, b) in last.iter().zip(want) {
+                assert!((a - b).abs() < 1e-3, "{name}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn taps_captured_with_right_shapes() {
+        let (cfg, w) = tiny("llama1-7b");
+        let toks: Vec<u8> = (0..16u8).collect();
+        let (_, taps) = model_fwd_with_taps(&cfg, &w, &toks);
+        assert_eq!(taps.len(), cfg.n_layers);
+        let t = &taps[0];
+        assert_eq!(t.attn_in.as_ref().unwrap().cols, cfg.dim);
+        assert_eq!(t.wo_in.as_ref().unwrap().cols, cfg.dim);
+        assert_eq!(t.ffn_in.as_ref().unwrap().cols, cfg.dim);
+        assert_eq!(t.w2_in.as_ref().unwrap().cols, cfg.ffn_hidden);
+        assert_eq!(t.w2_in.as_ref().unwrap().rows, 16);
+    }
+
+    #[test]
+    fn sliding_window_changes_late_logits_only() {
+        let cfg_w = ModelConfig::preset("mistral-7b").unwrap();
+        let mut cfg_full = cfg_w.clone();
+        cfg_full.window = 0;
+        let w = ModelWeights::synthetic(&cfg_w, 9);
+        let toks: Vec<u8> = (0..100).map(|i| (i * 7 % 32) as u8).collect();
+        let a = model_fwd(&cfg_w, &w, &toks);
+        let b = model_fwd(&cfg_full, &w, &toks);
+        // within the window everything matches
+        for j in 0..cfg_w.vocab {
+            assert!((a[(10, j)] - b[(10, j)]).abs() < 1e-4);
+        }
+        // beyond it, logits differ
+        let diff: f32 = (0..cfg_w.vocab).map(|j| (a[(99, j)] - b[(99, j)]).abs()).sum();
+        assert!(diff > 1e-4);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = Mat::from_vec(1, 4, vec![2.0, -2.0, 2.0, -2.0]);
+        let out = rmsnorm(&x, &[1.0; 4], 0.0);
+        for v in out.data {
+            assert!((v.abs() - 1.0).abs() < 1e-5);
+        }
+    }
+}

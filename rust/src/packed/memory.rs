@@ -1,0 +1,102 @@
+//! Analytic weight-memory model (paper Fig. 9): bytes to store a model's
+//! quantizable weights under each scheme. Norms/embeddings (FP) are counted
+//! identically across schemes, matching the paper's whole-model bars.
+
+use crate::model::config::ModelConfig;
+
+/// Storage scheme for the memory comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Fp16,
+    /// CUTLASS-style int8 W8A16
+    Int8,
+    /// ABQ-LLM 2-bit (+ per-group fp16 scales, group 128)
+    Abq2Bit,
+    /// ours: 2:4 packed 1-bit (6 bits / 4 weights) + per-channel scales
+    Stb24,
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Fp16 => "FP16",
+            Scheme::Int8 => "CUTLASS-INT8",
+            Scheme::Abq2Bit => "ABQ-LLM-2bit",
+            Scheme::Stb24 => "STBLLM-2:4-1bit",
+        }
+    }
+
+    /// Bytes for one (out × in) weight matrix.
+    pub fn matrix_bytes(&self, out: usize, inp: usize) -> u64 {
+        let n = (out * inp) as u64;
+        match self {
+            Scheme::Fp16 => 2 * n,
+            Scheme::Int8 => n + (out as u64) * 2, // + per-channel scale
+            Scheme::Abq2Bit => {
+                let groups = (out * ((inp + 127) / 128)) as u64;
+                n / 4 + groups * 2 // 2 bits/weight + fp16 scale per group-128
+            }
+            Scheme::Stb24 => {
+                let groups4 = (out * ((inp + 3) / 4)) as u64;
+                // 6 bits per group of 4 (4 index + 2 sign) + fp32 channel scale
+                (groups4 * 6 + 7) / 8 + (out as u64) * 4
+            }
+        }
+    }
+
+    /// Whole-model bytes: quantizable matrices under the scheme, the rest
+    /// (embeddings, norms, positions) at fp16.
+    pub fn model_bytes(&self, cfg: &ModelConfig) -> u64 {
+        let mut total = 0u64;
+        for _ in 0..cfg.n_layers {
+            for nme in cfg.layer_weight_names() {
+                let (o, i) = cfg.layer_weight_shape(nme);
+                total += self.matrix_bytes(o, i);
+            }
+            total += 2 * (2 * cfg.dim) as u64; // norms fp16
+        }
+        total += 2 * (cfg.vocab * cfg.dim + cfg.dim) as u64;
+        if cfg.family == crate::model::config::Family::Opt {
+            total += 2 * (cfg.seq_len * cfg.dim) as u64;
+        }
+        total
+    }
+}
+
+pub const ALL_SCHEMES: [Scheme; 4] = [Scheme::Fp16, Scheme::Int8, Scheme::Abq2Bit, Scheme::Stb24];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_fp16_int8_2bit_ours() {
+        let cfg = ModelConfig::preset("llama1-30b").unwrap();
+        let b: Vec<u64> = ALL_SCHEMES.iter().map(|s| s.model_bytes(&cfg)).collect();
+        assert!(b[0] > b[1] && b[1] > b[2] && b[2] > b[3], "{b:?}");
+    }
+
+    #[test]
+    fn ours_beats_abq_by_about_15pct_on_values() {
+        // Appendix C.3: ~15% whole-matrix reduction vs ABQ (25% on value bits,
+        // diluted by scales)
+        let ours = Scheme::Stb24.matrix_bytes(4096, 4096) as f64;
+        let abq = Scheme::Abq2Bit.matrix_bytes(4096, 4096) as f64;
+        let ratio = ours / abq;
+        assert!(ratio < 0.85 && ratio > 0.6, "ratio={ratio}");
+    }
+
+    #[test]
+    fn fp16_matches_two_bytes_per_param() {
+        assert_eq!(Scheme::Fp16.matrix_bytes(10, 20), 400);
+    }
+
+    #[test]
+    fn compression_vs_fp16_exceeds_3x(){
+        // paper: >3.1× gain over SmoothQuant-class int8; vs fp16 much larger
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let fp16 = Scheme::Fp16.model_bytes(&cfg) as f64;
+        let ours = Scheme::Stb24.model_bytes(&cfg) as f64;
+        assert!(fp16 / ours > 3.0, "{}", fp16 / ours);
+    }
+}

@@ -1,0 +1,14 @@
+//! Sub-1-bit packed weight storage + the sparse-binary GEMM simulator
+//! (paper §4.3 + Appendix C): the exact 6-bit 2:4 group encoding, the
+//! dense 2-bit baseline, the analytic memory model (Fig. 9) and the
+//! roofline model (Fig. 8).
+
+pub mod format;
+pub mod gemm;
+pub mod memory;
+pub mod roofline;
+pub mod store;
+
+pub use format::{enforce_24, Packed24};
+pub use gemm::{gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, Dense2Bit};
+pub use store::PackedModel;

@@ -1,0 +1,259 @@
+//! Packed-model container (.stbp): the deployment artifact for a quantized
+//! model — every projection stored in the 6-bit 2:4 format plus FP sidecar
+//! tensors (norms, embeddings). A serve process loads this instead of FP32
+//! weights: ~19× smaller on disk and mmap-friendly (flat little-endian
+//! layout).
+//!
+//! Layout: magic "STBP" | u32 version | u32 n_entries | per entry:
+//!   u8 kind (0 = packed24, 1 = f32 tensor)
+//!   u32 name_len | name
+//!   packed24: u32 rows | u32 cols | meta u16[] | signs u8[] | alpha f32[]
+//!   f32:      u32 ndim | dims | data
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::model::{ModelWeights};
+use crate::packed::format::{enforce_24, Packed24};
+use crate::tensor::Mat;
+
+/// A deployable packed model.
+pub struct PackedModel {
+    pub packed: BTreeMap<String, Packed24>,
+    pub fp: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl PackedModel {
+    /// Collapse a quantized model's reconstructions onto exact 2:4 packed
+    /// form (the serving representation of §4.3).
+    pub fn from_weights(cfg: &ModelConfig, w: &ModelWeights) -> Result<PackedModel> {
+        let mut packed = BTreeMap::new();
+        let mut fp = BTreeMap::new();
+        fp.insert("embed".into(), (vec![w.embed.rows, w.embed.cols], w.embed.data.clone()));
+        fp.insert("ln_f".into(), (vec![w.ln_f.len()], w.ln_f.clone()));
+        if let Some(p) = &w.pos {
+            fp.insert("pos".into(), (vec![p.rows, p.cols], p.data.clone()));
+        }
+        for (i, l) in w.layers.iter().enumerate() {
+            fp.insert(format!("layers.{i}.ln1"), (vec![l.ln1.len()], l.ln1.clone()));
+            fp.insert(format!("layers.{i}.ln2"), (vec![l.ln2.len()], l.ln2.clone()));
+            for n in cfg.layer_weight_names() {
+                let m = &l.mats[n];
+                let (sb, alpha) = enforce_24(m);
+                let p = Packed24::pack(&sb, &alpha).map_err(anyhow::Error::msg)?;
+                packed.insert(format!("layers.{i}.{n}"), p);
+            }
+        }
+        Ok(PackedModel { packed, fp })
+    }
+
+    /// Expand back into dense ModelWeights (for the generic forward).
+    pub fn to_weights(&self, cfg: &ModelConfig) -> Result<ModelWeights> {
+        let get_fp = |name: &str| -> Result<&(Vec<usize>, Vec<f32>)> {
+            self.fp.get(name).with_context(|| format!("missing fp tensor {name}"))
+        };
+        let embed = {
+            let (d, v) = get_fp("embed")?;
+            Mat::from_vec(d[0], d[1], v.clone())
+        };
+        let ln_f = get_fp("ln_f")?.1.clone();
+        let pos = if self.fp.contains_key("pos") {
+            let (d, v) = get_fp("pos")?;
+            Some(Mat::from_vec(d[0], d[1], v.clone()))
+        } else {
+            None
+        };
+        let mut layers = Vec::new();
+        for i in 0..cfg.n_layers {
+            let mut mats = BTreeMap::new();
+            for n in cfg.layer_weight_names() {
+                let p = self
+                    .packed
+                    .get(&format!("layers.{i}.{n}"))
+                    .with_context(|| format!("missing packed layers.{i}.{n}"))?;
+                mats.insert(n.to_string(), p.unpack());
+            }
+            layers.push(crate::model::LayerWeights {
+                ln1: get_fp(&format!("layers.{i}.ln1"))?.1.clone(),
+                ln2: get_fp(&format!("layers.{i}.ln2"))?.1.clone(),
+                mats,
+            });
+        }
+        Ok(ModelWeights { embed, ln_f, pos, layers })
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        let p: usize = self.packed.values().map(|p| p.bytes()).sum();
+        let f: usize = self.fp.values().map(|(_, v)| v.len() * 4).sum();
+        p + f
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"STBP")?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&((self.packed.len() + self.fp.len()) as u32).to_le_bytes())?;
+        for (name, p) in &self.packed {
+            f.write_all(&[0u8])?;
+            write_name(&mut f, name)?;
+            f.write_all(&(p.rows as u32).to_le_bytes())?;
+            f.write_all(&(p.cols as u32).to_le_bytes())?;
+            for m in &p.meta {
+                f.write_all(&m.to_le_bytes())?;
+            }
+            f.write_all(&p.signs)?;
+            for a in &p.alpha {
+                f.write_all(&a.to_le_bytes())?;
+            }
+        }
+        for (name, (dims, data)) in &self.fp {
+            f.write_all(&[1u8])?;
+            write_name(&mut f, name)?;
+            f.write_all(&(dims.len() as u32).to_le_bytes())?;
+            for d in dims {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            for v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PackedModel> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)?.read_to_end(&mut buf)?;
+        let mut p = 0usize;
+        let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
+            if *p + n > buf.len() {
+                bail!("truncated STBP");
+            }
+            let s = &buf[*p..*p + n];
+            *p += n;
+            Ok(s)
+        };
+        let u32r = |p: &mut usize| -> Result<u32> {
+            let b = take(p, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+        if take(&mut p, 4)? != b"STBP" {
+            bail!("bad magic");
+        }
+        let ver = u32r(&mut p)?;
+        if ver != 1 {
+            bail!("unsupported STBP version {ver}");
+        }
+        let n = u32r(&mut p)? as usize;
+        let mut packed = BTreeMap::new();
+        let mut fp = BTreeMap::new();
+        for _ in 0..n {
+            let kind = take(&mut p, 1)?[0];
+            let nl = u32r(&mut p)? as usize;
+            let name = String::from_utf8(take(&mut p, nl)?.to_vec())?;
+            match kind {
+                0 => {
+                    let rows = u32r(&mut p)? as usize;
+                    let cols = u32r(&mut p)? as usize;
+                    let total_groups = rows * (cols / 4);
+                    let n_words = (total_groups + 3) / 4;
+                    let meta: Vec<u16> = take(&mut p, 2 * n_words)?
+                        .chunks_exact(2)
+                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+                        .collect();
+                    let signs = take(&mut p, n_words)?.to_vec();
+                    let alpha: Vec<f32> = take(&mut p, 4 * rows)?
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    packed.insert(name, Packed24 { rows, cols, meta, signs, alpha });
+                }
+                1 => {
+                    let ndim = u32r(&mut p)? as usize;
+                    let mut dims = Vec::with_capacity(ndim);
+                    for _ in 0..ndim {
+                        dims.push(u32r(&mut p)? as usize);
+                    }
+                    let count: usize = dims.iter().product::<usize>().max(1);
+                    let data: Vec<f32> = take(&mut p, 4 * count)?
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    fp.insert(name, (dims, data));
+                }
+                k => bail!("unknown entry kind {k}"),
+            }
+        }
+        Ok(PackedModel { packed, fp })
+    }
+}
+
+fn write_name<W: Write>(f: &mut W, name: &str) -> Result<()> {
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("stbp_{}_{}.stbp", tag, std::process::id()))
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 1);
+        let pm = PackedModel::from_weights(&cfg, &w).unwrap();
+        let path = tmpfile("rt");
+        pm.save(&path).unwrap();
+        let back = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.packed.len(), pm.packed.len());
+        let a = pm.to_weights(&cfg).unwrap();
+        let b = back.to_weights(&cfg).unwrap();
+        assert_eq!(a.layers[0].mats["wq"].data, b.layers[0].mats["wq"].data);
+        assert_eq!(a.embed.data, b.embed.data);
+    }
+
+    #[test]
+    fn packed_model_much_smaller_than_fp32() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 2);
+        let pm = PackedModel::from_weights(&cfg, &w).unwrap();
+        // projections compress ~19x; embeddings stay fp so compare matrices only
+        let proj_fp: usize = w
+            .layers
+            .iter()
+            .flat_map(|l| l.mats.values())
+            .map(|m| m.data.len() * 4)
+            .sum();
+        let proj_packed: usize = pm.packed.values().map(|p| p.bytes()).sum();
+        assert!(proj_fp / proj_packed >= 15, "{proj_fp} / {proj_packed}");
+    }
+
+    #[test]
+    fn expanded_weights_run_the_forward() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 3);
+        let pm = PackedModel::from_weights(&cfg, &w).unwrap();
+        let qw = pm.to_weights(&cfg).unwrap();
+        let toks: Vec<u8> = (0..16).collect();
+        let logits = crate::model::transformer::model_fwd(&cfg, &qw, &toks);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmpfile("bad");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(PackedModel::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

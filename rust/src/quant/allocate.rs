@@ -1,0 +1,165 @@
+//! Adaptive layer-wise N:M assignment (paper §3.3 + Table 6 ablation).
+//!
+//! Given a target ratio `R = N/M`, assign each layer its own `n_i:M` so the
+//! *average* kept ratio meets the target:
+//!
+//! * `Uniform`  — every layer gets N.
+//! * `SinShape` — density follows a sine wave over depth (early layers
+//!   denser, late layers sparser), mean-preserving.
+//! * `Ours`     — the paper's importance-proportional rule
+//!   `r_i = α_i + (1 − α_i)·R` with `α_i = ω_i / ω_total` (per-layer weight
+//!   L2 norm share), renormalized so the mean kept ratio equals R exactly.
+
+use crate::quant::nm::NmRatio;
+
+/// Allocation strategy for per-layer N:M ratios.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Allocation {
+    Uniform,
+    SinShape,
+    Ours,
+}
+
+impl Allocation {
+    pub fn parse(s: &str) -> Option<Allocation> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(Allocation::Uniform),
+            "sin" | "sinshape" | "sin-shape" => Some(Allocation::SinShape),
+            "ours" | "adaptive" => Some(Allocation::Ours),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Allocation::Uniform => "Uniform",
+            Allocation::SinShape => "Sin-shape",
+            Allocation::Ours => "Ours",
+        }
+    }
+}
+
+/// Compute per-layer N:M ratios. `importance[i]` is the L2 norm of layer i's
+/// weights (only used by `Ours`). The result preserves the mean kept ratio:
+/// `mean(n_i) == N` (exactly, via largest-remainder rounding on n_i).
+pub fn assign_layer_ratios(
+    strategy: Allocation,
+    target: NmRatio,
+    importance: &[f32],
+) -> Vec<NmRatio> {
+    let l = importance.len();
+    assert!(l > 0);
+    let m = target.m;
+    let r_target = target.n as f64 / m as f64;
+
+    let raw: Vec<f64> = match strategy {
+        Allocation::Uniform => vec![r_target; l],
+        Allocation::SinShape => {
+            // density decreasing with depth: r_i = R + A·cos(π·i/(L−1));
+            // cos averages ≈ 0 over [0, π] so the mean stays near R.
+            let amp = (r_target - 1.0 / m as f64).min(1.0 - r_target) * 0.5;
+            (0..l)
+                .map(|i| {
+                    let t = if l > 1 { i as f64 / (l - 1) as f64 } else { 0.5 };
+                    r_target + amp * (std::f64::consts::PI * t).cos()
+                })
+                .collect()
+        }
+        Allocation::Ours => {
+            let total: f64 = importance.iter().map(|&x| x as f64).sum::<f64>().max(1e-12);
+            importance
+                .iter()
+                .map(|&w| {
+                    let alpha = w as f64 / total;
+                    alpha + (1.0 - alpha) * r_target
+                })
+                .collect()
+        }
+    };
+
+    // Convert to integer n_i with exact mean preservation (largest-remainder).
+    let budget = (target.n * l) as i64;
+    let scaled: Vec<f64> = raw.iter().map(|r| r * m as f64).collect();
+    let mut n: Vec<i64> = scaled.iter().map(|s| s.floor() as i64).collect();
+    // clamp into [1, m]
+    for v in n.iter_mut() {
+        *v = (*v).clamp(1, m as i64);
+    }
+    let mut deficit = budget - n.iter().sum::<i64>();
+    // largest-remainder: +1s go to layers with the largest fractional part,
+    // −1s are taken from layers with the smallest fractional part
+    let mut add_order: Vec<usize> = (0..l).collect();
+    add_order.sort_by(|&a, &b| {
+        let fa = scaled[a] - scaled[a].floor();
+        let fb = scaled[b] - scaled[b].floor();
+        fb.partial_cmp(&fa).unwrap()
+    });
+    let remove_order: Vec<usize> = add_order.iter().rev().copied().collect();
+    let mut guard = 0;
+    while deficit != 0 && guard < 10 * l as i64 {
+        let order = if deficit > 0 { &add_order } else { &remove_order };
+        for &i in order {
+            if deficit > 0 && n[i] < m as i64 {
+                n[i] += 1;
+                deficit -= 1;
+            } else if deficit < 0 && n[i] > 1 {
+                n[i] -= 1;
+                deficit += 1;
+            }
+            if deficit == 0 {
+                break;
+            }
+        }
+        guard += 1;
+    }
+    n.iter().map(|&ni| NmRatio::new(ni as usize, m)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn uniform_is_constant() {
+        let r = assign_layer_ratios(Allocation::Uniform, NmRatio::new(4, 8), &[1.0; 6]);
+        assert!(r.iter().all(|x| x.n == 4));
+    }
+
+    #[test]
+    fn ours_gives_important_layers_more() {
+        let imp = [10.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 30.0];
+        let r = assign_layer_ratios(Allocation::Ours, NmRatio::new(4, 8), &imp);
+        assert!(r[7].n >= r[1].n, "{:?}", r);
+        assert!(r[0].n >= r[1].n, "{:?}", r);
+    }
+
+    #[test]
+    fn sinshape_denser_early() {
+        let r = assign_layer_ratios(Allocation::SinShape, NmRatio::new(4, 8), &[1.0; 10]);
+        assert!(r[0].n >= r[9].n, "{:?}", r);
+    }
+
+    #[test]
+    fn mean_ratio_preserved_all_strategies() {
+        prop_check("allocation preserves mean n", 40, |rng| {
+            let l = 2 + rng.bounded(14) as usize;
+            let n = 2 + rng.bounded(5) as usize; // 2..6 of 8
+            let imp: Vec<f32> = (0..l).map(|_| 0.1 + rng.next_f32() * 10.0).collect();
+            for strat in [Allocation::Uniform, Allocation::SinShape, Allocation::Ours] {
+                let rs = assign_layer_ratios(strat, NmRatio::new(n, 8), &imp);
+                let total: usize = rs.iter().map(|r| r.n).sum();
+                prop_assert!(total == n * l, "{strat:?}: total={total} want {}", n * l);
+                prop_assert!(rs.iter().all(|r| r.n >= 1 && r.n <= 8));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Allocation::parse("sin-shape"), Some(Allocation::SinShape));
+        assert_eq!(Allocation::parse("ours"), Some(Allocation::Ours));
+        assert_eq!(Allocation::parse("nah"), None);
+    }
+}

@@ -1,0 +1,125 @@
+//! GPTQ baseline (Frantar et al. 2023): column-wise OBC quantization with
+//! error propagation through the inverse-Hessian Cholesky factor. Used for
+//! the Table 2 "GPTQ 1-bit" row and the 2-bit comparisons of Fig. 4b.
+
+use crate::tensor::{linalg, Mat};
+
+/// GPTQ at `bits` with per-row symmetric absmax grids (grid fixed from the
+/// ORIGINAL weights, per the reference implementation), block size `beta`.
+pub fn gptq(w: &Mat, hessian: Option<&Mat>, bits: u32, beta: usize, lambda: f32) -> Mat {
+    let k = w.cols;
+    let hc = match hessian {
+        Some(h) => linalg::hessian_chol_inv(h, lambda).unwrap_or_else(|_| Mat::eye(k)),
+        None => Mat::eye(k),
+    };
+    // fixed per-row grid scales from original W
+    let scales: Vec<f32> = (0..w.rows)
+        .map(|i| w.row(i).iter().map(|x| x.abs()).fold(0.0f32, f32::max))
+        .collect();
+    let levels = if bits <= 1 { 1 } else { (1i32 << (bits - 1)) - 1 } as f32;
+
+    let mut work = w.clone();
+    let mut out = Mat::zeros(w.rows, w.cols);
+    let beta = beta.max(1).min(k);
+
+    let mut b = 0usize;
+    while b < k {
+        let e = (b + beta).min(k);
+        // error buffer for the block (rows × blockwidth)
+        let mut err = Mat::zeros(w.rows, e - b);
+        for j in b..e {
+            let djj = hc[(j, j)].max(1e-12);
+            for i in 0..w.rows {
+                let x = work[(i, j)];
+                let s = scales[i];
+                let qv = if s == 0.0 {
+                    0.0
+                } else if bits == 1 {
+                    if x >= 0.0 { s } else { -s }
+                } else {
+                    (x / s * levels).round().clamp(-levels, levels) / levels * s
+                };
+                out[(i, j)] = qv;
+                let e_ij = (x - qv) / djj;
+                err[(i, j - b)] = e_ij;
+                // propagate inside the block
+                for jj in j + 1..e {
+                    work[(i, jj)] -= e_ij * hc[(j, jj)];
+                }
+            }
+        }
+        // propagate to the remaining columns
+        if e < k {
+            for i in 0..w.rows {
+                for j in b..e {
+                    let e_ij = err[(i, j - b)];
+                    if e_ij != 0.0 {
+                        let roww = work.row_mut(i);
+                        for jj in e..k {
+                            roww[jj] -= e_ij * hc[(j, jj)];
+                        }
+                    }
+                }
+            }
+        }
+        b = e;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{gram, matmul_bt};
+    use crate::util::rng::Pcg32;
+
+    fn setup(rows: usize, cols: usize, tokens: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg32::seeded(seed);
+        let w = Mat::random(rows, cols, 1.0, &mut rng);
+        let x = Mat::random(tokens, cols, 1.0, &mut rng);
+        let mut h = gram(&x);
+        h.scale(2.0);
+        (w, x, h)
+    }
+
+    fn out_err(w: &Mat, q: &Mat, x: &Mat) -> f32 {
+        let y1 = matmul_bt(x, w);
+        let y2 = matmul_bt(x, q);
+        y1.sub(&y2).frob_norm() / y1.frob_norm()
+    }
+
+    #[test]
+    fn gptq_beats_rtn_on_output_error() {
+        let (w, x, h) = setup(16, 64, 256, 1);
+        let g = gptq(&w, Some(&h), 2, 16, 0.01);
+        let r = crate::quant::baselines::rtn::rtn(&w, 2);
+        assert!(out_err(&w, &g, &x) < out_err(&w, &r, &x));
+    }
+
+    #[test]
+    fn gptq_without_hessian_matches_rtn_grid() {
+        let (w, _, _) = setup(4, 16, 32, 2);
+        let g = gptq(&w, None, 4, 16, 0.01);
+        let r = crate::quant::baselines::rtn::rtn(&w, 4);
+        for (a, b) in g.data.iter().zip(&r.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gptq_error_monotone_in_bits() {
+        let (w, x, h) = setup(8, 32, 128, 3);
+        let e2 = out_err(&w, &gptq(&w, Some(&h), 2, 8, 0.01), &x);
+        let e4 = out_err(&w, &gptq(&w, Some(&h), 4, 8, 0.01), &x);
+        assert!(e4 < e2);
+    }
+
+    #[test]
+    fn gptq_1bit_catastrophic() {
+        // reproduces the paper's observation: 1-bit GPTQ with absmax grids
+        // still destroys the layer (Table 2 RTN/GPTQ rows)
+        let (w, x, h) = setup(8, 64, 128, 4);
+        let e1 = out_err(&w, &gptq(&w, Some(&h), 1, 16, 0.01), &x);
+        assert!(e1 > 0.5, "e1={e1}");
+    }
+}

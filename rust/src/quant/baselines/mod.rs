@@ -1,0 +1,76 @@
+//! Baseline PTQ methods the paper compares against: RTN, GPTQ, PB-LLM and
+//! BiLLM. BiLLM shares the Algorithm-1 driver (it *is* STBLLM minus the SI
+//! metric and trisection), so it is expressed as an `StbOpts` configuration.
+
+pub mod awq;
+pub mod gptq;
+pub mod pbllm;
+pub mod rtn;
+
+use crate::quant::metrics::Metric;
+use crate::quant::nm::NmRatio;
+use crate::quant::pipeline::{NonSalientMode, StbOpts};
+
+/// BiLLM (Huang et al. 2024) configuration: Hessian salient split + residual
+/// approximation, bell-shaped (two-region) non-salient splitting, OBC
+/// compensation. `nm = None` is vanilla ~1.09-bit BiLLM; `Some(r)` is the
+/// paper's "BiLLM-N:M" sub-1-bit variant, which uses the Wanda metric for
+/// mask selection (§4.1 Baseline: "We conduct the N:M sparsity using Wanda").
+pub fn billm_opts(nm: Option<NmRatio>) -> StbOpts {
+    let (structure, ratio) = match nm {
+        Some(r) => (true, r),
+        None => (false, NmRatio::new(8, 8)),
+    };
+    StbOpts {
+        nm: ratio,
+        block_size: 128,
+        metric: Metric::Wanda,
+        lambda: 0.01,
+        salient_max_frac: 0.10,
+        non_salient: NonSalientMode::BellShaped,
+        structure,
+        quantize: true,
+        compensate: true,
+        residual_salient: true,
+        rearrange: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pipeline::structured_binarize;
+    use crate::quant::pipeline::LayerCalib;
+    use crate::tensor::{gram, Mat};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn billm_vanilla_is_dense_sub2bit() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Mat::random(16, 64, 1.0, &mut rng);
+        let x = Mat::random(128, 64, 1.0, &mut rng);
+        let mut h = gram(&x);
+        h.scale(2.0);
+        let calib = LayerCalib { hessian: Some(h), x_col_norms: Some(x.col_l2_norms()) };
+        let res = structured_binarize(&w, &calib, &billm_opts(None));
+        assert!(res.mask.iter().all(|&m| m));
+        assert!(res.avg_bits > 1.0 && res.avg_bits < 1.3, "bits={}", res.avg_bits);
+    }
+
+    #[test]
+    fn stbllm_beats_billm_at_same_nm() {
+        // the paper's core claim, at reconstruction-error level
+        let mut rng = Pcg32::seeded(2);
+        let w = Mat::random(32, 128, 1.0, &mut rng);
+        let x = Mat::random(256, 128, 1.0, &mut rng);
+        let mut h = gram(&x);
+        h.scale(2.0);
+        let calib = LayerCalib { hessian: Some(h), x_col_norms: Some(x.col_l2_norms()) };
+        let nm = NmRatio::new(4, 8);
+        let stb = structured_binarize(&w, &calib, &StbOpts::stbllm(nm));
+        let billm = structured_binarize(&w, &calib, &billm_opts(Some(nm)));
+        let es = w.sub(&stb.recon).frob_norm();
+        let eb = w.sub(&billm.recon).frob_norm();
+        assert!(es <= eb * 1.05, "stbllm={es} billm={eb}");
+    }
+}

@@ -1,0 +1,90 @@
+//! PB-LLM baseline (Shang et al. 2024): partial binarization.
+//!
+//! The top `frac_salient` weights (by magnitude) stay at `hi_bits` precision
+//! (8-bit RTN here, as in the reference "1.7 bit" configuration: 10% × 8 +
+//! 90% × 1 ≈ 1.7 bits/weight); the remainder is binarized with the optimal
+//! L1 scaling.
+
+use crate::quant::binarize::binarize_masked;
+use crate::tensor::Mat;
+
+/// PB-LLM reconstruction + its effective bits/weight.
+pub fn pbllm(w: &Mat, frac_salient: f64, hi_bits: u32) -> (Mat, f64) {
+    let n = w.data.len();
+    let keep = ((n as f64 * frac_salient).round() as usize).min(n);
+    // global magnitude threshold
+    let mut mags: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let thresh = if keep == 0 { f32::INFINITY } else { mags[keep - 1] };
+
+    let salient_mask: Vec<bool> = w.data.iter().map(|x| x.abs() >= thresh).collect();
+    let binary_mask: Vec<bool> = salient_mask.iter().map(|&m| !m).collect();
+
+    // high-precision part: per-row absmax RTN at hi_bits over salient values
+    let levels = ((1i32 << (hi_bits - 1)) - 1) as f32;
+    let mut recon = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        let mrow = &salient_mask[i * w.cols..(i + 1) * w.cols];
+        let s = row
+            .iter()
+            .zip(mrow)
+            .filter(|(_, &m)| m)
+            .map(|(x, _)| x.abs())
+            .fold(0.0f32, f32::max);
+        if s > 0.0 {
+            for (j, (&x, &m)) in row.iter().zip(mrow).enumerate() {
+                if m {
+                    recon[(i, j)] = (x / s * levels).round().clamp(-levels, levels) / levels * s;
+                }
+            }
+        }
+    }
+    // binarized remainder
+    let (_, bin) = binarize_masked(w, &binary_mask);
+    recon.add_assign(&bin);
+
+    let bits = frac_salient * hi_bits as f64 + (1.0 - frac_salient);
+    (recon, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn bits_match_paper_configuration() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Mat::random(8, 32, 1.0, &mut rng);
+        let (_, bits) = pbllm(&w, 0.10, 8);
+        assert!((bits - 1.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn beats_plain_binarization() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Mat::random(16, 64, 1.0, &mut rng);
+        let (recon, _) = pbllm(&w, 0.10, 8);
+        let (_, plain) = crate::quant::binarize::binarize(&w);
+        assert!(w.sub(&recon).frob_norm() < w.sub(&plain).frob_norm());
+    }
+
+    #[test]
+    fn salient_values_nearly_exact() {
+        let mut rng = Pcg32::seeded(3);
+        let mut w = Mat::random(4, 32, 0.3, &mut rng);
+        w[(0, 0)] = 10.0; // guaranteed salient
+        let (recon, _) = pbllm(&w, 0.10, 8);
+        assert!((recon[(0, 0)] - 10.0).abs() / 10.0 < 0.02);
+    }
+
+    #[test]
+    fn more_salient_lower_error() {
+        let mut rng = Pcg32::seeded(4);
+        let w = Mat::random(16, 64, 1.0, &mut rng);
+        let (r1, _) = pbllm(&w, 0.05, 8);
+        let (r2, _) = pbllm(&w, 0.30, 8);
+        assert!(w.sub(&r2).frob_norm() < w.sub(&r1).frob_norm());
+    }
+}

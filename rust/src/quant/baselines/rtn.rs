@@ -1,0 +1,124 @@
+//! RTN (round-to-nearest) baseline at arbitrary bit-width.
+//!
+//! Symmetric per-row (or per-group) absmax grids. At 1 bit RTN degenerates
+//! to α·sign(w) with α = absmax (NOT the L1-optimal mean|w|), which is why
+//! the paper's Table 2 shows RTN exploding at 1 bit — we reproduce that
+//! behaviour faithfully.
+
+use crate::tensor::Mat;
+
+/// Quantize one value to a symmetric `bits`-wide grid with scale `s`
+/// (s maps absmax to the top level).
+#[inline]
+fn q(x: f32, s: f32, bits: u32) -> f32 {
+    if s == 0.0 {
+        return 0.0;
+    }
+    let levels = (1i32 << (bits - 1)) - 1; // e.g. 2 bits → ±1, 4 bits → ±7
+    let l = levels.max(1) as f32;
+    (x / s * l).round().clamp(-l, l) / l * s
+}
+
+/// RTN quantization, per-row symmetric absmax grid.
+pub fn rtn(w: &Mat, bits: u32) -> Mat {
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        if bits == 1 {
+            // sign * absmax — the naive 1-bit RTN
+            let s = row.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+            for (o, &x) in out.row_mut(i).iter_mut().zip(row) {
+                *o = if x >= 0.0 { s } else { -s };
+            }
+        } else {
+            let s = row.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+            for (o, &x) in out.row_mut(i).iter_mut().zip(row) {
+                *o = q(x, s, bits);
+            }
+        }
+    }
+    out
+}
+
+/// RTN with per-row column-group grids (group_size columns share a scale) —
+/// the configuration 2-bit baselines (Fig. 4b) use.
+pub fn rtn_grouped(w: &Mat, bits: u32, group_size: usize) -> Mat {
+    let mut out = Mat::zeros(w.rows, w.cols);
+    let g = group_size.max(1);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        let orow = out.row_mut(i);
+        let mut c = 0;
+        while c < row.len() {
+            let e = (c + g).min(row.len());
+            let s = row[c..e].iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+            if bits == 1 {
+                for j in c..e {
+                    orow[j] = if row[j] >= 0.0 { s } else { -s };
+                }
+            } else {
+                for j in c..e {
+                    orow[j] = q(row[j], s, bits);
+                }
+            }
+            c = e;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn rtn_high_bits_near_exact() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Mat::random(8, 32, 1.0, &mut rng);
+        let r = rtn(&w, 8);
+        let rel = w.sub(&r).frob_norm() / w.frob_norm();
+        assert!(rel < 0.01, "rel={rel}");
+    }
+
+    #[test]
+    fn rtn_error_monotone_in_bits() {
+        let mut rng = Pcg32::seeded(2);
+        let w = Mat::random(16, 64, 1.0, &mut rng);
+        let errs: Vec<f32> = [1u32, 2, 3, 4]
+            .iter()
+            .map(|&b| w.sub(&rtn(&w, b)).frob_norm())
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn rtn_1bit_worse_than_l1_binarization() {
+        // absmax scaling is the wrong alpha for 1 bit — dynamic range blowup
+        let mut rng = Pcg32::seeded(3);
+        let w = Mat::random(8, 64, 1.0, &mut rng);
+        let r = rtn(&w, 1);
+        let (_, b) = crate::quant::binarize::binarize(&w);
+        assert!(w.sub(&r).frob_norm() > w.sub(&b).frob_norm());
+    }
+
+    #[test]
+    fn grouped_no_worse_than_rowwise() {
+        let mut rng = Pcg32::seeded(4);
+        let mut w = Mat::random(4, 128, 1.0, &mut rng);
+        // inject a huge outlier in one group — grouped scales contain the blast
+        w[(0, 5)] = 50.0;
+        let rg = rtn_grouped(&w, 2, 32);
+        let rr = rtn(&w, 2);
+        assert!(w.sub(&rg).frob_norm() <= w.sub(&rr).frob_norm());
+    }
+
+    #[test]
+    fn quantized_values_on_grid() {
+        let w = Mat::from_vec(1, 4, vec![0.9, -0.4, 0.1, -1.0]);
+        let r = rtn(&w, 2); // levels ±1, scale 1.0 ⇒ values in {-1, 0, 1}
+        for v in r.data {
+            assert!(v == 0.0 || (v.abs() - 1.0).abs() < 1e-6, "v={v}");
+        }
+    }
+}

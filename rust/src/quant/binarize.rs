@@ -1,0 +1,150 @@
+//! Binarization primitives (paper Eq. 1–2, 4).
+//!
+//! Channel-wise (per-output-row) scaling throughout: `α = ||w_row||₁ / m`
+//! with `sign(0) := +1` (Eq. 2). Masked variants compute α over the kept
+//! elements only, so N:M-pruned rows are not diluted by their zeros.
+
+use crate::tensor::Mat;
+
+/// sign with sign(0) = +1, matching Eq. 2 and `kernels/ref.py`.
+#[inline]
+pub fn sgn(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Plain row-wise binarization: returns (alpha per row, reconstruction).
+pub fn binarize(w: &Mat) -> (Vec<f32>, Mat) {
+    let mut alphas = Vec::with_capacity(w.rows);
+    let mut recon = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        let alpha = row.iter().map(|x| x.abs()).sum::<f32>() / w.cols as f32;
+        for (o, &x) in recon.row_mut(i).iter_mut().zip(row) {
+            *o = alpha * sgn(x);
+        }
+        alphas.push(alpha);
+    }
+    (alphas, recon)
+}
+
+/// Row-wise binarization restricted to `mask` (true = kept). Pruned
+/// positions reconstruct to exactly 0; alpha averages over kept count.
+pub fn binarize_masked(w: &Mat, mask: &[bool]) -> (Vec<f32>, Mat) {
+    assert_eq!(mask.len(), w.rows * w.cols);
+    let mut alphas = Vec::with_capacity(w.rows);
+    let mut recon = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        let mrow = &mask[i * w.cols..(i + 1) * w.cols];
+        let (mut l1, mut cnt) = (0.0f32, 0usize);
+        for (x, &m) in row.iter().zip(mrow) {
+            if m {
+                l1 += x.abs();
+                cnt += 1;
+            }
+        }
+        let alpha = if cnt > 0 { l1 / cnt as f32 } else { 0.0 };
+        for ((o, &x), &m) in recon.row_mut(i).iter_mut().zip(row).zip(mrow) {
+            *o = if m { alpha * sgn(x) } else { 0.0 };
+        }
+        alphas.push(alpha);
+    }
+    (alphas, recon)
+}
+
+/// Residual approximation (Eq. 4): W ≈ α_o B_o + α_r B_r, row-wise,
+/// restricted to `mask`. Returns the reconstruction.
+pub fn residual_binarize_masked(w: &Mat, mask: &[bool]) -> Mat {
+    let (_, first) = binarize_masked(w, mask);
+    let resid = w.sub(&first);
+    let (_, second) = binarize_masked(&resid, mask);
+    let mut out = first;
+    out.add_assign(&second);
+    // re-zero pruned positions (binarize_masked already does, but keep exact)
+    for (o, &m) in out.data.iter_mut().zip(mask) {
+        if !m {
+            *o = 0.0;
+        }
+    }
+    out
+}
+
+/// Unmasked residual approximation (mirrors `kernels/residual.py`).
+pub fn residual_binarize(w: &Mat) -> Mat {
+    let mask = vec![true; w.rows * w.cols];
+    residual_binarize_masked(w, &mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{gen_normal_vec, prop_check};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn binarize_known_values() {
+        let w = Mat::from_vec(1, 4, vec![1.0, -2.0, 3.0, -4.0]);
+        let (alphas, rec) = binarize(&w);
+        assert!((alphas[0] - 2.5).abs() < 1e-6);
+        assert_eq!(rec.data, vec![2.5, -2.5, 2.5, -2.5]);
+    }
+
+    #[test]
+    fn masked_alpha_ignores_pruned() {
+        let w = Mat::from_vec(1, 4, vec![1.0, -100.0, 3.0, 0.0]);
+        let mask = vec![true, false, true, true];
+        let (alphas, rec) = binarize_masked(&w, &mask);
+        assert!((alphas[0] - 4.0 / 3.0).abs() < 1e-6);
+        assert_eq!(rec.data[1], 0.0);
+        assert!((rec.data[0] - 4.0 / 3.0).abs() < 1e-6);
+        assert!(rec.data[3] > 0.0); // sign(0) = +1
+    }
+
+    #[test]
+    fn residual_never_worse_than_plain() {
+        prop_check("residual <= plain error", 40, |rng| {
+            let (r, c) = (4 + rng.bounded(12) as usize, 8 + rng.bounded(40) as usize);
+            let w = Mat::from_vec(r, c, gen_normal_vec(rng, r * c, 1.0));
+            let (_, plain) = binarize(&w);
+            let resid = residual_binarize(&w);
+            let ep = w.sub(&plain).frob_norm();
+            let er = w.sub(&resid).frob_norm();
+            prop_assert!(er <= ep + 1e-5, "er={er} ep={ep}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residual_masked_zeroes_pruned() {
+        let mut rng = Pcg32::seeded(3);
+        let w = Mat::random(6, 16, 1.0, &mut rng);
+        let mask: Vec<bool> = (0..96).map(|i| i % 2 == 0).collect();
+        let rec = residual_binarize_masked(&w, &mask);
+        for (i, (&v, &m)) in rec.data.iter().zip(&mask).enumerate() {
+            if !m {
+                assert_eq!(v, 0.0, "elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn binarize_is_l1_optimal_scale() {
+        // alpha = mean|w| minimizes ||w - a*sign(w)||² over a
+        prop_check("alpha optimal", 25, |rng| {
+            let w = Mat::from_vec(1, 32, gen_normal_vec(rng, 32, 2.0));
+            let (alphas, rec) = binarize(&w);
+            let base = w.sub(&rec).frob_norm();
+            for da in [-0.05f32, 0.05] {
+                let a = alphas[0] + da;
+                let alt = w.map(|x| a * sgn(x));
+                prop_assert!(w.sub(&alt).frob_norm() >= base - 1e-5);
+            }
+            Ok(())
+        });
+    }
+}

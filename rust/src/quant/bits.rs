@@ -1,0 +1,101 @@
+//! Average-bit accounting (paper §3.4 "Average Bits" + Table 1).
+//!
+//! Value bits per kept weight: `N_param = 2·r_salient + 1·(1 − r_salient)`
+//! (salient weights carry the residual pass ⇒ 2 bits). N:M pruning scales by
+//! `N/M`; side information adds the 2-bit non-salient region marks (amortized
+//! per group of `group` elements), the OBC block scale (`1/b_size`) and the
+//! N:M mask index (`log2(C(M,N))/M` per position, the paper's uint16 meta
+//! index in Appendix C).
+
+use crate::quant::nm::NmRatio;
+
+/// Paper Table 1's headline number: value bits/weight after N:M pruning.
+pub fn param_bits(r_salient: f64, nm: NmRatio) -> f64 {
+    let n_param = 2.0 * r_salient + (1.0 - r_salient);
+    n_param * nm.density()
+}
+
+/// Storage side-info bits per weight (paper's `N_storing`, normalized per
+/// weight rather than per block): 2 bits of region marks amortized over a
+/// quantization group + block scale.
+pub fn storing_bits(group_size: usize, b_size: usize) -> f64 {
+    2.0 / group_size as f64 + 1.0 / b_size as f64
+}
+
+/// Mask-index bits per position for an N:M pattern: ceil(log2 C(M,N)) / M.
+pub fn mask_index_bits(nm: NmRatio) -> f64 {
+    let c = binomial(nm.m, nm.n) as f64;
+    (c.log2().ceil()).max(0.0) / nm.m as f64
+}
+
+fn binomial(m: usize, n: usize) -> u64 {
+    let n = n.min(m - n);
+    let mut num = 1u64;
+    let mut den = 1u64;
+    for i in 0..n {
+        num *= (m - i) as u64;
+        den *= (i + 1) as u64;
+    }
+    num / den
+}
+
+/// Full effective bits/weight: values + marks + scales + mask index.
+pub fn total_bits(r_salient: f64, nm: NmRatio, group_size: usize, b_size: usize) -> f64 {
+    param_bits(r_salient, nm) + storing_bits(group_size, b_size) + mask_index_bits(nm)
+}
+
+/// The W-bits label the paper uses for a sparsity setting (e.g. "0.55 (4:8)").
+pub fn paper_label(r_salient: f64, nm: NmRatio) -> String {
+    format!("{:.2} ({})", param_bits(r_salient, nm), nm.label())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reference_points() {
+        // Table 1: r_salient ≈ 0.10 gives BiLLM ≈ 1.10, 4:8 ≈ 0.55,
+        // 5:8 ≈ 0.69, 6:8 ≈ 0.83 — the paper's LLaMA-1 row.
+        let r = 0.10;
+        assert!((param_bits(r, NmRatio::new(8, 8)) - 1.10).abs() < 0.01);
+        assert!((param_bits(r, NmRatio::new(4, 8)) - 0.55).abs() < 0.01);
+        assert!((param_bits(r, NmRatio::new(5, 8)) - 0.6875).abs() < 0.01);
+        assert!((param_bits(r, NmRatio::new(6, 8)) - 0.825).abs() < 0.01);
+    }
+
+    #[test]
+    fn more_salient_more_bits() {
+        let nm = NmRatio::new(4, 8);
+        assert!(param_bits(0.2, nm) > param_bits(0.05, nm));
+    }
+
+    #[test]
+    fn binomials() {
+        assert_eq!(binomial(4, 2), 6);
+        assert_eq!(binomial(8, 4), 70);
+        assert_eq!(binomial(8, 6), 28);
+    }
+
+    #[test]
+    fn mask_bits_sane() {
+        // 2:4 → log2(6)=2.58 → 3 bits / 4 = 0.75
+        assert!((mask_index_bits(NmRatio::new(2, 4)) - 0.75).abs() < 1e-9);
+        // 4:8 → log2(70)=6.13 → 7 bits / 8 = 0.875
+        assert!((mask_index_bits(NmRatio::new(4, 8)) - 0.875).abs() < 1e-9);
+        // dense 8:8 → 0 bits
+        assert_eq!(mask_index_bits(NmRatio::new(8, 8)), 0.0);
+    }
+
+    #[test]
+    fn total_is_monotone_in_components() {
+        let nm = NmRatio::new(4, 8);
+        assert!(total_bits(0.1, nm, 128, 128) > param_bits(0.1, nm));
+        assert!(total_bits(0.1, nm, 64, 128) > total_bits(0.1, nm, 128, 128));
+    }
+
+    #[test]
+    fn label_format() {
+        assert_eq!(paper_label(0.10, NmRatio::new(4, 8)), "0.55 (4:8)");
+    }
+}

@@ -1,0 +1,190 @@
+//! Pruning/saliency metrics (paper §3.2 + Table 5 ablation).
+//!
+//! All metrics map a weight matrix (+ calibration statistics) to an
+//! importance score per element; the N:M selector keeps the top-N per group.
+//!
+//! * `Magnitude`  — |w|
+//! * `Wanda`      — |w| · ‖X_j‖₂                         (Sun et al. 2024)
+//! * `SparseGpt`  — w² / diag(H⁻¹)_j²                    (Frantar & Alistarh 2023)
+//! * `Si`         — the paper's Standardized Importance (Eq. 3):
+//!                  σ(μ(|W|)) · ‖X_j‖₂ where μ is the sum of row- and
+//!                  column-L1-normalized magnitude and σ standardizes over
+//!                  the layer. Gradient-free, Hessian-free, outlier-robust.
+
+use crate::tensor::Mat;
+
+/// Which importance metric scores weights for N:M selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    Si,
+}
+
+impl Metric {
+    pub fn parse(s: &str) -> Option<Metric> {
+        match s.to_ascii_lowercase().as_str() {
+            "magnitude" | "mag" => Some(Metric::Magnitude),
+            "wanda" => Some(Metric::Wanda),
+            "sparsegpt" => Some(Metric::SparseGpt),
+            "si" | "ours" => Some(Metric::Si),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Magnitude => "Magnitude",
+            Metric::Wanda => "Wanda",
+            Metric::SparseGpt => "SparseGPT",
+            Metric::Si => "SI",
+        }
+    }
+}
+
+/// Calibration statistics a metric may need. `x_col_norms[j] = ‖X_{:,j}‖₂`
+/// over the calibration activations; `hinv_diag[j] = (H⁻¹)_{jj}`.
+pub struct CalibStats<'a> {
+    pub x_col_norms: Option<&'a [f32]>,
+    pub hinv_diag: Option<&'a [f32]>,
+}
+
+impl<'a> CalibStats<'a> {
+    pub fn none() -> CalibStats<'static> {
+        CalibStats { x_col_norms: None, hinv_diag: None }
+    }
+}
+
+/// Score every element of `w` under `metric`. Falls back gracefully when a
+/// statistic is unavailable (norms default to 1) so the pipeline still runs
+/// on weight-only paths; the ablation benches always supply real stats.
+pub fn score(metric: Metric, w: &Mat, stats: &CalibStats) -> Mat {
+    match metric {
+        Metric::Magnitude => w.map(f32::abs),
+        Metric::Wanda => {
+            let mut s = w.map(f32::abs);
+            if let Some(norms) = stats.x_col_norms {
+                scale_cols(&mut s, norms);
+            }
+            s
+        }
+        Metric::SparseGpt => {
+            let mut s = w.map(|x| x * x);
+            if let Some(d) = stats.hinv_diag {
+                for i in 0..s.rows {
+                    for (v, dj) in s.row_mut(i).iter_mut().zip(d) {
+                        let denom = dj * dj;
+                        *v /= denom.max(1e-12);
+                    }
+                }
+            }
+            s
+        }
+        Metric::Si => si_score(w, stats.x_col_norms),
+    }
+}
+
+/// Standardized Importance (Eq. 3).
+pub fn si_score(w: &Mat, x_col_norms: Option<&[f32]>) -> Mat {
+    let row_l1 = w.row_l1_sums();
+    let col_l1 = w.col_l1_sums();
+    // μ(|W|)_{ij} = |w_ij|/rowsum_i + |w_ij|/colsum_j
+    let mut mu = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let rs = row_l1[i].max(1e-12);
+        let wrow = w.row(i);
+        for (j, (m, &x)) in mu.row_mut(i).iter_mut().zip(wrow).enumerate() {
+            *m = x.abs() / rs + x.abs() / col_l1[j].max(1e-12);
+        }
+    }
+    // standardize over the layer: (μ - mean) / std
+    let mean = mu.mean();
+    let std = mu.std().max(1e-12);
+    let mut s = mu.map(|x| (x - mean) / std);
+    // shift to non-negative so ranking is monotone in importance even after
+    // multiplying by (non-negative) input norms
+    let min = s.data.iter().copied().fold(f32::INFINITY, f32::min);
+    s.data.iter_mut().for_each(|v| *v -= min);
+    if let Some(norms) = x_col_norms {
+        scale_cols(&mut s, norms);
+    }
+    s
+}
+
+fn scale_cols(m: &mut Mat, scales: &[f32]) {
+    assert_eq!(m.cols, scales.len());
+    for i in 0..m.rows {
+        for (v, s) in m.row_mut(i).iter_mut().zip(scales) {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{gen_normal_vec, prop_check};
+
+    #[test]
+    fn magnitude_is_abs() {
+        let w = Mat::from_vec(1, 3, vec![-2.0, 0.5, -0.1]);
+        let s = score(Metric::Magnitude, &w, &CalibStats::none());
+        assert_eq!(s.data, vec![2.0, 0.5, 0.1]);
+    }
+
+    #[test]
+    fn wanda_scales_by_input_norm() {
+        let w = Mat::from_vec(2, 2, vec![1.0, 1.0, -1.0, 1.0]);
+        let norms = [2.0f32, 0.5];
+        let s = score(
+            Metric::Wanda,
+            &w,
+            &CalibStats { x_col_norms: Some(&norms), hinv_diag: None },
+        );
+        assert_eq!(s.data, vec![2.0, 0.5, 2.0, 0.5]);
+    }
+
+    #[test]
+    fn sparsegpt_downweights_well_conditioned() {
+        let w = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let d = [1.0f32, 2.0]; // column 1 has larger (H^{-1})_jj ⇒ less important
+        let s = score(Metric::SparseGpt, &w, &CalibStats { x_col_norms: None, hinv_diag: Some(&d) });
+        assert!(s.data[0] > s.data[1]);
+    }
+
+    #[test]
+    fn si_nonnegative_and_outlier_robust() {
+        prop_check("si robust", 30, |rng| {
+            let (r, c) = (8usize, 24usize);
+            let mut data = gen_normal_vec(rng, r * c, 1.0);
+            data[0] = 1e4; // extreme outlier
+            let w = Mat::from_vec(r, c, data);
+            let s = si_score(&w, None);
+            prop_assert!(s.data.iter().all(|&v| v >= 0.0 && v.is_finite()));
+            // the outlier must not dominate the entire layer: at most a
+            // bounded share of total score mass
+            let total: f32 = s.data.iter().sum();
+            prop_assert!(s.data[0] / total < 0.5, "outlier share {}", s.data[0] / total);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn si_ranks_bigger_weights_higher_within_row() {
+        let w = Mat::from_vec(2, 4, vec![0.1, 0.2, 0.4, 0.8, 0.8, 0.4, 0.2, 0.1]);
+        let s = si_score(&w, None);
+        assert!(s[(0, 3)] > s[(0, 0)]);
+        assert!(s[(1, 0)] > s[(1, 3)]);
+    }
+
+    #[test]
+    fn metric_parse_roundtrip() {
+        for m in [Metric::Magnitude, Metric::Wanda, Metric::SparseGpt, Metric::Si] {
+            assert_eq!(Metric::parse(m.name()).unwrap(), m);
+        }
+        assert_eq!(Metric::parse("ours"), Some(Metric::Si));
+        assert_eq!(Metric::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's quantization algorithms (STBLLM Algorithm 1 + 2) and every
+//! baseline it is compared against. All functions operate on a single
+//! weight matrix + calibration statistics; `coordinator::quantizer` drives
+//! them across a whole model.
+
+pub mod allocate;
+pub mod baselines;
+pub mod binarize;
+pub mod bits;
+pub mod metrics;
+pub mod nm;
+pub mod pipeline;
+pub mod rearrange;
+pub mod salient;
+pub mod trisection;
+
+pub use allocate::Allocation;
+pub use metrics::Metric;
+pub use nm::NmRatio;
+pub use pipeline::{structured_binarize, LayerCalib, NonSalientMode, QuantResult, StbOpts};

@@ -1,0 +1,137 @@
+//! N:M structured sparsity mask selection.
+//!
+//! Per output row, within every group of M consecutive input positions, keep
+//! the N highest-scoring elements. This is exactly the layout Ampere sparse
+//! tensor cores (and our `packed` simulator) consume.
+
+use crate::tensor::Mat;
+
+/// An N:M ratio (keep `n` of every `m`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NmRatio {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl NmRatio {
+    pub fn new(n: usize, m: usize) -> NmRatio {
+        assert!(n >= 1 && n <= m, "invalid N:M {n}:{m}");
+        NmRatio { n, m }
+    }
+
+    /// Parse "4:8" style strings.
+    pub fn parse(s: &str) -> Option<NmRatio> {
+        let (a, b) = s.split_once(':')?;
+        let n = a.trim().parse().ok()?;
+        let m = b.trim().parse().ok()?;
+        (n >= 1 && n <= m).then(|| NmRatio::new(n, m))
+    }
+
+    pub fn density(&self) -> f64 {
+        self.n as f64 / self.m as f64
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}:{}", self.n, self.m)
+    }
+}
+
+/// Boolean keep-mask (row-major, same layout as `w`): within each row-group
+/// of `m` columns keep the `n` largest scores. A trailing partial group
+/// keeps `ceil(width * n/m)` elements so overall density is preserved.
+pub fn nm_mask(scores: &Mat, nm: NmRatio) -> Vec<bool> {
+    let (rows, cols) = (scores.rows, scores.cols);
+    let mut mask = vec![false; rows * cols];
+    let mut idx: Vec<usize> = Vec::with_capacity(nm.m);
+    for i in 0..rows {
+        let srow = scores.row(i);
+        let mrow = &mut mask[i * cols..(i + 1) * cols];
+        let mut g = 0;
+        while g < cols {
+            let width = nm.m.min(cols - g);
+            let keep = if width == nm.m {
+                nm.n
+            } else {
+                ((width * nm.n + nm.m - 1) / nm.m).max(1)
+            };
+            idx.clear();
+            idx.extend(g..g + width);
+            idx.sort_by(|&a, &b| srow[b].partial_cmp(&srow[a]).unwrap_or(std::cmp::Ordering::Equal));
+            for &j in idx.iter().take(keep) {
+                mrow[j] = true;
+            }
+            g += width;
+        }
+    }
+    mask
+}
+
+/// Density of a mask (kept fraction).
+pub fn mask_density(mask: &[bool]) -> f64 {
+    mask.iter().filter(|&&b| b).count() as f64 / mask.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{gen_vec, prop_check};
+
+    #[test]
+    fn parse_ratio() {
+        let r = NmRatio::parse("4:8").unwrap();
+        assert_eq!((r.n, r.m), (4, 8));
+        assert!(NmRatio::parse("9:8").is_none());
+        assert!(NmRatio::parse("0:8").is_none());
+        assert!(NmRatio::parse("48").is_none());
+        assert_eq!(r.label(), "4:8");
+        assert!((r.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn keeps_exactly_n_per_group() {
+        prop_check("nm keeps exactly n per full group", 60, |rng| {
+            let m = [4usize, 8][rng.bounded(2) as usize];
+            let n = 1 + rng.bounded(m as u32) as usize;
+            let rows = 1 + rng.bounded(6) as usize;
+            let cols = m * (1 + rng.bounded(8) as usize);
+            let s = Mat::from_vec(rows, cols, gen_vec(rng, rows * cols, 1.0));
+            let mask = nm_mask(&s, NmRatio::new(n, m));
+            for i in 0..rows {
+                for g in (0..cols).step_by(m) {
+                    let cnt = (g..g + m).filter(|&j| mask[i * cols + j]).count();
+                    prop_assert!(cnt == n, "row {i} group {g}: kept {cnt} != {n}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn keeps_top_scores() {
+        let s = Mat::from_vec(1, 8, vec![0.9, 0.1, 0.5, 0.3, 0.2, 0.8, 0.7, 0.6]);
+        let mask = nm_mask(&s, NmRatio::new(2, 4));
+        assert_eq!(mask, vec![true, false, true, false, false, true, true, false]);
+    }
+
+    #[test]
+    fn partial_group_preserves_density() {
+        let s = Mat::from_vec(1, 10, (0..10).map(|i| i as f32).collect());
+        let mask = nm_mask(&s, NmRatio::new(4, 8));
+        // full group keeps 4; trailing width-2 group keeps ceil(2*4/8)=1
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 5);
+    }
+
+    #[test]
+    fn density_matches_ratio() {
+        prop_check("density == n/m", 30, |rng| {
+            let s = Mat::from_vec(4, 64, gen_vec(rng, 256, 1.0));
+            for (n, m) in [(2, 4), (4, 8), (5, 8), (6, 8)] {
+                let mask = nm_mask(&s, NmRatio::new(n, m));
+                let d = mask_density(&mask);
+                prop_assert!((d - n as f64 / m as f64).abs() < 1e-9, "{n}:{m} d={d}");
+            }
+            Ok(())
+        });
+    }
+}

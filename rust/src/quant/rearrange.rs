@@ -1,0 +1,149 @@
+//! Channel rearrangement (paper §1 contributions: "channel rearrangement to
+//! preserve salient weights").
+//!
+//! N:M selection operates on *aligned groups of M consecutive columns*; when
+//! several salient channels land in the same group they compete for the N
+//! slots and some are pruned. Permuting input channels so that high-salience
+//! columns are spread across groups (round-robin over the salience ranking)
+//! removes that collision. The same permutation must be applied to the
+//! layer's input activations — for a linear layer this is exact:
+//! `x @ (W P)^T` with `x P` — so we permute W, quantize, and permute back,
+//! which keeps the *selection* benefit while leaving the layer interface
+//! unchanged.
+
+use crate::tensor::Mat;
+
+/// Round-robin permutation from column scores: rank columns by descending
+/// score, then deal them across the ⌈cols/m⌉ groups like cards so each group
+/// receives one top channel before any group receives its second.
+pub fn rearrangement(col_scores: &[f32], m: usize) -> Vec<usize> {
+    let cols = col_scores.len();
+    let n_groups = (cols + m - 1) / m;
+    let mut order: Vec<usize> = (0..cols).collect();
+    order.sort_by(|&a, &b| {
+        col_scores[b].partial_cmp(&col_scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    // perm[new_position] = old_column
+    let mut perm = vec![0usize; cols];
+    for (rank, &col) in order.iter().enumerate() {
+        let group = rank % n_groups;
+        let slot = rank / n_groups;
+        let pos = group * m + slot;
+        if pos < cols {
+            perm[pos] = col;
+        }
+    }
+    // trailing positions for ranks that overflow the rectangular layout
+    let mut used = vec![false; cols];
+    for &p in &perm[..cols.min(perm.len())] {
+        used[p] = true;
+    }
+    let mut missing: Vec<usize> = (0..cols).filter(|&c| !used[c]).collect();
+    // positions that collided (duplicates) get the missing columns
+    let mut seen = vec![false; cols];
+    for slot in perm.iter_mut() {
+        if seen[*slot] {
+            *slot = missing.pop().unwrap();
+        }
+        seen[*slot] = true;
+    }
+    perm
+}
+
+/// Apply: out[:, i] = w[:, perm[i]].
+pub fn permute_cols(w: &Mat, perm: &[usize]) -> Mat {
+    assert_eq!(perm.len(), w.cols);
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let src = w.row(i);
+        let dst = out.row_mut(i);
+        for (new, &old) in perm.iter().enumerate() {
+            dst[new] = src[old];
+        }
+    }
+    out
+}
+
+/// Inverse permutation.
+pub fn invert(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old] = new;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::quant::nm::{nm_mask, NmRatio};
+    use crate::util::prop::{gen_vec, prop_check};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn rearrangement_is_permutation() {
+        prop_check("rearrangement is a permutation", 40, |rng| {
+            let cols = 8 * (1 + rng.bounded(8) as usize);
+            let scores = gen_vec(rng, cols, 5.0);
+            let perm = rearrangement(&scores, 8);
+            let mut sorted = perm.clone();
+            sorted.sort_unstable();
+            prop_assert!(sorted == (0..cols).collect::<Vec<_>>(), "not a permutation");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spreads_top_channels_across_groups() {
+        // 16 cols, m=4 ⇒ 4 groups; the 4 biggest scores must land in 4
+        // distinct groups after rearrangement
+        let mut scores = vec![0.1f32; 16];
+        for &c in &[0usize, 1, 2, 3] {
+            scores[c] = 10.0 + c as f32; // all top channels clustered in group 0
+        }
+        let perm = rearrangement(&scores, 4);
+        let inv = invert(&perm);
+        let groups: Vec<usize> = [0usize, 1, 2, 3].iter().map(|&c| inv[c] / 4).collect();
+        let mut g = groups.clone();
+        g.sort_unstable();
+        g.dedup();
+        assert_eq!(g.len(), 4, "top channels share groups: {groups:?}");
+    }
+
+    #[test]
+    fn permute_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let w = Mat::random(6, 24, 1.0, &mut rng);
+        let scores: Vec<f32> = (0..24).map(|_| rng.next_f32()).collect();
+        let perm = rearrangement(&scores, 8);
+        let back = permute_cols(&permute_cols(&w, &perm), &invert(&perm));
+        assert_eq!(back.data, w.data);
+    }
+
+    #[test]
+    fn rearrangement_preserves_more_salient_mass() {
+        // clustered salient columns: N:M selection after rearrangement keeps
+        // at least as much score mass as without
+        let mut rng = Pcg32::seeded(5);
+        let (rows, cols) = (16usize, 32usize);
+        let mut w = Mat::random(rows, cols, 0.2, &mut rng);
+        for i in 0..rows {
+            for c in [0usize, 1, 2, 3, 4, 5] {
+                w[(i, c)] += 3.0; // six salient channels all in the first groups
+            }
+        }
+        let scores = w.map(f32::abs);
+        let col_scores: Vec<f32> = (0..cols)
+            .map(|j| (0..rows).map(|i| scores[(i, j)]).sum())
+            .collect();
+        let kept_mass = |m: &Mat| -> f32 {
+            let sc = m.map(f32::abs);
+            let mask = nm_mask(&sc, NmRatio::new(2, 8));
+            sc.data.iter().zip(&mask).filter(|(_, &k)| k).map(|(v, _)| v).sum()
+        };
+        let perm = rearrangement(&col_scores, 8);
+        let wp = permute_cols(&w, &perm);
+        assert!(kept_mass(&wp) >= kept_mass(&w), "{} vs {}", kept_mass(&wp), kept_mass(&w));
+    }
+}

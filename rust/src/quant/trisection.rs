@@ -1,0 +1,194 @@
+//! Non-salient Aware Quantization (paper §3.4 + Algorithm 2).
+//!
+//! The non-salient weights are ~symmetric-Gaussian; a trisection search finds
+//! break-points `p1* < p2*` splitting |w| into **dense** `[0, p1]`,
+//! **intermediate** `(p1, p2]` and **sparse** `(p2, max]` regions, each
+//! binarized with its own scale (Eq. 5–6). The O(N) search links
+//! `p2 = σ·p1` (σ = 2) and scans p1 over linspace(0.1, 0.9, 160)·max|w|,
+//! exactly as Algorithm 2 does.
+
+use crate::quant::binarize::{binarize_masked, sgn};
+use crate::tensor::Mat;
+
+/// σ in `p2 = σ·p1` (paper Appendix A: "we set σ = 2 and it works well").
+pub const SIGMA: f32 = 2.0;
+/// Number of p1 candidates (paper: np.linspace(0.1, 0.9, 160)).
+pub const N_CANDIDATES: usize = 160;
+
+/// Result of the trisection search.
+#[derive(Clone, Debug)]
+pub struct Trisection {
+    pub p1: f32,
+    pub p2: f32,
+    pub err: f32,
+}
+
+/// Region id per element (for packing/bit accounting): 0 = dense,
+/// 1 = intermediate, 2 = sparse. Matches the 2-bit group marker of §3.4.
+pub fn region_of(absw: f32, p1: f32, p2: f32) -> u8 {
+    if absw > p2 {
+        2
+    } else if absw > p1 {
+        1
+    } else {
+        0
+    }
+}
+
+/// Reconstruction with three per-row scales, restricted to `mask`.
+/// Each region r gets α_r = mean|w| over its members (per row — channel-wise
+/// scaling consistent with Eq. 1) and reconstructs α_r · sign(w).
+pub fn trisection_reconstruct(w: &Mat, mask: &[bool], p1: f32, p2: f32) -> Mat {
+    let mut recon = Mat::zeros(w.rows, w.cols);
+    for i in 0..w.rows {
+        let row = w.row(i);
+        let mrow = &mask[i * w.cols..(i + 1) * w.cols];
+        let mut l1 = [0.0f32; 3];
+        let mut cnt = [0usize; 3];
+        for (&x, &m) in row.iter().zip(mrow) {
+            if m {
+                let r = region_of(x.abs(), p1, p2) as usize;
+                l1[r] += x.abs();
+                cnt[r] += 1;
+            }
+        }
+        let alpha: Vec<f32> =
+            (0..3).map(|r| if cnt[r] > 0 { l1[r] / cnt[r] as f32 } else { 0.0 }).collect();
+        for ((o, &x), &m) in recon.row_mut(i).iter_mut().zip(row).zip(mrow) {
+            if m {
+                let r = region_of(x.abs(), p1, p2) as usize;
+                *o = alpha[r] * sgn(x);
+            }
+        }
+    }
+    recon
+}
+
+/// O(N) trisection search (Algorithm 2 `NonSalientAwareQuant`): scan p1,
+/// derive p2 = σ·p1, skip when p2 > 0.9·max|w|, keep the error minimizer.
+/// Falls back to plain binarization break-points when the scan finds nothing
+/// (e.g. all-zero input).
+pub fn trisection_search(w: &Mat, mask: &[bool]) -> Trisection {
+    let maxw = w
+        .data
+        .iter()
+        .zip(mask)
+        .filter(|(_, &m)| m)
+        .map(|(x, _)| x.abs())
+        .fold(0.0f32, f32::max);
+    if maxw == 0.0 {
+        return Trisection { p1: 0.0, p2: 0.0, err: 0.0 };
+    }
+    let mut best = Trisection { p1: f32::NAN, p2: f32::NAN, err: f32::INFINITY };
+    for i in 0..N_CANDIDATES {
+        let frac = 0.1 + 0.8 * i as f32 / (N_CANDIDATES - 1) as f32;
+        let p1 = frac * maxw;
+        let p2 = SIGMA * p1;
+        if p2 > 0.9 * maxw {
+            continue;
+        }
+        let recon = trisection_reconstruct(w, mask, p1, p2);
+        let err = masked_err(w, &recon, mask);
+        if err < best.err {
+            best = Trisection { p1, p2, err };
+        }
+    }
+    if !best.p1.is_finite() {
+        // degenerate: no valid candidate (tiny max) — single region
+        let (_, recon) = binarize_masked(w, mask);
+        let err = masked_err(w, &recon, mask);
+        return Trisection { p1: maxw, p2: maxw, err };
+    }
+    best
+}
+
+fn masked_err(w: &Mat, recon: &Mat, mask: &[bool]) -> f32 {
+    let mut s = 0.0f32;
+    for ((&a, &b), &m) in w.data.iter().zip(&recon.data).zip(mask) {
+        if m {
+            let d = a - b;
+            s += d * d;
+        }
+    }
+    s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{gen_normal_vec, prop_check};
+
+    fn full(r: usize, c: usize) -> Vec<bool> {
+        vec![true; r * c]
+    }
+
+    #[test]
+    fn regions_partition() {
+        prop_check("regions partition |w|", 50, |rng| {
+            let p1 = 0.2 + rng.next_f32();
+            let p2 = SIGMA * p1;
+            for _ in 0..50 {
+                let x = rng.range_f32(0.0, 3.0);
+                let r = region_of(x, p1, p2);
+                match r {
+                    0 => prop_assert!(x <= p1),
+                    1 => prop_assert!(x > p1 && x <= p2),
+                    2 => prop_assert!(x > p2),
+                    _ => return Err("bad region".into()),
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trisection_beats_single_region_on_gaussian() {
+        prop_check("trisection <= plain binarization error", 15, |rng| {
+            let (r, c) = (16usize, 64usize);
+            let w = Mat::from_vec(r, c, gen_normal_vec(rng, r * c, 1.0));
+            let mask = full(r, c);
+            let tri = trisection_search(&w, &mask);
+            let (_, plain) = binarize_masked(&w, &mask);
+            let ep = masked_err(&w, &plain, &mask);
+            prop_assert!(tri.err <= ep + 1e-5, "tri={} plain={ep}", tri.err);
+            prop_assert!(tri.p2 <= SIGMA * tri.p1 + 1e-5);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn break_points_respect_sigma_link_and_cap() {
+        let mut rng = crate::util::rng::Pcg32::seeded(4);
+        let w = Mat::random(8, 40, 1.5, &mut rng);
+        let mask = full(8, 40);
+        let tri = trisection_search(&w, &mask);
+        let maxw = w.data.iter().map(|x| x.abs()).fold(0.0f32, f32::max);
+        assert!((tri.p2 - SIGMA * tri.p1).abs() < 1e-5);
+        assert!(tri.p2 <= 0.9 * maxw + 1e-5);
+    }
+
+    #[test]
+    fn all_zero_input_is_handled() {
+        let w = Mat::zeros(4, 8);
+        let mask = full(4, 8);
+        let tri = trisection_search(&w, &mask);
+        assert_eq!(tri.err, 0.0);
+        let recon = trisection_reconstruct(&w, &mask, tri.p1, tri.p2);
+        assert!(recon.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pruned_positions_stay_zero() {
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let w = Mat::random(6, 24, 1.0, &mut rng);
+        let mask: Vec<bool> = (0..144).map(|i| i % 3 != 0).collect();
+        let tri = trisection_search(&w, &mask);
+        let recon = trisection_reconstruct(&w, &mask, tri.p1, tri.p2);
+        for (idx, &m) in mask.iter().enumerate() {
+            if !m {
+                assert_eq!(recon.data[idx], 0.0);
+            }
+        }
+    }
+}

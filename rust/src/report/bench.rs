@@ -1,0 +1,161 @@
+//! Shared support for the bench harness (`benches/*.rs`, `harness = false`).
+//!
+//! Centralizes artifact loading, calibration/weight caching, quantize+eval
+//! plumbing and the fast/full switch so each bench file reads like the table
+//! it regenerates.
+//!
+//! Environment knobs:
+//!   STBLLM_FULL=1          — evaluate the full model zoo (default: a small
+//!                            representative subset so `cargo bench` stays
+//!                            tractable on one core)
+//!   STBLLM_CALIB_TOKENS=N  — calibration token budget (default 512)
+//!   STBLLM_EVAL_TOKENS=N   — perplexity token budget (default 1161 ≈ 9 windows)
+//!   STBLLM_NATIVE_EVAL=1   — force the native forward instead of PJRT
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::calib::{calibrate, ModelCalib};
+use crate::coordinator::quantizer::{quantize_model, Method, QuantizedModel};
+use crate::eval::perplexity::{ppl_native, ppl_pjrt};
+use crate::model::config::ModelConfig;
+use crate::model::corpus;
+use crate::model::ModelWeights;
+use crate::runtime::{Artifacts, Runtime};
+
+pub struct BenchCtx {
+    pub arts: Artifacts,
+    rt: Option<Runtime>,
+    weights: HashMap<String, Rc<ModelWeights>>,
+    calibs: HashMap<(String, String), Rc<ModelCalib>>,
+    pub calib_tokens: usize,
+    pub eval_tokens: usize,
+    pub full: bool,
+    native_eval: bool,
+}
+
+impl BenchCtx {
+    pub fn new() -> Result<BenchCtx> {
+        let arts = Artifacts::load_default()?;
+        let native_eval = std::env::var("STBLLM_NATIVE_EVAL").is_ok();
+        let rt = if native_eval {
+            None
+        } else {
+            match Runtime::cpu(&arts.root) {
+                Ok(rt) => Some(rt),
+                Err(e) => {
+                    eprintln!("[bench] PJRT unavailable ({e:#}); using native eval");
+                    None
+                }
+            }
+        };
+        Ok(BenchCtx {
+            arts,
+            rt,
+            weights: HashMap::new(),
+            calibs: HashMap::new(),
+            calib_tokens: env_usize("STBLLM_CALIB_TOKENS", 512),
+            eval_tokens: env_usize("STBLLM_EVAL_TOKENS", 1161),
+            full: std::env::var("STBLLM_FULL").is_ok(),
+            native_eval,
+        })
+    }
+
+    pub fn config(&self, model: &str) -> ModelConfig {
+        self.arts.models[model].config.clone()
+    }
+
+    /// A model is usable when its manifest entry AND trained weights exist
+    /// (the artifact build may have trained only a subset of the zoo).
+    pub fn has_model(&self, model: &str) -> bool {
+        match self.arts.models.get(model) {
+            Some(ma) => self.arts.root.join(&ma.weights).exists(),
+            None => false,
+        }
+    }
+
+    /// Pick the evaluated subset of `all` (full zoo under STBLLM_FULL).
+    pub fn subset<'a>(&self, all: &[&'a str], fast: &[&'a str]) -> Vec<&'a str> {
+        let pick: Vec<&str> = if self.full { all.to_vec() } else { fast.to_vec() };
+        pick.into_iter().filter(|m| self.has_model(m)).collect()
+    }
+
+    pub fn weights(&mut self, model: &str) -> Rc<ModelWeights> {
+        if let Some(w) = self.weights.get(model) {
+            return w.clone();
+        }
+        let w = Rc::new(self.arts.load_weights(model).expect("load weights"));
+        self.weights.insert(model.to_string(), w.clone());
+        w
+    }
+
+    pub fn calib(&mut self, model: &str, corpus_name: &str) -> Rc<ModelCalib> {
+        let key = (model.to_string(), corpus_name.to_string());
+        if let Some(c) = self.calibs.get(&key) {
+            return c.clone();
+        }
+        let cfg = self.config(model);
+        let w = self.weights(model);
+        let c = Rc::new(calibrate(&cfg, &w, corpus_name, self.calib_tokens, 1234));
+        self.calibs.insert(key, c.clone());
+        c
+    }
+
+    /// Quantize `model` with `method`, calibrating on `calib_corpus`.
+    pub fn quantize(&mut self, model: &str, method: &Method, calib_corpus: &str) -> QuantizedModel {
+        let cfg = self.config(model);
+        let w = self.weights(model);
+        let needs_calib = !matches!(method, Method::FullPrecision | Method::Rtn { .. });
+        let calib = needs_calib.then(|| self.calib(model, calib_corpus));
+        quantize_model(&cfg, &w, method, calib.as_deref(), 1)
+    }
+
+    /// Perplexity of the given weights on `eval_corpus`.
+    pub fn ppl(&mut self, model: &str, w: &ModelWeights, eval_corpus: &str) -> f64 {
+        let cfg = self.config(model);
+        let toks = corpus::corpus_tokens(eval_corpus, self.eval_tokens, 999);
+        if !self.native_eval {
+            if let Some(rt) = &self.rt {
+                match ppl_pjrt(rt, &self.arts, model, w, &toks) {
+                    Ok(p) => return p,
+                    Err(e) => eprintln!("[bench] PJRT eval failed ({e:#}); native fallback"),
+                }
+            }
+        }
+        ppl_native(&cfg, w, &toks)
+    }
+
+    /// quantize + eval in one call — the cell of most tables.
+    pub fn cell(&mut self, model: &str, method: &Method, calib_c: &str, eval_c: &str) -> f64 {
+        let q = self.quantize(model, method, calib_c);
+        self.ppl(model, &q.weights, eval_c)
+    }
+
+    pub fn runtime(&self) -> Option<&Runtime> {
+        self.rt.as_ref()
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The standard method lineup of Table 2 (labels match the paper rows).
+pub fn table2_methods() -> Vec<Method> {
+    use crate::quant::NmRatio;
+    vec![
+        Method::FullPrecision,
+        Method::Rtn { bits: 1 },
+        Method::Gptq { bits: 1, block: 128 },
+        Method::PbLlm { frac_salient: 0.10, hi_bits: 8 },
+        Method::BiLlm { nm: None },
+        Method::BiLlm { nm: Some(NmRatio::new(6, 8)) },
+        Method::BiLlm { nm: Some(NmRatio::new(5, 8)) },
+        Method::BiLlm { nm: Some(NmRatio::new(4, 8)) },
+        Method::stbllm(NmRatio::new(6, 8)),
+        Method::stbllm(NmRatio::new(5, 8)),
+        Method::stbllm(NmRatio::new(4, 8)),
+    ]
+}

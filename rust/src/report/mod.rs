@@ -1,0 +1,112 @@
+//! Result reporting for the bench harness: aligned text tables (the format
+//! the paper's tables are regenerated in), CSV dumps, and a JSON results
+//! sink under `reports/` for EXPERIMENTS.md bookkeeping.
+
+pub mod bench;
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::util::json::Json;
+use crate::util::render_table;
+
+/// A named table being assembled by a bench.
+pub struct Report {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, headers: &[&str]) -> Report {
+        Report {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Render to stdout in the canonical format.
+    pub fn print(&self) {
+        let headers: Vec<&str> = self.headers.iter().map(|s| s.as_str()).collect();
+        println!("\n=== {} ===", self.title);
+        print!("{}", render_table(&headers, &self.rows));
+    }
+
+    /// Persist as CSV + JSON under `reports/` (best-effort).
+    pub fn save(&self, slug: &str) {
+        let dir = reports_dir();
+        if std::fs::create_dir_all(&dir).is_err() {
+            return;
+        }
+        // CSV
+        if let Ok(mut f) = std::fs::File::create(dir.join(format!("{slug}.csv"))) {
+            let _ = writeln!(f, "{}", self.headers.join(","));
+            for r in &self.rows {
+                let _ = writeln!(f, "{}", r.join(","));
+            }
+        }
+        // JSON
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+            .collect();
+        let j = crate::util::json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("headers", Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect())),
+            ("rows", Json::Arr(rows)),
+        ]);
+        let _ = std::fs::write(dir.join(format!("{slug}.json")), j.dump());
+    }
+}
+
+/// `$STBLLM_REPORTS` or `<repo>/reports`.
+pub fn reports_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("STBLLM_REPORTS") {
+        return PathBuf::from(p);
+    }
+    let base = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+    PathBuf::from(base).join("reports")
+}
+
+/// Format a perplexity the way the paper's tables do (2 decimals, scientific
+/// for the blow-ups).
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "inf".to_string()
+    } else if p >= 1e4 {
+        format!("{:.1e}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_and_saves() {
+        let mut r = Report::new("Table X", &["a", "b"]);
+        r.row(vec!["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join(format!("stbllm_rep_{}", std::process::id()));
+        std::env::set_var("STBLLM_REPORTS", dir.to_str().unwrap());
+        r.save("t");
+        assert!(dir.join("t.csv").exists());
+        assert!(dir.join("t.json").exists());
+        std::env::remove_var("STBLLM_REPORTS");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(31.724), "31.72");
+        assert_eq!(fmt_ppl(170000.0), "1.7e5");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

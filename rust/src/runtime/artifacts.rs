@@ -1,0 +1,151 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into model configs + artifact file names, and
+//! locates the artifacts directory for tests/benches/examples.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One model's artifact set.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub config: ModelConfig,
+    pub weights: String,
+    pub layer_fwd: String,
+    pub lm_head: String,
+    pub layer_fwd_bin: Option<String>,
+    /// training loss curve (step, loss) recorded by the build
+    pub loss_curve: Vec<(usize, f64)>,
+}
+
+/// Parsed manifest.
+pub struct Artifacts {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelArtifacts>,
+    pub kernels: Vec<KernelArtifact>,
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelArtifact {
+    pub name: String,
+    pub file: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Artifacts {
+    /// Load from a directory containing `manifest.json`.
+    pub fn load(root: &Path) -> Result<Artifacts> {
+        let text = std::fs::read_to_string(root.join("manifest.json"))
+            .with_context(|| format!("read {}/manifest.json — run `make artifacts`", root.display()))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in j.get("models").and_then(|m| m.as_obj()).context("manifest: models")? {
+            let config = ModelConfig::from_manifest(name, entry).map_err(anyhow::Error::msg)?;
+            let get_s = |k: &str| -> Result<String> {
+                Ok(entry.get(k).and_then(|v| v.as_str()).context(format!("{name}: {k}"))?.to_string())
+            };
+            let loss_curve = entry
+                .get("loss_curve")
+                .and_then(|v| v.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|p| {
+                            let pair = p.as_arr()?;
+                            Some((pair.first()?.as_usize()?, pair.get(1)?.as_f64()?))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.insert(
+                name.clone(),
+                ModelArtifacts {
+                    config,
+                    weights: get_s("weights")?,
+                    layer_fwd: get_s("layer_fwd")?,
+                    lm_head: get_s("lm_head")?,
+                    layer_fwd_bin: entry
+                        .get("layer_fwd_bin")
+                        .and_then(|v| v.as_str())
+                        .map(|s| s.to_string()),
+                    loss_curve,
+                },
+            );
+        }
+        let mut kernels = Vec::new();
+        if let Some(arr) = j.get("kernels").and_then(|k| k.as_arr()) {
+            for k in arr {
+                kernels.push(KernelArtifact {
+                    name: k.get("name").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                    file: k.get("file").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+                    m: k.get("m").and_then(|v| v.as_usize()).unwrap_or(0),
+                    k: k.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                    n: k.get("n").and_then(|v| v.as_usize()).unwrap_or(0),
+                });
+            }
+        }
+        Ok(Artifacts { root: root.to_path_buf(), models, kernels })
+    }
+
+    /// Standard location: `$STBLLM_ARTIFACTS` or `<repo>/artifacts`.
+    pub fn default_root() -> PathBuf {
+        if let Ok(p) = std::env::var("STBLLM_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // CARGO_MANIFEST_DIR works for tests/benches/examples; fall back to cwd
+        let base = std::env::var("CARGO_MANIFEST_DIR").unwrap_or_else(|_| ".".into());
+        Path::new(&base).join("artifacts")
+    }
+
+    pub fn load_default() -> Result<Artifacts> {
+        Self::load(&Self::default_root())
+    }
+
+    /// Load a model's trained weights.
+    pub fn load_weights(&self, name: &str) -> Result<crate::model::ModelWeights> {
+        let ma = self.models.get(name).with_context(|| format!("unknown model {name}"))?;
+        crate::model::ModelWeights::load(&ma.config, &self.root.join(&ma.weights))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("stbllm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": {"llama1-7b": {"family": "llama", "dim": 128, "n_layers": 4,
+                "ffn_hidden": 352, "vocab": 256, "seq_len": 128, "window": 0,
+                "norm_eps": 1e-5, "seed": 101, "weights": "weights/llama1-7b.bin",
+                "layer_fwd": "layer_fwd_llama1-7b.hlo.txt",
+                "lm_head": "lm_head_llama1-7b.hlo.txt",
+                "loss_curve": [[0, 5.5], [100, 3.2]]}},
+              "kernels": [{"name": "g", "file": "g.hlo.txt", "m": 8, "k": 16, "n": 24}]}"#,
+        )
+        .unwrap();
+        let a = Artifacts::load(&dir).unwrap();
+        let m = &a.models["llama1-7b"];
+        assert_eq!(m.config.dim, 128);
+        assert_eq!(m.loss_curve, vec![(0, 5.5), (100, 3.2)]);
+        assert_eq!(a.kernels[0].n, 24);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful_error() {
+        let err = match Artifacts::load(Path::new("/nonexistent")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client.
+//!
+//! This is the only boundary between Rust and the AOT-compiled JAX/Pallas
+//! world. HLO **text** is the interchange format (xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos — 64-bit instruction ids), and every
+//! lowered function returns a 1-tuple (`return_tuple=True`), unwrapped here.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::Artifacts;
+pub use client::{Executable, Runtime};

@@ -1,0 +1,443 @@
+//! Dense f32 matrix substrate.
+//!
+//! Row-major `Mat` with the operations the PTQ pipeline and the native
+//! transformer forward need: blocked matmuls (`matmul`, `matmul_bt`,
+//! `gram`), norms/statistics, Cholesky factorization + inverse (for the OBC
+//! Hessian), and elementwise helpers. Hot loops are written so rustc
+//! auto-vectorizes them (contiguous row dots with multiple accumulators) —
+//! see EXPERIMENTS.md §Perf for measured GFLOP/s.
+
+pub mod linalg;
+
+use crate::util::rng::Pcg32;
+
+/// Row-major 2-D f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len(), "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn random(rows: usize, cols: usize, std: f32, rng: &mut Pcg32) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Mat::from_vec(rows, cols, data)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy of columns `[c0, c1)`.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        let w = c1 - c0;
+        let mut out = Mat::zeros(self.rows, w);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into columns `[c0, c0+src.cols)`.
+    pub fn set_cols(&mut self, c0: usize, src: &Mat) {
+        assert_eq!(self.rows, src.rows);
+        for i in 0..self.rows {
+            let c = self.cols;
+            self.data[i * c + c0..i * c + c0 + src.cols].copy_from_slice(src.row(i));
+        }
+    }
+
+    // ---- reductions ------------------------------------------------------
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn l1_norm(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    pub fn mean(&self) -> f32 {
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn std(&self) -> f32 {
+        let m = self.mean();
+        (self.data.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / self.data.len() as f32).sqrt()
+    }
+
+    /// L2 norm of each column (Wanda / SI input-feature norms).
+    pub fn col_l2_norms(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for (a, &x) in acc.iter_mut().zip(r) {
+                *a += x * x;
+            }
+        }
+        acc.iter_mut().for_each(|a| *a = a.sqrt());
+        acc
+    }
+
+    /// Sum of |x| per row.
+    pub fn row_l1_sums(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| self.row(i).iter().map(|x| x.abs()).sum()).collect()
+    }
+
+    /// Sum of |x| per column.
+    pub fn col_l1_sums(&self) -> Vec<f32> {
+        let mut acc = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            for (a, &x) in acc.iter_mut().zip(self.row(i)) {
+                *a += x.abs();
+            }
+        }
+        acc
+    }
+
+    // ---- elementwise -----------------------------------------------------
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Mat::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        self.data.iter_mut().for_each(|x| *x *= s);
+    }
+
+    pub fn map<F: Fn(f32) -> f32>(&self, f: F) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&x| f(x)).collect())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        let c = self.cols;
+        &mut self.data[i * c + j]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmuls
+// ---------------------------------------------------------------------------
+
+/// Contiguous dot product with 4 accumulators — autovectorizes well.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+/// `axpy`: y += s * x over contiguous slices.
+#[inline]
+pub fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += s * xi;
+    }
+}
+
+/// C = A @ B. ikj loop: each A[i][k] broadcasts over B's row k (contiguous).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                axpy(crow, aik, b.row(k));
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T, reference row-dot form (kept for perf comparisons; the
+/// optimized `matmul_bt` below is asserted equal in tests).
+pub fn matmul_bt_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_bt shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..b.rows {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// C = A @ B^T. 4-way unroll over B's rows: each pass over A's row computes
+/// four outputs, quartering the A-row traffic (the native-forward hot loop —
+/// see EXPERIMENTS.md §Perf L3).
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_bt shape mismatch");
+    let k = a.cols;
+    let mut c = Mat::zeros(a.rows, b.rows);
+    let j4 = b.rows / 4 * 4;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        let mut j = 0;
+        while j < j4 {
+            let b0 = b.row(j);
+            let b1 = b.row(j + 1);
+            let b2 = b.row(j + 2);
+            let b3 = b.row(j + 3);
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for t in 0..k {
+                let x = arow[t];
+                s0 += x * b0[t];
+                s1 += x * b1[t];
+                s2 += x * b2[t];
+                s3 += x * b3[t];
+            }
+            crow[j] = s0;
+            crow[j + 1] = s1;
+            crow[j + 2] = s2;
+            crow[j + 3] = s3;
+            j += 4;
+        }
+        while j < b.rows {
+            crow[j] = dot(arow, b.row(j));
+            j += 1;
+        }
+    }
+    c
+}
+
+/// Gram matrix `X^T X` (symmetric; computes the upper triangle and mirrors).
+/// This is the Hessian accumulation hot spot (`H = 2 X X^T` in the paper's
+/// row-vector convention; our X is (tokens, K) so H = 2 X^T X).
+pub fn gram(x: &Mat) -> Mat {
+    let k = x.cols;
+    let mut g = Mat::zeros(k, k);
+    // accumulate rank-1 updates row by row: upper triangle only
+    for t in 0..x.rows {
+        let r = x.row(t);
+        for i in 0..k {
+            let xi = r[i];
+            if xi != 0.0 {
+                let gi = &mut g.data[i * k..i * k + k];
+                // j >= i only
+                for j in i..k {
+                    gi[j] += xi * r[j];
+                }
+            }
+        }
+    }
+    for i in 0..k {
+        for j in 0..i {
+            g.data[i * k + j] = g.data[j * k + i];
+        }
+    }
+    g
+}
+
+/// y = A @ x for a vector x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Mat::random(13, 29, 1.0, &mut rng);
+        let b = Mat::random(29, 17, 1.0, &mut rng);
+        let c1 = matmul(&a, &b);
+        let c2 = naive_matmul(&a, &b);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul_with_transpose() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Mat::random(9, 33, 1.0, &mut rng);
+        let b = Mat::random(21, 33, 1.0, &mut rng);
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_optimized_matches_naive() {
+        let mut rng = Pcg32::seeded(7);
+        // sizes that exercise the 4-way unroll remainder paths
+        for (m, k, n) in [(3usize, 17usize, 5usize), (8, 64, 12), (5, 31, 7), (1, 8, 4)] {
+            let a = Mat::random(m, k, 1.0, &mut rng);
+            let b = Mat::random(n, k, 1.0, &mut rng);
+            let c1 = matmul_bt(&a, &b);
+            let c2 = matmul_bt_naive(&a, &b);
+            for (x, y) in c1.data.iter().zip(&c2.data) {
+                assert!((x - y).abs() < 1e-4, "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_is_xtx() {
+        let mut rng = Pcg32::seeded(3);
+        let x = Mat::random(40, 15, 1.0, &mut rng);
+        let g1 = gram(&x);
+        let g2 = matmul(&x.transpose(), &x);
+        for (a, b) in g1.data.iter().zip(&g2.data) {
+            assert!((a - b).abs() < 1e-3);
+        }
+        // symmetry
+        for i in 0..15 {
+            for j in 0..15 {
+                assert!((g1[(i, j)] - g1[(j, i)]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Mat::random(37, 53, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn slice_set_cols_roundtrip() {
+        let mut rng = Pcg32::seeded(5);
+        let a = Mat::random(8, 12, 1.0, &mut rng);
+        let s = a.slice_cols(3, 9);
+        assert_eq!(s.cols, 6);
+        let mut b = Mat::zeros(8, 12);
+        b.set_cols(3, &s);
+        for i in 0..8 {
+            for j in 3..9 {
+                assert_eq!(b[(i, j)], a[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn norms_and_stats() {
+        let m = Mat::from_vec(2, 2, vec![3.0, -4.0, 0.0, 0.0]);
+        assert!((m.frob_norm() - 5.0).abs() < 1e-6);
+        assert!((m.l1_norm() - 7.0).abs() < 1e-6);
+        let cn = m.col_l2_norms();
+        assert!((cn[0] - 3.0).abs() < 1e-6 && (cn[1] - 4.0).abs() < 1e-6);
+        assert_eq!(m.row_l1_sums(), vec![7.0, 0.0]);
+        assert_eq!(m.col_l1_sums(), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let a: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..19).map(|i| (i * 2) as f32).collect();
+        let want: f32 = (0..19).map(|i| (i * i * 2) as f32).sum();
+        assert!((dot(&a, &b) - want).abs() < 1e-3);
+        let mut y = vec![1.0f32; 5];
+        axpy(&mut y, 2.0, &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(y, vec![3.0, 5.0, 7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn matvec_works() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(matvec(&a, &[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+}

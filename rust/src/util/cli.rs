@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Subcommand dispatch lives in `main.rs`; this module only tokenizes.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments: options + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// `known_flags` disambiguates `--flag positional` from `--key value`.
+    pub fn parse_with_flags<I: IntoIterator<Item = String>>(argv: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse with no known boolean flags (`--key value` always pairs).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        Self::parse_with_flags(argv, &[])
+    }
+
+    /// Boolean flags used across the stbllm CLI / examples / benches.
+    pub const COMMON_FLAGS: [&'static str; 6] =
+        ["verbose", "fast", "full", "force", "help", "quiet"];
+
+    pub fn from_env() -> Args {
+        Self::parse_with_flags(std::env::args().skip(1), &Self::COMMON_FLAGS)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.get(key) == Some("true")
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key).map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_with_flags(args.iter().map(|s| s.to_string()), &Args::COMMON_FLAGS)
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse(&["quantize", "--model", "llama1-7b", "--nm=4:8", "--verbose", "out.bin"]);
+        assert_eq!(a.positional, vec!["quantize", "out.bin"]);
+        assert_eq!(a.get("model"), Some("llama1-7b"));
+        assert_eq!(a.get("nm"), Some("4:8"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "42", "--ratio", "0.55"]);
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert!((a.get_f64("ratio", 0.0) - 0.55).abs() < 1e-12);
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--models", "a, b,c"]);
+        assert_eq!(a.get_list("models").unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,82 @@
+//! Offline-friendly utility substrate: RNG, JSON, CLI, timing, property tests.
+//!
+//! Nothing here depends on crates beyond std — the environment only vendors
+//! `xla` + `anyhow`, so the conveniences usually pulled from clap / serde /
+//! criterion / proptest live in this module instead.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Human-readable byte count.
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Render an aligned text table (used by the bench harness to print the
+/// paper's tables).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        let mut line = String::from("| ");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+        }
+        line.trim_end().to_string()
+    };
+    out.push_str(&fmt_row(headers.iter().map(|s| s.to_string()).collect(), &widths));
+    out.push('\n');
+    let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+    out.push_str(&fmt_row(sep, &widths));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["Method", "PPL"],
+            &[vec!["STBLLM".into(), "31.72".into()], vec!["BiLLM".into(), "688.73".into()]],
+        );
+        assert!(t.contains("| Method | PPL"));
+        assert!(t.lines().count() == 4);
+        let lens: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{t}");
+    }
+}

@@ -1,0 +1,96 @@
+//! In-tree property-testing harness (proptest is unavailable offline).
+//!
+//! Seeded-random generation + N-case loops with failure reporting that
+//! prints the case seed so a failure reproduces deterministically:
+//!
+//! ```ignore
+//! prop_check("nm mask keeps exactly N per group", 200, |rng| {
+//!     let n = 1 + rng.bounded(6) as usize;
+//!     ...
+//!     prop_assert!(cond, "context {n}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `f`, each seeded deterministically. Panics
+/// with the failing seed + message on first failure.
+pub fn prop_check<F: FnMut(&mut Pcg32) -> PropResult>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        // stable per-case seed so failures replay
+        let mut rng = Pcg32::new(0x5781_0000 + case, 17);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {}): {msg}", 0x5781_0000u64 + case);
+        }
+    }
+}
+
+/// Assert inside a property; formats into the failure report.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!("assertion failed: {} [{}]", stringify!($cond), format!($($fmt)+)));
+        }
+    };
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Random f32 vector in [-r, r].
+pub fn gen_vec(rng: &mut Pcg32, n: usize, r: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f32(-r, r)).collect()
+}
+
+/// Random normal-ish f32 vector.
+pub fn gen_normal_vec(rng: &mut Pcg32, n: usize, std: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * std).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_check_passes_trivially() {
+        prop_check("tautology", 50, |rng| {
+            let x = rng.next_f32();
+            prop_assert!((0.0..1.0).contains(&x), "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn prop_check_reports_failure() {
+        prop_check("always fails", 3, |_rng| Err("boom".to_string()));
+    }
+
+    #[test]
+    fn close_detects_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0001], 1e-3).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! PCG32 (XSH-RR) — bit-identical to `python/compile/rngcorpus.py`.
+//!
+//! The cross-language determinism is load-bearing: the Python build-time
+//! trainer and the Rust run-time evaluator draw corpora from the *same*
+//! stream (see `model::corpus`). The known-answer tests below are mirrored
+//! in `python/tests/test_corpus.py`; if either side drifts, both suites fail.
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+/// Minimal PCG32 generator (seed, stream) → u32 stream.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Construct from a seed and a stream id (must match the Python side).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Default stream (54) — convenience for non-corpus uses.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 54)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform-ish integer in `[0, n)`. Modulo bias accepted (matches Python).
+    #[inline]
+    pub fn bounded(&mut self, n: u32) -> u32 {
+        self.next_u32() % n
+    }
+
+    /// Uniform f32 in `[0, 1)` with 24 bits of entropy.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Approximate standard normal (Irwin–Hall sum of 12 uniforms).
+    pub fn normal(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.next_f32();
+        }
+        s - 6.0
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.bounded((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices out of `[0, n)` (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = k.min(n);
+        for i in 0..k {
+            let j = i + self.bounded((n - i) as u32) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Mirrored in python/tests/test_corpus.py — DO NOT change one side only.
+    #[test]
+    fn pcg32_known_answers() {
+        let mut r = Pcg32::new(42, 54);
+        let got: Vec<u32> = (0..6).map(|_| r.next_u32()).collect();
+        assert_eq!(
+            got,
+            vec![2707161783, 2068313097, 3122475824, 2211639955, 3215226955, 3421331566]
+        );
+    }
+
+    #[test]
+    fn pcg32_bounded_known_answers() {
+        let mut r = Pcg32::new(7, 3);
+        let got: Vec<u32> = (0..8).map(|_| r.bounded(100)).collect();
+        assert_eq!(got, vec![51, 8, 72, 30, 99, 67, 36, 35]);
+    }
+
+    #[test]
+    fn float_range_and_mean() {
+        let mut r = Pcg32::seeded(9);
+        let vals: Vec<f32> = (0..1000).map(|_| r.next_f32()).collect();
+        assert!(vals.iter().all(|&v| (0.0..1.0).contains(&v)));
+        let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+        assert!((0.4..0.6).contains(&mean));
+    }
+
+    #[test]
+    fn normal_roughly_standard() {
+        let mut r = Pcg32::seeded(11);
+        let vals: Vec<f32> = (0..4000).map(|_| r.normal()).collect();
+        let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+        let var: f32 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+        assert!(mean.abs() < 0.06, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn choose_k_distinct_in_range() {
+        let mut r = Pcg32::seeded(5);
+        let ks = r.choose_k(20, 8);
+        assert_eq!(ks.len(), 8);
+        let mut s = ks.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 8);
+        assert!(ks.iter().all(|&i| i < 20));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(6);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut s = xs.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,113 @@
+//! Wall-clock timing + summary statistics for the in-tree bench harness
+//! (criterion is unavailable offline). `BenchStats` implements the usual
+//! warmup → N samples → median/mean/p95 protocol.
+
+use std::time::Instant;
+
+/// Scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Timing summary over repeated runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub samples_s: Vec<f64>,
+}
+
+impl BenchStats {
+    /// Run `f` with `warmup` discarded iterations then `samples` timed ones.
+    pub fn measure<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> BenchStats {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut out = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t = Timer::start();
+            f();
+            out.push(t.elapsed_s());
+        }
+        BenchStats { samples_s: out }
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.samples_s.iter().sum::<f64>() / self.samples_s.len().max(1) as f64
+    }
+
+    pub fn median_s(&self) -> f64 {
+        self.percentile_s(50.0)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        self.percentile_s(95.0)
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples_s.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn percentile_s(&self, p: f64) -> f64 {
+        if self.samples_s.is_empty() {
+            return f64::NAN;
+        }
+        let mut xs = self.samples_s.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx.min(xs.len() - 1)]
+    }
+
+    /// Throughput in ops/sec given `work` per run.
+    pub fn throughput(&self, work: f64) -> f64 {
+        work / self.median_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_moves_forward() {
+        let t = Timer::start();
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        std::hint::black_box(acc);
+        assert!(t.elapsed_s() >= 0.0);
+        assert!(t.elapsed_ms() >= t.elapsed_s());
+    }
+
+    #[test]
+    fn stats_basics() {
+        let s = BenchStats { samples_s: vec![1.0, 2.0, 3.0, 4.0, 100.0] };
+        assert!((s.median_s() - 3.0).abs() < 1e-12);
+        assert!((s.mean_s() - 22.0).abs() < 1e-12);
+        assert_eq!(s.min_s(), 1.0);
+        assert!(s.p95_s() >= s.median_s());
+    }
+
+    #[test]
+    fn measure_runs() {
+        let mut count = 0;
+        let s = BenchStats::measure(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.samples_s.len(), 5);
+        assert!(s.throughput(10.0) > 0.0);
+    }
+}

@@ -1,0 +1,129 @@
+//! Integration: the PJRT AOT path (Pallas/JAX → HLO → xla crate) must agree
+//! with the native Rust forward — the cross-layer correctness contract.
+//! Skips (with a notice) when artifacts have not been built yet.
+
+use stbllm::eval::perplexity::{ppl_native, ppl_pjrt};
+use stbllm::model::corpus;
+use stbllm::runtime::client::MatArg;
+use stbllm::runtime::{Artifacts, Runtime};
+use stbllm::tensor::Mat;
+use stbllm::util::rng::Pcg32;
+
+fn ctx() -> Option<(Artifacts, Runtime)> {
+    let arts = match Artifacts::load_default() {
+        Ok(a) => a,
+        Err(_) => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+    };
+    let rt = Runtime::cpu(&arts.root).ok()?;
+    Some((arts, rt))
+}
+
+#[test]
+fn layer_fwd_matches_native() {
+    let Some((arts, rt)) = ctx() else { return };
+    for model in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+        let Some(ma) = arts.models.get(model) else { continue };
+        let cfg = &ma.config;
+        let w = arts.load_weights(model).unwrap();
+        let exe = rt.load(&ma.layer_fwd).unwrap();
+        let mut rng = Pcg32::seeded(3);
+        let x = Mat::random(cfg.seq_len, cfg.dim, 1.0, &mut rng);
+        let lw = &w.layers[0];
+        let mut args = vec![MatArg::M(&x), MatArg::V(&lw.ln1), MatArg::V(&lw.ln2)];
+        for n in cfg.layer_weight_names() {
+            args.push(MatArg::M(&lw.mats[n]));
+        }
+        let y_pjrt = exe.run(&args).unwrap();
+        let y_native = stbllm::model::transformer::layer_fwd(cfg, &x, lw, None);
+        let max_rel = y_pjrt
+            .data
+            .iter()
+            .zip(&y_native.data)
+            .map(|(a, b)| (a - b).abs() / (1.0f32).max(b.abs()))
+            .fold(0.0f32, f32::max);
+        assert!(max_rel < 2e-3, "{model}: max rel diff {max_rel}");
+        eprintln!("{model}: layer_fwd parity OK (max rel {max_rel:.2e})");
+    }
+}
+
+#[test]
+fn full_model_ppl_parity() {
+    let Some((arts, rt)) = ctx() else { return };
+    let model = "llama1-7b";
+    if !arts.models.contains_key(model) {
+        return;
+    }
+    let cfg = &arts.models[model].config;
+    let w = arts.load_weights(model).unwrap();
+    let toks = corpus::corpus_tokens("wikitext2s", 2 * cfg.seq_len + 1, 42);
+    let p_native = ppl_native(cfg, &w, &toks);
+    let p_pjrt = ppl_pjrt(&rt, &arts, model, &w, &toks).unwrap();
+    let rel = (p_native - p_pjrt).abs() / p_native;
+    assert!(rel < 1e-3, "native={p_native} pjrt={p_pjrt}");
+}
+
+#[test]
+fn pallas_binary_gemm_artifact_matches_reference() {
+    let Some((arts, rt)) = ctx() else { return };
+    for ka in &arts.kernels {
+        let exe = rt.load(&ka.file).unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let x = Mat::random(ka.m, ka.k, 1.0, &mut rng);
+        let dense = Mat::random(ka.n, ka.k, 0.5, &mut rng);
+        let (sb, alpha) = stbllm::packed::enforce_24(&dense);
+        let y = exe.run(&[MatArg::M(&x), MatArg::M(&sb), MatArg::V(&alpha)]).unwrap();
+        // reference: x @ (alpha ⊙ sb)^T
+        let mut w_eff = sb.clone();
+        for i in 0..w_eff.rows {
+            for v in w_eff.row_mut(i) {
+                *v *= alpha[i];
+            }
+        }
+        let want = stbllm::tensor::matmul_bt(&x, &w_eff);
+        let max = y
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max < 1e-2, "{}: max abs diff {max}", ka.name);
+        eprintln!("{}: pallas artifact parity OK (max {max:.2e})", ka.name);
+    }
+}
+
+#[test]
+fn binary_layer_artifact_runs_if_present() {
+    let Some((arts, rt)) = ctx() else { return };
+    let Some(ma) = arts.models.get("llama1-7b") else { return };
+    let Some(bin) = &ma.layer_fwd_bin else { return };
+    let cfg = &ma.config;
+    let w = arts.load_weights("llama1-7b").unwrap();
+    let exe = rt.load(bin).unwrap();
+    let mut rng = Pcg32::seeded(4);
+    let x = Mat::random(cfg.seq_len, cfg.dim, 1.0, &mut rng);
+    let lw = &w.layers[0];
+    // sb := W with alpha := 1 reproduces the dense layer exactly
+    let names = cfg.layer_weight_names();
+    let ones: Vec<Vec<f32>> =
+        names.iter().map(|n| vec![1.0f32; lw.mats[*n].rows]).collect();
+    let mut args = vec![MatArg::M(&x), MatArg::V(&lw.ln1), MatArg::V(&lw.ln2)];
+    for n in &names {
+        args.push(MatArg::M(&lw.mats[*n]));
+    }
+    for a in &ones {
+        args.push(MatArg::V(a));
+    }
+    let y_bin = exe.run(&args).unwrap();
+    let y_native = stbllm::model::transformer::layer_fwd(cfg, &x, lw, None);
+    let max_rel = y_bin
+        .data
+        .iter()
+        .zip(&y_native.data)
+        .map(|(a, b)| (a - b).abs() / (1.0f32).max(b.abs()))
+        .fold(0.0f32, f32::max);
+    assert!(max_rel < 2e-3, "binary layer path diverged: {max_rel}");
+    eprintln!("binary (Pallas) layer artifact parity OK (max rel {max_rel:.2e})");
+}
