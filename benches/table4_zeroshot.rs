@@ -3,6 +3,7 @@
 //! (chance rates match the paper's benchmarks; see eval::zeroshot).
 
 use stbllm::coordinator::Method;
+use stbllm::engine::NativeBackend;
 use stbllm::eval::zeroshot::{run_task, tasks7};
 use stbllm::quant::NmRatio;
 use stbllm::report::bench::BenchCtx;
@@ -35,12 +36,13 @@ fn main() {
         let cfg = ctx.config(model);
         for (label, method) in &methods {
             let q = ctx.quantize(model, method, "c4s");
+            let backend = NativeBackend::borrowed(&cfg, &q.weights);
             let mut row = vec![model.to_string(), label.clone()];
             let mut accs = Vec::new();
             for t in tasks7() {
                 let mut t = t.clone();
                 t.n_items = ((t.n_items as f64 * scale) as usize).max(10);
-                let acc = run_task(&cfg, &q.weights, &t);
+                let acc = run_task(&backend, &t).expect("native zero-shot");
                 eprintln!("[table4] {model} {label} {}: {acc:.1}%", t.name);
                 accs.push(acc);
                 row.push(format!("{acc:.2}"));

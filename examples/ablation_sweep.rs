@@ -9,7 +9,8 @@ use stbllm::coordinator::quantizer::{
     stbllm_with_allocation, stbllm_with_metric, stbllm_with_nonsalient, stbllm_with_rearrange,
 };
 use stbllm::coordinator::{calibrate, quantize_model, Method};
-use stbllm::eval::perplexity::ppl_native;
+use stbllm::engine::NativeBackend;
+use stbllm::eval::perplexity::perplexity;
 use stbllm::model::corpus;
 use stbllm::quant::{Allocation, Metric, NmRatio, NonSalientMode};
 use stbllm::report::{fmt_ppl, Report};
@@ -20,11 +21,14 @@ fn main() -> anyhow::Result<()> {
     let arts = Artifacts::load_default()?;
     let cfg = arts.models[&model].config.clone();
     let weights = arts.load_weights(&model)?;
+    // calibrate ONCE and reuse across every ablation variant (an Engine per
+    // variant would recalibrate; the sweep only varies the method)
     let calib = calibrate(&cfg, &weights, "c4s", 512, 1234);
     let toks = corpus::corpus_tokens("wikitext2s", 1161, 999);
     let mut eval = |method: &Method| -> (f64, f64) {
         let q = quantize_model(&cfg, &weights, method, Some(&calib), 1);
-        (ppl_native(&cfg, &q.weights, &toks), q.avg_bits)
+        let be = NativeBackend::borrowed(&cfg, &q.weights);
+        (perplexity(&be, &toks).expect("native eval"), q.avg_bits)
     };
 
     let nm = NmRatio::new(4, 8);

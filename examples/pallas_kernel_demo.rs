@@ -2,7 +2,9 @@
 //!   (a) the L1 Pallas kernel, AOT-lowered to HLO and executed via PJRT,
 //!   (b) the L3 packed-bit CPU simulator (`packed::packed_gemm`),
 //!   (c) the dense f32 reference,
-//! asserting all three agree — the cross-layer correctness triangle.
+//! asserting all agree — the cross-layer correctness triangle. When the
+//! PJRT runtime is unavailable (crate built without the `pjrt` feature),
+//! the demo degrades to the (b) ⇄ (c) pair with a notice.
 //!
 //! Run: `cargo run --release --example pallas_kernel_demo`
 
@@ -15,8 +17,17 @@ use stbllm::util::timer::Timer;
 
 fn main() -> anyhow::Result<()> {
     let arts = Artifacts::load_default()?;
-    let rt = Runtime::cpu(&arts.root)?;
-    println!("== pallas_kernel_demo (platform: {}) ==", rt.platform());
+    let rt = match Runtime::cpu(&arts.root) {
+        Ok(rt) => {
+            println!("== pallas_kernel_demo (platform: {}) ==", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("== pallas_kernel_demo (PJRT unavailable: {e}) ==");
+            println!("   comparing packed simulator vs f32 reference only");
+            None
+        }
+    };
 
     for ka in &arts.kernels {
         let (m, k, n) = (ka.m, ka.k, ka.n);
@@ -27,17 +38,6 @@ fn main() -> anyhow::Result<()> {
         let (sb, alpha) = enforce_24(&dense);
         let packed = Packed24::pack(&sb, &alpha).map_err(anyhow::Error::msg)?;
 
-        // (a) Pallas kernel through PJRT
-        let exe = rt.load(&ka.file)?;
-        let t = Timer::start();
-        let y_pallas = exe.run(&[MatArg::M(&x), MatArg::M(&sb), MatArg::V(&alpha)])?;
-        let t_pallas = t.elapsed_ms();
-
-        // (b) packed-bit simulator
-        let t = Timer::start();
-        let y_packed = packed_gemm(&x, &packed);
-        let t_packed = t.elapsed_ms();
-
         // (c) dense reference
         let w_eff = packed.unpack();
         let y_ref = gemm_f32(&x, &w_eff);
@@ -45,15 +45,33 @@ fn main() -> anyhow::Result<()> {
         let diff = |a: &Mat, b: &Mat| -> f32 {
             a.data.iter().zip(&b.data).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
         };
-        let d_pallas = diff(&y_pallas, &y_ref);
+
+        // (b) packed-bit simulator
+        let t = Timer::start();
+        let y_packed = packed_gemm(&x, &packed);
+        let t_packed = t.elapsed_ms();
         let d_packed = diff(&y_packed, &y_ref);
-        println!(
-            "{}: pallas(PJRT) {:.2}ms maxerr {:.1e} | packed(rust) {:.2}ms maxerr {:.1e}",
-            ka.name, t_pallas, d_pallas, t_packed, d_packed
-        );
-        assert!(d_pallas < 1e-2, "pallas vs ref diverged");
+
+        // (a) Pallas kernel through PJRT, when the runtime is up
+        if let Some(rt) = &rt {
+            let exe = rt.load(&ka.file)?;
+            let t = Timer::start();
+            let y_pallas = exe.run(&[MatArg::M(&x), MatArg::M(&sb), MatArg::V(&alpha)])?;
+            let t_pallas = t.elapsed_ms();
+            let d_pallas = diff(&y_pallas, &y_ref);
+            println!(
+                "{}: pallas(PJRT) {:.2}ms maxerr {:.1e} | packed(rust) {:.2}ms maxerr {:.1e}",
+                ka.name, t_pallas, d_pallas, t_packed, d_packed
+            );
+            assert!(d_pallas < 1e-2, "pallas vs ref diverged");
+        } else {
+            println!(
+                "{}: packed(rust) {:.2}ms maxerr {:.1e} (pallas skipped)",
+                ka.name, t_packed, d_packed
+            );
+        }
         assert!(d_packed < 1e-2, "packed vs ref diverged");
     }
-    println!("\nall kernel shapes agree across L1 (Pallas/PJRT), L3 (packed bits), and f32 reference ✓");
+    println!("\nall kernel shapes agree across the available layers ✓");
     Ok(())
 }

@@ -8,10 +8,13 @@
 //!
 //! Run: `cargo run --release --example perf_probe`
 
+use stbllm::engine::{Backend, NativeBackend, PackedBackend};
 use stbllm::model::config::ModelConfig;
-use stbllm::model::transformer::DecodeState;
 use stbllm::model::ModelWeights;
-use stbllm::packed::{enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, Dense2Bit, Packed24};
+use stbllm::packed::{
+    enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, packed_gemv, Dense2Bit,
+    Packed24,
+};
 use stbllm::tensor::{matmul_bt, matmul_bt_naive, Mat};
 use stbllm::util::rng::Pcg32;
 use stbllm::util::timer::BenchStats;
@@ -71,19 +74,42 @@ fn main() {
         );
     }
 
-    // --- decode step (serving hot path) ----------------------------------
+    // --- packed gemv (decode-path kernel) --------------------------------
+    println!("\n[packed gemv] y = W(NxK) @ x, N=864 K=320 (single token)");
+    {
+        let xv: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let flops = 2.0 * n as f64 * k as f64;
+        let t_gv = BenchStats::measure(4, 9, || {
+            std::hint::black_box(packed_gemv(&packed, &xv));
+        });
+        let xm = Mat::from_vec(1, k, xv.clone());
+        let t_gm = BenchStats::measure(4, 9, || {
+            std::hint::black_box(packed_gemm(&xm, &packed));
+        });
+        println!(
+            "  gemv {:.2} GFLOP/s-eq | vs 1-row gemm {:.2}x",
+            flops / t_gv.min_s() / 1e9,
+            t_gm.min_s() / t_gv.min_s()
+        );
+    }
+
+    // --- decode step (serving hot path) through the Backend seam ----------
     println!("\n[decode] single-token step, llama1-7b synthetic weights");
     let cfg = ModelConfig::preset("llama1-7b").unwrap();
     let weights = ModelWeights::synthetic(&cfg, 2);
-    let t = BenchStats::measure(2, 5, || {
-        let mut st = DecodeState::new(&cfg, 64);
-        for i in 0..32u8 {
-            std::hint::black_box(st.step(&cfg, &weights, i % 7));
-        }
-    });
-    println!(
-        "  32-token decode: {:.1} ms ({:.1} tok/s single-stream)",
-        t.min_s() * 1e3,
-        32.0 / t.min_s()
-    );
+    let native = NativeBackend::borrowed(&cfg, &weights);
+    let packed_be = PackedBackend::from_weights(&cfg, &weights).expect("packable");
+    for (name, be) in [("native", &native as &dyn Backend), ("packed", &packed_be as &dyn Backend)] {
+        let t = BenchStats::measure(2, 5, || {
+            let mut sess = be.begin_decode(64).expect("decode session");
+            for i in 0..32u8 {
+                std::hint::black_box(sess.step(i % 7).expect("step"));
+            }
+        });
+        println!(
+            "  32-token decode [{name}]: {:.1} ms ({:.1} tok/s single-stream)",
+            t.min_s() * 1e3,
+            32.0 / t.min_s()
+        );
+    }
 }

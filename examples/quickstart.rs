@@ -1,28 +1,25 @@
-//! Quickstart — the end-to-end driver (DESIGN.md §"End-to-end validation").
+//! Quickstart — the end-to-end driver (DESIGN.md §"End-to-end validation"),
+//! now a ~20-line walk through the `Engine` facade:
 //!
-//! On a real (in-repo-trained) tiny LLaMA:
 //!   1. print the build-time training loss curve,
-//!   2. calibrate on c4s,
-//!   3. quantize with STBLLM 4:8 (≈0.55 bits) and the BiLLM 4:8 baseline,
-//!   4. evaluate perplexity through the PJRT AOT path (Pallas/JAX HLO
-//!      executed from Rust), falling back to the native forward if needed,
-//!   5. report the bits/ppl trade-off the paper's Table 2 row shows.
+//!   2. build an Engine per method (calibrates on c4s + quantizes at build),
+//!      preferring the PJRT AOT backend and falling back to native,
+//!   3. compare STBLLM 4:8 (≈0.55 bits) against the BiLLM 4:8 baseline and
+//!      full precision on wikitext2s perplexity — the paper's Table 2 shape.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
 
-use stbllm::coordinator::{calibrate, quantize_model, Method};
-use stbllm::eval::perplexity::{ppl_native, ppl_pjrt};
-use stbllm::model::corpus;
+use stbllm::coordinator::Method;
+use stbllm::engine::{BackendKind, Engine};
 use stbllm::quant::NmRatio;
 use stbllm::report::fmt_ppl;
-use stbllm::runtime::{Artifacts, Runtime};
+use stbllm::runtime::Artifacts;
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "llama1-7b".to_string());
     let arts = Artifacts::load_default()?;
     let ma = &arts.models[&model];
-    let cfg = ma.config.clone();
-    println!("== STBLLM quickstart: {model} ({} params) ==", cfg.n_params());
+    println!("== STBLLM quickstart: {model} ({} params) ==", ma.config.n_params());
 
     // 1. the training loss curve recorded at build time
     if !ma.loss_curve.is_empty() {
@@ -32,46 +29,47 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let weights = arts.load_weights(&model)?;
-
-    // 2. calibration
-    println!("\ncalibrating on c4s (512 tokens)...");
-    let calib = calibrate(&cfg, &weights, "c4s", 512, 1234);
-
-    // 3. quantize: STBLLM vs BiLLM at the same 4:8 sub-1-bit setting
-    let nm = NmRatio::new(4, 8);
-    let stb = quantize_model(&cfg, &weights, &Method::stbllm(nm), Some(&calib), 1);
-    println!(
-        "STBLLM(4:8): {:.3} bits/weight, r_salient {:.3}, {:.1}s",
-        stb.avg_bits, stb.r_salient, stb.seconds
-    );
-    let billm = quantize_model(&cfg, &weights, &Method::BiLlm { nm: Some(nm) }, Some(&calib), 1);
-    println!("BiLLM(4:8) : {:.3} bits/weight, {:.1}s", billm.avg_bits, billm.seconds);
-
-    // 4. evaluate through the AOT PJRT path
-    let toks = corpus::corpus_tokens("wikitext2s", 1161, 999);
-    let rt = Runtime::cpu(&arts.root).ok();
-    let ppl = |w: &stbllm::model::ModelWeights| -> f64 {
-        if let Some(rt) = &rt {
-            if let Ok(p) = ppl_pjrt(rt, &arts, &model, w, &toks) {
-                return p;
-            }
-        }
-        ppl_native(&cfg, w, &toks)
+    // 2. one Engine per method; build() = load + calibrate + quantize +
+    //    stand the backend up. PJRT preferred; backend_fallback drops to
+    //    native (with a warning) WITHOUT repeating the quantize work.
+    let mk = |method: Method| -> anyhow::Result<Engine> {
+        Ok(Engine::builder()
+            .model(&model)
+            .method(method)
+            .calib_corpus("c4s")
+            .backend(BackendKind::Pjrt)
+            .backend_fallback(true)
+            .build()?)
     };
-    let p_fp = ppl(&weights);
-    let p_stb = ppl(&stb.weights);
-    let p_billm = ppl(&billm.weights);
-
-    // 5. the headline comparison
-    println!("\nwikitext2s perplexity ({}):", if rt.is_some() { "PJRT AOT path" } else { "native path" });
-    println!("  FullPrecision (32 bits): {}", fmt_ppl(p_fp));
-    println!("  STBLLM 4:8  ({:.2} bits): {}", stb.avg_bits, fmt_ppl(p_stb));
-    println!("  BiLLM  4:8  ({:.2} bits): {}", billm.avg_bits, fmt_ppl(p_billm));
+    let nm = NmRatio::new(4, 8);
+    let fp = mk(Method::FullPrecision)?;
+    let stb = mk(Method::stbllm(nm))?;
     println!(
-        "\npaper shape check: STBLLM < BiLLM at 0.55 bits — {} ({})",
+        "\nSTBLLM(4:8): {:.3} bits/weight, r_salient {:.3}, {:.1}s",
+        stb.quantize().avg_bits,
+        stb.quantize().r_salient,
+        stb.quantize().seconds
+    );
+    let billm = mk(Method::BiLlm { nm: Some(nm) })?;
+    println!(
+        "BiLLM(4:8) : {:.3} bits/weight, {:.1}s",
+        billm.quantize().avg_bits,
+        billm.quantize().seconds
+    );
+
+    // 3. the headline comparison
+    let p_fp = fp.perplexity("wikitext2s")?;
+    let p_stb = stb.perplexity("wikitext2s")?;
+    let p_billm = billm.perplexity("wikitext2s")?;
+    println!("\nwikitext2s perplexity ({} backend):", stb.backend().label());
+    println!("  FullPrecision (32 bits): {}", fmt_ppl(p_fp));
+    println!("  STBLLM 4:8  ({:.2} bits): {}", stb.quantize().avg_bits, fmt_ppl(p_stb));
+    println!("  BiLLM  4:8  ({:.2} bits): {}", billm.quantize().avg_bits, fmt_ppl(p_billm));
+    println!(
+        "\npaper shape check: STBLLM < BiLLM at 0.55 bits — {} ({} vs {})",
         if p_stb < p_billm { "REPRODUCED" } else { "NOT reproduced" },
-        format!("{} vs {}", fmt_ppl(p_stb), fmt_ppl(p_billm)),
+        fmt_ppl(p_stb),
+        fmt_ppl(p_billm),
     );
     Ok(())
 }

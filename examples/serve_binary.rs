@@ -1,37 +1,44 @@
-//! Serving example: quantize a model to 2:4 structured-binary form, pack the
-//! weights into the paper's 6-bit/group format, then serve a batched
-//! workload with continuous batching — reporting throughput, latency, TTFT
-//! and the weight-memory footprint (FP32 vs 2:4 packed).
+//! Serving example: quantize a model to 2:4 structured-binary form through
+//! the `Engine` facade with the **packed** backend — the decode hot path
+//! runs `packed::gemm` kernels directly on the 6-bit/group store, never
+//! expanding weights to dense f32 — then serve a batched workload with
+//! continuous batching, reporting throughput, latency, TTFT and the
+//! weight-memory footprint (FP32 vs 2:4 packed). Also round-trips the
+//! `.stbp` deployment container and serves from the reloaded store.
 //!
 //! Run: `cargo run --release --example serve_binary [model] [requests]`
 
-use stbllm::coordinator::{calibrate, quantize_model, BatchServer, Method, Request};
-use stbllm::model::corpus;
+use stbllm::coordinator::{BatchServer, Method};
+use stbllm::engine::{Backend, BackendKind, Engine, PackedBackend};
 use stbllm::packed::PackedModel;
 use stbllm::quant::NmRatio;
-use stbllm::runtime::Artifacts;
 use stbllm::util::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "llama1-7b".to_string());
     let n_req: usize = std::env::args().nth(2).and_then(|s| s.parse().ok()).unwrap_or(6);
-    let arts = Artifacts::load_default()?;
-    let cfg = arts.models[&model].config.clone();
-    let weights = arts.load_weights(&model)?;
     println!("== serve_binary: {model}, {n_req} requests ==");
 
-    // PTQ to the hardware-friendly 2:4 setting
-    let calib = calibrate(&cfg, &weights, "c4s", 512, 1234);
-    let q = quantize_model(&cfg, &weights, &Method::stbllm(NmRatio::new(2, 4)), Some(&calib), 1);
-    println!("quantized to 2:4 structured binary ({:.2} bits/weight)", q.avg_bits);
+    // PTQ to the hardware-friendly 2:4 setting, served by the packed backend
+    let engine = Engine::builder()
+        .model(&model)
+        .method(Method::stbllm(NmRatio::new(2, 4)))
+        .backend(BackendKind::Packed)
+        .calib_corpus("c4s")
+        .build()?;
+    println!(
+        "quantized to 2:4 structured binary ({:.2} bits/weight)",
+        engine.quantize().avg_bits
+    );
 
     // pack into the 6-bit/group deployment container, save + reload (.stbp)
-    let pm = PackedModel::from_weights(&cfg, &q.weights)?;
+    let cfg = engine.cfg().clone();
+    let pm = PackedModel::from_weights(&cfg, engine.weights())?;
     let stbp = std::env::temp_dir().join(format!("{model}.stbp"));
     pm.save(&stbp)?;
     let on_disk = std::fs::metadata(&stbp)?.len();
-    let fp_bytes: usize = q
-        .weights
+    let fp_bytes: usize = engine
+        .weights()
         .layers
         .iter()
         .flat_map(|l| l.mats.values())
@@ -46,36 +53,29 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(fp_bytes as u64),
         fp_bytes as f64 / packed_proj as f64
     );
-    // the serving process loads the deployment artifact, not FP weights
-    let served = PackedModel::load(&stbp)?.to_weights(&cfg)?;
+    // the serving process loads the deployment artifact, not FP weights:
+    // a PackedBackend built straight from the reloaded .stbp store
+    let store = PackedModel::load(&stbp)?;
     std::fs::remove_file(&stbp).ok();
-    let q = stbllm::coordinator::QuantizedModel {
-        weights: served,
-        avg_bits: q.avg_bits,
-        r_salient: q.r_salient,
-        seconds: q.seconds,
-        layer_ratios: q.layer_ratios,
-    };
+    let backend = PackedBackend::from_store(&cfg, &store)?;
+    println!(
+        "serving backend: {} ({:.2} bits/weight resident)",
+        backend.label(),
+        backend.bits_per_weight()
+    );
 
     // batched serving: synthetic prompts from the prose corpus
     let prompt_len = 16;
     let max_new = 24;
-    let toks = corpus::corpus_tokens("wikitext2s", n_req * prompt_len, 5);
-    let reqs: Vec<Request> = (0..n_req)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: toks[i * prompt_len..(i + 1) * prompt_len].to_vec(),
-            max_new,
-        })
-        .collect();
-
+    let reqs = engine.synthetic_workload(n_req, prompt_len, max_new);
     for batch in [1usize, 4] {
-        let server = BatchServer::new(&cfg, &q.weights, batch);
-        let (resps, stats) = server.run(reqs.clone());
+        let server = BatchServer::new(&backend, batch);
+        let (resps, stats) = server.run(reqs.clone())?;
         println!("\nbatch={batch}:");
         println!("  completed    : {}", stats.completed);
         println!("  throughput   : {:.1} tok/s", stats.tokens_per_s());
         println!("  mean latency : {:.1} ms", stats.mean_latency_s * 1e3);
+        println!("  p50 latency  : {:.1} ms", stats.p50_latency_s * 1e3);
         println!("  p95 latency  : {:.1} ms", stats.p95_latency_s * 1e3);
         println!("  mean TTFT    : {:.1} ms", stats.mean_ttft_s * 1e3);
         if batch == 4 {

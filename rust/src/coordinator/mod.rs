@@ -2,6 +2,10 @@
 //! driver, and the batched inference server. This module is the system glue
 //! that turns the per-matrix algorithms in [`crate::quant`] into a
 //! deployable compression + serving pipeline.
+//!
+//! The server runs against the [`crate::engine::Backend`] seam (native,
+//! packed, ...) rather than raw weights; the `Engine` facade
+//! (`crate::engine`) is the canonical way to drive quantize → eval → serve.
 
 pub mod calib;
 pub mod quantizer;
@@ -10,4 +14,4 @@ pub mod server;
 
 pub use calib::{calibrate, ModelCalib};
 pub use quantizer::{quantize_model, Method, QuantizedModel};
-pub use server::{BatchServer, Request, Response, ServerStats};
+pub use server::{serve_channel, BatchServer, Request, Response, ServerStats};

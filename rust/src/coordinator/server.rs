@@ -6,17 +6,19 @@
 //! ones mid-flight (continuous batching). Latency and throughput counters
 //! feed the serving example + EXPERIMENTS.md.
 //!
-//! Python is nowhere in this path: the model is either the native Rust
-//! forward or (for packed deployments) dense reconstructions produced by
-//! the PTQ pipeline.
+//! The server is generic over the [`Backend`] seam: it holds a
+//! `&dyn Backend` and opens one [`DecodeSession`] (KV cache) per admitted
+//! request. `stbllm serve --backend packed` therefore drives the sub-1-bit
+//! packed GEMM end-to-end; `--backend native` uses the dense Rust forward.
+//! The usual construction path is `Engine::serve`.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
 use std::time::Instant;
 
-use crate::model::config::ModelConfig;
-use crate::model::transformer::DecodeState;
-use crate::model::ModelWeights;
+use anyhow::Result;
+
+use crate::engine::backend::{Backend, DecodeSession};
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -44,6 +46,7 @@ pub struct ServerStats {
     pub generated_tokens: usize,
     pub wall_s: f64,
     pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
     pub p95_latency_s: f64,
     pub mean_ttft_s: f64,
 }
@@ -54,9 +57,9 @@ impl ServerStats {
     }
 }
 
-struct Active {
+struct Active<'a> {
     req: Request,
-    state: DecodeState,
+    session: Box<dyn DecodeSession + 'a>,
     produced: Vec<u8>,
     submitted: Instant,
     first_token: Option<f64>,
@@ -69,31 +72,31 @@ struct Active {
 /// continuous batching and returns responses + stats. (The async façade
 /// `serve_channel` wraps this for streaming use.)
 pub struct BatchServer<'a> {
-    pub cfg: &'a ModelConfig,
-    pub weights: &'a ModelWeights,
+    pub backend: &'a dyn Backend,
     pub max_batch: usize,
     pub kv_capacity: usize,
 }
 
 impl<'a> BatchServer<'a> {
-    pub fn new(cfg: &'a ModelConfig, weights: &'a ModelWeights, max_batch: usize) -> Self {
-        BatchServer { cfg, weights, max_batch, kv_capacity: 4 * cfg.seq_len }
+    pub fn new(backend: &'a dyn Backend, max_batch: usize) -> Self {
+        let kv_capacity = 4 * backend.cfg().seq_len;
+        BatchServer { backend, max_batch, kv_capacity }
     }
 
-    fn admit(&self, req: Request, t0: Instant) -> Active {
-        Active {
-            state: DecodeState::new(self.cfg, self.kv_capacity),
+    fn admit(&self, req: Request, t0: Instant) -> Result<Active<'a>> {
+        Ok(Active {
+            session: self.backend.begin_decode(self.kv_capacity)?,
             produced: Vec::with_capacity(req.max_new),
             submitted: t0,
             first_token: None,
             prefill_pos: 0,
             last_logits: Vec::new(),
             req,
-        }
+        })
     }
 
     /// Run the whole workload; returns responses in completion order.
-    pub fn run(&self, workload: Vec<Request>) -> (Vec<Response>, ServerStats) {
+    pub fn run(&self, workload: Vec<Request>) -> Result<(Vec<Response>, ServerStats)> {
         let wall0 = Instant::now();
         let mut queue: VecDeque<Request> = workload.into();
         let mut active: Vec<Active> = Vec::new();
@@ -106,7 +109,7 @@ impl<'a> BatchServer<'a> {
             // continuous batching: top up the active set
             while active.len() < self.max_batch {
                 match queue.pop_front() {
-                    Some(r) => active.push(self.admit(r, Instant::now())),
+                    Some(r) => active.push(self.admit(r, Instant::now())?),
                     None => break,
                 }
             }
@@ -118,7 +121,7 @@ impl<'a> BatchServer<'a> {
                     if a.prefill_pos < a.req.prompt.len() {
                         // prefill one token per step (chunked prefill)
                         let tok = a.req.prompt[a.prefill_pos];
-                        a.last_logits = a.state.step(self.cfg, self.weights, tok);
+                        a.last_logits = a.session.step(tok)?;
                         a.prefill_pos += 1;
                         false
                     } else {
@@ -132,7 +135,7 @@ impl<'a> BatchServer<'a> {
                         if a.produced.len() >= a.req.max_new {
                             true
                         } else {
-                            a.last_logits = a.state.step(self.cfg, self.weights, next);
+                            a.last_logits = a.session.step(next)?;
                             false
                         }
                     }
@@ -160,31 +163,38 @@ impl<'a> BatchServer<'a> {
             generated_tokens: generated,
             wall_s: wall0.elapsed().as_secs_f64(),
             mean_latency_s: mean(&latencies),
+            p50_latency_s: percentile(&latencies, 50.0),
             p95_latency_s: percentile(&latencies, 95.0),
             mean_ttft_s: mean(&ttfts),
         };
-        (done, stats)
+        Ok((done, stats))
     }
 }
 
-/// Channel-based façade: spawn a worker thread; send requests, receive
-/// responses as they complete. Returns (request sender, response receiver).
+/// Channel-based façade: spawn a worker thread owning the backend; send
+/// requests, receive responses as they complete. Returns (request sender,
+/// response receiver).
 pub fn serve_channel(
-    cfg: ModelConfig,
-    weights: ModelWeights,
+    backend: Box<dyn Backend + Send>,
     max_batch: usize,
 ) -> (mpsc::Sender<Request>, mpsc::Receiver<Response>) {
     let (req_tx, req_rx) = mpsc::channel::<Request>();
     let (resp_tx, resp_rx) = mpsc::channel::<Response>();
     std::thread::spawn(move || {
-        let server = BatchServer::new(&cfg, &weights, max_batch);
+        let server = BatchServer::new(&*backend, max_batch);
         // micro-batching loop: drain whatever is queued, run it, repeat
         while let Ok(first) = req_rx.recv() {
             let mut batch = vec![first];
             while let Ok(r) = req_rx.try_recv() {
                 batch.push(r);
             }
-            let (responses, _) = server.run(batch);
+            let responses = match server.run(batch) {
+                Ok((responses, _)) => responses,
+                Err(e) => {
+                    eprintln!("serve worker failed: {e:#}");
+                    return;
+                }
+            };
             for r in responses {
                 if resp_tx.send(r).is_err() {
                     return;
@@ -213,18 +223,26 @@ fn mean(v: &[f64]) -> f64 {
     }
 }
 
-fn percentile(sorted: &[f64], p: f64) -> f64 {
+/// Nearest-rank percentile of an ascending-sorted slice: the smallest value
+/// such that at least `p`% of the samples are ≤ it (rank = ⌈p/100 · n⌉,
+/// 1-based). The previous `round((p/100)·(n-1))` interpolation over-read
+/// e.g. p50 of a 2-sample vector as the max.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return 0.0;
     }
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx.min(sorted.len() - 1)]
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::native::NativeBackend;
+    use crate::model::config::ModelConfig;
     use crate::model::transformer::model_fwd;
+    use crate::model::ModelWeights;
 
     fn tiny() -> (ModelConfig, ModelWeights) {
         let cfg = ModelConfig::preset("llama1-7b").unwrap();
@@ -237,8 +255,9 @@ mod tests {
         let prompt: Vec<u8> = vec![1, 2, 3, 4, 5];
         let reqs: Vec<Request> =
             (0..3).map(|id| Request { id, prompt: prompt.clone(), max_new: 4 }).collect();
-        let server = BatchServer::new(&cfg, &w, 2);
-        let (resps, stats) = server.run(reqs);
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let server = BatchServer::new(&be, 2);
+        let (resps, stats) = server.run(reqs).unwrap();
         assert_eq!(resps.len(), 3);
         assert_eq!(stats.completed, 3);
         assert_eq!(stats.generated_tokens, 12);
@@ -263,8 +282,9 @@ mod tests {
         let (cfg, w) = tiny();
         let reqs: Vec<Request> =
             (0..5).map(|id| Request { id, prompt: vec![7, 8], max_new: 2 }).collect();
-        let server = BatchServer::new(&cfg, &w, 2);
-        let (resps, stats) = server.run(reqs);
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let server = BatchServer::new(&be, 2);
+        let (resps, stats) = server.run(reqs).unwrap();
         assert_eq!(resps.len(), 5);
         assert!(stats.tokens_per_s() > 0.0);
     }
@@ -272,10 +292,38 @@ mod tests {
     #[test]
     fn channel_facade_round_trips() {
         let (cfg, w) = tiny();
-        let (tx, rx) = serve_channel(cfg, w, 2);
+        let (tx, rx) = serve_channel(Box::new(NativeBackend::new(cfg, w)), 2);
         tx.send(Request { id: 42, prompt: vec![1, 2, 3], max_new: 3 }).unwrap();
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.id, 42);
         assert_eq!(resp.tokens.len(), 3);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_pinned() {
+        // known vector 1..=20: p50 = 10 (rank ⌈0.5·20⌉ = 10), p95 = 19,
+        // p100 = 20, tiny p → min
+        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 10.0);
+        assert_eq!(percentile(&v, 95.0), 19.0);
+        assert_eq!(percentile(&v, 100.0), 20.0);
+        assert_eq!(percentile(&v, 1.0), 1.0);
+        // two samples: the median by nearest-rank is the FIRST, not the max
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 95.0), 2.0);
+        // degenerate inputs
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[3.5], 95.0), 3.5);
+    }
+
+    #[test]
+    fn server_stats_expose_p50_and_p95() {
+        let (cfg, w) = tiny();
+        let reqs: Vec<Request> =
+            (0..4).map(|id| Request { id, prompt: vec![1, 2], max_new: 2 }).collect();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let (_, stats) = BatchServer::new(&be, 2).run(reqs).unwrap();
+        assert!(stats.p50_latency_s > 0.0);
+        assert!(stats.p95_latency_s >= stats.p50_latency_s);
     }
 }

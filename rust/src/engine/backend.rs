@@ -1,0 +1,73 @@
+//! The `Backend` trait — the single seam between the [`crate::engine::Engine`]
+//! facade (quantize / eval / serve / flip) and an execution strategy.
+//!
+//! Three implementations ship with the crate:
+//!  * [`crate::engine::NativeBackend`] — the Rust transformer forward on
+//!    dense f32 weights (full-sequence + KV-cache decode);
+//!  * [`crate::engine::PjrtBackend`]  — AOT-lowered JAX/Pallas HLO executed
+//!    through the PJRT client (fixed `seq_len` windows, no decode);
+//!  * [`crate::engine::PackedBackend`] — every projection routed through the
+//!    sub-1-bit 2:4 packed kernels (`packed::gemm`), full forward + decode.
+
+use anyhow::Result;
+
+use crate::model::config::ModelConfig;
+use crate::model::ModelWeights;
+use crate::tensor::Mat;
+
+/// Internal: shared-owned or borrowed dense weights. Backends hold this so
+/// the Engine's retained reconstruction and the backend's copy are the SAME
+/// allocation (no doubled resident weights).
+pub(crate) enum WeightsRef<'a> {
+    Shared(std::sync::Arc<ModelWeights>),
+    Borrowed(&'a ModelWeights),
+}
+
+impl WeightsRef<'_> {
+    pub(crate) fn get(&self) -> &ModelWeights {
+        match self {
+            WeightsRef::Shared(w) => w,
+            WeightsRef::Borrowed(w) => w,
+        }
+    }
+}
+
+/// What a backend can do; `Engine` and `BatchServer` route work accordingly
+/// instead of hard-coding per-backend branches.
+#[derive(Clone, Copy, Debug)]
+pub struct Capabilities {
+    /// Can compute full-sequence logits (perplexity / zero-shot).
+    pub full_forward: bool,
+    /// Can run incremental KV-cache decode (the serving path).
+    pub decode: bool,
+    /// `forward` only accepts sequences of exactly this length (AOT
+    /// executables are shape-specialized); `None` = any length.
+    pub fixed_seq_len: Option<usize>,
+    /// Weights are held in the sub-1-bit packed store, not dense f32.
+    pub sub_1bit_storage: bool,
+}
+
+/// An in-flight decode sequence (one KV cache) created by a backend.
+pub trait DecodeSession {
+    /// Feed one token; returns logits over the vocabulary.
+    fn step(&mut self, token: u8) -> Result<Vec<f32>>;
+    /// Number of tokens consumed so far.
+    fn pos(&self) -> usize;
+}
+
+/// A model execution backend.
+///
+/// Backends own their weight representation; sessions returned by
+/// [`Backend::begin_decode`] borrow the backend (`+ '_`), so a server holds
+/// one backend reference and any number of concurrent sessions.
+pub trait Backend {
+    /// The model configuration this backend executes.
+    fn cfg(&self) -> &ModelConfig;
+    /// Short human label ("native", "pjrt", "packed").
+    fn label(&self) -> &'static str;
+    fn capabilities(&self) -> Capabilities;
+    /// Full-sequence forward: tokens → logits (S, vocab).
+    fn forward(&self, tokens: &[u8]) -> Result<Mat>;
+    /// Start an incremental decode with the given KV capacity.
+    fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>>;
+}

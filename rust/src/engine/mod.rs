@@ -1,0 +1,626 @@
+//! The `Engine` facade — one builder-style entry point for everything the
+//! CLI, examples and benches used to hand-wire: artifact loading,
+//! calibration, `Method` construction, backend selection, and the
+//! quantize / perplexity / zero-shot / serve / flip workflows.
+//!
+//! ```no_run
+//! use stbllm::engine::{BackendKind, Engine};
+//! use stbllm::coordinator::Method;
+//! use stbllm::quant::NmRatio;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let engine = Engine::builder()
+//!     .model("llama1-7b")
+//!     .method(Method::stbllm(NmRatio::new(4, 8)))
+//!     .backend(BackendKind::Packed)
+//!     .calib_corpus("c4s")
+//!     .build()?;
+//! println!("{:.3} bits/weight", engine.quantize().avg_bits);
+//! let ppl = engine.perplexity("wikitext2s")?;
+//! println!("wikitext2s ppl = {ppl:.2}");
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Every future scaling PR (sharding, batching, caching, multi-backend)
+//! plugs in at the [`Backend`] seam instead of touching five call sites.
+
+pub mod backend;
+pub mod native;
+pub mod packed;
+pub mod pjrt;
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+pub use backend::{Backend, Capabilities, DecodeSession};
+pub use native::NativeBackend;
+pub use packed::PackedBackend;
+pub use pjrt::PjrtBackend;
+
+use crate::coordinator::{calibrate, quantize_model, BatchServer, Method, Request, ServerStats};
+use crate::eval;
+use crate::model::config::ModelConfig;
+use crate::model::{corpus, ModelWeights};
+use crate::quant::{Allocation, Metric, NmRatio, NonSalientMode, StbOpts};
+use crate::runtime::Artifacts;
+use crate::util::cli::{defaults, Args};
+
+/// Which execution backend an [`Engine`] drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Native Rust forward on dense f32 weights (full forward + decode).
+    Native,
+    /// AOT JAX/Pallas HLO via PJRT (fixed-window full forward only).
+    Pjrt,
+    /// Sub-1-bit 2:4 packed kernels on the deployment store.
+    Packed,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind, EngineError> {
+        match s {
+            "native" | "rust" => Ok(BackendKind::Native),
+            "pjrt" | "aot" | "xla" => Ok(BackendKind::Pjrt),
+            "packed" | "stbp" => Ok(BackendKind::Packed),
+            other => Err(EngineError::UnknownBackend(other.to_string())),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Packed => "packed",
+        }
+    }
+}
+
+/// Typed configuration/validation errors from [`EngineBuilder::build`] —
+/// misconfiguration reports what was wrong (and what would be accepted)
+/// instead of panicking.
+#[derive(Clone, Debug)]
+pub enum EngineError {
+    /// The artifacts directory is missing/unreadable (run `make artifacts`).
+    Artifacts(String),
+    UnknownModel { model: String, known: Vec<String> },
+    UnknownBackend(String),
+    UnknownMethod(String),
+    UnknownCorpus(String),
+    /// A method option failed to parse (bad `--nm`, `--metric`, ...).
+    InvalidOption { option: &'static str, value: String },
+    /// The chosen backend cannot run the requested workflow.
+    Unsupported { backend: &'static str, what: String },
+    /// The backend failed to initialize (e.g. PJRT client unavailable).
+    Backend(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Artifacts(e) => {
+                write!(f, "artifacts unavailable ({e}) — run `make artifacts` or enable .synthetic_fallback(true)")
+            }
+            EngineError::UnknownModel { model, known } => {
+                write!(f, "unknown model {model:?}; known: {}", known.join(", "))
+            }
+            EngineError::UnknownBackend(b) => {
+                write!(f, "unknown backend {b:?}; expected native | pjrt | packed")
+            }
+            EngineError::UnknownMethod(m) => {
+                write!(f, "unknown method {m:?}; expected fp | rtn | gptq | awq | pbllm | billm | stbllm")
+            }
+            EngineError::UnknownCorpus(c) => {
+                write!(f, "unknown corpus {c:?}; expected wikitext2s | c4s | ptbs")
+            }
+            EngineError::InvalidOption { option, value } => {
+                write!(f, "invalid value {value:?} for --{option}")
+            }
+            EngineError::Unsupported { backend, what } => {
+                write!(f, "{backend} backend does not support {what}")
+            }
+            EngineError::Backend(e) => write!(f, "backend initialization failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Per-model quantization summary captured at build time.
+#[derive(Clone, Debug)]
+pub struct QuantReport {
+    pub model: String,
+    /// method label as the paper's tables name it ("STBLLM(4:8)", ...)
+    pub method: String,
+    /// mean value-bits per weight across quantized matrices
+    pub avg_bits: f64,
+    /// mean salient fraction
+    pub r_salient: f64,
+    /// relative Frobenius reconstruction error vs the FP weights
+    pub rel_recon_err: f64,
+    /// wall-clock seconds spent quantizing
+    pub seconds: f64,
+    /// per-layer assigned N:M (empty for non-N:M methods)
+    pub layer_ratios: Vec<NmRatio>,
+}
+
+/// Outcome of [`Engine::flip_study`].
+#[derive(Clone, Copy, Debug)]
+pub struct FlipReport {
+    pub ratio: f64,
+    pub ppl_before: f64,
+    pub ppl_after: f64,
+}
+
+/// Builder for [`Engine`]; validates the whole configuration up front so
+/// `build()` is the only fallible step.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    model: String,
+    method: Method,
+    backend: BackendKind,
+    calib_corpus: String,
+    calib_tokens: usize,
+    eval_tokens: usize,
+    max_batch: usize,
+    workers: usize,
+    synthetic_fallback: bool,
+    backend_fallback: bool,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            model: defaults::MODEL.to_string(),
+            method: Method::stbllm(NmRatio::parse(defaults::NM).expect("default N:M")),
+            backend: BackendKind::Native,
+            calib_corpus: defaults::CALIB_CORPUS.to_string(),
+            calib_tokens: defaults::CALIB_TOKENS,
+            eval_tokens: defaults::EVAL_TOKENS,
+            max_batch: defaults::MAX_BATCH,
+            workers: defaults::WORKERS,
+            synthetic_fallback: false,
+            backend_fallback: false,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.to_string();
+        self
+    }
+
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn calib_corpus(mut self, corpus: &str) -> Self {
+        self.calib_corpus = corpus.to_string();
+        self
+    }
+
+    pub fn calib_tokens(mut self, n: usize) -> Self {
+        self.calib_tokens = n;
+        self
+    }
+
+    pub fn eval_tokens(mut self, n: usize) -> Self {
+        self.eval_tokens = n;
+        self
+    }
+
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n.max(1);
+        self
+    }
+
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// When artifacts are missing, fall back to the preset config +
+    /// synthetic weights instead of failing — lets the whole facade run in
+    /// artifact-free environments (unit tests, CI).
+    pub fn synthetic_fallback(mut self, yes: bool) -> Self {
+        self.synthetic_fallback = yes;
+        self
+    }
+
+    /// When the requested backend cannot be stood up (e.g. PJRT without the
+    /// `pjrt` feature / `xla` runtime), fall back to the native backend
+    /// with a warning instead of failing. Backend stand-up is the LAST step
+    /// of `build()`, so the fallback never repeats calibration or
+    /// quantization.
+    pub fn backend_fallback(mut self, yes: bool) -> Self {
+        self.backend_fallback = yes;
+        self
+    }
+
+    /// Validate the configuration, quantize, and stand the backend up.
+    pub fn build(self) -> Result<Engine, EngineError> {
+        // 1. resolve model: artifacts first, preset+synthetic as opt-in fallback
+        let arts = match Artifacts::load_default() {
+            Ok(a) => Some(a),
+            Err(e) if self.synthetic_fallback => {
+                let _ = e;
+                None
+            }
+            Err(e) => return Err(EngineError::Artifacts(format!("{e:#}"))),
+        };
+        let (cfg, fp_weights) = match &arts {
+            Some(arts) => match arts.models.get(&self.model) {
+                Some(ma) => {
+                    let w = arts
+                        .load_weights(&self.model)
+                        .map_err(|e| EngineError::Artifacts(format!("{e:#}")))?;
+                    (ma.config.clone(), w)
+                }
+                None if self.synthetic_fallback => synthetic_model(&self.model)?,
+                None => {
+                    return Err(EngineError::UnknownModel {
+                        model: self.model.clone(),
+                        known: arts.models.keys().cloned().collect(),
+                    })
+                }
+            },
+            None => synthetic_model(&self.model)?,
+        };
+
+        // 2. validate the calibration corpus before spending quantize time
+        if corpus::spec_by_name(&self.calib_corpus).is_none() {
+            return Err(EngineError::UnknownCorpus(self.calib_corpus.clone()));
+        }
+
+        // 3. calibrate + quantize
+        let needs_calib = !matches!(self.method, Method::FullPrecision | Method::Rtn { .. });
+        let calib = needs_calib.then(|| {
+            calibrate(&cfg, &fp_weights, &self.calib_corpus, self.calib_tokens, CALIB_SEED)
+        });
+        let q = quantize_model(&cfg, &fp_weights, &self.method, calib.as_ref(), self.workers);
+        let report = QuantReport {
+            model: self.model.clone(),
+            method: self.method.label(),
+            avg_bits: q.avg_bits,
+            r_salient: q.r_salient,
+            rel_recon_err: rel_recon_err(&fp_weights, &q.weights),
+            seconds: q.seconds,
+            layer_ratios: q.layer_ratios,
+        };
+
+        // 4. stand the backend up (LAST step: a backend_fallback never
+        //    repeats the calibrate/quantize work above). Weights are shared
+        //    via Arc so the Engine's retained reconstruction and the
+        //    backend alias one allocation.
+        let qweights = Arc::new(q.weights);
+        let backend: Box<dyn Backend> = match self.backend {
+            BackendKind::Native => {
+                Box::new(NativeBackend::shared(cfg.clone(), qweights.clone()))
+            }
+            BackendKind::Packed => Box::new(
+                PackedBackend::from_weights(&cfg, &qweights)
+                    .map_err(|e| EngineError::Backend(format!("{e:#}")))?,
+            ),
+            BackendKind::Pjrt => {
+                let built: Result<Box<dyn Backend>, EngineError> = match arts.as_ref() {
+                    None => Err(EngineError::Unsupported {
+                        backend: "pjrt",
+                        what: "synthetic (artifact-free) models".to_string(),
+                    }),
+                    Some(arts) => PjrtBackend::new(arts, &self.model, qweights.clone())
+                        .map(|b| Box::new(b) as Box<dyn Backend>)
+                        .map_err(|e| EngineError::Backend(format!("{e:#}"))),
+                };
+                match built {
+                    Ok(b) => b,
+                    Err(e) if self.backend_fallback => {
+                        eprintln!("[engine] pjrt backend unavailable ({e}); falling back to native");
+                        Box::new(NativeBackend::shared(cfg.clone(), qweights.clone()))
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        };
+
+        Ok(Engine {
+            model: self.model,
+            cfg,
+            backend,
+            qweights,
+            report,
+            max_batch: self.max_batch,
+            eval_tokens: self.eval_tokens,
+        })
+    }
+}
+
+fn synthetic_model(model: &str) -> Result<(ModelConfig, ModelWeights), EngineError> {
+    match ModelConfig::preset(model) {
+        Some(cfg) => {
+            let w = ModelWeights::synthetic(&cfg, cfg.seed);
+            Ok((cfg, w))
+        }
+        None => Err(EngineError::UnknownModel {
+            model: model.to_string(),
+            known: ModelConfig::preset_names().iter().map(|s| s.to_string()).collect(),
+        }),
+    }
+}
+
+fn rel_recon_err(fp: &ModelWeights, q: &ModelWeights) -> f64 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (l0, l1) in fp.layers.iter().zip(&q.layers) {
+        for (n, m0) in &l0.mats {
+            let d = m0.sub(&l1.mats[n]).frob_norm() as f64;
+            num += d * d;
+            den += (m0.frob_norm() as f64).powi(2);
+        }
+    }
+    (num / den.max(1e-12)).sqrt()
+}
+
+const CALIB_SEED: u64 = 1234;
+const EVAL_SEED: u64 = 999;
+const WORKLOAD_SEED: u64 = 5;
+
+/// The unified quantize/eval/serve facade. Construction (via
+/// [`Engine::builder`]) loads the model, calibrates, quantizes, and stands
+/// the chosen [`Backend`] up; the methods below are the workflows the CLI
+/// subcommands, examples and benches share.
+pub struct Engine {
+    model: String,
+    cfg: ModelConfig,
+    backend: Box<dyn Backend>,
+    /// Dense reconstruction of the quantized weights (flip study, PJRT
+    /// zero-shot fallback, `weights()` accessor). Shared with the native /
+    /// PJRT backend via `Arc` — no duplicate resident copy; the packed
+    /// backend's serving hot path never touches it (its working set is the
+    /// sub-1-bit store).
+    qweights: Arc<ModelWeights>,
+    report: QuantReport,
+    max_batch: usize,
+    eval_tokens: usize,
+}
+
+impl Engine {
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    /// Dense reconstruction of the quantized weights.
+    pub fn weights(&self) -> &ModelWeights {
+        &self.qweights
+    }
+
+    /// The quantization summary captured at build time.
+    pub fn quantize(&self) -> &QuantReport {
+        &self.report
+    }
+
+    /// Perplexity on `eval_tokens` tokens of the named corpus, through this
+    /// engine's backend (the one generic implementation — no more
+    /// native/PJRT copy-paste).
+    pub fn perplexity(&self, corpus_name: &str) -> Result<f64> {
+        if corpus::spec_by_name(corpus_name).is_none() {
+            return Err(EngineError::UnknownCorpus(corpus_name.to_string()).into());
+        }
+        let toks = corpus::corpus_tokens(corpus_name, self.eval_tokens, EVAL_SEED);
+        eval::perplexity::perplexity(self.backend.as_ref(), &toks)
+    }
+
+    /// The 7-task zero-shot suite. Runs through the backend when it accepts
+    /// variable-length sequences; otherwise (PJRT's fixed windows) falls
+    /// back to the native forward on the dense reconstruction.
+    pub fn zeroshot(&self) -> Result<(Vec<(&'static str, f64)>, f64)> {
+        let caps = self.backend.capabilities();
+        if caps.full_forward && caps.fixed_seq_len.is_none() {
+            eval::zeroshot::run_suite(self.backend.as_ref())
+        } else {
+            let native = NativeBackend::borrowed(&self.cfg, &self.qweights);
+            eval::zeroshot::run_suite(&native)
+        }
+    }
+
+    /// Serve a workload with continuous batching through the backend's
+    /// decode path; returns responses + aggregate [`ServerStats`].
+    pub fn serve(&self, requests: Vec<Request>) -> Result<(Vec<crate::coordinator::Response>, ServerStats)> {
+        if !self.backend.capabilities().decode {
+            return Err(EngineError::Unsupported {
+                backend: self.backend.label(),
+                what: "incremental decode (serving)".to_string(),
+            }
+            .into());
+        }
+        let server = BatchServer::new(self.backend.as_ref(), self.max_batch);
+        server.run(requests)
+    }
+
+    /// Synthetic serving workload: `n_req` prompts sliced from the prose
+    /// corpus (the smoke workload `stbllm serve` and the examples use).
+    pub fn synthetic_workload(
+        &self,
+        n_req: usize,
+        prompt_len: usize,
+        max_new: usize,
+    ) -> Vec<Request> {
+        let toks =
+            corpus::corpus_tokens(defaults::EVAL_CORPUS, n_req * prompt_len, WORKLOAD_SEED);
+        (0..n_req)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: toks[i * prompt_len..(i + 1) * prompt_len].to_vec(),
+                max_new,
+            })
+            .collect()
+    }
+
+    /// Sign-flip redundancy study (Fig. 1): flip `ratio` of the quantized
+    /// signs and measure perplexity before/after on the named corpus.
+    pub fn flip_study(
+        &self,
+        corpus_name: &str,
+        ratio: f64,
+        salient_aware: bool,
+    ) -> Result<FlipReport> {
+        if corpus::spec_by_name(corpus_name).is_none() {
+            return Err(EngineError::UnknownCorpus(corpus_name.to_string()).into());
+        }
+        let toks = corpus::corpus_tokens(corpus_name, self.eval_tokens, EVAL_SEED);
+        let before = {
+            let native = NativeBackend::borrowed(&self.cfg, &self.qweights);
+            eval::perplexity::perplexity(&native, &toks)?
+        };
+        let flipped = eval::flip::flip_model(&self.qweights, ratio, salient_aware, FLIP_SEED);
+        let after = {
+            let native = NativeBackend::borrowed(&self.cfg, &flipped);
+            eval::perplexity::perplexity(&native, &toks)?
+        };
+        Ok(FlipReport { ratio, ppl_before: before, ppl_after: after })
+    }
+}
+
+const FLIP_SEED: u64 = 42;
+
+/// Build a [`Method`] from parsed CLI options (`--method`, `--bits`,
+/// `--nm`, `--metric`, `--alloc`, `--block`, `--frac`) — shared by
+/// `main.rs` and anything else that accepts the paper's method names.
+pub fn method_from_args(args: &Args) -> Result<Method, EngineError> {
+    let nm_str = args.get_or("nm", defaults::NM);
+    let nm = NmRatio::parse(nm_str)
+        .ok_or_else(|| EngineError::InvalidOption { option: "nm", value: nm_str.to_string() })?;
+    let bits = args.get_usize("bits", defaults::BITS) as u32;
+    Ok(match args.get_or("method", defaults::METHOD) {
+        "fp" | "fullprecision" => Method::FullPrecision,
+        "rtn" => Method::Rtn { bits },
+        "gptq" => Method::Gptq { bits, block: defaults::BLOCK_SIZE },
+        "awq" => Method::Awq { bits },
+        "pbllm" => Method::PbLlm {
+            frac_salient: args.get_f64("frac", defaults::FRAC_SALIENT),
+            hi_bits: 8,
+        },
+        "billm" => Method::BiLlm { nm: args.get("nm").map(|_| nm) },
+        "stbllm" => {
+            let mut opts = StbOpts::stbllm(nm);
+            if let Some(m) = args.get("metric") {
+                opts.metric = Metric::parse(m).ok_or_else(|| EngineError::InvalidOption {
+                    option: "metric",
+                    value: m.to_string(),
+                })?;
+            }
+            opts.block_size = args.get_usize("block", defaults::BLOCK_SIZE);
+            let alloc_str = args.get_or("alloc", defaults::ALLOC);
+            let allocation =
+                Allocation::parse(alloc_str).ok_or_else(|| EngineError::InvalidOption {
+                    option: "alloc",
+                    value: alloc_str.to_string(),
+                })?;
+            if let Some(ns) = args.get("nonsalient") {
+                opts.non_salient = match ns {
+                    "bell" => NonSalientMode::BellShaped,
+                    "trisection" => NonSalientMode::Trisection,
+                    "plain" => NonSalientMode::Plain,
+                    other => {
+                        return Err(EngineError::InvalidOption {
+                            option: "nonsalient",
+                            value: other.to_string(),
+                        })
+                    }
+                };
+            }
+            Method::Stbllm { opts, allocation }
+        }
+        other => return Err(EngineError::UnknownMethod(other.to_string())),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_with_flags(args.iter().map(|s| s.to_string()), &Args::COMMON_FLAGS)
+    }
+
+    #[test]
+    fn backend_kind_parses_and_rejects() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("packed").unwrap(), BackendKind::Packed);
+        match BackendKind::parse("cuda") {
+            Err(EngineError::UnknownBackend(b)) => assert_eq!(b, "cuda"),
+            other => panic!("expected UnknownBackend, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn method_from_args_defaults_to_stbllm() {
+        let m = method_from_args(&parse(&[])).unwrap();
+        assert_eq!(m.label(), format!("STBLLM({})", defaults::NM));
+    }
+
+    #[test]
+    fn method_from_args_rejects_unknowns_typed() {
+        match method_from_args(&parse(&["--method", "int8"])) {
+            Err(EngineError::UnknownMethod(m)) => assert_eq!(m, "int8"),
+            other => panic!("expected UnknownMethod, got {other:?}"),
+        }
+        match method_from_args(&parse(&["--nm", "9"])) {
+            Err(EngineError::InvalidOption { option: "nm", .. }) => {}
+            other => panic!("expected InvalidOption(nm), got {other:?}"),
+        }
+        match method_from_args(&parse(&["--metric", "psnr"])) {
+            Err(EngineError::InvalidOption { option: "metric", .. }) => {}
+            other => panic!("expected InvalidOption(metric), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_rejects_unknown_model_with_candidates() {
+        let err = Engine::builder()
+            .model("gpt-17")
+            .synthetic_fallback(true)
+            .build()
+            .err()
+            .expect("unknown model must not build");
+        match err {
+            EngineError::UnknownModel { model, known } => {
+                assert_eq!(model, "gpt-17");
+                assert!(!known.is_empty());
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_errors_are_typed_not_panics_without_artifacts() {
+        // without synthetic_fallback and without artifacts this must be a
+        // clean typed error, never a panic
+        let r = Engine::builder().model("llama1-7b").build();
+        if let Err(e) = r {
+            let msg = e.to_string();
+            assert!(!msg.is_empty());
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! `NativeBackend` — the pure-Rust transformer forward on dense f32
+//! weights. The reference implementation every other backend is checked
+//! against, and the default serving backend.
+
+use std::borrow::Cow;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::engine::backend::{Backend, Capabilities, DecodeSession, WeightsRef};
+use crate::model::config::ModelConfig;
+use crate::model::transformer::{self, DecodeState};
+use crate::model::ModelWeights;
+use crate::tensor::Mat;
+
+/// Dense-weight backend over the native Rust forward.
+///
+/// Weights are held as either a shared `Arc` (what the Engine hands out, so
+/// its retained reconstruction and this backend alias one allocation) or a
+/// plain borrow (`NativeBackend::borrowed`) for transient evaluations.
+pub struct NativeBackend<'a> {
+    cfg: Cow<'a, ModelConfig>,
+    weights: WeightsRef<'a>,
+}
+
+impl NativeBackend<'static> {
+    /// Owning constructor.
+    pub fn new(cfg: ModelConfig, weights: ModelWeights) -> NativeBackend<'static> {
+        Self::shared(cfg, Arc::new(weights))
+    }
+
+    /// Shared-ownership constructor (what `EngineBuilder::build` uses).
+    pub fn shared(cfg: ModelConfig, weights: Arc<ModelWeights>) -> NativeBackend<'static> {
+        NativeBackend { cfg: Cow::Owned(cfg), weights: WeightsRef::Shared(weights) }
+    }
+}
+
+impl<'a> NativeBackend<'a> {
+    /// Borrowing constructor for transient evaluations.
+    pub fn borrowed(cfg: &'a ModelConfig, weights: &'a ModelWeights) -> NativeBackend<'a> {
+        NativeBackend { cfg: Cow::Borrowed(cfg), weights: WeightsRef::Borrowed(weights) }
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        self.weights.get()
+    }
+}
+
+impl Backend for NativeBackend<'_> {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn label(&self) -> &'static str {
+        "native"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            full_forward: true,
+            decode: true,
+            fixed_seq_len: None,
+            sub_1bit_storage: false,
+        }
+    }
+
+    fn forward(&self, tokens: &[u8]) -> Result<Mat> {
+        Ok(transformer::model_fwd(&self.cfg, self.weights.get(), tokens))
+    }
+
+    fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>> {
+        Ok(Box::new(NativeSession { be: self, st: DecodeState::new(&self.cfg, capacity) }))
+    }
+}
+
+struct NativeSession<'a, 'w> {
+    be: &'a NativeBackend<'w>,
+    st: DecodeState,
+}
+
+impl DecodeSession for NativeSession<'_, '_> {
+    fn step(&mut self, token: u8) -> Result<Vec<f32>> {
+        Ok(self.st.step(&self.be.cfg, self.be.weights.get(), token))
+    }
+
+    fn pos(&self) -> usize {
+        self.st.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_matches_model_fwd_and_decode_agrees() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 11);
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let toks: Vec<u8> = vec![5, 3, 8, 1, 9, 2];
+        let full = be.forward(&toks).unwrap();
+        assert_eq!((full.rows, full.cols), (toks.len(), cfg.vocab));
+
+        let mut sess = be.begin_decode(16).unwrap();
+        let mut last = Vec::new();
+        for &t in &toks {
+            last = sess.step(t).unwrap();
+        }
+        assert_eq!(sess.pos(), toks.len());
+        for (a, b) in last.iter().zip(full.row(toks.len() - 1)) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn shared_weights_alias_one_allocation() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = Arc::new(ModelWeights::synthetic(&cfg, 12));
+        let be = NativeBackend::shared(cfg, w.clone());
+        assert_eq!(Arc::strong_count(&w), 2);
+        assert!(std::ptr::eq(be.weights(), w.as_ref()));
+    }
+}

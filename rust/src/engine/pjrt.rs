@@ -1,0 +1,143 @@
+//! `PjrtBackend` — executes the AOT-lowered JAX/Pallas artifacts through
+//! the PJRT client: embedding in Rust, one shape-specialized executable per
+//! transformer layer, and the LM-head executable for logits. This is the
+//! path that proves L1 (Pallas) ∘ L2 (JAX) ∘ L3 (Rust) compose.
+//!
+//! The layer executables are lowered for exactly `cfg.seq_len` tokens, so
+//! `capabilities().fixed_seq_len == Some(seq_len)` and decode is
+//! unsupported — the Engine routes serving to a decode-capable backend and
+//! windows perplexity at `seq_len`, which is exactly what the old
+//! `ppl_pjrt` hand-rolled.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::backend::{Backend, Capabilities, DecodeSession, WeightsRef};
+use crate::model::config::ModelConfig;
+use crate::model::transformer;
+use crate::model::ModelWeights;
+use crate::runtime::client::MatArg;
+use crate::runtime::{Artifacts, Runtime};
+use crate::tensor::Mat;
+
+enum RtRef<'a> {
+    Owned(Box<Runtime>),
+    Borrowed(&'a Runtime),
+}
+
+impl RtRef<'_> {
+    fn get(&self) -> &Runtime {
+        match self {
+            RtRef::Owned(rt) => rt,
+            RtRef::Borrowed(rt) => rt,
+        }
+    }
+}
+
+/// AOT-artifact backend. Executables are compiled once (eagerly, so that
+/// `EngineBuilder::build` fails fast) and cached inside the runtime.
+pub struct PjrtBackend<'a> {
+    cfg: ModelConfig,
+    weights: WeightsRef<'a>,
+    rt: RtRef<'a>,
+    layer_fwd: String,
+    lm_head: String,
+}
+
+impl PjrtBackend<'static> {
+    /// Owning constructor: creates a CPU PJRT runtime rooted at the
+    /// artifacts directory and compiles the model's executables. Weights
+    /// are shared, not cloned.
+    pub fn new(
+        arts: &Artifacts,
+        model: &str,
+        weights: Arc<ModelWeights>,
+    ) -> Result<PjrtBackend<'static>> {
+        let rt = Runtime::cpu(&arts.root)?;
+        Self::build(RtRef::Owned(Box::new(rt)), arts, model, WeightsRef::Shared(weights))
+    }
+}
+
+impl<'a> PjrtBackend<'a> {
+    /// Borrowing constructor: reuses an existing runtime (and its compiled
+    /// executable cache) — what the bench harness uses across cells.
+    pub fn borrowed(
+        rt: &'a Runtime,
+        arts: &Artifacts,
+        model: &str,
+        weights: &'a ModelWeights,
+    ) -> Result<PjrtBackend<'a>> {
+        Self::build(RtRef::Borrowed(rt), arts, model, WeightsRef::Borrowed(weights))
+    }
+
+    fn build(
+        rt: RtRef<'a>,
+        arts: &Artifacts,
+        model: &str,
+        weights: WeightsRef<'a>,
+    ) -> Result<PjrtBackend<'a>> {
+        let ma = arts.models.get(model).with_context(|| format!("unknown model {model}"))?;
+        // compile eagerly so misconfiguration surfaces at build time
+        rt.get().load(&ma.layer_fwd)?;
+        rt.get().load(&ma.lm_head)?;
+        Ok(PjrtBackend {
+            cfg: ma.config.clone(),
+            weights,
+            rt,
+            layer_fwd: ma.layer_fwd.clone(),
+            lm_head: ma.lm_head.clone(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.get().platform()
+    }
+}
+
+impl Backend for PjrtBackend<'_> {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            full_forward: true,
+            decode: false,
+            fixed_seq_len: Some(self.cfg.seq_len),
+            sub_1bit_storage: false,
+        }
+    }
+
+    fn forward(&self, tokens: &[u8]) -> Result<Mat> {
+        if tokens.len() != self.cfg.seq_len {
+            bail!(
+                "pjrt backend executes fixed {}-token windows, got {}",
+                self.cfg.seq_len,
+                tokens.len()
+            );
+        }
+        let rt = self.rt.get();
+        let layer_exe = rt.load(&self.layer_fwd)?;
+        let head_exe = rt.load(&self.lm_head)?;
+        let names = self.cfg.layer_weight_names();
+        let w = self.weights.get();
+        let mut x = transformer::embed(&self.cfg, w, tokens);
+        for lw in &w.layers {
+            let mut args: Vec<MatArg> = vec![MatArg::M(&x), MatArg::V(&lw.ln1), MatArg::V(&lw.ln2)];
+            for n in &names {
+                args.push(MatArg::M(&lw.mats[*n]));
+            }
+            x = layer_exe.run(&args)?;
+        }
+        head_exe.run(&[MatArg::M(&x), MatArg::V(&w.ln_f), MatArg::M(&w.embed)])
+    }
+
+    fn begin_decode(&self, _capacity: usize) -> Result<Box<dyn DecodeSession + '_>> {
+        bail!("pjrt backend has no incremental decode path (AOT artifacts are full-window)");
+    }
+}

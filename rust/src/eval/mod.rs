@@ -1,8 +1,14 @@
-//! Evaluation harnesses: perplexity (native + PJRT paths), the 7-task
-//! zero-shot suite (Table 4), and the sign-flip motivation study (Fig. 1).
+//! Evaluation harnesses: perplexity, the 7-task zero-shot suite (Table 4),
+//! and the sign-flip motivation study (Fig. 1).
+//!
+//! All scoring runs through the [`crate::engine::Backend`] seam — one
+//! generic perplexity implementation serves the native, PJRT and packed
+//! execution paths (the old `ppl_native` / `ppl_pjrt` pair remain as thin
+//! wrappers). The usual entry point is the `Engine` facade
+//! (`Engine::perplexity`, `Engine::zeroshot`, `Engine::flip_study`).
 
 pub mod flip;
 pub mod perplexity;
 pub mod zeroshot;
 
-pub use perplexity::{ppl_native, ppl_pjrt};
+pub use perplexity::{perplexity, ppl_native, ppl_pjrt};

@@ -4,11 +4,15 @@
 //! candidate continuations; the model must rank the true continuation (the
 //! actual corpus continuation) above distractors sampled per the task's
 //! difficulty. Chance rates match the original benchmarks' option counts.
+//!
+//! The harness scores through any variable-length [`Backend`] (native or
+//! packed); `Engine::zeroshot` picks the backend and handles the PJRT
+//! fixed-window fallback.
 
-use crate::model::config::ModelConfig;
+use anyhow::Result;
+
+use crate::engine::backend::Backend;
 use crate::model::corpus::{self, Corpus};
-use crate::model::transformer::model_fwd;
-use crate::model::ModelWeights;
 use crate::util::rng::Pcg32;
 
 /// How distractor continuations are produced (difficulty knob).
@@ -107,11 +111,11 @@ fn build_items(task: &Task) -> Vec<Item> {
     items
 }
 
-/// Log-likelihood of `cand` following `ctx` under the model.
-fn cand_loglik(cfg: &ModelConfig, w: &ModelWeights, ctx: &[u8], cand: &[u8]) -> f64 {
+/// Log-likelihood of `cand` following `ctx` under the backend.
+fn cand_loglik(backend: &dyn Backend, ctx: &[u8], cand: &[u8]) -> Result<f64> {
     let mut seq = ctx.to_vec();
     seq.extend_from_slice(cand);
-    let logits = model_fwd(cfg, w, &seq[..seq.len() - 1]);
+    let logits = backend.forward(&seq[..seq.len() - 1])?;
     let mut ll = 0.0f64;
     for (k, &t) in cand.iter().enumerate() {
         let pos = ctx.len() - 1 + k;
@@ -120,16 +124,18 @@ fn cand_loglik(cfg: &ModelConfig, w: &ModelWeights, ctx: &[u8], cand: &[u8]) -> 
         let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
         ll += (row[t as usize] - m - z.ln()) as f64;
     }
-    ll
+    Ok(ll)
 }
 
-/// Run one task; returns accuracy in percent.
-pub fn run_task(cfg: &ModelConfig, w: &ModelWeights, task: &Task) -> f64 {
+/// Run one task through a backend; returns accuracy in percent.
+pub fn run_task(backend: &dyn Backend, task: &Task) -> Result<f64> {
     let items = build_items(task);
     let mut correct = 0usize;
     for item in &items {
-        let lls: Vec<f64> =
-            item.cands.iter().map(|c| cand_loglik(cfg, w, &item.ctx, c)).collect();
+        let mut lls = Vec::with_capacity(item.cands.len());
+        for c in &item.cands {
+            lls.push(cand_loglik(backend, &item.ctx, c)?);
+        }
         let pred = lls
             .iter()
             .enumerate()
@@ -140,22 +146,25 @@ pub fn run_task(cfg: &ModelConfig, w: &ModelWeights, task: &Task) -> f64 {
             correct += 1;
         }
     }
-    100.0 * correct as f64 / items.len() as f64
+    Ok(100.0 * correct as f64 / items.len() as f64)
 }
 
 /// Run all 7 tasks; returns (task name, accuracy) pairs + mean.
-pub fn run_suite(cfg: &ModelConfig, w: &ModelWeights) -> (Vec<(&'static str, f64)>, f64) {
+pub fn run_suite(backend: &dyn Backend) -> Result<(Vec<(&'static str, f64)>, f64)> {
     let mut out = Vec::new();
     for t in tasks7() {
-        out.push((t.name, run_task(cfg, w, &t)));
+        out.push((t.name, run_task(backend, &t)?));
     }
     let mean = out.iter().map(|(_, a)| a).sum::<f64>() / out.len() as f64;
-    (out, mean)
+    Ok((out, mean))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::native::NativeBackend;
+    use crate::model::config::ModelConfig;
+    use crate::model::ModelWeights;
 
     #[test]
     fn items_are_well_formed() {
@@ -188,9 +197,10 @@ mod tests {
     fn random_model_near_chance() {
         let cfg = ModelConfig::preset("llama1-7b").unwrap();
         let w = ModelWeights::synthetic(&cfg, 3);
+        let be = NativeBackend::borrowed(&cfg, &w);
         let mut t = tasks7()[0].clone(); // 2-choice
         t.n_items = 30;
-        let acc = run_task(&cfg, &w, &t);
+        let acc = run_task(&be, &t).unwrap();
         assert!(acc > 15.0 && acc < 85.0, "acc={acc}");
     }
 }

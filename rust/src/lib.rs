@@ -5,6 +5,8 @@
 //! inventory and EXPERIMENTS.md for paper-vs-measured results.
 //!
 //! Layer map:
+//! * [`engine`] — the `Engine` facade + pluggable `Backend` trait (native /
+//!   PJRT / packed): the one seam quantize, eval and serve plug into.
 //! * [`quant`] — the paper's PTQ algorithms (SI metric, N:M structured
 //!   binarization, trisection, OBC compensation) + every baseline.
 //! * [`packed`] — sub-1-bit storage format and the 2:4 sparse-binary GEMM
@@ -17,6 +19,7 @@
 //! * [`report`] — table/figure rendering for the bench harness.
 
 pub mod coordinator;
+pub mod engine;
 pub mod eval;
 pub mod model;
 pub mod packed;
@@ -25,3 +28,10 @@ pub mod report;
 pub mod runtime;
 pub mod tensor;
 pub mod util;
+
+// The facade, re-exported at crate root: `stbllm::Engine` is the intended
+// entry point for downstream users.
+pub use engine::{
+    Backend, BackendKind, Capabilities, DecodeSession, Engine, EngineBuilder, EngineError,
+    NativeBackend, PackedBackend, PjrtBackend,
+};

@@ -1,5 +1,13 @@
 //! `stbllm` — the STBLLM coordinator CLI (L3 leader entrypoint).
 //!
+//! Every subcommand is a thin veneer over the [`stbllm::engine::Engine`]
+//! facade: the CLI parses options into an `EngineBuilder` (model, `Method`,
+//! `BackendKind`, calibration corpus), `build()` validates + quantizes +
+//! stands the chosen backend up, and the subcommand calls one Engine
+//! workflow (`quantize` / `perplexity` / `zeroshot` / `serve` /
+//! `flip_study`). Defaults live in `util::cli::defaults`, shared between
+//! parsing and the generated help text so the two cannot drift.
+//!
 //! Subcommands:
 //!   info                         list artifacts / model zoo / loss curves
 //!   quantize  --model M [...]    PTQ one model, report bits + recon error
@@ -8,22 +16,13 @@
 //!   serve     --model M [...]    batched-serving smoke run with metrics
 //!   flip      --model M [...]    sign-flip motivation study
 //!   selfcheck                    PJRT ⇄ native forward parity
-//!
-//! Common options: --method {fp,rtn,gptq,pbllm,billm,stbllm} --bits B
-//! --nm N:M --metric {magnitude,wanda,sparsegpt,si} --alloc {uniform,sin,ours}
-//! --calib CORPUS --eval CORPUS --calib-tokens N --eval-tokens N
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use stbllm::coordinator::{calibrate, quantize_model, BatchServer, Method, Request};
-use stbllm::eval::flip::flip_model;
-use stbllm::eval::perplexity::{ppl_native, ppl_pjrt};
-use stbllm::eval::zeroshot;
-use stbllm::model::corpus;
-use stbllm::quant::{Allocation, Metric, NmRatio, StbOpts};
+use stbllm::engine::{method_from_args, BackendKind, Engine};
 use stbllm::report::fmt_ppl;
-use stbllm::runtime::{Artifacts, Runtime};
-use stbllm::util::cli::Args;
+use stbllm::runtime::Artifacts;
+use stbllm::util::cli::{defaults, Args};
 
 fn main() {
     let args = Args::from_env();
@@ -48,13 +47,16 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "flip" => flip(args),
         "selfcheck" => selfcheck(args),
         _ => {
-            print!("{}", HELP);
+            print!("{}", help());
             Ok(())
         }
     }
 }
 
-const HELP: &str = "\
+/// Help text generated from the same `defaults` consts the parser reads.
+fn help() -> String {
+    format!(
+        "\
 stbllm — Structured Binary LLMs below 1 bit (paper reproduction)
 
 USAGE: stbllm <cmd> [options]
@@ -62,91 +64,82 @@ USAGE: stbllm <cmd> [options]
 COMMANDS
   info        list the artifact model zoo (configs, params, loss curves)
   quantize    PTQ one model; reports avg bits, r_salient, recon error
-  eval        perplexity on a corpus (PJRT AOT path; --native for rust fwd)
+  eval        perplexity on a corpus (PJRT AOT path when available, else
+              native; --native / --backend X to pin one)
   zeroshot    7-task zero-shot accuracy suite
   serve       batched-serving smoke run (continuous batching + metrics)
   flip        sign-flip redundancy study (Fig. 1)
   selfcheck   PJRT vs native forward parity check
 
 OPTIONS
-  --model M          preset name (default llama1-7b); see `stbllm info`
-  --method X         fp | rtn | gptq | pbllm | billm | stbllm (default stbllm)
-  --bits B           bit-width for rtn/gptq (default 1)
-  --nm N:M           sparsity ratio (default 4:8)
-  --metric X         magnitude | wanda | sparsegpt | si (default si)
-  --alloc X          uniform | sin | ours (default ours)
-  --calib C          calibration corpus (default c4s)
-  --eval C           eval corpus (default wikitext2s)
-  --calib-tokens N   (default 512)    --eval-tokens N (default 1161)
-  --requests N       serve: synthetic request count (default 8)
-  --batch B          serve: max batch size (default 4)
-  --ratio R          flip: fraction of signs to flip (default 0.05)
-  --native           eval via the native rust forward instead of PJRT
-";
-
-fn artifacts() -> Result<Artifacts> {
-    Artifacts::load_default().context("artifacts missing — run `make artifacts` first")
+  --model M          preset name (default {model}); see `stbllm info`
+  --method X         fp | rtn | gptq | awq | pbllm | billm | stbllm (default {method})
+  --bits B           bit-width for rtn/gptq/awq (default {bits})
+  --nm N:M           sparsity ratio (default {nm})
+  --metric X         magnitude | wanda | sparsegpt | si (default {metric})
+  --alloc X          uniform | sin | ours (default {alloc})
+  --calib C          calibration corpus (default {calib})
+  --eval C           eval corpus (default {eval})
+  --calib-tokens N   (default {calib_tokens})    --eval-tokens N (default {eval_tokens})
+  --backend X        native | pjrt | packed (eval default {eval_backend}; serve default {serve_backend})
+  --requests N       serve: synthetic request count (default {requests})
+  --batch B          serve: max batch size (default {batch})
+  --prompt N         serve: prompt length (default {prompt})
+  --max-new N        serve: generated tokens per request (default {max_new})
+  --ratio R          flip: fraction of signs to flip (default {ratio})
+  --native           eval via the native rust forward (alias for --backend native)
+  --synthetic        fall back to preset configs + synthetic weights when
+                     artifacts are missing (smoke runs without `make artifacts`)
+",
+        model = defaults::MODEL,
+        method = defaults::METHOD,
+        bits = defaults::BITS,
+        nm = defaults::NM,
+        metric = defaults::METRIC,
+        alloc = defaults::ALLOC,
+        calib = defaults::CALIB_CORPUS,
+        eval = defaults::EVAL_CORPUS,
+        calib_tokens = defaults::CALIB_TOKENS,
+        eval_tokens = defaults::EVAL_TOKENS,
+        eval_backend = defaults::EVAL_BACKEND,
+        serve_backend = defaults::SERVE_BACKEND,
+        requests = defaults::SERVE_REQUESTS,
+        batch = defaults::MAX_BATCH,
+        prompt = defaults::PROMPT_LEN,
+        max_new = defaults::MAX_NEW,
+        ratio = defaults::FLIP_RATIO,
+    )
 }
 
-fn parse_method(args: &Args) -> Result<Method> {
-    let nm = NmRatio::parse(args.get_or("nm", "4:8")).context("bad --nm")?;
-    let bits = args.get_usize("bits", 1) as u32;
-    Ok(match args.get_or("method", "stbllm") {
-        "fp" | "fullprecision" => Method::FullPrecision,
-        "rtn" => Method::Rtn { bits },
-        "gptq" => Method::Gptq { bits, block: 128 },
-        "pbllm" => Method::PbLlm { frac_salient: args.get_f64("frac", 0.10), hi_bits: 8 },
-        "billm" => Method::BiLlm { nm: args.get("nm").map(|_| nm) },
-        "stbllm" => {
-            let mut opts = StbOpts::stbllm(nm);
-            if let Some(m) = args.get("metric") {
-                opts.metric = Metric::parse(m).context("bad --metric")?;
-            }
-            opts.block_size = args.get_usize("block", 128);
-            let allocation = Allocation::parse(args.get_or("alloc", "ours")).context("bad --alloc")?;
-            Method::Stbllm { opts, allocation }
-        }
-        other => bail!("unknown method {other}"),
-    })
-}
-
-fn load_model(
-    args: &Args,
-) -> Result<(Artifacts, String, stbllm::model::ModelConfig, stbllm::model::ModelWeights)> {
-    let arts = artifacts()?;
-    let model = args.get_or("model", "llama1-7b").to_string();
-    let ma = arts.models.get(&model).with_context(|| format!("unknown model {model}"))?;
-    let cfg = ma.config.clone();
-    let w = arts.load_weights(&model)?;
-    Ok((arts, model, cfg, w))
-}
-
-/// quantize per CLI args; returns (quantized weights, label, bits)
-fn quantized_weights(
-    args: &Args,
-    arts: &Artifacts,
-    model: &str,
-) -> Result<(stbllm::model::ModelWeights, String, f64)> {
-    let ma = &arts.models[model];
-    let w = arts.load_weights(model)?;
-    let method = parse_method(args)?;
-    if matches!(method, Method::FullPrecision) {
-        return Ok((w, "FullPrecision".into(), 32.0));
-    }
-    let needs_calib = !matches!(method, Method::Rtn { .. });
-    let calib = if needs_calib {
-        let ct = args.get_usize("calib-tokens", 512);
-        eprintln!("calibrating on {} ({ct} tokens)...", args.get_or("calib", "c4s"));
-        Some(calibrate(&ma.config, &w, args.get_or("calib", "c4s"), ct, 1234))
+/// Shared CLI → EngineBuilder wiring; `backend_default` differs per command.
+/// When the backend is only a default (not explicitly requested), the
+/// builder may fall back to native if it cannot be stood up (e.g. PJRT
+/// without the `xla` runtime) — an explicit `--backend`/`--native` stays
+/// strict.
+fn build_engine(args: &Args, backend_default: &str) -> Result<Engine> {
+    let explicit = args.flag("native") || args.get("backend").is_some();
+    let kind = if args.flag("native") {
+        BackendKind::Native
     } else {
-        None
+        BackendKind::parse(args.get_or("backend", backend_default))?
     };
-    let q = quantize_model(&ma.config, &w, &method, calib.as_ref(), 1);
-    Ok((q.weights, method.label(), q.avg_bits))
+    let engine = Engine::builder()
+        .model(args.get_or("model", defaults::MODEL))
+        .method(method_from_args(args)?)
+        .backend(kind)
+        .backend_fallback(!explicit)
+        .calib_corpus(args.get_or("calib", defaults::CALIB_CORPUS))
+        .calib_tokens(args.get_usize("calib-tokens", defaults::CALIB_TOKENS))
+        .eval_tokens(args.get_usize("eval-tokens", defaults::EVAL_TOKENS))
+        .max_batch(args.get_usize("batch", defaults::MAX_BATCH))
+        .workers(args.get_usize("workers", defaults::WORKERS))
+        .synthetic_fallback(args.flag("synthetic"))
+        .build()?;
+    Ok(engine)
 }
 
 fn info(_args: &Args) -> Result<()> {
-    let arts = artifacts()?;
+    let arts = Artifacts::load_default()?;
     println!("artifacts root: {}", arts.root.display());
     println!(
         "{:<14} {:<8} {:>5} {:>7} {:>9} {:>10} {:>12}",
@@ -174,66 +167,41 @@ fn info(_args: &Args) -> Result<()> {
 }
 
 fn quantize(args: &Args) -> Result<()> {
-    let (_arts, model, cfg, w) = load_model(args)?;
-    let method = parse_method(args)?;
-    let needs_calib = !matches!(method, Method::FullPrecision | Method::Rtn { .. });
-    let calib = if needs_calib {
-        let ct = args.get_usize("calib-tokens", 512);
-        eprintln!("calibrating on {} ({ct} tokens)...", args.get_or("calib", "c4s"));
-        Some(calibrate(&cfg, &w, args.get_or("calib", "c4s"), ct, 1234))
-    } else {
-        None
-    };
-    let q = quantize_model(&cfg, &w, &method, calib.as_ref(), args.get_usize("workers", 1));
-    let mut err_num = 0.0f64;
-    let mut err_den = 0.0f64;
-    for (l0, l1) in w.layers.iter().zip(&q.weights.layers) {
-        for (n, m0) in &l0.mats {
-            let d = m0.sub(&l1.mats[n]).frob_norm() as f64;
-            err_num += d * d;
-            err_den += (m0.frob_norm() as f64).powi(2);
-        }
-    }
-    println!("model         : {model}");
-    println!("method        : {}", method.label());
-    println!("avg bits      : {:.3}", q.avg_bits);
-    println!("r_salient     : {:.3}", q.r_salient);
-    println!("rel recon err : {:.4}", (err_num / err_den.max(1e-12)).sqrt());
-    println!("quantize time : {:.2}s", q.seconds);
-    if !q.layer_ratios.is_empty() {
-        let ratios: Vec<String> = q.layer_ratios.iter().map(|r| r.label()).collect();
+    let engine = build_engine(args, "native")?;
+    let r = engine.quantize();
+    println!("model         : {}", r.model);
+    println!("method        : {}", r.method);
+    println!("avg bits      : {:.3}", r.avg_bits);
+    println!("r_salient     : {:.3}", r.r_salient);
+    println!("rel recon err : {:.4}", r.rel_recon_err);
+    println!("quantize time : {:.2}s", r.seconds);
+    if !r.layer_ratios.is_empty() {
+        let ratios: Vec<String> = r.layer_ratios.iter().map(|x| x.label()).collect();
         println!("layer N:M     : {}", ratios.join(" "));
     }
     Ok(())
 }
 
 fn eval(args: &Args) -> Result<()> {
-    let (arts, model, cfg, _) = load_model(args)?;
-    let (qw, label, bits) = quantized_weights(args, &arts, &model)?;
-    let toks = corpus::corpus_tokens(
-        args.get_or("eval", "wikitext2s"),
-        args.get_usize("eval-tokens", 1161),
-        999,
-    );
-    let ppl = if args.flag("native") {
-        ppl_native(&cfg, &qw, &toks)
-    } else {
-        let rt = Runtime::cpu(&arts.root)?;
-        ppl_pjrt(&rt, &arts, &model, &qw, &toks)?
-    };
+    let engine = build_engine(args, defaults::EVAL_BACKEND)?;
+    let corpus = args.get_or("eval", defaults::EVAL_CORPUS);
+    let ppl = engine.perplexity(corpus)?;
+    let r = engine.quantize();
     println!(
-        "{model} {label} ({bits:.2} bits) ppl[{}] = {}",
-        args.get_or("eval", "wikitext2s"),
+        "{} {} ({:.2} bits) [{} backend] ppl[{corpus}] = {}",
+        r.model,
+        r.method,
+        r.avg_bits,
+        engine.backend().label(),
         fmt_ppl(ppl)
     );
     Ok(())
 }
 
 fn zeroshot_cmd(args: &Args) -> Result<()> {
-    let (arts, model, cfg, _) = load_model(args)?;
-    let (qw, label, _) = quantized_weights(args, &arts, &model)?;
-    let (per_task, mean) = zeroshot::run_suite(&cfg, &qw);
-    println!("{model} {label} zero-shot:");
+    let engine = build_engine(args, "native")?;
+    let (per_task, mean) = engine.zeroshot()?;
+    println!("{} {} zero-shot:", engine.model(), engine.quantize().method);
     for (name, acc) in per_task {
         println!("  {:<14} {:>6.2}%", name, acc);
     }
@@ -242,56 +210,62 @@ fn zeroshot_cmd(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let (arts, model, cfg, _) = load_model(args)?;
-    let (qw, label, bits) = quantized_weights(args, &arts, &model)?;
-    let n_req = args.get_usize("requests", 8);
-    let batch = args.get_usize("batch", 4);
-    let prompt_len = args.get_usize("prompt", 16);
-    let max_new = args.get_usize("max-new", 16);
-    let toks = corpus::corpus_tokens("wikitext2s", n_req * prompt_len, 5);
-    let reqs: Vec<Request> = (0..n_req)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: toks[i * prompt_len..(i + 1) * prompt_len].to_vec(),
-            max_new,
-        })
-        .collect();
-    let server = BatchServer::new(&cfg, &qw, batch);
-    let (_, stats) = server.run(reqs);
-    println!("serve {model} [{label}, {bits:.2} bits] batch={batch}:");
+    let engine = build_engine(args, defaults::SERVE_BACKEND)?;
+    let n_req = args.get_usize("requests", defaults::SERVE_REQUESTS);
+    let batch = args.get_usize("batch", defaults::MAX_BATCH);
+    let prompt_len = args.get_usize("prompt", defaults::PROMPT_LEN);
+    let max_new = args.get_usize("max-new", defaults::MAX_NEW);
+    let reqs = engine.synthetic_workload(n_req, prompt_len, max_new);
+    let (_, stats) = engine.serve(reqs)?;
+    let r = engine.quantize();
+    println!(
+        "serve {} [{}, {:.2} bits, {} backend] batch={batch}:",
+        r.model,
+        r.method,
+        r.avg_bits,
+        engine.backend().label()
+    );
     println!("  completed      : {}", stats.completed);
     println!("  throughput     : {:.1} tok/s", stats.tokens_per_s());
     println!("  mean latency   : {:.1} ms", stats.mean_latency_s * 1e3);
+    println!("  p50 latency    : {:.1} ms", stats.p50_latency_s * 1e3);
     println!("  p95 latency    : {:.1} ms", stats.p95_latency_s * 1e3);
     println!("  mean TTFT      : {:.1} ms", stats.mean_ttft_s * 1e3);
     Ok(())
 }
 
 fn flip(args: &Args) -> Result<()> {
-    let (_arts, model, cfg, _) = load_model(args)?;
-    let arts = artifacts()?;
-    let (qw, label, _) = quantized_weights(args, &arts, &model)?;
-    let ratio = args.get_f64("ratio", 0.05);
-    let toks = corpus::corpus_tokens("wikitext2s", args.get_usize("eval-tokens", 1161), 999);
-    let base = ppl_native(&cfg, &qw, &toks);
-    let flipped = flip_model(&qw, ratio, args.flag("salient-aware"), 42);
-    let after = ppl_native(&cfg, &flipped, &toks);
+    let engine = build_engine(args, "native")?;
+    let ratio = args.get_f64("ratio", defaults::FLIP_RATIO);
+    let corpus = args.get_or("eval", defaults::EVAL_CORPUS);
+    let rep = engine.flip_study(corpus, ratio, args.flag("salient-aware"))?;
     println!(
-        "{model} [{label}] flip {:.1}%: ppl {} -> {}",
-        ratio * 100.0,
-        fmt_ppl(base),
-        fmt_ppl(after)
+        "{} [{}] flip {:.1}%: ppl {} -> {}",
+        engine.model(),
+        engine.quantize().method,
+        rep.ratio * 100.0,
+        fmt_ppl(rep.ppl_before),
+        fmt_ppl(rep.ppl_after)
     );
     Ok(())
 }
 
 fn selfcheck(args: &Args) -> Result<()> {
-    let (arts, model, cfg, w) = load_model(args)?;
-    let rt = Runtime::cpu(&arts.root)?;
-    println!("PJRT platform: {}", rt.platform());
-    let toks = corpus::corpus_tokens("wikitext2s", cfg.seq_len + 1, 3);
-    let p_native = ppl_native(&cfg, &w, &toks);
-    let p_pjrt = ppl_pjrt(&rt, &arts, &model, &w, &toks)?;
+    // full-precision engines on both execution paths must agree — the
+    // L1 (Pallas) ∘ L2 (JAX) ∘ L3 (rust) composition contract
+    let model = args.get_or("model", defaults::MODEL);
+    let mk = |kind: BackendKind| -> Result<Engine> {
+        Ok(Engine::builder()
+            .model(model)
+            .method(stbllm::coordinator::Method::FullPrecision)
+            .backend(kind)
+            .eval_tokens(args.get_usize("eval-tokens", defaults::EVAL_TOKENS))
+            .build()?)
+    };
+    let native = mk(BackendKind::Native)?;
+    let pjrt = mk(BackendKind::Pjrt)?;
+    let p_native = native.perplexity(defaults::EVAL_CORPUS)?;
+    let p_pjrt = pjrt.perplexity(defaults::EVAL_CORPUS)?;
     let rel = (p_native - p_pjrt).abs() / p_native;
     println!("{model}: ppl native={p_native:.4} pjrt={p_pjrt:.4} rel-diff={rel:.2e}");
     if rel > 1e-3 {

@@ -6,12 +6,70 @@
 //!   * full-sequence forward (perplexity eval, calibration capture);
 //!   * incremental decode with a KV cache (the serving hot path).
 //!
-//! Quantized models are evaluated by substituting each 2-D weight with its
-//! dense reconstruction — the forward is method-agnostic.
+//! The math is written once against the [`ModelOps`] seam: everything the
+//! forward needs from a weight container, with the projection GEMMs behind
+//! trait methods. Dense `ModelWeights` implement it with `matmul_bt` /
+//! `matvec`; the packed sub-1-bit store implements it with `packed::gemm`
+//! (see `engine::packed`), so quantized deployment artifacts run the exact
+//! same attention/FFN code as full-precision weights.
 
 use crate::model::config::{Family, ModelConfig, HEAD_DIM, ROPE_THETA};
 use crate::model::weights::{LayerWeights, ModelWeights};
 use crate::tensor::{matmul_bt, Mat};
+
+/// The weight-application seam shared by every model representation.
+///
+/// `proj` / `proj_vec` compute `x @ W^T` for the named per-layer projection
+/// (`wq`..`w3`); the embedding / norm tensors stay dense f32 in all
+/// representations (they are never quantized).
+pub trait ModelOps {
+    fn n_layers(&self) -> usize;
+    fn ln1(&self, layer: usize) -> &[f32];
+    fn ln2(&self, layer: usize) -> &[f32];
+    /// Full-sequence projection: `y = x @ W[layer][name]^T` — (S, out).
+    fn proj(&self, layer: usize, name: &str, x: &Mat) -> Mat;
+    /// Single-vector projection: `y = W[layer][name] @ x` (decode path).
+    fn proj_vec(&self, layer: usize, name: &str, x: &[f32]) -> Vec<f32>;
+    /// Tied embedding matrix — (vocab, dim).
+    fn embed_mat(&self) -> &Mat;
+    /// Learned positional embeddings (OPT family only).
+    fn pos_mat(&self) -> Option<&Mat>;
+    fn ln_f(&self) -> &[f32];
+}
+
+impl ModelOps for ModelWeights {
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn ln1(&self, layer: usize) -> &[f32] {
+        &self.layers[layer].ln1
+    }
+
+    fn ln2(&self, layer: usize) -> &[f32] {
+        &self.layers[layer].ln2
+    }
+
+    fn proj(&self, layer: usize, name: &str, x: &Mat) -> Mat {
+        matmul_bt(x, &self.layers[layer].mats[name])
+    }
+
+    fn proj_vec(&self, layer: usize, name: &str, x: &[f32]) -> Vec<f32> {
+        crate::tensor::matvec(&self.layers[layer].mats[name], x)
+    }
+
+    fn embed_mat(&self) -> &Mat {
+        &self.embed
+    }
+
+    fn pos_mat(&self) -> Option<&Mat> {
+        self.pos.as_ref()
+    }
+
+    fn ln_f(&self) -> &[f32] {
+        &self.ln_f
+    }
+}
 
 /// x * rsqrt(mean(x²) + eps) * w, row-wise over (S, D).
 pub fn rmsnorm(x: &Mat, w: &[f32], eps: f32) -> Mat {
@@ -91,12 +149,16 @@ pub struct LayerTaps {
     pub w2_in: Option<Mat>,
 }
 
-/// One transformer block over a full sequence. When `taps` is Some, the four
-/// projection inputs are recorded (cloned) for Hessian accumulation.
-pub fn layer_fwd(
+/// One transformer block over a full sequence, with the projections behind a
+/// closure — the single implementation shared by dense and packed weights.
+/// When `taps` is Some, the four projection inputs are recorded (cloned)
+/// for Hessian accumulation.
+pub fn layer_fwd_with(
     cfg: &ModelConfig,
     x: &Mat,
-    lw: &LayerWeights,
+    ln1: &[f32],
+    ln2: &[f32],
+    proj: &mut dyn FnMut(&str, &Mat) -> Mat,
     taps: Option<&mut LayerTaps>,
 ) -> Mat {
     let s = x.rows;
@@ -105,13 +167,13 @@ pub fn layer_fwd(
     let mut taps = taps;
 
     // ---- attention -------------------------------------------------------
-    let xn = rmsnorm(x, &lw.ln1, cfg.norm_eps);
+    let xn = rmsnorm(x, ln1, cfg.norm_eps);
     if let Some(t) = taps.as_deref_mut() {
         t.attn_in = Some(xn.clone());
     }
-    let mut q = matmul_bt(&xn, &lw.mats["wq"]);
-    let mut k = matmul_bt(&xn, &lw.mats["wk"]);
-    let v = matmul_bt(&xn, &lw.mats["wv"]);
+    let mut q = proj("wq", &xn);
+    let mut k = proj("wk", &xn);
+    let v = proj("wv", &xn);
     if cfg.family != Family::Opt {
         let (cos, sin) = rope_tables(s);
         for p in 0..s {
@@ -147,44 +209,56 @@ pub fn layer_fwd(
     if let Some(t) = taps.as_deref_mut() {
         t.wo_in = Some(attn_out.clone());
     }
-    let proj = matmul_bt(&attn_out, &lw.mats["wo"]);
+    let proj_out = proj("wo", &attn_out);
     let mut hidden = x.clone();
-    hidden.add_assign(&proj);
+    hidden.add_assign(&proj_out);
 
     // ---- FFN ---------------------------------------------------------------
-    let hn = rmsnorm(&hidden, &lw.ln2, cfg.norm_eps);
+    let hn = rmsnorm(&hidden, ln2, cfg.norm_eps);
     if let Some(t) = taps.as_deref_mut() {
         t.ffn_in = Some(hn.clone());
     }
     let ffn = if cfg.family == Family::Opt {
-        let mut a = matmul_bt(&hn, &lw.mats["w1"]);
+        let mut a = proj("w1", &hn);
         a.data.iter_mut().for_each(|x| *x = gelu(*x));
         if let Some(t) = taps.as_deref_mut() {
             t.w2_in = Some(a.clone());
         }
-        matmul_bt(&a, &lw.mats["w2"])
+        proj("w2", &a)
     } else {
-        let mut g = matmul_bt(&hn, &lw.mats["w1"]);
-        let u = matmul_bt(&hn, &lw.mats["w3"]);
+        let mut g = proj("w1", &hn);
+        let u = proj("w3", &hn);
         for (gi, ui) in g.data.iter_mut().zip(&u.data) {
             *gi = silu(*gi) * ui;
         }
         if let Some(t) = taps.as_deref_mut() {
             t.w2_in = Some(g.clone());
         }
-        matmul_bt(&g, &lw.mats["w2"])
+        proj("w2", &g)
     };
     hidden.add_assign(&ffn);
     hidden
 }
 
-/// Embedding lookup (+ learned positions for OPT).
-pub fn embed(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
+/// One transformer block over dense layer weights (the historical entry
+/// point — now a thin shim over [`layer_fwd_with`]).
+pub fn layer_fwd(
+    cfg: &ModelConfig,
+    x: &Mat,
+    lw: &LayerWeights,
+    taps: Option<&mut LayerTaps>,
+) -> Mat {
+    layer_fwd_with(cfg, x, &lw.ln1, &lw.ln2, &mut |name, xin| matmul_bt(xin, &lw.mats[name]), taps)
+}
+
+/// Embedding lookup (+ learned positions for OPT) over any representation.
+pub fn embed_ops(ops: &dyn ModelOps, cfg: &ModelConfig, tokens: &[u8]) -> Mat {
     let mut x = Mat::zeros(tokens.len(), cfg.dim);
+    let emb = ops.embed_mat();
     for (i, &t) in tokens.iter().enumerate() {
-        x.row_mut(i).copy_from_slice(w.embed.row(t as usize));
+        x.row_mut(i).copy_from_slice(emb.row(t as usize));
     }
-    if let Some(pos) = &w.pos {
+    if let Some(pos) = ops.pos_mat() {
         for i in 0..tokens.len() {
             let p = pos.row(i % pos.rows);
             for (a, b) in x.row_mut(i).iter_mut().zip(p) {
@@ -195,21 +269,44 @@ pub fn embed(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
     x
 }
 
-/// Final norm + tied-embedding logits.
+/// Embedding lookup for dense weights (shim over [`embed_ops`]).
+pub fn embed(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
+    embed_ops(w, cfg, tokens)
+}
+
+/// Final norm + tied-embedding logits over any representation.
+pub fn lm_head_ops(ops: &dyn ModelOps, cfg: &ModelConfig, x: &Mat) -> Mat {
+    matmul_bt(&rmsnorm(x, ops.ln_f(), cfg.norm_eps), ops.embed_mat())
+}
+
+/// Final norm + tied-embedding logits (dense shim).
 pub fn lm_head(cfg: &ModelConfig, w: &ModelWeights, x: &Mat) -> Mat {
-    matmul_bt(&rmsnorm(x, &w.ln_f, cfg.norm_eps), &w.embed)
+    lm_head_ops(w, cfg, x)
 }
 
-/// Full-model forward: tokens → logits (S, vocab).
-pub fn model_fwd(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
-    let mut x = embed(cfg, w, tokens);
-    for lw in &w.layers {
-        x = layer_fwd(cfg, &x, lw, None);
+/// Full-model forward over any representation: tokens → logits (S, vocab).
+pub fn model_fwd_ops(ops: &dyn ModelOps, cfg: &ModelConfig, tokens: &[u8]) -> Mat {
+    let mut x = embed_ops(ops, cfg, tokens);
+    for l in 0..ops.n_layers() {
+        x = layer_fwd_with(
+            cfg,
+            &x,
+            ops.ln1(l),
+            ops.ln2(l),
+            &mut |name, xin| ops.proj(l, name, xin),
+            None,
+        );
     }
-    lm_head(cfg, w, &x)
+    lm_head_ops(ops, cfg, &x)
 }
 
-/// Forward capturing per-layer calibration taps.
+/// Full-model forward over dense weights: tokens → logits (S, vocab).
+pub fn model_fwd(cfg: &ModelConfig, w: &ModelWeights, tokens: &[u8]) -> Mat {
+    model_fwd_ops(w, cfg, tokens)
+}
+
+/// Forward capturing per-layer calibration taps (dense weights only — the
+/// calibration pass always runs on the full-precision model).
 pub fn model_fwd_with_taps(
     cfg: &ModelConfig,
     w: &ModelWeights,
@@ -262,8 +359,16 @@ impl DecodeState {
         }
     }
 
-    /// Process one token; returns logits over the vocab.
+    /// Process one token through dense weights; returns logits over the
+    /// vocab (shim over [`DecodeState::step_ops`]).
     pub fn step(&mut self, cfg: &ModelConfig, w: &ModelWeights, token: u8) -> Vec<f32> {
+        self.step_ops(cfg, w, token)
+    }
+
+    /// Process one token over any representation; returns logits over the
+    /// vocab. This is the serving hot path — packed backends route every
+    /// projection through the sub-1-bit gather kernels here.
+    pub fn step_ops(&mut self, cfg: &ModelConfig, ops: &dyn ModelOps, token: u8) -> Vec<f32> {
         assert!(self.pos < self.capacity, "KV cache capacity exceeded");
         let d = cfg.dim;
         let nh = cfg.n_heads();
@@ -271,18 +376,18 @@ impl DecodeState {
         let (cos, sin) = (&self.rope.0, &self.rope.1);
 
         // embedding
-        let mut x: Vec<f32> = w.embed.row(token as usize).to_vec();
-        if let Some(pos_emb) = &w.pos {
+        let mut x: Vec<f32> = ops.embed_mat().row(token as usize).to_vec();
+        if let Some(pos_emb) = ops.pos_mat() {
             for (a, b) in x.iter_mut().zip(pos_emb.row(p % pos_emb.rows)) {
                 *a += b;
             }
         }
 
-        for (li, lw) in w.layers.iter().enumerate() {
-            let xn = rmsnorm_vec(&x, &lw.ln1, cfg.norm_eps);
-            let mut q = crate::tensor::matvec(&lw.mats["wq"], &xn);
-            let mut k = crate::tensor::matvec(&lw.mats["wk"], &xn);
-            let v = crate::tensor::matvec(&lw.mats["wv"], &xn);
+        for li in 0..ops.n_layers() {
+            let xn = rmsnorm_vec(&x, ops.ln1(li), cfg.norm_eps);
+            let mut q = ops.proj_vec(li, "wq", &xn);
+            let mut k = ops.proj_vec(li, "wk", &xn);
+            let v = ops.proj_vec(li, "wv", &xn);
             if cfg.family != Family::Opt {
                 for h in 0..nh {
                     apply_rope_vec(&mut q[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
@@ -302,7 +407,8 @@ impl DecodeState {
                 let hoff = h * HEAD_DIM;
                 let qh = &q[hoff..hoff + HEAD_DIM];
                 for j in lo..=p {
-                    att[j] = crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
+                    att[j] =
+                        crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
                 }
                 softmax_inplace(&mut att[lo..=p]);
                 for j in lo..=p {
@@ -313,31 +419,31 @@ impl DecodeState {
                     }
                 }
             }
-            let proj = crate::tensor::matvec(&lw.mats["wo"], &attn_out);
+            let proj = ops.proj_vec(li, "wo", &attn_out);
             for (a, b) in x.iter_mut().zip(&proj) {
                 *a += b;
             }
 
-            let hn = rmsnorm_vec(&x, &lw.ln2, cfg.norm_eps);
+            let hn = rmsnorm_vec(&x, ops.ln2(li), cfg.norm_eps);
             let ffn = if cfg.family == Family::Opt {
-                let mut a = crate::tensor::matvec(&lw.mats["w1"], &hn);
+                let mut a = ops.proj_vec(li, "w1", &hn);
                 a.iter_mut().for_each(|t| *t = gelu(*t));
-                crate::tensor::matvec(&lw.mats["w2"], &a)
+                ops.proj_vec(li, "w2", &a)
             } else {
-                let mut g = crate::tensor::matvec(&lw.mats["w1"], &hn);
-                let u = crate::tensor::matvec(&lw.mats["w3"], &hn);
+                let mut g = ops.proj_vec(li, "w1", &hn);
+                let u = ops.proj_vec(li, "w3", &hn);
                 for (gi, ui) in g.iter_mut().zip(&u) {
                     *gi = silu(*gi) * ui;
                 }
-                crate::tensor::matvec(&lw.mats["w2"], &g)
+                ops.proj_vec(li, "w2", &g)
             };
             for (a, b) in x.iter_mut().zip(&ffn) {
                 *a += b;
             }
         }
         self.pos += 1;
-        let xn = rmsnorm_vec(&x, &w.ln_f, cfg.norm_eps);
-        crate::tensor::matvec(&w.embed, &xn)
+        let xn = rmsnorm_vec(&x, ops.ln_f(), cfg.norm_eps);
+        crate::tensor::matvec(ops.embed_mat(), &xn)
     }
 }
 
@@ -439,5 +545,15 @@ mod tests {
         for v in out.data {
             assert!((v.abs() - 1.0).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn ops_forward_matches_dense_entry_point() {
+        // model_fwd_ops over the ModelWeights impl IS model_fwd; pin it.
+        let (cfg, w) = tiny("opt-1.3b");
+        let toks: Vec<u8> = (0..12u8).collect();
+        let a = model_fwd(&cfg, &w, &toks);
+        let b = model_fwd_ops(&w, &cfg, &toks);
+        assert_eq!(a.data, b.data);
     }
 }

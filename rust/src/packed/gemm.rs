@@ -53,6 +53,25 @@ pub fn packed_gemm(x: &Mat, w: &Packed24) -> Mat {
     y
 }
 
+/// y = W_packed @ x for a single activation vector — the serving decode hot
+/// path (`engine::PackedBackend` routes every per-token projection here).
+/// One output per packed row, K/2 gather-MACs each; the metadata is decoded
+/// on the fly since each group is visited exactly once per call.
+pub fn packed_gemv(w: &Packed24, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), w.cols, "K mismatch");
+    let g = w.cols / 4;
+    let mut y = vec![0.0f32; w.rows];
+    for (n, out) in y.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for gg in 0..g {
+            let ((p0, s0), (p1, s1)) = w.group(n, gg);
+            acc += s0 * x[gg * 4 + p0] + s1 * x[gg * 4 + p1];
+        }
+        *out = acc * w.alpha[n];
+    }
+    y
+}
+
 /// v1 kernel: decodes the metadata inside the (batch × row) loop — kept as
 /// the §Perf baseline and as a second correctness witness.
 pub fn packed_gemm_onthefly(x: &Mat, w: &Packed24) -> Mat {
@@ -227,6 +246,19 @@ mod tests {
             for (a, b) in got.data.iter().zip(&want.data) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b} ({rows}x{cols})");
             }
+        }
+    }
+
+    #[test]
+    fn packed_gemv_matches_gemm_single_row() {
+        let mut rng = Pcg32::seeded(8);
+        let (packed, _) = random_sb24(24, 64, &mut rng);
+        let x = Mat::random(1, 64, 1.0, &mut rng);
+        let want = packed_gemm(&x, &packed);
+        let got = packed_gemv(&packed, x.row(0));
+        assert_eq!(got.len(), 24);
+        for (a, b) in got.iter().zip(want.row(0)) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
     }
 

@@ -10,5 +10,5 @@ pub mod roofline;
 pub mod store;
 
 pub use format::{enforce_24, Packed24};
-pub use gemm::{gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, Dense2Bit};
+pub use gemm::{gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, packed_gemv, Dense2Bit};
 pub use store::PackedModel;

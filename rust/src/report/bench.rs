@@ -19,7 +19,8 @@ use anyhow::Result;
 
 use crate::coordinator::calib::{calibrate, ModelCalib};
 use crate::coordinator::quantizer::{quantize_model, Method, QuantizedModel};
-use crate::eval::perplexity::{ppl_native, ppl_pjrt};
+use crate::engine::{NativeBackend, PjrtBackend};
+use crate::eval::perplexity::perplexity;
 use crate::model::config::ModelConfig;
 use crate::model::corpus;
 use crate::model::ModelWeights;
@@ -112,19 +113,24 @@ impl BenchCtx {
         quantize_model(&cfg, &w, method, calib.as_deref(), 1)
     }
 
-    /// Perplexity of the given weights on `eval_corpus`.
+    /// Perplexity of the given weights on `eval_corpus` — one generic
+    /// evaluation over the `Backend` seam: a borrowed `PjrtBackend` (reusing
+    /// this context's compiled-executable cache) when the runtime is up,
+    /// else a borrowed `NativeBackend`.
     pub fn ppl(&mut self, model: &str, w: &ModelWeights, eval_corpus: &str) -> f64 {
         let cfg = self.config(model);
         let toks = corpus::corpus_tokens(eval_corpus, self.eval_tokens, 999);
         if !self.native_eval {
             if let Some(rt) = &self.rt {
-                match ppl_pjrt(rt, &self.arts, model, w, &toks) {
+                let via_pjrt = PjrtBackend::borrowed(rt, &self.arts, model, w)
+                    .and_then(|be| perplexity(&be, &toks));
+                match via_pjrt {
                     Ok(p) => return p,
                     Err(e) => eprintln!("[bench] PJRT eval failed ({e:#}); native fallback"),
                 }
             }
         }
-        ppl_native(&cfg, w, &toks)
+        perplexity(&NativeBackend::borrowed(&cfg, w), &toks).expect("native eval")
     }
 
     /// quantize + eval in one call — the cell of most tables.

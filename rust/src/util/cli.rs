@@ -5,6 +5,32 @@
 
 use std::collections::BTreeMap;
 
+/// Single source of truth for CLI defaults — consumed both by the option
+/// parsing in `main.rs` / `EngineBuilder` and by the generated help text,
+/// so documentation and behavior cannot drift.
+pub mod defaults {
+    pub const MODEL: &str = "llama1-7b";
+    pub const METHOD: &str = "stbllm";
+    pub const BITS: usize = 1;
+    pub const NM: &str = "4:8";
+    pub const METRIC: &str = "si";
+    pub const ALLOC: &str = "ours";
+    pub const BLOCK_SIZE: usize = 128;
+    pub const FRAC_SALIENT: f64 = 0.10;
+    pub const CALIB_CORPUS: &str = "c4s";
+    pub const EVAL_CORPUS: &str = "wikitext2s";
+    pub const CALIB_TOKENS: usize = 512;
+    pub const EVAL_TOKENS: usize = 1161;
+    pub const SERVE_REQUESTS: usize = 8;
+    pub const MAX_BATCH: usize = 4;
+    pub const PROMPT_LEN: usize = 16;
+    pub const MAX_NEW: usize = 16;
+    pub const FLIP_RATIO: f64 = 0.05;
+    pub const WORKERS: usize = 1;
+    pub const SERVE_BACKEND: &str = "native";
+    pub const EVAL_BACKEND: &str = "pjrt";
+}
+
 /// Parsed command-line arguments: options + positionals.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
@@ -44,8 +70,8 @@ impl Args {
     }
 
     /// Boolean flags used across the stbllm CLI / examples / benches.
-    pub const COMMON_FLAGS: [&'static str; 6] =
-        ["verbose", "fast", "full", "force", "help", "quiet"];
+    pub const COMMON_FLAGS: [&'static str; 9] =
+        ["verbose", "fast", "full", "force", "help", "quiet", "native", "synthetic", "salient-aware"];
 
     pub fn from_env() -> Args {
         Self::parse_with_flags(std::env::args().skip(1), &Self::COMMON_FLAGS)

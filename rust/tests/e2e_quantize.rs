@@ -70,14 +70,38 @@ fn serving_pipeline_on_quantized_model() {
     let w = arts.load_weights(model).unwrap();
     let calib = calibrate(&cfg, &w, "c4s", 256, 7);
     let q = quantize_model(&cfg, &w, &Method::stbllm(NmRatio::new(4, 8)), Some(&calib), 1);
-    let server = stbllm::coordinator::BatchServer::new(&cfg, &q.weights, 2);
+    let backend = stbllm::engine::NativeBackend::borrowed(&cfg, &q.weights);
+    let server = stbllm::coordinator::BatchServer::new(&backend, 2);
     let reqs: Vec<stbllm::coordinator::Request> = (0..3)
         .map(|id| stbllm::coordinator::Request { id, prompt: vec![1, 2, 3, 4], max_new: 4 })
         .collect();
-    let (resps, stats) = server.run(reqs);
+    let (resps, stats) = server.run(reqs).unwrap();
     assert_eq!(resps.len(), 3);
     assert_eq!(stats.generated_tokens, 12);
     assert!(stats.tokens_per_s() > 0.0);
+}
+
+#[test]
+fn engine_facade_end_to_end_serves_packed() {
+    // the full facade path: build → quantize → serve through the packed
+    // sub-1-bit kernels (synthetic fallback keeps this artifact-free)
+    use stbllm::engine::{BackendKind, Engine};
+    let engine = Engine::builder()
+        .model("llama1-7b")
+        .method(Method::stbllm(NmRatio::new(2, 4)))
+        .backend(BackendKind::Packed)
+        .calib_tokens(256)
+        .max_batch(2)
+        .synthetic_fallback(true)
+        .build()
+        .expect("engine build");
+    assert!(engine.backend().capabilities().sub_1bit_storage);
+    assert!(engine.quantize().avg_bits < 2.0);
+    let reqs = engine.synthetic_workload(3, 4, 4);
+    let (resps, stats) = engine.serve(reqs).unwrap();
+    assert_eq!(resps.len(), 3);
+    assert_eq!(stats.generated_tokens, 12);
+    assert!(stats.p95_latency_s >= stats.p50_latency_s);
 }
 
 #[test]

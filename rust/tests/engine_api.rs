@@ -1,0 +1,179 @@
+//! Integration tests for the `Engine` facade + `Backend` seam.
+//!
+//! Artifact-free by design: every test either uses the builder's synthetic
+//! fallback (preset configs + synthetic weights) or constructs backends
+//! directly, so this suite runs in CI before `make artifacts` exists.
+
+use stbllm::coordinator::Method;
+use stbllm::engine::{BackendKind, Engine, EngineError, NativeBackend, PackedBackend};
+use stbllm::eval::perplexity::perplexity;
+use stbllm::model::config::ModelConfig;
+use stbllm::model::{corpus, ModelWeights};
+use stbllm::packed::PackedModel;
+use stbllm::quant::NmRatio;
+
+// ---------------------------------------------------------------------------
+// EngineBuilder validation: typed errors, never panics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_model_is_typed_error() {
+    let err = Engine::builder()
+        .model("gpt-900b")
+        .synthetic_fallback(true)
+        .build()
+        .err()
+        .expect("must not build");
+    match err {
+        EngineError::UnknownModel { model, known } => {
+            assert_eq!(model, "gpt-900b");
+            assert!(known.iter().any(|k| k.contains("llama")), "candidates listed: {known:?}");
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_backend_and_method_are_typed_errors() {
+    assert!(matches!(BackendKind::parse("tpu"), Err(EngineError::UnknownBackend(_))));
+    assert!(matches!(BackendKind::parse("packed"), Ok(BackendKind::Packed)));
+}
+
+#[test]
+fn unknown_calib_corpus_is_typed_error() {
+    let err = Engine::builder()
+        .model("llama1-7b")
+        .calib_corpus("thepile")
+        .synthetic_fallback(true)
+        .build()
+        .err()
+        .expect("must not build");
+    match err {
+        EngineError::UnknownCorpus(c) => assert_eq!(c, "thepile"),
+        other => panic!("expected UnknownCorpus, got {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_eval_corpus_is_typed_error_from_workflows() {
+    let engine = Engine::builder()
+        .model("llama1-7b")
+        .method(Method::Rtn { bits: 2 })
+        .synthetic_fallback(true)
+        .build()
+        .unwrap();
+    let err = engine.perplexity("enron").unwrap_err();
+    assert!(err.to_string().contains("unknown corpus"), "{err:#}");
+}
+
+#[test]
+fn pjrt_backend_fallback_degrades_to_native_without_requantizing() {
+    // synthetic models can never use PJRT; with backend_fallback the build
+    // must succeed on the native backend instead of erroring
+    let engine = Engine::builder()
+        .model("llama1-7b")
+        .method(Method::Rtn { bits: 2 })
+        .backend(BackendKind::Pjrt)
+        .backend_fallback(true)
+        .synthetic_fallback(true)
+        .build()
+        .expect("fallback build");
+    assert_eq!(engine.backend().label(), "native");
+    // and without the fallback the same configuration is a typed error
+    let err = Engine::builder()
+        .model("llama1-7b")
+        .method(Method::Rtn { bits: 2 })
+        .backend(BackendKind::Pjrt)
+        .synthetic_fallback(true)
+        .build()
+        .err()
+        .expect("strict pjrt on synthetic model must fail");
+    match err {
+        EngineError::Unsupported { backend: "pjrt", .. } | EngineError::Backend(_) => {}
+        other => panic!("expected Unsupported/Backend, got {other:?}"),
+    }
+}
+
+#[test]
+fn missing_artifacts_without_fallback_is_artifacts_error_or_builds() {
+    // with artifacts present this builds; without, it must be the typed
+    // Artifacts error (pointing at `make artifacts`), never a panic
+    match Engine::builder().model("llama1-7b").method(Method::Rtn { bits: 2 }).build() {
+        Ok(_) => {}
+        Err(EngineError::Artifacts(msg)) => assert!(!msg.is_empty()),
+        Err(other) => panic!("expected Artifacts error, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-backend parity: NativeBackend ⇄ PackedBackend
+// ---------------------------------------------------------------------------
+
+/// The packed backend must agree with the native forward when both execute
+/// the same exactly-2:4 weights (collapse once, expand for native).
+#[test]
+fn native_and_packed_perplexity_agree_on_tiny_model() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 31);
+    let pm = PackedModel::from_weights(&cfg, &w).unwrap();
+    let dense = pm.to_weights(&cfg).unwrap();
+
+    let native = NativeBackend::borrowed(&cfg, &dense);
+    let packed = PackedBackend::from_store(&cfg, &pm).unwrap();
+
+    let toks = corpus::corpus_tokens("wikitext2s", 2 * (cfg.seq_len + 1), 77);
+    let p_native = perplexity(&native, &toks).unwrap();
+    let p_packed = perplexity(&packed, &toks).unwrap();
+    let rel = (p_native - p_packed).abs() / p_native;
+    assert!(rel < 1e-3, "native={p_native} packed={p_packed} rel={rel}");
+}
+
+#[test]
+fn engine_native_and_packed_backends_agree_through_facade() {
+    // same method + model through both backends; sub-1-bit packed serving
+    // is a lossy *collapse* of the multi-scale STBLLM reconstruction, so
+    // compare the 2:4 setting where the collapse is exact per group
+    let mk = |kind: BackendKind| {
+        Engine::builder()
+            .model("llama1-7b")
+            .method(Method::stbllm(NmRatio::new(2, 4)))
+            .calib_tokens(256)
+            .eval_tokens(2 * 129)
+            .backend(kind)
+            .synthetic_fallback(true)
+            .build()
+            .unwrap()
+    };
+    let native = mk(BackendKind::Native);
+    let packed = mk(BackendKind::Packed);
+    let p_native = native.perplexity("wikitext2s").unwrap();
+    let p_packed = packed.perplexity("wikitext2s").unwrap();
+    // the packed collapse folds region scales into one α per row, so this
+    // is NOT exact (the exact-weights case is covered above): require the
+    // same ballpark, proving the packed path runs a sane model end-to-end
+    assert!(p_native.is_finite() && p_packed.is_finite());
+    let ratio = p_packed / p_native;
+    assert!(ratio > 0.25 && ratio < 4.0, "native={p_native} packed={p_packed} ratio={ratio}");
+}
+
+#[test]
+fn packed_decode_session_matches_native_greedy_tokens() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 32);
+    let pm = PackedModel::from_weights(&cfg, &w).unwrap();
+    let dense = pm.to_weights(&cfg).unwrap();
+    let native = NativeBackend::borrowed(&cfg, &dense);
+    let packed = PackedBackend::from_store(&cfg, &pm).unwrap();
+
+    use stbllm::coordinator::{BatchServer, Request};
+    let reqs: Vec<Request> =
+        (0..2).map(|id| Request { id, prompt: vec![3, 1, 4, 1], max_new: 5 }).collect();
+    let (mut rn, _) = BatchServer::new(&native, 2).run(reqs.clone()).unwrap();
+    let (mut rp, _) = BatchServer::new(&packed, 2).run(reqs).unwrap();
+    rn.sort_by_key(|r| r.id);
+    rp.sort_by_key(|r| r.id);
+    for (a, b) in rn.iter().zip(&rp) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "greedy decode must match bit-for-bit on 2:4 weights");
+    }
+}

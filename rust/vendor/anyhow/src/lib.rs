@@ -1,0 +1,190 @@
+//! Offline-vendored minimal subset of the `anyhow` 1.x API.
+//!
+//! The build environment has no network access, so this shim provides the
+//! surface the `stbllm` crate actually uses — `Result`, `Error`, the
+//! `Context` extension trait (on both `Result` and `Option`), and the
+//! `anyhow!` / `bail!` macros — with anyhow-compatible formatting:
+//! `{}` shows the outermost context, `{:#}` the full `outer: ...: root`
+//! chain. Drop-in replaceable by crates.io `anyhow = "1"`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-chained error: the root cause plus the contexts wrapped around
+/// it (innermost first), mirroring anyhow's rendering.
+pub struct Error {
+    root: String,
+    /// contexts, innermost first (last pushed = outermost)
+    contexts: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (anyhow::Error::msg).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { root: message.to_string(), contexts: Vec::new() }
+    }
+
+    /// Wrap with an outer context (anyhow::Error::context).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.contexts.push(context.to_string());
+        self
+    }
+
+    /// The root cause message (innermost in the chain).
+    pub fn root_cause(&self) -> &str {
+        &self.root
+    }
+
+    /// The chain outermost-first, ending at the root cause — like
+    /// `anyhow::Error::chain`.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.contexts.iter().rev().map(|s| s.as_str()).chain(std::iter::once(self.root.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first
+            let mut first = true;
+            for part in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{part}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            // `{}`: the outermost message only
+            write!(f, "{}", self.contexts.last().unwrap_or(&self.root))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.contexts.last().unwrap_or(&self.root))?;
+        if !self.contexts.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for part in self.chain().skip(1) {
+                write!(f, "\n    {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below coherent
+// alongside core's reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // fold `source()` links into the context chain so `{:#}` shows them
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let root = msgs.pop().unwrap();
+        msgs.reverse(); // innermost first
+        Error { root, contexts: msgs }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option` (anyhow::Context).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!("...")` — format an Error.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `bail!("...")` — early-return an Err(anyhow!(...)).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: file missing");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: file missing");
+
+        let o: Option<u8> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        assert_eq!(Some(3u8).context("never").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("bad value {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format!("{}", f(true).unwrap_err()), "bad value 7");
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.root_cause(), "x = 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert!(parse("12").is_ok());
+        assert!(parse("nope").is_err());
+    }
+}
