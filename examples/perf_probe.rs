@@ -3,17 +3,21 @@
 //! Times the L3 hot-path kernels against their reference implementations in
 //! the same process/run, so machine contention cancels out of the ratios:
 //!   * matmul_bt (4-way unrolled) vs matmul_bt_naive (row-dot)
-//!   * packed 2:4 1-bit GEMM vs dense 2-bit GEMM vs f32
-//!   * end-to-end decode step (serving hot path)
+//!   * packed 2:4 kernel lineage: v3 LUT vs v2 scratch vs v1 on-the-fly,
+//!     vs dense 2-bit and f32
+//!   * end-to-end decode step (serving hot path), per-session vs the fused
+//!     cross-session `decode_batch` tick
 //!
 //! Run: `cargo run --release --example perf_probe`
+//! (the full suite with `BENCH_kernels.json` output is
+//!  `cargo run --release -- bench-kernels`)
 
-use stbllm::engine::{Backend, NativeBackend, PackedBackend};
+use stbllm::engine::{Backend, DecodeSession, NativeBackend, PackedBackend};
 use stbllm::model::config::ModelConfig;
 use stbllm::model::ModelWeights;
 use stbllm::packed::{
-    enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, packed_gemv, Dense2Bit,
-    Packed24,
+    enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, packed_gemm_scratch,
+    packed_gemv, packed_gemv_onthefly, Dense2Bit, Packed24,
 };
 use stbllm::tensor::{matmul_bt, matmul_bt_naive, Mat};
 use stbllm::util::rng::Pcg32;
@@ -43,7 +47,7 @@ fn main() {
         );
     }
 
-    // --- packed GEMM family ---------------------------------------------
+    // --- packed GEMM lineage (v3 LUT vs v2 scratch vs v1) ----------------
     println!("\n[packed gemm] y = x(SxK) @ W(NxK)^T, N=864 K=320");
     let (n, k) = (864usize, 320usize);
     let w = Mat::random(n, k, 0.05, &mut rng);
@@ -59,37 +63,40 @@ fn main() {
         let t_2 = BenchStats::measure(1, 5, || {
             std::hint::black_box(gemm_2bit(&x, &two));
         });
-        let t_p = BenchStats::measure(1, 5, || {
+        let t_v3 = BenchStats::measure(1, 5, || {
             std::hint::black_box(packed_gemm(&x, &packed));
+        });
+        let t_v2 = BenchStats::measure(1, 5, || {
+            std::hint::black_box(packed_gemm_scratch(&x, &packed));
         });
         let t_v1 = BenchStats::measure(1, 5, || {
             std::hint::black_box(packed_gemm_onthefly(&x, &packed));
         });
         println!(
-            "  seq {s}: ours {:.2} GFLOP/s-eq | vs v1 {:.2}x | vs 2bit {:.2}x | vs f32 {:.2}x",
-            flops / t_p.min_s() / 1e9,
-            t_v1.min_s() / t_p.min_s(),
-            t_2.min_s() / t_p.min_s(),
-            t_f.min_s() / t_p.min_s()
+            "  seq {s}: v3 {:.2} GFLOP/s-eq | vs v2 {:.2}x | vs v1 {:.2}x | vs 2bit {:.2}x | vs f32 {:.2}x",
+            flops / t_v3.min_s() / 1e9,
+            t_v2.min_s() / t_v3.min_s(),
+            t_v1.min_s() / t_v3.min_s(),
+            t_2.min_s() / t_v3.min_s(),
+            t_f.min_s() / t_v3.min_s()
         );
     }
 
-    // --- packed gemv (decode-path kernel) --------------------------------
+    // --- packed gemv (decode-path kernel): v2 LUT vs v1 ------------------
     println!("\n[packed gemv] y = W(NxK) @ x, N=864 K=320 (single token)");
     {
         let xv: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
         let flops = 2.0 * n as f64 * k as f64;
-        let t_gv = BenchStats::measure(4, 9, || {
+        let t_v2 = BenchStats::measure(4, 9, || {
             std::hint::black_box(packed_gemv(&packed, &xv));
         });
-        let xm = Mat::from_vec(1, k, xv.clone());
-        let t_gm = BenchStats::measure(4, 9, || {
-            std::hint::black_box(packed_gemm(&xm, &packed));
+        let t_v1 = BenchStats::measure(4, 9, || {
+            std::hint::black_box(packed_gemv_onthefly(&packed, &xv));
         });
         println!(
-            "  gemv {:.2} GFLOP/s-eq | vs 1-row gemm {:.2}x",
-            flops / t_gv.min_s() / 1e9,
-            t_gm.min_s() / t_gv.min_s()
+            "  gemv v2 {:.2} GFLOP/s-eq | vs v1 {:.2}x",
+            flops / t_v2.min_s() / 1e9,
+            t_v1.min_s() / t_v2.min_s()
         );
     }
 
@@ -99,7 +106,8 @@ fn main() {
     let weights = ModelWeights::synthetic(&cfg, 2);
     let native = NativeBackend::borrowed(&cfg, &weights);
     let packed_be = PackedBackend::from_weights(&cfg, &weights).expect("packable");
-    for (name, be) in [("native", &native as &dyn Backend), ("packed", &packed_be as &dyn Backend)] {
+    for (name, be) in [("native", &native as &dyn Backend), ("packed", &packed_be as &dyn Backend)]
+    {
         let t = BenchStats::measure(2, 5, || {
             let mut sess = be.begin_decode(64).expect("decode session");
             for i in 0..32u8 {
@@ -112,4 +120,35 @@ fn main() {
             32.0 / t.min_s()
         );
     }
+
+    // --- fused cross-session tick vs per-session stepping ------------------
+    println!("\n[fused decode] 4 sessions x 32 ticks, packed backend");
+    let batch = 4usize;
+    let ticks = 32usize;
+    let t_solo = BenchStats::measure(1, 5, || {
+        let mut sessions: Vec<_> =
+            (0..batch).map(|_| packed_be.begin_decode(ticks + 1).expect("session")).collect();
+        for t in 0..ticks {
+            for sess in &mut sessions {
+                std::hint::black_box(sess.step((t % 7) as u8).expect("step"));
+            }
+        }
+    });
+    let t_fused = BenchStats::measure(1, 5, || {
+        let mut sessions: Vec<_> =
+            (0..batch).map(|_| packed_be.begin_decode(ticks + 1).expect("session")).collect();
+        for t in 0..ticks {
+            let toks = vec![(t % 7) as u8; batch];
+            let mut refs: Vec<&mut (dyn DecodeSession + '_)> =
+                sessions.iter_mut().map(|sess| sess.as_mut()).collect();
+            std::hint::black_box(packed_be.decode_batch(&mut refs, &toks).expect("fused tick"));
+        }
+    });
+    let toks_total = (batch * ticks) as f64;
+    println!(
+        "  per-session {:.1} tok/s | fused {:.1} tok/s — {:.2}x",
+        toks_total / t_solo.min_s(),
+        toks_total / t_fused.min_s(),
+        t_solo.min_s() / t_fused.min_s()
+    );
 }

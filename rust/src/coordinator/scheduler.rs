@@ -4,11 +4,23 @@
 //! degrades gracefully to sequential execution; the structure is what a
 //! multi-socket deployment would use.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+thread_local! {
+    /// Set on pool worker threads so a nested `run_parallel` (e.g. the
+    /// packed `_par` kernels inside a window-parallel eval) degrades to the
+    /// sequential path instead of multiplying the thread budget to
+    /// workers² — the outer fan-out already saturates the cores, and the
+    /// result is identical either way (the sequential path preserves
+    /// order).
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
 /// Run `f` over `jobs` with `workers` threads, preserving input order in the
-/// result vector.
+/// result vector. Calls from inside a pool worker run sequentially (no
+/// nested spawning).
 pub fn run_parallel<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
 where
     J: Send,
@@ -20,7 +32,7 @@ where
         return Vec::new();
     }
     let workers = workers.max(1).min(n);
-    if workers == 1 {
+    if workers == 1 || IN_POOL.with(|flag| flag.get()) {
         return jobs.into_iter().map(f).collect();
     }
     let jobs: Vec<Mutex<Option<J>>> = jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
@@ -28,19 +40,27 @@ where
     let next = AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            scope.spawn(|| {
+                IN_POOL.with(|flag| flag.set(true));
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = jobs[i].lock().unwrap().take().unwrap();
+                    let r = f(job);
+                    *results[i].lock().unwrap() = Some(r);
                 }
-                let job = jobs[i].lock().unwrap().take().unwrap();
-                let r = f(job);
-                *results[i].lock().unwrap() = Some(r);
             });
         }
     });
     results.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
 }
+
+/// Short-name re-export: the kernel (`packed::gemm::*_par`) and eval
+/// (`eval::perplexity::perplexity_par`) fan-out call the pool as
+/// `scheduler::run`.
+pub use self::run_parallel as run;
 
 /// Default worker count: leave one core for the coordinator itself.
 pub fn default_workers() -> usize {
@@ -74,5 +94,18 @@ mod tests {
     fn more_workers_than_jobs() {
         let out = run_parallel(vec![5], 16, |j| j);
         assert_eq!(out, vec![5]);
+    }
+
+    /// A `run_parallel` issued from inside a pool worker must complete
+    /// correctly (sequentially — no thread explosion) with order preserved.
+    #[test]
+    fn nested_run_degrades_to_sequential() {
+        let jobs: Vec<usize> = (0..8).collect();
+        let out = run_parallel(jobs, 4, |j| {
+            let inner: Vec<usize> = run_parallel((0..5).collect(), 4, |i| i * 10);
+            assert_eq!(inner, vec![0, 10, 20, 30, 40]);
+            j * 2
+        });
+        assert_eq!(out, (0..8).map(|j| j * 2).collect::<Vec<_>>());
     }
 }

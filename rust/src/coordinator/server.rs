@@ -113,47 +113,70 @@ impl<'a> BatchServer<'a> {
                     None => break,
                 }
             }
-            // one decode step for every active sequence (round-robin batch)
-            let mut i = 0;
-            while i < active.len() {
-                let a = &mut active[i];
-                let finished = {
-                    if a.prefill_pos < a.req.prompt.len() {
-                        // prefill one token per step (chunked prefill)
-                        let tok = a.req.prompt[a.prefill_pos];
-                        a.last_logits = a.session.step(tok)?;
-                        a.prefill_pos += 1;
-                        false
+            // Phase 1: pick each active sequence's input token for this tick
+            // (prefill consumes the prompt, decode feeds the greedy argmax);
+            // sequences that just produced their last token finish without
+            // another step.
+            let mut stepping: Vec<usize> = Vec::with_capacity(active.len());
+            let mut tokens: Vec<u8> = Vec::with_capacity(active.len());
+            let mut finished: Vec<usize> = Vec::new();
+            for (i, a) in active.iter_mut().enumerate() {
+                if a.prefill_pos < a.req.prompt.len() {
+                    // prefill one token per tick (chunked prefill)
+                    tokens.push(a.req.prompt[a.prefill_pos]);
+                    a.prefill_pos += 1;
+                    stepping.push(i);
+                } else {
+                    // greedy decode
+                    let next = argmax(&a.last_logits);
+                    if a.first_token.is_none() {
+                        a.first_token = Some(a.submitted.elapsed().as_secs_f64());
+                    }
+                    a.produced.push(next);
+                    generated += 1;
+                    if a.produced.len() >= a.req.max_new {
+                        finished.push(i);
                     } else {
-                        // greedy decode
-                        let next = argmax(&a.last_logits);
-                        if a.first_token.is_none() {
-                            a.first_token = Some(a.submitted.elapsed().as_secs_f64());
-                        }
-                        a.produced.push(next);
-                        generated += 1;
-                        if a.produced.len() >= a.req.max_new {
-                            true
-                        } else {
-                            a.last_logits = a.session.step(next)?;
-                            false
+                        tokens.push(next);
+                        stepping.push(i);
+                    }
+                }
+            }
+            // Phase 2: ONE decode_batch per tick — a fused backend runs a
+            // single packed GEMM per projection across every stepping
+            // sequence (the weight stream is read once per tick, not once
+            // per session); other backends step per-session inside the
+            // default implementation.
+            if !stepping.is_empty() {
+                let logits = {
+                    let mut sessions: Vec<&mut (dyn DecodeSession + 'a)> =
+                        Vec::with_capacity(stepping.len());
+                    let mut k = 0usize;
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if k < stepping.len() && stepping[k] == i {
+                            sessions.push(a.session.as_mut());
+                            k += 1;
                         }
                     }
+                    self.backend.decode_batch(&mut sessions, &tokens)?
                 };
-                if finished {
-                    let a = active.swap_remove(i);
-                    let lat = a.submitted.elapsed().as_secs_f64();
-                    latencies.push(lat);
-                    ttfts.push(a.first_token.unwrap_or(lat));
-                    done.push(Response {
-                        id: a.req.id,
-                        tokens: a.produced,
-                        latency_s: lat,
-                        ttft_s: a.first_token.unwrap_or(lat),
-                    });
-                } else {
-                    i += 1;
+                for (&i, lg) in stepping.iter().zip(logits) {
+                    active[i].last_logits = lg;
                 }
+            }
+            // Phase 3: retire finished sequences (descending index order so
+            // swap_remove never disturbs a pending index)
+            for &i in finished.iter().rev() {
+                let a = active.swap_remove(i);
+                let lat = a.submitted.elapsed().as_secs_f64();
+                latencies.push(lat);
+                ttfts.push(a.first_token.unwrap_or(lat));
+                done.push(Response {
+                    id: a.req.id,
+                    tokens: a.produced,
+                    latency_s: lat,
+                    ttft_s: a.first_token.unwrap_or(lat),
+                });
             }
         }
 
@@ -297,6 +320,27 @@ mod tests {
         let resp = rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
         assert_eq!(resp.id, 42);
         assert_eq!(resp.tokens.len(), 3);
+    }
+
+    /// The fused tick (packed backend, `decode_batch` with B > 1) must
+    /// produce the same greedy tokens as solo serving (B = 1 per tick).
+    #[test]
+    fn fused_packed_serving_matches_solo_serving() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 13);
+        let be = crate::engine::PackedBackend::from_weights(&cfg, &w).unwrap();
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request { id, prompt: vec![2, 4, 6, (id % 3) as u8], max_new: 3 })
+            .collect();
+        let (mut fused, _) = BatchServer::new(&be, 4).run(reqs.clone()).unwrap();
+        let (mut solo, _) = BatchServer::new(&be, 1).run(reqs).unwrap();
+        fused.sort_by_key(|r| r.id);
+        solo.sort_by_key(|r| r.id);
+        assert_eq!(fused.len(), 4);
+        for (a, b) in fused.iter().zip(&solo) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {}: fused tick must match solo decode", a.id);
+        }
     }
 
     #[test]

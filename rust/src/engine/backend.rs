@@ -12,6 +12,7 @@
 use anyhow::Result;
 
 use crate::model::config::ModelConfig;
+use crate::model::transformer::DecodeState;
 use crate::model::ModelWeights;
 use crate::tensor::Mat;
 
@@ -45,6 +46,11 @@ pub struct Capabilities {
     pub fixed_seq_len: Option<usize>,
     /// Weights are held in the sub-1-bit packed store, not dense f32.
     pub sub_1bit_storage: bool,
+    /// [`Backend::decode_batch`] fuses the projection GEMMs across
+    /// sessions (the weight stream is read once per token-tick instead of
+    /// once per session). Backends without it still serve batches — the
+    /// default `decode_batch` steps each session independently.
+    pub fused_decode: bool,
 }
 
 /// An in-flight decode sequence (one KV cache) created by a backend.
@@ -53,14 +59,23 @@ pub trait DecodeSession {
     fn step(&mut self, token: u8) -> Result<Vec<f32>>;
     /// Number of tokens consumed so far.
     fn pos(&self) -> usize;
+    /// The underlying KV-cache [`DecodeState`] when this session is backed
+    /// by the shared native decode loop — what fused cross-session
+    /// `decode_batch` implementations reach through. `None` for sessions
+    /// with a foreign state representation.
+    fn state_mut(&mut self) -> Option<&mut DecodeState> {
+        None
+    }
 }
 
 /// A model execution backend.
 ///
 /// Backends own their weight representation; sessions returned by
 /// [`Backend::begin_decode`] borrow the backend (`+ '_`), so a server holds
-/// one backend reference and any number of concurrent sessions.
-pub trait Backend {
+/// one backend reference and any number of concurrent sessions. Backends
+/// are `Sync`: evaluation fan-out (`eval::perplexity::perplexity_par`) and
+/// the parallel kernels share one backend across scheduler threads.
+pub trait Backend: Sync {
     /// The model configuration this backend executes.
     fn cfg(&self) -> &ModelConfig;
     /// Short human label ("native", "pjrt", "packed").
@@ -70,4 +85,20 @@ pub trait Backend {
     fn forward(&self, tokens: &[u8]) -> Result<Mat>;
     /// Start an incremental decode with the given KV capacity.
     fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>>;
+    /// Step several sessions one token each (`sessions[i]` consumes
+    /// `tokens[i]`); returns per-session logits. The default steps each
+    /// session independently; backends reporting
+    /// [`Capabilities::fused_decode`] override it to run one fused GEMM per
+    /// projection across the whole tick ([`crate::coordinator::BatchServer`]
+    /// calls this once per scheduling round).
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut (dyn DecodeSession + '_)],
+        tokens: &[u8],
+    ) -> Result<Vec<Vec<f32>>> {
+        if sessions.len() != tokens.len() {
+            anyhow::bail!("decode_batch: {} sessions vs {} tokens", sessions.len(), tokens.len());
+        }
+        sessions.iter_mut().zip(tokens).map(|(s, &t)| s.step(t)).collect()
+    }
 }

@@ -308,7 +308,8 @@ impl EngineBuilder {
             }
             BackendKind::Packed => Box::new(
                 PackedBackend::from_weights(&cfg, &qweights)
-                    .map_err(|e| EngineError::Backend(format!("{e:#}")))?,
+                    .map_err(|e| EngineError::Backend(format!("{e:#}")))?
+                    .with_workers(self.workers),
             ),
             BackendKind::Pjrt => {
                 let built: Result<Box<dyn Backend>, EngineError> = match arts.as_ref() {
@@ -339,6 +340,7 @@ impl EngineBuilder {
             report,
             max_batch: self.max_batch,
             eval_tokens: self.eval_tokens,
+            workers: self.workers,
         })
     }
 }
@@ -390,6 +392,9 @@ pub struct Engine {
     report: QuantReport,
     max_batch: usize,
     eval_tokens: usize,
+    /// thread budget shared by quantization, the packed kernels and the
+    /// window-parallel evaluation (`--workers`)
+    workers: usize,
 }
 
 impl Engine {
@@ -421,13 +426,15 @@ impl Engine {
 
     /// Perplexity on `eval_tokens` tokens of the named corpus, through this
     /// engine's backend (the one generic implementation — no more
-    /// native/PJRT copy-paste).
+    /// native/PJRT copy-paste). Windows are evaluated in parallel when the
+    /// engine was built with `.workers(n > 1)`; the reduction is
+    /// order-preserving, so the result is identical for any worker count.
     pub fn perplexity(&self, corpus_name: &str) -> Result<f64> {
         if corpus::spec_by_name(corpus_name).is_none() {
             return Err(EngineError::UnknownCorpus(corpus_name.to_string()).into());
         }
         let toks = corpus::corpus_tokens(corpus_name, self.eval_tokens, EVAL_SEED);
-        eval::perplexity::perplexity(self.backend.as_ref(), &toks)
+        eval::perplexity::perplexity_par(self.backend.as_ref(), &toks, self.workers)
     }
 
     /// The 7-task zero-shot suite. Runs through the backend when it accepts

@@ -61,6 +61,9 @@ impl Backend for NativeBackend<'_> {
             decode: true,
             fixed_seq_len: None,
             sub_1bit_storage: false,
+            // dense `proj` (matmul_bt) is not row-wise bit-consistent with
+            // `proj_vec` (matvec), so native keeps per-session stepping
+            fused_decode: false,
         }
     }
 
@@ -85,6 +88,10 @@ impl DecodeSession for NativeSession<'_, '_> {
 
     fn pos(&self) -> usize {
         self.st.pos
+    }
+
+    fn state_mut(&mut self) -> Option<&mut DecodeState> {
+        Some(&mut self.st)
     }
 }
 

@@ -18,7 +18,7 @@ use crate::model::config::ModelConfig;
 use crate::model::transformer::{self, DecodeState, ModelOps};
 use crate::model::ModelWeights;
 use crate::packed::format::Packed24;
-use crate::packed::gemm::{packed_gemm, packed_gemv};
+use crate::packed::gemm::{packed_gemm_par, packed_gemv_par, packed_gemv_par_into};
 use crate::packed::store::PackedModel;
 use crate::tensor::Mat;
 
@@ -35,6 +35,9 @@ pub struct PackedBackend {
     pos: Option<Mat>,
     ln_f: Vec<f32>,
     layers: Vec<PackedLayer>,
+    /// kernel thread budget for the `_par` GEMM/GEMV entry points (1 =
+    /// serial; parallel results are bit-identical to serial either way)
+    workers: usize,
 }
 
 impl PackedBackend {
@@ -83,7 +86,15 @@ impl PackedBackend {
             pos: if pm.fp.contains_key("pos") { Some(fp_mat("pos")?) } else { None },
             ln_f: fp_vec("ln_f")?,
             layers,
+            workers: 1,
         })
+    }
+
+    /// Set the kernel thread budget: projections above the
+    /// `packed::gemm::PAR_MIN_MACS` cutoff run over the scheduler pool.
+    pub fn with_workers(mut self, workers: usize) -> PackedBackend {
+        self.workers = workers.max(1);
+        self
     }
 
     /// Resident bytes of the packed projections (the Fig. 9 number).
@@ -116,11 +127,15 @@ impl ModelOps for PackedBackend {
     }
 
     fn proj(&self, layer: usize, name: &str, x: &Mat) -> Mat {
-        packed_gemm(x, &self.layers[layer].mats[name])
+        packed_gemm_par(x, &self.layers[layer].mats[name], self.workers)
     }
 
     fn proj_vec(&self, layer: usize, name: &str, x: &[f32]) -> Vec<f32> {
-        packed_gemv(&self.layers[layer].mats[name], x)
+        packed_gemv_par(&self.layers[layer].mats[name], x, self.workers)
+    }
+
+    fn proj_vec_into(&self, layer: usize, name: &str, x: &[f32], out: &mut [f32]) {
+        packed_gemv_par_into(&self.layers[layer].mats[name], x, out, self.workers);
     }
 
     fn embed_mat(&self) -> &Mat {
@@ -151,6 +166,7 @@ impl Backend for PackedBackend {
             decode: true,
             fixed_seq_len: None,
             sub_1bit_storage: true,
+            fused_decode: true,
         }
     }
 
@@ -160,6 +176,29 @@ impl Backend for PackedBackend {
 
     fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>> {
         Ok(Box::new(PackedSession { be: self, st: DecodeState::new(&self.cfg, capacity) }))
+    }
+
+    /// Fused cross-session tick: one packed GEMM per projection over the
+    /// stacked activations, so the sub-1-bit weight stream is read once per
+    /// token-tick instead of once per session — the §4.3 batching win in
+    /// the memory-bound decode regime. Bit-identical to per-session
+    /// stepping (the packed kernels share one row kernel).
+    fn decode_batch(
+        &self,
+        sessions: &mut [&mut (dyn DecodeSession + '_)],
+        tokens: &[u8],
+    ) -> Result<Vec<Vec<f32>>> {
+        if sessions.len() != tokens.len() {
+            anyhow::bail!("decode_batch: {} sessions vs {} tokens", sessions.len(), tokens.len());
+        }
+        let mut states: Vec<&mut DecodeState> = Vec::with_capacity(sessions.len());
+        for s in sessions.iter_mut() {
+            match s.state_mut() {
+                Some(st) => states.push(st),
+                None => anyhow::bail!("packed decode_batch requires KV-cache sessions"),
+            }
+        }
+        Ok(transformer::step_ops_batch(&self.cfg, self, &mut states, tokens))
     }
 }
 
@@ -175,6 +214,10 @@ impl DecodeSession for PackedSession<'_> {
 
     fn pos(&self) -> usize {
         self.st.pos
+    }
+
+    fn state_mut(&mut self) -> Option<&mut DecodeState> {
+        Some(&mut self.st)
     }
 }
 
@@ -222,6 +265,71 @@ mod tests {
         for (a, b) in last.iter().zip(full.row(toks.len() - 1)) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    /// Fused `decode_batch` must reproduce per-session decode
+    /// token-for-token — here even bit-for-bit: the packed GEMM and GEMV
+    /// share one row kernel and the batch step mirrors the per-session
+    /// operation order exactly.
+    #[test]
+    fn fused_decode_batch_bitmatches_per_session_decode() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let (_, pm) = exact_24(&cfg, 24);
+        let be = PackedBackend::from_store(&cfg, &pm).unwrap();
+        assert!(be.capabilities().fused_decode);
+
+        let prompts: [&[u8]; 3] = [&[4, 9, 1], &[7, 7], &[2, 5, 6, 3]];
+        // reference: independent sessions
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for p in prompts {
+            let mut sess = be.begin_decode(16).unwrap();
+            want.push(p.iter().map(|&t| sess.step(t).unwrap()).collect());
+        }
+        // fused: one decode_batch per tick; sessions join/leave mid-stream
+        // (different prompt lengths), mirroring continuous batching
+        let mut sessions: Vec<_> = prompts.iter().map(|_| be.begin_decode(16).unwrap()).collect();
+        let max_len = prompts.iter().map(|p| p.len()).max().unwrap();
+        let mut got: Vec<Vec<Vec<f32>>> = prompts.iter().map(|_| Vec::new()).collect();
+        for t in 0..max_len {
+            let mut idx = Vec::new();
+            let mut toks = Vec::new();
+            for (i, p) in prompts.iter().enumerate() {
+                if t < p.len() {
+                    idx.push(i);
+                    toks.push(p[t]);
+                }
+            }
+            let logits = {
+                let mut refs: Vec<&mut (dyn DecodeSession + '_)> = Vec::new();
+                for (i, s) in sessions.iter_mut().enumerate() {
+                    if idx.contains(&i) {
+                        refs.push(s.as_mut());
+                    }
+                }
+                be.decode_batch(&mut refs, &toks).unwrap()
+            };
+            for (&i, lg) in idx.iter().zip(logits) {
+                got[i].push(lg);
+            }
+        }
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.len(), w.len(), "session {i}");
+            for (a, b) in g.iter().zip(w) {
+                assert_eq!(a, b, "session {i}: fused logits must bit-match per-session");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_workers_bitmatch_serial_backend() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let (_, pm) = exact_24(&cfg, 25);
+        let serial = PackedBackend::from_store(&cfg, &pm).unwrap();
+        let par = PackedBackend::from_store(&cfg, &pm).unwrap().with_workers(4);
+        let toks: Vec<u8> = (0..16u8).collect();
+        let a = serial.forward(&toks).unwrap();
+        let b = par.forward(&toks).unwrap();
+        assert_eq!(a.data, b.data, "worker count must not change results");
     }
 
     #[test]

@@ -110,6 +110,7 @@ impl Backend for PjrtBackend<'_> {
             decode: false,
             fixed_seq_len: Some(self.cfg.seq_len),
             sub_1bit_storage: false,
+            fused_decode: false,
         }
     }
 

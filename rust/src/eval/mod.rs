@@ -11,4 +11,4 @@ pub mod flip;
 pub mod perplexity;
 pub mod zeroshot;
 
-pub use perplexity::{perplexity, ppl_native, ppl_pjrt};
+pub use perplexity::{perplexity, perplexity_par, ppl_native, ppl_pjrt};

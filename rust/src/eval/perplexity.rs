@@ -34,19 +34,35 @@ fn nll_sum(logits: &Mat, targets: &[u8]) -> f64 {
 }
 
 /// Perplexity of `tokens` under any backend, over non-overlapping windows
-/// of `cfg.seq_len` + 1 tokens.
+/// of `cfg.seq_len` + 1 tokens (serial; see [`perplexity_par`]).
 pub fn perplexity(backend: &dyn Backend, tokens: &[u8]) -> Result<f64> {
+    perplexity_par(backend, tokens, 1)
+}
+
+/// Perplexity with the windows evaluated in parallel over
+/// `coordinator::scheduler::run` (order-preserving). The per-window NLL
+/// sums are reduced in window order, so the result is bit-identical to the
+/// serial evaluation for any worker count. Unlike the old serial loop, a
+/// failing window does NOT short-circuit the remaining windows (the pool
+/// has no cancellation); the first error is returned after the pass.
+pub fn perplexity_par(backend: &dyn Backend, tokens: &[u8], workers: usize) -> Result<f64> {
     let win = backend.cfg().seq_len;
-    let mut total = 0.0f64;
-    let mut count = 0usize;
+    let mut starts = Vec::new();
     let mut i = 0usize;
     while i + win + 1 <= tokens.len() {
+        starts.push(i);
+        i += win;
+    }
+    let per_window = crate::coordinator::scheduler::run(starts, workers.max(1), |i| {
         let ctx = &tokens[i..i + win];
         let tgt = &tokens[i + 1..i + win + 1];
-        let logits = backend.forward(ctx)?;
-        total += nll_sum(&logits, tgt);
+        backend.forward(ctx).map(|logits| nll_sum(&logits, tgt))
+    });
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for w in per_window {
+        total += w?;
         count += win;
-        i += win;
     }
     Ok((total / count.max(1) as f64).exp())
 }
@@ -113,5 +129,23 @@ mod tests {
         let via_wrapper = ppl_native(&cfg, &w, &toks);
         let via_generic = perplexity(&NativeBackend::borrowed(&cfg, &w), &toks).unwrap();
         assert!((via_wrapper - via_generic).abs() < 1e-12);
+    }
+
+    /// Window-parallel evaluation reduces the per-window sums in window
+    /// order, so any worker count reproduces the serial result exactly.
+    #[test]
+    fn parallel_eval_bitmatches_serial() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 6);
+        let toks = corpus::corpus_tokens("c4s", 5 * 129, 21);
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let serial = perplexity(&be, &toks).unwrap();
+        for workers in [2usize, 3, 8] {
+            let par = perplexity_par(&be, &toks, workers).unwrap();
+            assert!(
+                (serial - par).abs() == 0.0,
+                "workers={workers}: {serial} vs {par}"
+            );
+        }
     }
 }

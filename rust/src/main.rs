@@ -45,6 +45,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "zeroshot" => zeroshot_cmd(args),
         "serve" => serve(args),
         "flip" => flip(args),
+        "bench-kernels" => bench_kernels(args),
         "selfcheck" => selfcheck(args),
         _ => {
             print!("{}", help());
@@ -69,6 +70,9 @@ COMMANDS
   zeroshot    7-task zero-shot accuracy suite
   serve       batched-serving smoke run (continuous batching + metrics)
   flip        sign-flip redundancy study (Fig. 1)
+  bench-kernels
+              packed-kernel perf suite -> reports/BENCH_kernels.json
+              (--smoke: CI shapes + regression gate; --workers N)
   selfcheck   PJRT vs native forward parity check
 
 OPTIONS
@@ -87,6 +91,8 @@ OPTIONS
   --prompt N         serve: prompt length (default {prompt})
   --max-new N        serve: generated tokens per request (default {max_new})
   --ratio R          flip: fraction of signs to flip (default {ratio})
+  --workers N        thread budget: quantization jobs, packed `_par` kernels,
+                     window-parallel eval (default {workers})
   --native           eval via the native rust forward (alias for --backend native)
   --synthetic        fall back to preset configs + synthetic weights when
                      artifacts are missing (smoke runs without `make artifacts`)
@@ -108,6 +114,7 @@ OPTIONS
         prompt = defaults::PROMPT_LEN,
         max_new = defaults::MAX_NEW,
         ratio = defaults::FLIP_RATIO,
+        workers = defaults::WORKERS,
     )
 }
 
@@ -247,6 +254,35 @@ fn flip(args: &Args) -> Result<()> {
         fmt_ppl(rep.ppl_before),
         fmt_ppl(rep.ppl_after)
     );
+    Ok(())
+}
+
+/// Kernel perf suite: prints the lineage table, writes
+/// `reports/BENCH_kernels.json`. With `--smoke` it is also a regression
+/// gate (the CI `bench-smoke` job): the packed gemv must not fall behind
+/// the honest 2-bit baseline on the largest shape, and the fused
+/// `decode_batch` tick must not fall behind per-session decode.
+fn bench_kernels(args: &Args) -> Result<()> {
+    let opts = stbllm::report::kernels::KernelBenchOpts {
+        smoke: args.flag("smoke"),
+        // same default as every other subcommand (the generated help text
+        // documents defaults::WORKERS) — pass --workers N for the parallel rows
+        workers: args.get_usize("workers", defaults::WORKERS).max(1),
+        tiny: false,
+        out_dir: None,
+    };
+    let out = stbllm::report::kernels::run_kernel_bench(&opts)?;
+    println!("\nBENCH_kernels.json -> {}", out.json_path.display());
+    println!("gemv v2-vs-v1 speedup (largest shape): {:.2}x", out.gemv_speedup_on_largest);
+    if opts.smoke {
+        if !out.packed_beats_2bit {
+            bail!("bench-kernels gate FAILED: packed gemv slower than the 2-bit baseline on the largest shape");
+        }
+        if !out.fused_beats_per_session {
+            bail!("bench-kernels gate FAILED: fused decode_batch slower than per-session decode");
+        }
+        println!("smoke gate OK: packed >= 2-bit, fused >= per-session");
+    }
     Ok(())
 }
 

@@ -30,6 +30,14 @@ pub trait ModelOps {
     fn proj(&self, layer: usize, name: &str, x: &Mat) -> Mat;
     /// Single-vector projection: `y = W[layer][name] @ x` (decode path).
     fn proj_vec(&self, layer: usize, name: &str, x: &[f32]) -> Vec<f32>;
+    /// Single-vector projection into caller-owned storage — the
+    /// zero-allocation decode hot path ([`DecodeState`] owns the buffers).
+    /// `out.len()` must equal the projection's output rows. The default
+    /// routes through [`ModelOps::proj_vec`] (one allocation); dense and
+    /// packed representations override it to be allocation-free.
+    fn proj_vec_into(&self, layer: usize, name: &str, x: &[f32], out: &mut [f32]) {
+        out.copy_from_slice(&self.proj_vec(layer, name, x));
+    }
     /// Tied embedding matrix — (vocab, dim).
     fn embed_mat(&self) -> &Mat;
     /// Learned positional embeddings (OPT family only).
@@ -56,6 +64,10 @@ impl ModelOps for ModelWeights {
 
     fn proj_vec(&self, layer: usize, name: &str, x: &[f32]) -> Vec<f32> {
         crate::tensor::matvec(&self.layers[layer].mats[name], x)
+    }
+
+    fn proj_vec_into(&self, layer: usize, name: &str, x: &[f32], out: &mut [f32]) {
+        crate::tensor::matvec_into(&self.layers[layer].mats[name], x, out);
     }
 
     fn embed_mat(&self) -> &Mat {
@@ -333,6 +345,54 @@ pub struct KvCache {
     pub len: usize,
 }
 
+/// Reusable per-session buffers for the decode step — one allocation at
+/// session start, zero allocations per token (§Perf L3: the old step
+/// allocated ~12 vectors per token; profiles showed the allocator competing
+/// with the packed gather for the hot path).
+pub struct DecodeScratch {
+    /// residual stream (dim)
+    x: Vec<f32>,
+    /// rmsnorm output feeding the attention projections (dim)
+    xn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    /// attention weights (capacity)
+    att: Vec<f32>,
+    /// wo output (dim)
+    proj: Vec<f32>,
+    /// rmsnorm output feeding the FFN (dim)
+    hn: Vec<f32>,
+    /// FFN gate/hidden activation (ffn_hidden)
+    g: Vec<f32>,
+    /// FFN up activation, LLaMA/Mistral only (ffn_hidden)
+    u: Vec<f32>,
+    /// w2 output (dim)
+    ffn: Vec<f32>,
+}
+
+impl DecodeScratch {
+    fn new(cfg: &ModelConfig, capacity: usize) -> DecodeScratch {
+        let d = cfg.dim;
+        let h = cfg.ffn_hidden;
+        DecodeScratch {
+            x: vec![0.0; d],
+            xn: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            attn_out: vec![0.0; d],
+            att: vec![0.0; capacity.max(1)],
+            proj: vec![0.0; d],
+            hn: vec![0.0; d],
+            g: vec![0.0; h],
+            u: vec![0.0; h],
+            ffn: vec![0.0; d],
+        }
+    }
+}
+
 /// Decode state: caches for all layers + current position.
 pub struct DecodeState {
     pub caches: Vec<KvCache>,
@@ -341,6 +401,8 @@ pub struct DecodeState {
     /// RoPE tables precomputed to capacity (§Perf L3: recomputing per step
     /// made decode quadratic in position)
     rope: (Mat, Mat),
+    /// reusable step buffers (§Perf L3: no `vec!` in the token loop)
+    scratch: DecodeScratch,
 }
 
 impl DecodeState {
@@ -356,6 +418,7 @@ impl DecodeState {
             pos: 0,
             capacity,
             rope: rope_tables(capacity),
+            scratch: DecodeScratch::new(cfg, capacity),
         }
     }
 
@@ -367,45 +430,47 @@ impl DecodeState {
 
     /// Process one token over any representation; returns logits over the
     /// vocab. This is the serving hot path — packed backends route every
-    /// projection through the sub-1-bit gather kernels here.
+    /// projection through the sub-1-bit LUT kernels here, and every
+    /// intermediate lives in the reusable [`DecodeScratch`] (the returned
+    /// logits vector is the only per-token allocation).
     pub fn step_ops(&mut self, cfg: &ModelConfig, ops: &dyn ModelOps, token: u8) -> Vec<f32> {
         assert!(self.pos < self.capacity, "KV cache capacity exceeded");
-        let d = cfg.dim;
         let nh = cfg.n_heads();
         let p = self.pos;
         let (cos, sin) = (&self.rope.0, &self.rope.1);
+        let sc = &mut self.scratch;
 
-        // embedding
-        let mut x: Vec<f32> = ops.embed_mat().row(token as usize).to_vec();
+        // embedding, copied into the reusable residual buffer
+        sc.x.copy_from_slice(ops.embed_mat().row(token as usize));
         if let Some(pos_emb) = ops.pos_mat() {
-            for (a, b) in x.iter_mut().zip(pos_emb.row(p % pos_emb.rows)) {
+            for (a, b) in sc.x.iter_mut().zip(pos_emb.row(p % pos_emb.rows)) {
                 *a += b;
             }
         }
 
         for li in 0..ops.n_layers() {
-            let xn = rmsnorm_vec(&x, ops.ln1(li), cfg.norm_eps);
-            let mut q = ops.proj_vec(li, "wq", &xn);
-            let mut k = ops.proj_vec(li, "wk", &xn);
-            let v = ops.proj_vec(li, "wv", &xn);
+            rmsnorm_vec_into(&sc.x, ops.ln1(li), cfg.norm_eps, &mut sc.xn);
+            ops.proj_vec_into(li, "wq", &sc.xn, &mut sc.q);
+            ops.proj_vec_into(li, "wk", &sc.xn, &mut sc.k);
+            ops.proj_vec_into(li, "wv", &sc.xn, &mut sc.v);
             if cfg.family != Family::Opt {
                 for h in 0..nh {
-                    apply_rope_vec(&mut q[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
-                    apply_rope_vec(&mut k[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
+                    apply_rope_vec(&mut sc.q[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
+                    apply_rope_vec(&mut sc.k[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
                 }
             }
             let cache = &mut self.caches[li];
-            cache.k.row_mut(p).copy_from_slice(&k);
-            cache.v.row_mut(p).copy_from_slice(&v);
+            cache.k.row_mut(p).copy_from_slice(&sc.k);
+            cache.v.row_mut(p).copy_from_slice(&sc.v);
             cache.len = p + 1;
 
             let lo = if cfg.window > 0 { (p + 1).saturating_sub(cfg.window) } else { 0 };
             let scale = 1.0 / (HEAD_DIM as f32).sqrt();
-            let mut attn_out = vec![0.0f32; d];
-            let mut att = vec![0.0f32; p + 1];
+            sc.attn_out.fill(0.0);
+            let att = &mut sc.att[..p + 1];
             for h in 0..nh {
                 let hoff = h * HEAD_DIM;
-                let qh = &q[hoff..hoff + HEAD_DIM];
+                let qh = &sc.q[hoff..hoff + HEAD_DIM];
                 for j in lo..=p {
                     att[j] =
                         crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
@@ -414,43 +479,152 @@ impl DecodeState {
                 for j in lo..=p {
                     let wgt = att[j];
                     let vj = &cache.v.row(j)[hoff..hoff + HEAD_DIM];
-                    for (o, vv) in attn_out[hoff..hoff + HEAD_DIM].iter_mut().zip(vj) {
+                    for (o, vv) in sc.attn_out[hoff..hoff + HEAD_DIM].iter_mut().zip(vj) {
                         *o += wgt * vv;
                     }
                 }
             }
-            let proj = ops.proj_vec(li, "wo", &attn_out);
-            for (a, b) in x.iter_mut().zip(&proj) {
+            ops.proj_vec_into(li, "wo", &sc.attn_out, &mut sc.proj);
+            for (a, b) in sc.x.iter_mut().zip(&sc.proj) {
                 *a += b;
             }
 
-            let hn = rmsnorm_vec(&x, ops.ln2(li), cfg.norm_eps);
-            let ffn = if cfg.family == Family::Opt {
-                let mut a = ops.proj_vec(li, "w1", &hn);
-                a.iter_mut().for_each(|t| *t = gelu(*t));
-                ops.proj_vec(li, "w2", &a)
+            rmsnorm_vec_into(&sc.x, ops.ln2(li), cfg.norm_eps, &mut sc.hn);
+            if cfg.family == Family::Opt {
+                ops.proj_vec_into(li, "w1", &sc.hn, &mut sc.g);
+                sc.g.iter_mut().for_each(|t| *t = gelu(*t));
+                ops.proj_vec_into(li, "w2", &sc.g, &mut sc.ffn);
             } else {
-                let mut g = ops.proj_vec(li, "w1", &hn);
-                let u = ops.proj_vec(li, "w3", &hn);
-                for (gi, ui) in g.iter_mut().zip(&u) {
+                ops.proj_vec_into(li, "w1", &sc.hn, &mut sc.g);
+                ops.proj_vec_into(li, "w3", &sc.hn, &mut sc.u);
+                for (gi, ui) in sc.g.iter_mut().zip(&sc.u) {
                     *gi = silu(*gi) * ui;
                 }
-                ops.proj_vec(li, "w2", &g)
-            };
-            for (a, b) in x.iter_mut().zip(&ffn) {
+                ops.proj_vec_into(li, "w2", &sc.g, &mut sc.ffn);
+            }
+            for (a, b) in sc.x.iter_mut().zip(&sc.ffn) {
                 *a += b;
             }
         }
         self.pos += 1;
-        let xn = rmsnorm_vec(&x, ops.ln_f(), cfg.norm_eps);
-        crate::tensor::matvec(ops.embed_mat(), &xn)
+        rmsnorm_vec_into(&sc.x, ops.ln_f(), cfg.norm_eps, &mut sc.xn);
+        crate::tensor::matvec(ops.embed_mat(), &sc.xn)
     }
 }
 
-fn rmsnorm_vec(x: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+/// One fused decode tick over any representation: step each session one
+/// token, computing every projection ONCE over the stacked (B, ·)
+/// activation matrix so the weight stream is shared across sessions — for
+/// the packed backend this is the §4.3 batching win: the sub-1-bit store is
+/// read once per token-tick instead of once per session. Attention, norms
+/// and the LM head run per-session in exactly the operation order of
+/// [`DecodeState::step_ops`]; with a representation whose `proj` is
+/// row-wise bit-consistent with `proj_vec` (true for the packed LUT
+/// kernels, which share one row kernel) the fused tick reproduces
+/// per-session decode bit-for-bit.
+pub fn step_ops_batch(
+    cfg: &ModelConfig,
+    ops: &dyn ModelOps,
+    states: &mut [&mut DecodeState],
+    tokens: &[u8],
+) -> Vec<Vec<f32>> {
+    assert_eq!(states.len(), tokens.len());
+    let bsz = states.len();
+    if bsz == 0 {
+        return Vec::new();
+    }
+    let d = cfg.dim;
+    let nh = cfg.n_heads();
+    let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+
+    // stacked embeddings (each session may sit at a different position)
+    let mut x = Mat::zeros(bsz, d);
+    for (i, (st, &tok)) in states.iter().zip(tokens).enumerate() {
+        assert!(st.pos < st.capacity, "KV cache capacity exceeded");
+        x.row_mut(i).copy_from_slice(ops.embed_mat().row(tok as usize));
+        if let Some(pos_emb) = ops.pos_mat() {
+            for (a, b) in x.row_mut(i).iter_mut().zip(pos_emb.row(st.pos % pos_emb.rows)) {
+                *a += b;
+            }
+        }
+    }
+
+    for li in 0..ops.n_layers() {
+        let xn = rmsnorm(&x, ops.ln1(li), cfg.norm_eps);
+        let mut q = ops.proj(li, "wq", &xn);
+        let mut k = ops.proj(li, "wk", &xn);
+        let v = ops.proj(li, "wv", &xn);
+        let mut attn_out = Mat::zeros(bsz, d);
+        for (i, st) in states.iter_mut().enumerate() {
+            let p = st.pos;
+            if cfg.family != Family::Opt {
+                let (cos, sin) = (&st.rope.0, &st.rope.1);
+                for h in 0..nh {
+                    let hd = h * HEAD_DIM..(h + 1) * HEAD_DIM;
+                    apply_rope_vec(&mut q.row_mut(i)[hd.clone()], cos, sin, p);
+                    apply_rope_vec(&mut k.row_mut(i)[hd], cos, sin, p);
+                }
+            }
+            let cache = &mut st.caches[li];
+            cache.k.row_mut(p).copy_from_slice(k.row(i));
+            cache.v.row_mut(p).copy_from_slice(v.row(i));
+            cache.len = p + 1;
+
+            let lo = if cfg.window > 0 { (p + 1).saturating_sub(cfg.window) } else { 0 };
+            let att = &mut st.scratch.att[..p + 1];
+            for h in 0..nh {
+                let hoff = h * HEAD_DIM;
+                let qh = &q.row(i)[hoff..hoff + HEAD_DIM];
+                for j in lo..=p {
+                    att[j] =
+                        crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
+                }
+                softmax_inplace(&mut att[lo..=p]);
+                for j in lo..=p {
+                    let wgt = att[j];
+                    let vj = &cache.v.row(j)[hoff..hoff + HEAD_DIM];
+                    for (o, vv) in attn_out.row_mut(i)[hoff..hoff + HEAD_DIM].iter_mut().zip(vj) {
+                        *o += wgt * vv;
+                    }
+                }
+            }
+        }
+        let proj = ops.proj(li, "wo", &attn_out);
+        x.add_assign(&proj);
+
+        let hn = rmsnorm(&x, ops.ln2(li), cfg.norm_eps);
+        let ffn = if cfg.family == Family::Opt {
+            let mut a = ops.proj(li, "w1", &hn);
+            a.data.iter_mut().for_each(|t| *t = gelu(*t));
+            ops.proj(li, "w2", &a)
+        } else {
+            let mut g = ops.proj(li, "w1", &hn);
+            let u = ops.proj(li, "w3", &hn);
+            for (gi, ui) in g.data.iter_mut().zip(&u.data) {
+                *gi = silu(*gi) * ui;
+            }
+            ops.proj(li, "w2", &g)
+        };
+        x.add_assign(&ffn);
+    }
+    for st in states.iter_mut() {
+        st.pos += 1;
+    }
+    let xn = rmsnorm(&x, ops.ln_f(), cfg.norm_eps);
+    // per-row matvec (not matmul_bt) so the head bit-matches the
+    // per-session step
+    (0..bsz).map(|i| crate::tensor::matvec(ops.embed_mat(), xn.row(i))).collect()
+}
+
+/// Vector rmsnorm into caller-owned storage; the math is the row loop of
+/// [`rmsnorm`] verbatim, so the decode path bit-matches the full forward
+/// (and the fused batch step bit-matches the per-session step).
+fn rmsnorm_vec_into(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
     let inv = 1.0 / (ms + eps).sqrt();
-    x.iter().zip(w).map(|(v, g)| v * inv * g).collect()
+    for (o, (v, g)) in out.iter_mut().zip(x.iter().zip(w)) {
+        *o = v * inv * g;
+    }
 }
 
 #[cfg(test)]
@@ -536,6 +710,49 @@ mod tests {
         // beyond it, logits differ
         let diff: f32 = (0..cfg_w.vocab).map(|j| (a[(99, j)] - b[(99, j)]).abs()).sum();
         assert!(diff > 1e-4);
+    }
+
+    /// Fused batch stepping must agree with independent per-session steps —
+    /// including sessions at DIFFERENT positions (continuous batching).
+    #[test]
+    fn batch_step_matches_per_session_steps() {
+        for name in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+            let (cfg, w) = tiny(name);
+            // session 0 starts 3 tokens ahead of session 1
+            let mut solo0 = DecodeState::new(&cfg, 32);
+            let mut solo1 = DecodeState::new(&cfg, 32);
+            let mut fused0 = DecodeState::new(&cfg, 32);
+            let mut fused1 = DecodeState::new(&cfg, 32);
+            for &t in &[7u8, 2, 9] {
+                solo0.step_ops(&cfg, &w, t);
+                fused0.step_ops(&cfg, &w, t);
+            }
+            let ticks: Vec<(u8, u8)> = vec![(1, 4), (6, 3), (2, 2), (8, 5)];
+            for &(t0, t1) in &ticks {
+                let want0 = solo0.step_ops(&cfg, &w, t0);
+                let want1 = solo1.step_ops(&cfg, &w, t1);
+                let got = {
+                    let mut states = [&mut fused0, &mut fused1];
+                    step_ops_batch(&cfg, &w, &mut states, &[t0, t1])
+                };
+                assert_eq!(got.len(), 2);
+                for (a, b) in got[0].iter().zip(&want0) {
+                    assert!((a - b).abs() < 1e-3, "{name} s0: {a} vs {b}");
+                }
+                for (a, b) in got[1].iter().zip(&want1) {
+                    assert!((a - b).abs() < 1e-3, "{name} s1: {a} vs {b}");
+                }
+            }
+            assert_eq!(fused0.pos, solo0.pos);
+            assert_eq!(fused1.pos, solo1.pos);
+        }
+    }
+
+    #[test]
+    fn batch_step_empty_is_noop() {
+        let (cfg, w) = tiny("llama1-7b");
+        let out = step_ops_batch(&cfg, &w, &mut [], &[]);
+        assert!(out.is_empty());
     }
 
     #[test]

@@ -6,16 +6,292 @@
 //! (a) half the multiply-accumulates are skipped via the 2:4 metadata, and
 //! (b) the packed representation moves 6 bits per 4 weights instead of 8
 //! (2-bit) or 64 (fp32), which dominates in the memory-bound decode regime.
+//!
+//! §Perf lineage (regenerate numbers with `stbllm bench-kernels`):
+//!   * v1 — [`packed_gemm_onthefly`] / [`packed_gemv_onthefly`]: per-group
+//!     decode (shift + mask + sign branch per 4 weights) inside the hot
+//!     loop. Kept as the baseline and a second correctness witness.
+//!   * v2 — [`packed_gemm_scratch`]: expands each weight row's metadata once
+//!     into (index, sign) scratch and amortizes the decode over the batch —
+//!     but still gathers scalar-at-a-time and allocates scratch per call.
+//!   * v3 — [`packed_gemm`] / [`packed_gemv`] (gemv v2): word-level LUT
+//!     decode. One `u16` meta word + one `u8` sign byte cover 4 groups
+//!     (16 weights, 8 non-zeros); each 6-bit group code maps through the
+//!     64-entry [`GROUP_COEF`] LUT to its dense ±1/0 coefficient quad, so
+//!     the inner loop is 16 contiguous FMAs per word — branch-free and
+//!     auto-vectorizable. The micro-kernel is register-blocked 4 output
+//!     rows × K/2 ([`packed_row_dot4`]); `_into` variants write
+//!     caller-owned buffers (zero allocations on the decode path); `_par`
+//!     variants split output across the `coordinator::scheduler` pool above
+//!     the [`PAR_MIN_MACS`] serial cutoff. Every variant funnels through
+//!     ONE row kernel, so serial, parallel, GEMM and GEMV outputs are
+//!     bit-identical per element — which is what lets the fused
+//!     cross-session `decode_batch` path reproduce per-session decode
+//!     token-for-token.
 
 use super::format::Packed24;
 use crate::tensor::Mat;
 
-/// y = x @ W_packed^T with per-weight-row decode amortization: the 6-bit
-/// metadata of row n is expanded ONCE into (index, sign) scratch, then every
-/// batch row runs a K/2-long gather-MAC — half the multiply-accumulates of
-/// the dense kernels, mirroring the sparse-tensor-core schedule. (§Perf L3:
-/// this is v2; `packed_gemm_onthefly` below is the v1 baseline.)
+// ---------------------------------------------------------------------------
+// Word-level LUT decode (v3)
+// ---------------------------------------------------------------------------
+
+/// 64-entry LUT: one 6-bit group code — 4 index bits (two 2-bit non-zero
+/// positions) in the low nibble, 2 sign bits above — expands to the group's
+/// dense ±1/0 coefficient quad. Indexing four of these per `u16` meta word
+/// + `u8` sign byte decodes 16 weights at a time with no branches.
+const GROUP_COEF: [[f32; 4]; 64] = build_group_coef();
+
+const fn build_group_coef() -> [[f32; 4]; 64] {
+    let mut lut = [[0.0f32; 4]; 64];
+    let mut code = 0usize;
+    while code < 64 {
+        let nib = code & 0xf;
+        let sp = code >> 4;
+        let p0 = nib & 3;
+        let p1 = (nib >> 2) & 3;
+        lut[code][p0] = if sp & 1 != 0 { 1.0 } else { -1.0 };
+        lut[code][p1] = if sp & 2 != 0 { 1.0 } else { -1.0 };
+        code += 1;
+    }
+    lut
+}
+
+/// Dot of one meta word (4 groups = 16 weights) with a 16-wide activation
+/// block. `xb` must have at least 16 elements.
+#[inline(always)]
+fn word_dot(m: u16, s: u8, xb: &[f32]) -> f32 {
+    let m = m as usize;
+    let s = s as usize;
+    let c0 = &GROUP_COEF[(m & 0xf) | ((s & 0x3) << 4)];
+    let c1 = &GROUP_COEF[((m >> 4) & 0xf) | (((s >> 2) & 0x3) << 4)];
+    let c2 = &GROUP_COEF[((m >> 8) & 0xf) | (((s >> 4) & 0x3) << 4)];
+    let c3 = &GROUP_COEF[((m >> 12) & 0xf) | (((s >> 6) & 0x3) << 4)];
+    let a0 = c0[0] * xb[0] + c0[1] * xb[1] + c0[2] * xb[2] + c0[3] * xb[3];
+    let a1 = c1[0] * xb[4] + c1[1] * xb[5] + c1[2] * xb[6] + c1[3] * xb[7];
+    let a2 = c2[0] * xb[8] + c2[1] * xb[9] + c2[2] * xb[10] + c2[3] * xb[11];
+    let a3 = c3[0] * xb[12] + c3[1] * xb[13] + c3[2] * xb[14] + c3[3] * xb[15];
+    (a0 + a1) + (a2 + a3)
+}
+
+/// Scalar single-group dot (head/tail of word-unaligned rows). `gi` is the
+/// global group index, `gg` the group's column position within the row.
+#[inline(always)]
+fn group_dot(meta: &[u16], signs: &[u8], gi: usize, gg: usize, xr: &[f32]) -> f32 {
+    let nib = ((meta[gi / 4] >> (4 * (gi % 4))) & 0xf) as usize;
+    let sp = ((signs[gi / 4] >> (2 * (gi % 4))) & 0x3) as usize;
+    let c = &GROUP_COEF[nib | (sp << 4)];
+    let xb = &xr[gg * 4..gg * 4 + 4];
+    c[0] * xb[0] + c[1] * xb[1] + c[2] * xb[2] + c[3] * xb[3]
+}
+
+/// Unscaled dot of one packed row (groups `[gbase, gbase + g)`) with `xr`,
+/// word-level where the global group index is aligned, scalar at the edges.
+#[inline(always)]
+fn packed_row_dot(meta: &[u16], signs: &[u8], gbase: usize, g: usize, xr: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    let mut gg = 0usize;
+    while gg < g && (gbase + gg) % 4 != 0 {
+        acc += group_dot(meta, signs, gbase + gg, gg, xr);
+        gg += 1;
+    }
+    while gg + 4 <= g {
+        let wi = (gbase + gg) / 4;
+        acc += word_dot(meta[wi], signs[wi], &xr[gg * 4..gg * 4 + 16]);
+        gg += 4;
+    }
+    while gg < g {
+        acc += group_dot(meta, signs, gbase + gg, gg, xr);
+        gg += 1;
+    }
+    acc
+}
+
+/// Register-blocked micro-kernel: 4 consecutive word-aligned rows against
+/// one activation row — each 16-wide `x` block is loaded once and consumed
+/// by all 4 accumulators. `w0` is the first row's word offset, `wpr` the
+/// words per row (rows are contiguous: row r starts at `w0 + r * wpr`).
+/// Per-row accumulation order is identical to [`packed_row_dot`].
+#[inline(always)]
+fn packed_row_dot4(meta: &[u16], signs: &[u8], w0: usize, wpr: usize, xr: &[f32]) -> [f32; 4] {
+    let m0 = &meta[w0..w0 + wpr];
+    let m1 = &meta[w0 + wpr..w0 + 2 * wpr];
+    let m2 = &meta[w0 + 2 * wpr..w0 + 3 * wpr];
+    let m3 = &meta[w0 + 3 * wpr..w0 + 4 * wpr];
+    let s0 = &signs[w0..w0 + wpr];
+    let s1 = &signs[w0 + wpr..w0 + 2 * wpr];
+    let s2 = &signs[w0 + 2 * wpr..w0 + 3 * wpr];
+    let s3 = &signs[w0 + 3 * wpr..w0 + 4 * wpr];
+    let mut acc = [0.0f32; 4];
+    for wi in 0..wpr {
+        let xb = &xr[wi * 16..wi * 16 + 16];
+        acc[0] += word_dot(m0[wi], s0[wi], xb);
+        acc[1] += word_dot(m1[wi], s1[wi], xb);
+        acc[2] += word_dot(m2[wi], s2[wi], xb);
+        acc[3] += word_dot(m3[wi], s3[wi], xb);
+    }
+    acc
+}
+
+/// The ONE row kernel every packed GEMM/GEMV entry point funnels through:
+/// `yr[n] = α_n · (packed row n · xr)` for all rows. Single accumulation
+/// order ⇒ all variants (serial/parallel, gemm/gemv) bit-match.
+fn packed_rows_kernel(w: &Packed24, xr: &[f32], yr: &mut [f32]) {
+    row_range_kernel(w, xr, 0, yr);
+}
+
+/// Below this many effective multiply-accumulates a parallel launch costs
+/// more than it saves (scoped spawn + join ≈ tens of µs on the CI box, the
+/// serial kernel moves ≈ 1 MAC/ns), so `_par` entry points fall back to the
+/// serial kernel — small projections never pay spawn overhead.
+pub const PAR_MIN_MACS: usize = 1 << 19;
+
+// ---------------------------------------------------------------------------
+// GEMV (serving decode hot path) — v2: word-level LUT, zero-alloc `_into`
+// ---------------------------------------------------------------------------
+
+/// y = W_packed @ x into caller-owned storage — the zero-allocation decode
+/// hot path (`DecodeScratch` owns the output buffers).
+pub fn packed_gemv_into(w: &Packed24, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), w.cols, "K mismatch");
+    assert_eq!(y.len(), w.rows, "N mismatch");
+    packed_rows_kernel(w, x, y);
+}
+
+/// y = W_packed @ x for a single activation vector (allocating wrapper over
+/// [`packed_gemv_into`]).
+pub fn packed_gemv(w: &Packed24, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; w.rows];
+    packed_gemv_into(w, x, &mut y);
+    y
+}
+
+/// Parallel gemv: output rows split in contiguous blocks across the
+/// scheduler pool; serial below the [`PAR_MIN_MACS`] cutoff. Bit-identical
+/// to [`packed_gemv_into`] (each output element is produced by the same
+/// sequential row dot regardless of the partition).
+pub fn packed_gemv_par_into(w: &Packed24, x: &[f32], y: &mut [f32], workers: usize) {
+    assert_eq!(x.len(), w.cols, "K mismatch");
+    assert_eq!(y.len(), w.rows, "N mismatch");
+    if workers <= 1 || w.rows * (w.cols / 2) < PAR_MIN_MACS {
+        return packed_rows_kernel(w, x, y);
+    }
+    let parts = workers.min(w.rows);
+    let chunk = w.rows.div_ceil(parts);
+    let mut jobs: Vec<(usize, &mut [f32])> = Vec::with_capacity(parts);
+    let mut n0 = 0usize;
+    for seg in y.chunks_mut(chunk) {
+        let len = seg.len();
+        jobs.push((n0, seg));
+        n0 += len;
+    }
+    crate::coordinator::scheduler::run(jobs, parts, |(n0, yseg)| {
+        row_range_kernel(w, x, n0, yseg);
+    });
+}
+
+/// Allocating wrapper over [`packed_gemv_par_into`].
+pub fn packed_gemv_par(w: &Packed24, x: &[f32], workers: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; w.rows];
+    packed_gemv_par_into(w, x, &mut y, workers);
+    y
+}
+
+/// Rows `[n0, n0 + yseg.len())` of the row kernel — same per-element order
+/// as [`packed_rows_kernel`], partitioned for the parallel entry points.
+fn row_range_kernel(w: &Packed24, xr: &[f32], n0: usize, yseg: &mut [f32]) {
+    let g = w.cols / 4;
+    let n1 = n0 + yseg.len();
+    if g % 4 == 0 && g > 0 {
+        let wpr = g / 4;
+        let mut n = n0;
+        while n + 4 <= n1 {
+            let acc = packed_row_dot4(&w.meta, &w.signs, n * wpr, wpr, xr);
+            yseg[n - n0] = acc[0] * w.alpha[n];
+            yseg[n + 1 - n0] = acc[1] * w.alpha[n + 1];
+            yseg[n + 2 - n0] = acc[2] * w.alpha[n + 2];
+            yseg[n + 3 - n0] = acc[3] * w.alpha[n + 3];
+            n += 4;
+        }
+        while n < n1 {
+            yseg[n - n0] = packed_row_dot(&w.meta, &w.signs, n * g, g, xr) * w.alpha[n];
+            n += 1;
+        }
+    } else {
+        for n in n0..n1 {
+            yseg[n - n0] = packed_row_dot(&w.meta, &w.signs, n * g, g, xr) * w.alpha[n];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM — v3: word-level LUT + 4-row register blocking, `_into` / `_par`
+// ---------------------------------------------------------------------------
+
+/// y = x @ W_packed^T into a caller-owned output matrix (zero allocations).
+pub fn packed_gemm_into(x: &Mat, w: &Packed24, y: &mut Mat) {
+    assert_eq!(x.cols, w.cols, "K mismatch");
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "output shape mismatch");
+    for b in 0..x.rows {
+        packed_rows_kernel(w, x.row(b), y.row_mut(b));
+    }
+}
+
+/// y = x @ W_packed^T — the v3 word-level LUT kernel (allocating wrapper
+/// over [`packed_gemm_into`]).
 pub fn packed_gemm(x: &Mat, w: &Packed24) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.rows);
+    packed_gemm_into(x, w, &mut y);
+    y
+}
+
+/// Parallel GEMM: batch rows split in contiguous blocks across the
+/// scheduler pool (a single activation row degrades to the row-partitioned
+/// [`packed_gemv_par_into`]); serial below the [`PAR_MIN_MACS`] cutoff.
+/// Bit-identical to the serial kernel.
+pub fn packed_gemm_par_into(x: &Mat, w: &Packed24, y: &mut Mat, workers: usize) {
+    assert_eq!(x.cols, w.cols, "K mismatch");
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "output shape mismatch");
+    let macs = x.rows * w.rows * (w.cols / 2);
+    if workers <= 1 || macs < PAR_MIN_MACS {
+        return packed_gemm_into(x, w, y);
+    }
+    if x.rows == 1 {
+        return packed_gemv_par_into(w, x.row(0), y.row_mut(0), workers);
+    }
+    let parts = workers.min(x.rows);
+    let chunk = x.rows.div_ceil(parts);
+    let n = w.rows;
+    let mut jobs: Vec<(usize, &mut [f32])> = Vec::with_capacity(parts);
+    let mut b0 = 0usize;
+    for seg in y.data.chunks_mut(chunk * n) {
+        let nb = seg.len() / n;
+        jobs.push((b0, seg));
+        b0 += nb;
+    }
+    crate::coordinator::scheduler::run(jobs, parts, |(b0, yseg)| {
+        let nb = yseg.len() / n;
+        for bi in 0..nb {
+            packed_rows_kernel(w, x.row(b0 + bi), &mut yseg[bi * n..(bi + 1) * n]);
+        }
+    });
+}
+
+/// Allocating wrapper over [`packed_gemm_par_into`].
+pub fn packed_gemm_par(x: &Mat, w: &Packed24, workers: usize) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.rows);
+    packed_gemm_par_into(x, w, &mut y, workers);
+    y
+}
+
+// ---------------------------------------------------------------------------
+// Historical kernels (§Perf baselines + correctness witnesses)
+// ---------------------------------------------------------------------------
+
+/// v2 GEMM: the 6-bit metadata of each weight row is expanded ONCE into
+/// (index, sign) scratch, then every batch row runs a K/2-long gather-MAC.
+/// Kept as the §Perf v2 baseline (`stbllm bench-kernels` reports v3 vs v2).
+pub fn packed_gemm_scratch(x: &Mat, w: &Packed24) -> Mat {
     assert_eq!(x.cols, w.cols, "K mismatch");
     let g = w.cols / 4;
     let nnz = 2 * g;
@@ -53,11 +329,9 @@ pub fn packed_gemm(x: &Mat, w: &Packed24) -> Mat {
     y
 }
 
-/// y = W_packed @ x for a single activation vector — the serving decode hot
-/// path (`engine::PackedBackend` routes every per-token projection here).
-/// One output per packed row, K/2 gather-MACs each; the metadata is decoded
-/// on the fly since each group is visited exactly once per call.
-pub fn packed_gemv(w: &Packed24, x: &[f32]) -> Vec<f32> {
+/// v1 GEMV: decodes every group on the fly with per-group branches — the
+/// baseline the v2 LUT gemv is measured against in `BENCH_kernels.json`.
+pub fn packed_gemv_onthefly(w: &Packed24, x: &[f32]) -> Vec<f32> {
     assert_eq!(x.len(), w.cols, "K mismatch");
     let g = w.cols / 4;
     let mut y = vec![0.0f32; w.rows];
@@ -72,8 +346,10 @@ pub fn packed_gemv(w: &Packed24, x: &[f32]) -> Vec<f32> {
     y
 }
 
-/// v1 kernel: decodes the metadata inside the (batch × row) loop — kept as
-/// the §Perf baseline and as a second correctness witness.
+/// v1 GEMM: decodes the metadata inside the (batch × row) loop — kept
+/// BYTE-FOR-BYTE as it shipped (including its word-aligned branchless fast
+/// path) so the v1-relative speedups in `BENCH_kernels.json` measure the
+/// real before/after of this lineage, not a strawman.
 pub fn packed_gemm_onthefly(x: &Mat, w: &Packed24) -> Mat {
     assert_eq!(x.cols, w.cols, "K mismatch");
     let g = w.cols / 4;
@@ -182,7 +458,32 @@ impl Dense2Bit {
     }
 }
 
-/// y = x @ W_2bit^T: dense inner loop over all K (no sparsity skip).
+/// 256-entry LUT: one code byte (4 weights) → its dense {-1, 0, +1}
+/// coefficient quad. Keeps the 2-bit baseline honest: byte-at-a-time decode
+/// with 4 contiguous FMAs per byte, the same decode style as the packed v3
+/// kernel (code 0b11 is unused by `Dense2Bit::quantize`).
+const CODE_COEF: [[f32; 4]; 256] = build_code_coef();
+
+const fn build_code_coef() -> [[f32; 4]; 256] {
+    let mut lut = [[0.0f32; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut q = 0usize;
+        while q < 4 {
+            lut[b][q] = match (b >> (2 * q)) & 0x3 {
+                0 => -1.0,
+                1 => 0.0,
+                _ => 1.0,
+            };
+            q += 1;
+        }
+        b += 1;
+    }
+    lut
+}
+
+/// y = x @ W_2bit^T: dense inner loop over all K, byte-at-a-time (4 codes
+/// per byte through [`CODE_COEF`], hoisted row base) — no sparsity skip.
 pub fn gemm_2bit(x: &Mat, w: &Dense2Bit) -> Mat {
     assert_eq!(x.cols, w.cols);
     let mut y = Mat::zeros(x.rows, w.rows);
@@ -190,13 +491,23 @@ pub fn gemm_2bit(x: &Mat, w: &Dense2Bit) -> Mat {
         let xr = x.row(b);
         let yr = y.row_mut(b);
         for n in 0..w.rows {
-            let mut acc = 0.0f32;
             let base = n * w.cols;
-            for j in 0..w.cols {
-                let idx = base + j;
-                let code = (((w.data[idx / 4] >> (2 * (idx % 4))) & 0x3) as i32) - 1;
-                // branchless: code ∈ {-1,0,1}
-                acc += code as f32 * xr[j];
+            let mut acc = 0.0f32;
+            let mut j = 0usize;
+            // scalar head until the bit-stream is byte-aligned
+            while j < w.cols && (base + j) % 4 != 0 {
+                acc += w.code(n, j) as f32 * xr[j];
+                j += 1;
+            }
+            while j + 4 <= w.cols {
+                let c = &CODE_COEF[w.data[(base + j) / 4] as usize];
+                let xb = &xr[j..j + 4];
+                acc += c[0] * xb[0] + c[1] * xb[1] + c[2] * xb[2] + c[3] * xb[3];
+                j += 4;
+            }
+            while j < w.cols {
+                acc += w.code(n, j) as f32 * xr[j];
+                j += 1;
             }
             yr[n] = acc * w.alpha[n];
         }
@@ -214,6 +525,8 @@ pub fn gemm_f32(x: &Mat, w: &Mat) -> Mat {
 mod tests {
     use super::*;
     use crate::packed::format::enforce_24;
+    use crate::prop_assert;
+    use crate::util::prop::prop_check;
     use crate::util::rng::Pcg32;
 
     fn random_sb24(rows: usize, cols: usize, rng: &mut Pcg32) -> (Packed24, Mat) {
@@ -228,10 +541,12 @@ mod tests {
         let mut rng = Pcg32::seeded(5);
         let (packed, _) = random_sb24(24, 64, &mut rng);
         let x = Mat::random(7, 64, 1.0, &mut rng);
-        let v2 = packed_gemm(&x, &packed);
+        let v3 = packed_gemm(&x, &packed);
+        let v2 = packed_gemm_scratch(&x, &packed);
         let v1 = packed_gemm_onthefly(&x, &packed);
-        for (a, b) in v2.data.iter().zip(&v1.data) {
+        for ((a, b), c) in v3.data.iter().zip(&v2.data).zip(&v1.data) {
             assert!((a - b).abs() < 1e-4);
+            assert!((a - c).abs() < 1e-4);
         }
     }
 
@@ -249,6 +564,33 @@ mod tests {
         }
     }
 
+    /// Property test over word-UNALIGNED shapes (cols % 16 != 0 so rows are
+    /// not meta-word aligned, rows % 4 != 0 so the 4-row micro-kernel has a
+    /// remainder): the LUT kernels must agree with the v1 on-the-fly witness
+    /// and the dense reference.
+    #[test]
+    fn lut_kernels_match_v1_and_dense_on_unaligned_shapes() {
+        prop_check("LUT kernel parity on unaligned shapes", 25, |rng| {
+            let rows = 1 + rng.bounded(13) as usize;
+            let cols = 4 * (1 + rng.bounded(31) as usize); // frequently % 16 != 0
+            let (packed, _) = random_sb24(rows, cols, rng);
+            let batch = 1 + rng.bounded(5) as usize;
+            let x = Mat::random(batch, cols, 1.0, rng);
+            let v3 = packed_gemm(&x, &packed);
+            let v1 = packed_gemm_onthefly(&x, &packed);
+            let dense = gemm_f32(&x, &packed.unpack());
+            for ((a, b), c) in v3.data.iter().zip(&v1.data).zip(&dense.data) {
+                prop_assert!((a - b).abs() < 1e-4, "v3 vs v1: {a} vs {b} ({rows}x{cols})");
+                prop_assert!((a - c).abs() < 1e-3, "v3 vs dense: {a} vs {c} ({rows}x{cols})");
+            }
+            let gv = packed_gemv(&packed, x.row(0));
+            for (a, b) in gv.iter().zip(v3.row(0)) {
+                prop_assert!(a == b, "gemv must bit-match gemm row 0: {a} vs {b}");
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn packed_gemv_matches_gemm_single_row() {
         let mut rng = Pcg32::seeded(8);
@@ -263,15 +605,67 @@ mod tests {
     }
 
     #[test]
+    fn gemv_v2_matches_v1_witness() {
+        let mut rng = Pcg32::seeded(9);
+        for (rows, cols) in [(24usize, 64usize), (10, 84), (13, 20), (5, 176)] {
+            let (packed, _) = random_sb24(rows, cols, &mut rng);
+            let x: Vec<f32> = (0..cols).map(|i| ((i * 37 % 97) as f32 - 48.0) * 0.05).collect();
+            let v2 = packed_gemv(&packed, &x);
+            let v1 = packed_gemv_onthefly(&packed, &x);
+            for (a, b) in v2.iter().zip(&v1) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b} ({rows}x{cols})");
+            }
+        }
+    }
+
+    /// Parallel GEMM/GEMV must bit-match serial: the row kernel is the same
+    /// per output element regardless of the partition. Shapes are sized past
+    /// PAR_MIN_MACS so the parallel path actually engages.
+    #[test]
+    fn parallel_kernels_bitmatch_serial() {
+        let mut rng = Pcg32::seeded(10);
+        let (packed, _) = random_sb24(256, 512, &mut rng);
+        let x = Mat::random(8, 512, 1.0, &mut rng);
+        assert!(x.rows * packed.rows * (packed.cols / 2) >= PAR_MIN_MACS);
+        let serial = packed_gemm(&x, &packed);
+        let par = packed_gemm_par(&x, &packed, 4);
+        assert_eq!(serial.data, par.data, "parallel GEMM must bit-match serial");
+
+        let (packed, _) = random_sb24(1024, 1024, &mut rng);
+        let xv: Vec<f32> = (0..1024).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert!(packed.rows * (packed.cols / 2) >= PAR_MIN_MACS);
+        let serial = packed_gemv(&packed, &xv);
+        let par = packed_gemv_par(&packed, &xv, 4);
+        assert_eq!(serial, par, "parallel GEMV must bit-match serial");
+    }
+
+    #[test]
+    fn into_variants_write_in_place() {
+        let mut rng = Pcg32::seeded(11);
+        let (packed, _) = random_sb24(24, 64, &mut rng);
+        let x = Mat::random(3, 64, 1.0, &mut rng);
+        let want = packed_gemm(&x, &packed);
+        let mut y = Mat::zeros(3, 24);
+        packed_gemm_into(&x, &packed, &mut y);
+        assert_eq!(want.data, y.data);
+        let mut yv = vec![0.0f32; 24];
+        packed_gemv_into(&packed, x.row(1), &mut yv);
+        assert_eq!(yv, want.row(1));
+    }
+
+    #[test]
     fn gemm_2bit_matches_its_unpack() {
         let mut rng = Pcg32::seeded(2);
-        let w = Mat::random(24, 64, 1.0, &mut rng);
-        let q = Dense2Bit::quantize(&w);
-        let x = Mat::random(5, 64, 1.0, &mut rng);
-        let got = gemm_2bit(&x, &q);
-        let want = gemm_f32(&x, &q.unpack());
-        for (a, b) in got.data.iter().zip(&want.data) {
-            assert!((a - b).abs() < 1e-3);
+        // includes cols % 4 != 0 (unaligned row starts in the bit stream)
+        for (rows, cols, batch) in [(24usize, 64usize, 5usize), (5, 13, 2), (7, 31, 3)] {
+            let w = Mat::random(rows, cols, 1.0, &mut rng);
+            let q = Dense2Bit::quantize(&w);
+            let x = Mat::random(batch, cols, 1.0, &mut rng);
+            let got = gemm_2bit(&x, &q);
+            let want = gemm_f32(&x, &q.unpack());
+            for (a, b) in got.data.iter().zip(&want.data) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b} ({rows}x{cols})");
+            }
         }
     }
 

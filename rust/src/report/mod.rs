@@ -3,6 +3,7 @@
 //! sink under `reports/` for EXPERIMENTS.md bookkeeping.
 
 pub mod bench;
+pub mod kernels;
 
 use std::io::Write;
 use std::path::PathBuf;

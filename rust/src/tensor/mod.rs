@@ -313,8 +313,19 @@ pub fn gram(x: &Mat) -> Mat {
 
 /// y = A @ x for a vector x.
 pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0.0f32; a.rows];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// y = A @ x into caller-owned storage (the zero-allocation decode path);
+/// bit-identical to [`matvec`] — same `dot` per output row.
+pub fn matvec_into(a: &Mat, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols, x.len());
-    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+    assert_eq!(a.rows, y.len());
+    for (i, out) in y.iter_mut().enumerate() {
+        *out = dot(a.row(i), x);
+    }
 }
 
 #[cfg(test)]

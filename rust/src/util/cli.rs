@@ -70,8 +70,18 @@ impl Args {
     }
 
     /// Boolean flags used across the stbllm CLI / examples / benches.
-    pub const COMMON_FLAGS: [&'static str; 9] =
-        ["verbose", "fast", "full", "force", "help", "quiet", "native", "synthetic", "salient-aware"];
+    pub const COMMON_FLAGS: [&'static str; 10] = [
+        "verbose",
+        "fast",
+        "full",
+        "force",
+        "help",
+        "quiet",
+        "native",
+        "synthetic",
+        "salient-aware",
+        "smoke",
+    ];
 
     pub fn from_env() -> Args {
         Self::parse_with_flags(std::env::args().skip(1), &Self::COMMON_FLAGS)
