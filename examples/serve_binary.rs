@@ -2,9 +2,11 @@
 //! the `Engine` facade with the **packed** backend — the decode hot path
 //! runs `packed::gemm` kernels directly on the 6-bit/group store, never
 //! expanding weights to dense f32 — then serve a batched workload with
-//! continuous batching, reporting throughput, latency, TTFT and the
-//! weight-memory footprint (FP32 vs 2:4 packed). Also round-trips the
-//! `.stbp` deployment container and serves from the reloaded store.
+//! continuous batching over a **paged KV pool** (admission control, prefix
+//! caching, copy-on-write), reporting throughput, latency, TTFT, KV-pool
+//! occupancy and the weight-memory footprint (FP32 vs 2:4 packed). Also
+//! round-trips the `.stbp` deployment container and serves from the
+//! reloaded store.
 //!
 //! Run: `cargo run --release --example serve_binary [model] [requests]`
 
@@ -64,12 +66,15 @@ fn main() -> anyhow::Result<()> {
         backend.bits_per_weight()
     );
 
-    // batched serving: synthetic prompts from the prose corpus
+    // batched serving over a paged KV pool: sessions borrow fixed-size
+    // pages (16 token slots here) instead of owning flat worst-case
+    // buffers, so KV memory — the real capacity limit once weights are
+    // sub-1-bit — is admission-controlled and shared
     let prompt_len = 16;
     let max_new = 24;
     let reqs = engine.synthetic_workload(n_req, prompt_len, max_new);
     for batch in [1usize, 4] {
-        let server = BatchServer::new(&backend, batch);
+        let server = BatchServer::new(&backend, batch).with_kv_pool(0, 16);
         let (resps, stats) = server.run(reqs.clone())?;
         println!("\nbatch={batch}:");
         println!("  completed    : {}", stats.completed);
@@ -78,6 +83,12 @@ fn main() -> anyhow::Result<()> {
         println!("  p50 latency  : {:.1} ms", stats.p50_latency_s * 1e3);
         println!("  p95 latency  : {:.1} ms", stats.p95_latency_s * 1e3);
         println!("  mean TTFT    : {:.1} ms", stats.mean_ttft_s * 1e3);
+        if let Some(kv) = &stats.kv {
+            println!(
+                "  kv pool      : peak {} / {} pages ({} slots each), {} prefix page hits",
+                kv.peak_pages, kv.total_pages, kv.page_size, kv.prefix_hits
+            );
+        }
         if batch == 4 {
             let sample: String = resps[0].tokens.iter().map(|t| format!("{t} ")).collect();
             println!("  sample generation (token ids): {sample}");

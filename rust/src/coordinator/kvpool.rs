@@ -1,0 +1,747 @@
+//! Paged KV-cache pool — KV activation memory as a managed, shared resource.
+//!
+//! The flat serving path gives every decode session a private
+//! `(capacity, dim)` K and V matrix per layer, sized for the worst case; at
+//! sub-1-bit weight storage the KV cache, not the packed weights, is what
+//! caps how many sequences a node can admit. This module replaces the flat
+//! buffers with a vLLM-style block arena:
+//!
+//! * [`KvPool`] — a fixed budget of physical **pages** (each page holds
+//!   `page_size` token slots × `dim` floats of K and V for every layer),
+//!   with a free-list of recycled page buffers, reservation accounting for
+//!   admission control, and a prefix index for cross-session reuse.
+//! * [`PagedKv`] — one sequence's **page table**: an ordered list of
+//!   `Arc<KvPage>` handles the decode loop reads/writes through. Pages are
+//!   appended as the sequence grows and returned to the pool on drop.
+//! * **Prefix caching** — completed pages are registered under the exact
+//!   token history they encode; a new session whose prompt shares that
+//!   history maps the same physical pages read-only (K/V rows depend only
+//!   on the tokens at and before them, so reuse is exact). A session that
+//!   shares a page and then needs to write into it (divergence inside a
+//!   partially-reused page) gets a private copy first — copy-on-write.
+//!
+//! Accounting invariant: a page table never holds more pages than its
+//! reservation, and every physical page is either owned by a live table,
+//! shared between tables, or held only by the prefix index (and therefore
+//! evictable). Hence, once a reservation is granted, page allocation cannot
+//! fail — the pool evicts cached-only pages on demand and the residual
+//! physical count is bounded by the sum of live reservations.
+//!
+//! The decode hot paths (`DecodeState::step_ops`, `step_ops_batch`) access
+//! KV through this table with the same f32 values as the flat path, so
+//! paged decode is bit-identical to flat decode (pinned by
+//! `rust/tests/kv_paging.rs`).
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::model::config::ModelConfig;
+
+/// One physical KV page: `page_size` token slots of K and V rows for every
+/// layer, laid out `[layer][k=0|v=1][slot][dim]`. Deliberately NOT `Clone`:
+/// every physical page must be minted by `KvPool::alloc_page` so the
+/// reserved/physical accounting stays truthful.
+pub struct KvPage {
+    data: Vec<f32>,
+}
+
+/// Typed allocation/admission errors from the pool. `Exhausted` is
+/// transient (pages free up as sequences retire — back off and retry);
+/// `TooLarge` and `GeometryMismatch` are permanent for the request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum KvPoolError {
+    /// The reservation cannot be granted right now; retry after sequences
+    /// retire.
+    Exhausted { need_pages: usize, free_pages: usize, total_pages: usize },
+    /// The request can never fit, even in an empty pool.
+    TooLarge { need_pages: usize, total_pages: usize },
+    /// The pool was built for a different model shape.
+    GeometryMismatch { pool_dim: usize, model_dim: usize, pool_layers: usize, model_layers: usize },
+}
+
+impl fmt::Display for KvPoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KvPoolError::Exhausted { need_pages, free_pages, total_pages } => write!(
+                f,
+                "kv pool exhausted: need {need_pages} pages, {free_pages}/{total_pages} unreserved"
+            ),
+            KvPoolError::TooLarge { need_pages, total_pages } => write!(
+                f,
+                "request needs {need_pages} kv pages but the pool only has {total_pages}"
+            ),
+            KvPoolError::GeometryMismatch { pool_dim, model_dim, pool_layers, model_layers } => {
+                write!(
+                    f,
+                    "kv pool built for dim={pool_dim}/{pool_layers} layers, model has dim={model_dim}/{model_layers} layers"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvPoolError {}
+
+/// Pool counters, snapshot via [`KvPool::stats`] (also embedded in
+/// `ServerStats::kv` at the end of a serving run).
+#[derive(Clone, Debug, Default)]
+pub struct KvPoolStats {
+    pub total_pages: usize,
+    pub page_size: usize,
+    /// physical pages live right now (session-owned + shared + cached)
+    pub pages_in_use: usize,
+    /// pages promised to live sessions (admission-control budget)
+    pub pages_reserved: usize,
+    /// high-water mark of `pages_in_use`
+    pub peak_pages: usize,
+    /// fresh physical allocations over the pool's lifetime (incl. COW)
+    pub allocated_total: usize,
+    /// copy-on-write page duplications (divergence inside a shared page)
+    pub cow_copies: usize,
+    /// pages mapped from the prefix index into new sessions
+    pub prefix_hits: usize,
+    /// of which partially-valid tail pages (COW candidates)
+    pub prefix_hit_partial: usize,
+    /// tokens of KV recomputation skipped thanks to prefix hits
+    pub prefix_hit_tokens: usize,
+    /// completed pages registered in the prefix index
+    pub registered: usize,
+    /// cached-only pages dropped to make room for new allocations
+    pub evictions: usize,
+}
+
+struct PrefixEntry {
+    /// the exact token history `[0, (k+1)·page_size)` this page encodes
+    key: Vec<u8>,
+    page: Arc<KvPage>,
+    last_used: u64,
+}
+
+struct PoolInner {
+    reserved: usize,
+    physical: usize,
+    /// recycled page buffers (the free-list half of the arena)
+    free: Vec<Vec<f32>>,
+    index: Vec<PrefixEntry>,
+    /// logical clock for LRU bookkeeping
+    clock: u64,
+    stats: KvPoolStats,
+}
+
+/// A shared, fixed-budget arena of KV pages (see the module docs).
+///
+/// All methods take `&self`; the pool is `Sync` and intended to be shared
+/// as an `Arc<KvPool>` between a `BatchServer` and its decode sessions.
+pub struct KvPool {
+    dim: usize,
+    n_layers: usize,
+    page_size: usize,
+    total_pages: usize,
+    /// floats per page: `n_layers * 2 * page_size * dim`
+    page_floats: usize,
+    /// prefix-index entry cap (entries beyond it are LRU-dropped)
+    index_cap: usize,
+    inner: Mutex<PoolInner>,
+}
+
+impl KvPool {
+    /// Build a pool of `total_pages` pages of `page_size` token slots for
+    /// the given model shape. `page_size` must be a power of two (the row
+    /// lookup in the decode hot path is a shift + mask).
+    pub fn new(cfg: &ModelConfig, total_pages: usize, page_size: usize) -> KvPool {
+        assert!(page_size.is_power_of_two(), "page_size must be a power of two, got {page_size}");
+        assert!(total_pages > 0, "kv pool needs at least one page");
+        KvPool {
+            dim: cfg.dim,
+            n_layers: cfg.n_layers,
+            page_size,
+            total_pages,
+            page_floats: cfg.n_layers * 2 * page_size * cfg.dim,
+            index_cap: (2 * total_pages).max(8),
+            inner: Mutex::new(PoolInner {
+                reserved: 0,
+                physical: 0,
+                free: Vec::new(),
+                index: Vec::new(),
+                clock: 0,
+                stats: KvPoolStats::default(),
+            }),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Worst-case pages for a sequence of `tokens` tokens — the
+    /// pages-per-request formula: `ceil(tokens / page_size)`.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.page_size)
+    }
+
+    /// Would a reservation of `pages` be granted right now? (Admission
+    /// control peek; the authoritative check is [`PagedKv::new`], which
+    /// reserves atomically.)
+    pub fn can_reserve(&self, pages: usize) -> bool {
+        pages <= self.total_pages
+            && self.inner.lock().unwrap().reserved + pages <= self.total_pages
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> KvPoolStats {
+        let g = self.inner.lock().unwrap();
+        let mut s = g.stats.clone();
+        s.total_pages = self.total_pages;
+        s.page_size = self.page_size;
+        s.pages_in_use = g.physical;
+        s.pages_reserved = g.reserved;
+        s
+    }
+
+    fn check_geometry(&self, cfg: &ModelConfig) -> Result<(), KvPoolError> {
+        if cfg.dim != self.dim || cfg.n_layers != self.n_layers {
+            return Err(KvPoolError::GeometryMismatch {
+                pool_dim: self.dim,
+                model_dim: cfg.dim,
+                pool_layers: self.n_layers,
+                model_layers: cfg.n_layers,
+            });
+        }
+        Ok(())
+    }
+
+    fn try_reserve(&self, pages: usize) -> Result<(), KvPoolError> {
+        if pages > self.total_pages {
+            return Err(KvPoolError::TooLarge {
+                need_pages: pages,
+                total_pages: self.total_pages,
+            });
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.reserved + pages > self.total_pages {
+            return Err(KvPoolError::Exhausted {
+                need_pages: pages,
+                free_pages: self.total_pages - g.reserved,
+                total_pages: self.total_pages,
+            });
+        }
+        g.reserved += pages;
+        Ok(())
+    }
+
+    /// Allocate one physical page, evicting cached-only pages if the arena
+    /// is full. Panics if nothing is evictable — unreachable while every
+    /// caller allocates within a granted reservation (see module docs).
+    fn alloc_page(&self, cow: bool) -> KvPage {
+        let mut g = self.inner.lock().unwrap();
+        if g.physical >= self.total_pages {
+            let need = g.physical + 1 - self.total_pages;
+            Self::evict_locked(&mut g, need);
+        }
+        assert!(
+            g.physical < self.total_pages,
+            "kv pool over-committed: {}/{} physical pages live and none evictable \
+             (page allocated outside a reservation?)",
+            g.physical,
+            self.total_pages
+        );
+        g.physical += 1;
+        g.stats.allocated_total += 1;
+        if cow {
+            g.stats.cow_copies += 1;
+        }
+        if g.physical > g.stats.peak_pages {
+            g.stats.peak_pages = g.physical;
+        }
+        let data = g.free.pop().unwrap_or_else(|| vec![0.0f32; self.page_floats]);
+        KvPage { data }
+    }
+
+    /// Drop the least-recently-used cached-only index entries until `need`
+    /// physical pages have been freed (or nothing evictable remains).
+    fn evict_locked(g: &mut PoolInner, need: usize) {
+        let mut freed = 0usize;
+        while freed < need {
+            let mut lru: Option<usize> = None;
+            for (i, e) in g.index.iter().enumerate() {
+                // strong_count == 1 ⇒ only the index holds it ⇒ dropping
+                // the entry frees the physical page
+                if Arc::strong_count(&e.page) == 1
+                    && lru.is_none_or(|l| e.last_used < g.index[l].last_used)
+                {
+                    lru = Some(i);
+                }
+            }
+            let Some(i) = lru else { break };
+            let e = g.index.swap_remove(i);
+            if let Ok(pg) = Arc::try_unwrap(e.page) {
+                g.physical -= 1;
+                g.free.push(pg.data);
+                g.stats.evictions += 1;
+                freed += 1;
+            }
+        }
+    }
+
+    /// Return one page reference to the pool (the COW path replacing a
+    /// shared page). Frees the physical page iff this was the last holder.
+    fn release_one(&self, page: Arc<KvPage>) {
+        let mut g = self.inner.lock().unwrap();
+        Self::drop_ref_locked(&mut g, page);
+    }
+
+    /// Return a whole page table + its reservation (session teardown).
+    fn release(&self, pages: Vec<Arc<KvPage>>, reserved: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.reserved -= reserved.min(g.reserved);
+        for p in pages {
+            Self::drop_ref_locked(&mut g, p);
+        }
+    }
+
+    fn drop_ref_locked(g: &mut PoolInner, page: Arc<KvPage>) {
+        if Arc::strong_count(&page) == 1 {
+            if let Ok(pg) = Arc::try_unwrap(page) {
+                // empty pages are CoW placeholders that were never
+                // pool-accounted — dropping one must not skew `physical`
+                if !pg.data.is_empty() {
+                    g.physical -= 1;
+                    g.free.push(pg.data);
+                }
+            }
+        }
+        // count > 1: dropping `page` here just decrements; the page stays
+        // live in another table or the prefix index, and whoever drops the
+        // final reference routes through this accounting too
+    }
+
+    /// Register a completed page under the exact token `history` it
+    /// encodes. Same-key re-registrations (identical prompts computed
+    /// concurrently) keep a single cached copy.
+    fn register_prefix(&self, history: &[u8], page: &Arc<KvPage>) {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some(i) = g.index.iter().position(|e| e.key == history) {
+            let old = std::mem::replace(&mut g.index[i].page, page.clone());
+            g.index[i].last_used = clock;
+            Self::drop_ref_locked(&mut g, old);
+            return;
+        }
+        if g.index.len() >= self.index_cap {
+            let lru = g.index.iter().enumerate().min_by_key(|(_, e)| e.last_used).map(|(i, _)| i);
+            if let Some(i) = lru {
+                let e = g.index.swap_remove(i);
+                Self::drop_ref_locked(&mut g, e.page);
+            }
+        }
+        g.index.push(PrefixEntry { key: history.to_vec(), page: page.clone(), last_used: clock });
+        g.stats.registered += 1;
+    }
+
+    /// Map as many cached pages as match `prompt`, up to `max_tokens`
+    /// tokens: full pages via exact-key chain lookups at page boundaries,
+    /// then at most one partially-valid tail page from an entry whose
+    /// history extends ours (shared until the session writes into it —
+    /// that write copies, see [`PagedKv`]). Returns the mapped pages and
+    /// the number of tokens whose KV they already hold.
+    fn lookup_prefix(&self, prompt: &[u8], max_tokens: usize) -> (Vec<Arc<KvPage>>, usize) {
+        let ps = self.page_size;
+        let limit = max_tokens.min(prompt.len());
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let mut pages: Vec<Arc<KvPage>> = Vec::new();
+        let mut matched = 0usize;
+        while matched + ps <= limit {
+            let key = &prompt[..matched + ps];
+            let Some(i) = g.index.iter().position(|e| e.key == key) else { break };
+            g.index[i].last_used = clock;
+            pages.push(g.index[i].page.clone());
+            matched += ps;
+        }
+        if matched < limit {
+            // partial tail: the best entry covering [matched, matched+ps)
+            // whose history agrees with our prompt past `matched`
+            let mut best: Option<(usize, usize)> = None;
+            for (i, e) in g.index.iter().enumerate() {
+                if e.key.len() != matched + ps || e.key[..matched] != prompt[..matched] {
+                    continue;
+                }
+                let common = e.key[matched..]
+                    .iter()
+                    .zip(&prompt[matched..limit])
+                    .take_while(|(a, b)| a == b)
+                    .count();
+                if common > 0 && best.is_none_or(|(_, c)| common > c) {
+                    best = Some((i, common));
+                }
+            }
+            if let Some((i, common)) = best {
+                g.index[i].last_used = clock;
+                pages.push(g.index[i].page.clone());
+                matched += common;
+                g.stats.prefix_hit_partial += 1;
+            }
+        }
+        g.stats.prefix_hits += pages.len();
+        g.stats.prefix_hit_tokens += matched;
+        (pages, matched)
+    }
+}
+
+/// One sequence's page table over a shared [`KvPool`] — what a paged
+/// `DecodeState` reads and writes KV through.
+pub struct PagedKv {
+    pool: Arc<KvPool>,
+    table: Vec<Arc<KvPage>>,
+    /// pages reserved at creation (returned on drop)
+    reserved: usize,
+    /// tokens whose KV was mapped from the prefix cache at creation
+    matched: usize,
+    /// full token history (prompt prefix + every token stepped) — the
+    /// prefix-index key material
+    history: Vec<u8>,
+    // geometry copies so the hot row lookup never touches the pool lock
+    page_size: usize,
+    shift: u32,
+    mask: usize,
+    dim: usize,
+}
+
+impl PagedKv {
+    /// Reserve worst-case pages for `capacity_tokens` and map any cached
+    /// prefix of `prompt`. At most `prompt.len() - 1` tokens are reused so
+    /// the session always recomputes the last prompt token (the serving
+    /// loop needs its logits).
+    pub fn new(
+        pool: &Arc<KvPool>,
+        cfg: &ModelConfig,
+        capacity_tokens: usize,
+        prompt: &[u8],
+    ) -> Result<PagedKv, KvPoolError> {
+        pool.check_geometry(cfg)?;
+        let capacity = capacity_tokens.max(1);
+        let reserved = pool.pages_for(capacity);
+        pool.try_reserve(reserved)?;
+        let max_reuse = prompt.len().saturating_sub(1).min(capacity - 1);
+        let (table, matched) = pool.lookup_prefix(prompt, max_reuse);
+        Ok(PagedKv {
+            table,
+            reserved,
+            matched,
+            history: prompt[..matched].to_vec(),
+            page_size: pool.page_size,
+            shift: pool.page_size.trailing_zeros(),
+            mask: pool.page_size - 1,
+            dim: pool.dim,
+            pool: pool.clone(),
+        })
+    }
+
+    /// Tokens already covered by prefix-cache pages; the caller starts
+    /// decoding at this position.
+    pub fn matched(&self) -> usize {
+        self.matched
+    }
+
+    /// Pages currently mapped by this sequence.
+    pub fn pages_mapped(&self) -> usize {
+        self.table.len()
+    }
+
+    #[inline]
+    fn row_off(&self, li: usize, which: usize, slot: usize) -> usize {
+        ((li * 2 + which) * self.page_size + slot) * self.dim
+    }
+
+    /// K row for layer `li`, position `j` (must have been written).
+    #[inline]
+    pub fn k_row(&self, li: usize, j: usize) -> &[f32] {
+        let off = self.row_off(li, 0, j & self.mask);
+        &self.table[j >> self.shift].data[off..off + self.dim]
+    }
+
+    /// V row for layer `li`, position `j` (must have been written).
+    #[inline]
+    pub fn v_row(&self, li: usize, j: usize) -> &[f32] {
+        let off = self.row_off(li, 1, j & self.mask);
+        &self.table[j >> self.shift].data[off..off + self.dim]
+    }
+
+    /// Make page `pi` privately writable: append a fresh page when the
+    /// table ends at `pi`, or copy-on-write when the page is shared with
+    /// another table / the prefix index.
+    fn ensure_writable(&mut self, pi: usize) {
+        if pi == self.table.len() {
+            self.table.push(Arc::new(self.pool.alloc_page(false)));
+        } else if Arc::strong_count(&self.table[pi]) > 1 {
+            // Copy-on-write. Order matters: snapshot the shared rows and
+            // release OUR reference FIRST, so that when this session's own
+            // prefix mapping pins every cached page (full pool, all pages
+            // strong_count 2 via index + this table), the released page
+            // becomes cached-only and therefore evictable by the
+            // allocation below — otherwise the "infallible within a
+            // reservation" invariant would break and alloc_page would
+            // panic on a shared-prompt workload.
+            let src = self.table[pi].data.clone();
+            let old =
+                std::mem::replace(&mut self.table[pi], Arc::new(KvPage { data: Vec::new() }));
+            self.pool.release_one(old);
+            let mut fresh = self.pool.alloc_page(true);
+            fresh.data.copy_from_slice(&src);
+            self.table[pi] = Arc::new(fresh);
+        }
+        debug_assert!(pi < self.table.len(), "kv page table gap at page {pi}");
+    }
+
+    /// Write the K and V rows for position `p` of layer `li`.
+    pub(crate) fn write(&mut self, li: usize, p: usize, k: &[f32], v: &[f32]) {
+        let pi = p >> self.shift;
+        self.ensure_writable(pi);
+        let slot = p & self.mask;
+        let ko = self.row_off(li, 0, slot);
+        let vo = self.row_off(li, 1, slot);
+        let page = Arc::get_mut(&mut self.table[pi]).expect("page unique after ensure_writable");
+        page.data[ko..ko + self.dim].copy_from_slice(k);
+        page.data[vo..vo + self.dim].copy_from_slice(v);
+    }
+
+    /// Record that `tok`'s step completed (all layers written). When this
+    /// fills a page, the page is published to the pool's prefix index
+    /// under the exact token history it encodes.
+    pub(crate) fn on_token(&mut self, tok: u8) {
+        self.history.push(tok);
+        let n = self.history.len();
+        if n % self.page_size == 0 {
+            let pi = n / self.page_size - 1;
+            if let Some(page) = self.table.get(pi) {
+                self.pool.register_prefix(&self.history, page);
+            }
+        }
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.pool.release(std::mem::take(&mut self.table), self.reserved);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::Family;
+
+    /// Tiny geometry so page buffers stay small.
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "tiny".to_string(),
+            family: Family::Llama,
+            dim: 8,
+            n_layers: 2,
+            ffn_hidden: 16,
+            vocab: 32,
+            seq_len: 64,
+            window: 0,
+            norm_eps: 1e-5,
+            seed: 1,
+        }
+    }
+
+    fn krow(li: usize, p: usize) -> Vec<f32> {
+        (0..8usize).map(|d| (li * 1000 + p * 10 + d) as f32).collect()
+    }
+
+    fn vrow(li: usize, p: usize) -> Vec<f32> {
+        (0..8usize).map(|d| -((li * 1000 + p * 10 + d) as f32)).collect()
+    }
+
+    /// Step a PagedKv through `tokens`, writing deterministic rows.
+    fn run_seq(pool: &Arc<KvPool>, cfg: &ModelConfig, cap: usize, tokens: &[u8]) -> PagedKv {
+        let mut kv = PagedKv::new(pool, cfg, cap, tokens).unwrap();
+        for (p, &t) in tokens.iter().enumerate().skip(kv.matched()) {
+            for li in 0..cfg.n_layers {
+                kv.write(li, p, &krow(li, p), &vrow(li, p));
+            }
+            kv.on_token(t);
+        }
+        kv
+    }
+
+    #[test]
+    fn alloc_write_read_roundtrip_and_release() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 8, 4));
+        let toks: Vec<u8> = (0..10).collect();
+        let kv = run_seq(&pool, &cfg, 16, &toks);
+        assert_eq!(kv.pages_mapped(), 3); // 10 tokens / 4-slot pages
+        for p in 0..10 {
+            for li in 0..cfg.n_layers {
+                assert_eq!(kv.k_row(li, p), &krow(li, p)[..]);
+                assert_eq!(kv.v_row(li, p), &vrow(li, p)[..]);
+            }
+        }
+        let s = pool.stats();
+        assert_eq!(s.pages_in_use, 3);
+        assert_eq!(s.pages_reserved, 4); // ceil(16/4)
+        drop(kv);
+        let s = pool.stats();
+        // pages 0 and 1 completed → cached in the prefix index; page 2 died
+        assert_eq!(s.pages_reserved, 0);
+        assert_eq!(s.pages_in_use, 2);
+        assert_eq!(s.registered, 2);
+    }
+
+    #[test]
+    fn reservation_rejects_typed() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 4, 4));
+        // too large even for an empty pool
+        match PagedKv::new(&pool, &cfg, 100, &[]) {
+            Err(KvPoolError::TooLarge { need_pages: 25, total_pages: 4 }) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // exhausted after a live reservation takes the budget
+        let _a = PagedKv::new(&pool, &cfg, 12, &[]).unwrap(); // 3 pages
+        match PagedKv::new(&pool, &cfg, 8, &[]) {
+            Err(KvPoolError::Exhausted { need_pages: 2, free_pages: 1, total_pages: 4 }) => {}
+            other => panic!("expected Exhausted, got {other:?}"),
+        }
+        // and the error formats usefully
+        let e = KvPoolError::Exhausted { need_pages: 2, free_pages: 1, total_pages: 4 };
+        assert!(e.to_string().contains("1/4"));
+    }
+
+    #[test]
+    fn geometry_mismatch_is_typed() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 4, 4));
+        let mut other = tiny_cfg();
+        other.dim = 16;
+        match PagedKv::new(&pool, &other, 4, &[]) {
+            Err(KvPoolError::GeometryMismatch { pool_dim: 8, model_dim: 16, .. }) => {}
+            o => panic!("expected GeometryMismatch, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn prefix_reuse_shares_physical_pages() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 16, 4));
+        let toks: Vec<u8> = (10..22).collect(); // 12 tokens = 3 full pages
+        let a = run_seq(&pool, &cfg, 16, &toks);
+        let before = pool.stats().allocated_total;
+        // same prompt: reuse caps at prompt.len()-1 = 11 → pages 0,1 full
+        // plus a partial share of a's page 2 (rows 8..11)
+        let b = run_seq(&pool, &cfg, 16, &toks);
+        assert_eq!(b.matched(), 11);
+        let s = pool.stats();
+        assert!(s.prefix_hits >= 3, "prefix hits: {}", s.prefix_hits);
+        // b's only allocation is the copy-on-write of the shared tail page
+        // (it re-writes position 11 there)
+        assert_eq!(s.allocated_total - before, 1);
+        assert_eq!(s.cow_copies, 1);
+        // shared rows read back identically through both tables
+        for p in 0..8 {
+            assert_eq!(a.k_row(0, p), b.k_row(0, p));
+            assert_eq!(a.v_row(1, p), b.v_row(1, p));
+        }
+    }
+
+    #[test]
+    fn divergence_in_shared_page_copies_on_write() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 16, 4));
+        let toks_a: Vec<u8> = (0..12).collect();
+        let a = run_seq(&pool, &cfg, 16, &toks_a);
+        // b shares tokens 0..10 then diverges: full pages 0,1 + partial
+        // reuse of a's page 2 (rows 8,9 valid)
+        let mut toks_b: Vec<u8> = (0..12).collect();
+        toks_b[10] = 99;
+        let b = run_seq(&pool, &cfg, 16, &toks_b);
+        assert_eq!(b.matched(), 10);
+        let s = pool.stats();
+        assert_eq!(s.cow_copies, 1, "writing into the shared partial page must copy");
+        assert_eq!(s.prefix_hit_partial, 1);
+        // a's page 2 is untouched by b's divergent writes
+        for p in 8..12 {
+            assert_eq!(a.k_row(0, p), &krow(0, p)[..]);
+        }
+        // and b re-wrote its own rows 10.. in its private copy
+        assert_eq!(b.k_row(0, 11), &krow(0, 11)[..]);
+    }
+
+    /// Regression: a full pool whose every cached page is pinned by the
+    /// NEW session's own prefix mapping must still CoW without panicking —
+    /// releasing the session's reference first makes the cached copy
+    /// evictable, so the allocation stays within the reservation.
+    #[test]
+    fn cow_succeeds_when_own_prefix_mapping_pins_the_whole_pool() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 3, 4));
+        let toks: Vec<u8> = (0..12).collect();
+        drop(run_seq(&pool, &cfg, 12, &toks)); // 3 pages, all left cached
+        assert_eq!(pool.stats().pages_in_use, 3);
+        // identical sequence: maps all 3 cached pages (2 full + 1 partial,
+        // matched 11), then its first write CoWs the partial page while
+        // the pool is physically full
+        let b = run_seq(&pool, &cfg, 12, &toks);
+        assert_eq!(b.matched(), 11);
+        let s = pool.stats();
+        assert_eq!(s.cow_copies, 1);
+        assert!(s.evictions >= 1, "the released shared page must have been evicted");
+        assert!(s.pages_in_use <= 3);
+        assert_eq!(b.k_row(0, 11), &krow(0, 11)[..]);
+        assert_eq!(b.k_row(1, 9), &krow(1, 9)[..]); // shared rows intact
+    }
+
+    #[test]
+    fn eviction_reclaims_cached_pages_under_pressure() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 4, 4));
+        // fill the pool with cached pages from retired sequences
+        for seed in 0..2u8 {
+            let toks: Vec<u8> = (0..8).map(|t| t + seed * 50).collect();
+            drop(run_seq(&pool, &cfg, 8, &toks));
+        }
+        assert_eq!(pool.stats().pages_in_use, 4); // all cached
+        // a new sequence needs 3 fresh pages → evictions must make room
+        let toks: Vec<u8> = (100..110).collect();
+        let kv = run_seq(&pool, &cfg, 12, &toks);
+        assert_eq!(kv.pages_mapped(), 3);
+        let s = pool.stats();
+        assert!(s.evictions >= 2, "evictions: {}", s.evictions);
+        assert!(s.pages_in_use <= 4);
+    }
+
+    #[test]
+    fn free_list_recycles_buffers() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 2, 4));
+        // sequences of < one full page never register prefixes, so their
+        // pages die on drop and the buffers go back to the free list
+        for _ in 0..5 {
+            let kv = run_seq(&pool, &cfg, 4, &[1, 2, 3]);
+            assert_eq!(kv.pages_mapped(), 1);
+        }
+        let s = pool.stats();
+        assert_eq!(s.pages_in_use, 0);
+        assert_eq!(s.allocated_total, 5);
+        assert_eq!(s.peak_pages, 1);
+    }
+
+    #[test]
+    fn pages_for_formula() {
+        let cfg = tiny_cfg();
+        let pool = KvPool::new(&cfg, 4, 16);
+        assert_eq!(pool.pages_for(1), 1);
+        assert_eq!(pool.pages_for(16), 1);
+        assert_eq!(pool.pages_for(17), 2);
+        assert_eq!(pool.pages_for(0), 1); // degenerate: still one page
+    }
+}

@@ -8,10 +8,12 @@
 //! (`crate::engine`) is the canonical way to drive quantize → eval → serve.
 
 pub mod calib;
+pub mod kvpool;
 pub mod quantizer;
 pub mod scheduler;
 pub mod server;
 
 pub use calib::{calibrate, ModelCalib};
+pub use kvpool::{KvPool, KvPoolError, KvPoolStats, PagedKv};
 pub use quantizer::{quantize_model, Method, QuantizedModel};
-pub use server::{serve_channel, BatchServer, Request, Response, ServerStats};
+pub use server::{serve_channel, BatchServer, Request, Response, ServeError, ServerStats};

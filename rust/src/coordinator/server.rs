@@ -11,14 +11,28 @@
 //! request. `stbllm serve --backend packed` therefore drives the sub-1-bit
 //! packed GEMM end-to-end; `--backend native` uses the dense Rust forward.
 //! The usual construction path is `Engine::serve`.
+//!
+//! ## KV admission control
+//!
+//! With a [`KvPool`] attached ([`BatchServer::with_kv_pool`]), KV memory is
+//! a managed budget: a request is admitted only when the pool can reserve
+//! its worst-case pages (`ceil((prompt + max_new) / page_size)`). A request
+//! that cannot be covered *right now* waits at the head of the queue
+//! (backpressure) until running sequences retire; a request that could
+//! never fit is refused with a typed [`ServeError`] instead of panicking
+//! mid-decode. Sessions admitted against the pool also reuse prefix-cached
+//! pages from earlier sequences — their prefill skips straight past the
+//! reused tokens.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::engine::backend::{Backend, DecodeSession};
+use crate::coordinator::kvpool::{KvPool, KvPoolStats};
+use crate::engine::backend::{Backend, DecodeSession, SessionOpts};
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -39,6 +53,29 @@ pub struct Response {
     pub ttft_s: f64,
 }
 
+/// Typed admission refusal — returned in [`ServerStats::rejections`]
+/// instead of panicking mid-decode (the pre-pool server asserted
+/// `"KV cache capacity exceeded"` deep in the step loop).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's worst case (prompt + max_new tokens) can never fit
+    /// the server's KV capacity, even with nothing else running.
+    RequestTooLarge { id: u64, need_tokens: usize, capacity_tokens: usize },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::RequestTooLarge { id, need_tokens, capacity_tokens } => write!(
+                f,
+                "request {id} needs {need_tokens} KV tokens but capacity is {capacity_tokens}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
 /// Aggregate serving metrics.
 #[derive(Clone, Debug, Default)]
 pub struct ServerStats {
@@ -49,6 +86,16 @@ pub struct ServerStats {
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
     pub mean_ttft_s: f64,
+    /// requests refused at admission, each with its typed reason
+    pub rejections: Vec<ServeError>,
+    /// rejections issued while capacity was actually available — a bug
+    /// canary the `serve-smoke` CI gate asserts stays 0
+    pub rejected_with_capacity_free: usize,
+    /// admission attempts pushed back for lack of free KV pages
+    /// (backpressure events, not failures)
+    pub deferred: usize,
+    /// KV pool counters at end of run (`None` on flat serving)
+    pub kv: Option<KvPoolStats>,
 }
 
 impl ServerStats {
@@ -68,34 +115,134 @@ struct Active<'a> {
     last_logits: Vec<f32>,
 }
 
+/// Outcome of one admission attempt.
+enum Admission<'a> {
+    Admitted(Active<'a>),
+    /// Not enough free KV pages right now — the request goes back to the
+    /// head of the queue and waits for running sequences to retire.
+    Deferred(Request),
+    /// The request can never be served by this server's KV capacity.
+    Rejected(ServeError),
+}
+
 /// Synchronous batch server: processes a workload of requests with
 /// continuous batching and returns responses + stats. (The async façade
 /// `serve_channel` wraps this for streaming use.)
 pub struct BatchServer<'a> {
     pub backend: &'a dyn Backend,
     pub max_batch: usize,
+    /// per-session KV token capacity of the flat (pool-less) path
     pub kv_capacity: usize,
+    pool: Option<Arc<KvPool>>,
 }
 
 impl<'a> BatchServer<'a> {
     pub fn new(backend: &'a dyn Backend, max_batch: usize) -> Self {
         let kv_capacity = 4 * backend.cfg().seq_len;
-        BatchServer { backend, max_batch, kv_capacity }
+        BatchServer { backend, max_batch, kv_capacity, pool: None }
     }
 
-    fn admit(&self, req: Request, t0: Instant) -> Result<Active<'a>> {
-        Ok(Active {
-            session: self.backend.begin_decode(self.kv_capacity)?,
+    /// Attach an existing shared KV pool.
+    pub fn with_pool(mut self, pool: Arc<KvPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Attach a paged KV pool of `pages` pages of `page_size` token slots;
+    /// `pages == 0` auto-sizes to `max_batch` concurrent sessions at the
+    /// flat path's per-session capacity. No-op (flat serving, `stats.kv ==
+    /// None`) when the backend does not support paged sessions.
+    pub fn with_kv_pool(mut self, pages: usize, page_size: usize) -> Self {
+        if !self.backend.capabilities().paged_kv {
+            return self;
+        }
+        let pages = if pages == 0 {
+            self.max_batch.max(1) * self.kv_capacity.div_ceil(page_size)
+        } else {
+            pages
+        };
+        self.pool = Some(Arc::new(KvPool::new(self.backend.cfg(), pages, page_size)));
+        self
+    }
+
+    /// The attached KV pool, if any.
+    pub fn pool(&self) -> Option<&Arc<KvPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Try to admit `req`: open its decode session (paged against the pool
+    /// when one is attached, flat otherwise) or report why it cannot run.
+    fn admit(&self, req: Request, t0: Instant) -> Result<Admission<'a>> {
+        let need_tokens = req.prompt.len() + req.max_new;
+        let session = match &self.pool {
+            Some(pool) => {
+                let need_pages = pool.pages_for(need_tokens);
+                if need_pages > pool.total_pages() {
+                    return Ok(Admission::Rejected(ServeError::RequestTooLarge {
+                        id: req.id,
+                        need_tokens,
+                        capacity_tokens: pool.total_pages() * pool.page_size(),
+                    }));
+                }
+                if !pool.can_reserve(need_pages) {
+                    return Ok(Admission::Deferred(req));
+                }
+                let opts = SessionOpts {
+                    capacity: need_tokens,
+                    pool: Some(pool.clone()),
+                    prompt: &req.prompt,
+                };
+                match self.backend.begin_decode_with(&opts) {
+                    Ok(session) => session,
+                    // another server on a shared pool can win the
+                    // reservation between our can_reserve peek and the
+                    // session's atomic reserve — a now-exhausted pool is
+                    // backpressure, not a failure; genuine backend errors
+                    // (pool still reservable) propagate
+                    Err(_) if !pool.can_reserve(need_pages) => {
+                        return Ok(Admission::Deferred(req))
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            None => {
+                if need_tokens > self.kv_capacity {
+                    return Ok(Admission::Rejected(ServeError::RequestTooLarge {
+                        id: req.id,
+                        need_tokens,
+                        capacity_tokens: self.kv_capacity,
+                    }));
+                }
+                self.backend.begin_decode(self.kv_capacity)?
+            }
+        };
+        // prefix-cache hits come back with pos() > 0: prefill resumes
+        // right after the reused tokens
+        let prefill_pos = session.pos();
+        Ok(Admission::Admitted(Active {
+            session,
             produced: Vec::with_capacity(req.max_new),
             submitted: t0,
             first_token: None,
-            prefill_pos: 0,
+            prefill_pos,
             last_logits: Vec::new(),
             req,
-        })
+        }))
+    }
+
+    /// Would this rejection have fit after all? (Always false by
+    /// construction — kept as a live canary for the CI serving gate.)
+    fn capacity_was_free(&self, e: &ServeError) -> bool {
+        let ServeError::RequestTooLarge { need_tokens, .. } = e;
+        match &self.pool {
+            Some(pool) => pool.can_reserve(pool.pages_for(*need_tokens)),
+            None => *need_tokens <= self.kv_capacity,
+        }
     }
 
     /// Run the whole workload; returns responses in completion order.
+    /// Requests that can never fit the KV capacity are refused with a
+    /// typed entry in [`ServerStats::rejections`]; the rest are served.
     pub fn run(&self, workload: Vec<Request>) -> Result<(Vec<Response>, ServerStats)> {
         let wall0 = Instant::now();
         let mut queue: VecDeque<Request> = workload.into();
@@ -104,14 +251,40 @@ impl<'a> BatchServer<'a> {
         let mut latencies = Vec::new();
         let mut ttfts = Vec::new();
         let mut generated = 0usize;
+        let mut rejections: Vec<ServeError> = Vec::new();
+        let mut rejected_with_capacity_free = 0usize;
+        let mut deferred = 0usize;
 
         while !queue.is_empty() || !active.is_empty() {
-            // continuous batching: top up the active set
+            // continuous batching: top up the active set, respecting the
+            // KV pool's admission budget
             while active.len() < self.max_batch {
-                match queue.pop_front() {
-                    Some(r) => active.push(self.admit(r, Instant::now())?),
-                    None => break,
+                let Some(r) = queue.pop_front() else { break };
+                match self.admit(r, Instant::now())? {
+                    Admission::Admitted(a) => active.push(a),
+                    Admission::Deferred(r) => {
+                        // backpressure: head-of-line wait for pages to free
+                        queue.push_front(r);
+                        deferred += 1;
+                        break;
+                    }
+                    Admission::Rejected(e) => {
+                        if self.capacity_was_free(&e) {
+                            rejected_with_capacity_free += 1;
+                        }
+                        rejections.push(e);
+                    }
                 }
+            }
+            if active.is_empty() {
+                if queue.is_empty() {
+                    break;
+                }
+                // a deferred head with nothing running can only unblock via
+                // another server on a shared pool — yield instead of
+                // spinning hot
+                std::thread::yield_now();
+                continue;
             }
             // Phase 1: pick each active sequence's input token for this tick
             // (prefill consumes the prompt, decode feeds the greedy argmax);
@@ -189,6 +362,10 @@ impl<'a> BatchServer<'a> {
             p50_latency_s: percentile(&latencies, 50.0),
             p95_latency_s: percentile(&latencies, 95.0),
             mean_ttft_s: mean(&ttfts),
+            rejections,
+            rejected_with_capacity_free,
+            deferred,
+            kv: self.pool.as_ref().map(|p| p.stats()),
         };
         Ok((done, stats))
     }
@@ -340,6 +517,134 @@ mod tests {
         for (a, b) in fused.iter().zip(&solo) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.tokens, b.tokens, "req {}: fused tick must match solo decode", a.id);
+        }
+    }
+
+    /// A prompt that alone exceeds the KV capacity must surface as a typed
+    /// rejection, not a mid-decode panic (the old path asserted
+    /// `"KV cache capacity exceeded"` inside the step loop).
+    #[test]
+    fn oversized_request_rejected_typed_not_panicking() {
+        let (cfg, w) = tiny();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let mut server = BatchServer::new(&be, 2);
+        server.kv_capacity = 8;
+        let reqs = vec![
+            Request { id: 0, prompt: vec![1; 20], max_new: 4 }, // 24 > 8
+            Request { id: 1, prompt: vec![1, 2, 3], max_new: 2 },
+        ];
+        let (resps, stats) = server.run(reqs).unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].id, 1);
+        assert_eq!(
+            stats.rejections,
+            vec![ServeError::RequestTooLarge { id: 0, need_tokens: 24, capacity_tokens: 8 }]
+        );
+        assert_eq!(stats.rejected_with_capacity_free, 0);
+        assert!(stats.kv.is_none(), "flat serving reports no pool stats");
+    }
+
+    /// Paged serving (shared KV pool) must produce exactly the tokens flat
+    /// serving produces — same requests, same greedy continuations.
+    #[test]
+    fn paged_serving_matches_flat_serving() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 13);
+        let be = crate::engine::PackedBackend::from_weights(&cfg, &w).unwrap();
+        let reqs: Vec<Request> = (0..4)
+            .map(|id| Request { id, prompt: vec![2, 4, 6, (id % 3) as u8], max_new: 3 })
+            .collect();
+        let (mut flat, flat_stats) = BatchServer::new(&be, 2).run(reqs.clone()).unwrap();
+        let (mut paged, paged_stats) =
+            BatchServer::new(&be, 2).with_kv_pool(0, 8).run(reqs).unwrap();
+        assert!(flat_stats.kv.is_none());
+        let kv = paged_stats.kv.expect("paged serving must report pool stats");
+        assert!(kv.pages_in_use == 0 || kv.pages_in_use <= kv.total_pages);
+        assert!(kv.peak_pages > 0);
+        flat.sort_by_key(|r| r.id);
+        paged.sort_by_key(|r| r.id);
+        for (a, b) in flat.iter().zip(&paged) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "req {}: paged must match flat", a.id);
+        }
+    }
+
+    /// A pool that only covers one request at a time forces sequential
+    /// admission (backpressure) — everything still completes.
+    #[test]
+    fn pool_backpressure_defers_but_serves_all() {
+        let (cfg, w) = tiny();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        // each request: 4 prompt + 2 new = 6 tokens → 2 pages of 4; pool
+        // of 2 pages admits exactly one at a time
+        let pool = Arc::new(KvPool::new(&cfg, 2, 4));
+        let reqs: Vec<Request> =
+            (0..3).map(|id| Request { id, prompt: vec![5, 6, 7, 8], max_new: 2 }).collect();
+        let server = BatchServer::new(&be, 3).with_pool(pool);
+        let (resps, stats) = server.run(reqs).unwrap();
+        assert_eq!(resps.len(), 3);
+        assert!(stats.deferred > 0, "expected admission backpressure");
+        assert!(stats.rejections.is_empty());
+        let kv = stats.kv.unwrap();
+        assert!(kv.peak_pages <= 2, "peak {} exceeds the pool", kv.peak_pages);
+    }
+
+    /// With a pool attached, an impossible request is rejected up front
+    /// and the rest of the workload is unaffected.
+    #[test]
+    fn pool_rejects_never_fitting_request() {
+        let (cfg, w) = tiny();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let pool = Arc::new(KvPool::new(&cfg, 2, 4));
+        let reqs = vec![
+            Request { id: 7, prompt: vec![1; 30], max_new: 10 }, // 10 pages > 2
+            Request { id: 8, prompt: vec![1, 2], max_new: 2 },
+        ];
+        let (resps, stats) = BatchServer::new(&be, 2).with_pool(pool).run(reqs).unwrap();
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].id, 8);
+        assert_eq!(stats.rejections.len(), 1);
+        assert!(matches!(stats.rejections[0], ServeError::RequestTooLarge { id: 7, .. }));
+        assert_eq!(stats.rejected_with_capacity_free, 0);
+    }
+
+    /// Shared-prompt workload: later waves map the earlier waves' prefix
+    /// pages instead of recomputing them, so total page allocations stay
+    /// well under sessions × pages-per-request and the generated tokens
+    /// are untouched. (This is the `serve-smoke` CI gate's assertion,
+    /// pinned as a unit test.)
+    #[test]
+    fn shared_prompt_workload_reuses_prefix_pages() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 17);
+        let be = crate::engine::PackedBackend::from_weights(&cfg, &w).unwrap();
+        let prompt: Vec<u8> = (0..10).map(|i| (i * 5 % 32) as u8).collect();
+        let n_req = 4usize;
+        let max_new = 4usize;
+        let reqs: Vec<Request> = (0..n_req as u64)
+            .map(|id| Request { id, prompt: prompt.clone(), max_new })
+            .collect();
+        // max_batch 2 < n_req so the second wave sees the first wave's
+        // cached pages; page_size 4 so the 10-token prompt spans 2 full
+        // pages + a partial one
+        let server = BatchServer::new(&be, 2).with_kv_pool(0, 4);
+        let pages_per_req = server.pool().unwrap().pages_for(prompt.len() + max_new);
+        let (mut resps, stats) = server.run(reqs.clone()).unwrap();
+        assert_eq!(resps.len(), n_req);
+        let kv = stats.kv.unwrap();
+        assert!(kv.prefix_hits > 0, "second wave must hit the prefix cache");
+        assert!(
+            kv.allocated_total < n_req * pages_per_req,
+            "prefix caching saved nothing: {} allocs vs naive {}",
+            kv.allocated_total,
+            n_req * pages_per_req
+        );
+        // identical prompts under greedy decode → identical continuations,
+        // and they must match a pool-less reference run
+        let (flat, _) = BatchServer::new(&be, 2).run(reqs).unwrap();
+        resps.sort_by_key(|r| r.id);
+        for r in &resps {
+            assert_eq!(r.tokens, flat[0].tokens, "req {}", r.id);
         }
     }
 

@@ -9,8 +9,11 @@
 //!  * [`crate::engine::PackedBackend`] — every projection routed through the
 //!    sub-1-bit 2:4 packed kernels (`packed::gemm`), full forward + decode.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
+use crate::coordinator::kvpool::KvPool;
 use crate::model::config::ModelConfig;
 use crate::model::transformer::DecodeState;
 use crate::model::ModelWeights;
@@ -51,6 +54,31 @@ pub struct Capabilities {
     /// once per session). Backends without it still serve batches — the
     /// default `decode_batch` steps each session independently.
     pub fused_decode: bool,
+    /// [`Backend::begin_decode_with`] accepts a shared
+    /// [`KvPool`] — sessions borrow fixed-size KV pages (with prefix
+    /// reuse + copy-on-write) instead of owning flat buffers. The server
+    /// only attaches a pool when this is set.
+    pub paged_kv: bool,
+}
+
+/// How a decode session's KV cache should be provisioned — the argument of
+/// [`Backend::begin_decode_with`].
+pub struct SessionOpts<'p> {
+    /// Worst-case tokens this session may consume (prompt + generation).
+    pub capacity: usize,
+    /// When set, the session borrows pages from this pool instead of
+    /// allocating flat per-session KV buffers.
+    pub pool: Option<Arc<KvPool>>,
+    /// The upcoming token stream, used for prefix-cache lookup in paged
+    /// sessions (empty disables matching; ignored by flat sessions).
+    pub prompt: &'p [u8],
+}
+
+impl SessionOpts<'_> {
+    /// Flat per-session KV storage of `capacity` tokens (the legacy path).
+    pub fn flat(capacity: usize) -> SessionOpts<'static> {
+        SessionOpts { capacity, pool: None, prompt: &[] }
+    }
 }
 
 /// An in-flight decode sequence (one KV cache) created by a backend.
@@ -83,8 +111,21 @@ pub trait Backend: Sync {
     fn capabilities(&self) -> Capabilities;
     /// Full-sequence forward: tokens → logits (S, vocab).
     fn forward(&self, tokens: &[u8]) -> Result<Mat>;
-    /// Start an incremental decode with the given KV capacity.
+    /// Start an incremental decode with the given KV capacity (flat
+    /// per-session KV storage).
     fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>>;
+    /// Start an incremental decode from full session options — in
+    /// particular against a shared paged [`KvPool`]. Backends reporting
+    /// [`Capabilities::paged_kv`] override this; the default only accepts
+    /// flat options. Paged sessions may come back with `pos() > 0` when
+    /// the pool's prefix cache already covers the head of `opts.prompt` —
+    /// the caller resumes feeding at `prompt[pos()..]`.
+    fn begin_decode_with(&self, opts: &SessionOpts<'_>) -> Result<Box<dyn DecodeSession + '_>> {
+        if opts.pool.is_some() {
+            anyhow::bail!("{} backend does not support paged KV sessions", self.label());
+        }
+        self.begin_decode(opts.capacity)
+    }
     /// Step several sessions one token each (`sessions[i]` consumes
     /// `tokens[i]`); returns per-session logits. The default steps each
     /// session independently; backends reporting

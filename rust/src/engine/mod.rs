@@ -35,7 +35,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-pub use backend::{Backend, Capabilities, DecodeSession};
+pub use backend::{Backend, Capabilities, DecodeSession, SessionOpts};
 pub use native::NativeBackend;
 pub use packed::PackedBackend;
 pub use pjrt::PjrtBackend;
@@ -166,6 +166,9 @@ pub struct EngineBuilder {
     eval_tokens: usize,
     max_batch: usize,
     workers: usize,
+    kv_pages: usize,
+    page_size: usize,
+    flat_kv: bool,
     synthetic_fallback: bool,
     backend_fallback: bool,
 }
@@ -181,6 +184,9 @@ impl Default for EngineBuilder {
             eval_tokens: defaults::EVAL_TOKENS,
             max_batch: defaults::MAX_BATCH,
             workers: defaults::WORKERS,
+            kv_pages: defaults::KV_PAGES,
+            page_size: defaults::PAGE_SIZE,
+            flat_kv: false,
             synthetic_fallback: false,
             backend_fallback: false,
         }
@@ -225,6 +231,26 @@ impl EngineBuilder {
 
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
+        self
+    }
+
+    /// KV pool size in pages for paged serving; `0` (the default)
+    /// auto-sizes to `max_batch` concurrent worst-case sessions.
+    pub fn kv_pages(mut self, n: usize) -> Self {
+        self.kv_pages = n;
+        self
+    }
+
+    /// KV page size in token slots (must be a power of two).
+    pub fn page_size(mut self, n: usize) -> Self {
+        self.page_size = n;
+        self
+    }
+
+    /// Opt out of the paged KV pool: serve with flat per-session KV
+    /// buffers (the legacy path; results are bit-identical either way).
+    pub fn flat_kv(mut self, yes: bool) -> Self {
+        self.flat_kv = yes;
         self
     }
 
@@ -276,9 +302,16 @@ impl EngineBuilder {
             None => synthetic_model(&self.model)?,
         };
 
-        // 2. validate the calibration corpus before spending quantize time
+        // 2. validate the calibration corpus / serving knobs before
+        //    spending quantize time
         if corpus::spec_by_name(&self.calib_corpus).is_none() {
             return Err(EngineError::UnknownCorpus(self.calib_corpus.clone()));
+        }
+        if !self.page_size.is_power_of_two() {
+            return Err(EngineError::InvalidOption {
+                option: "page-size",
+                value: self.page_size.to_string(),
+            });
         }
 
         // 3. calibrate + quantize
@@ -341,6 +374,9 @@ impl EngineBuilder {
             max_batch: self.max_batch,
             eval_tokens: self.eval_tokens,
             workers: self.workers,
+            kv_pages: self.kv_pages,
+            page_size: self.page_size,
+            flat_kv: self.flat_kv,
         })
     }
 }
@@ -395,6 +431,12 @@ pub struct Engine {
     /// thread budget shared by quantization, the packed kernels and the
     /// window-parallel evaluation (`--workers`)
     workers: usize,
+    /// paged serving: KV pool size in pages (0 = auto)
+    kv_pages: usize,
+    /// paged serving: token slots per page (power of two)
+    page_size: usize,
+    /// serve with flat per-session KV buffers instead of the pool
+    flat_kv: bool,
 }
 
 impl Engine {
@@ -452,6 +494,12 @@ impl Engine {
 
     /// Serve a workload with continuous batching through the backend's
     /// decode path; returns responses + aggregate [`ServerStats`].
+    ///
+    /// By default KV memory is managed as a paged pool (admission control,
+    /// prefix caching, copy-on-write — see `coordinator::kvpool`) whenever
+    /// the backend supports it; `.flat_kv(true)` on the builder restores
+    /// flat per-session buffers. Generated tokens are bit-identical either
+    /// way.
     pub fn serve(&self, requests: Vec<Request>) -> Result<(Vec<crate::coordinator::Response>, ServerStats)> {
         if !self.backend.capabilities().decode {
             return Err(EngineError::Unsupported {
@@ -460,7 +508,10 @@ impl Engine {
             }
             .into());
         }
-        let server = BatchServer::new(self.backend.as_ref(), self.max_batch);
+        let mut server = BatchServer::new(self.backend.as_ref(), self.max_batch);
+        if !self.flat_kv {
+            server = server.with_kv_pool(self.kv_pages, self.page_size);
+        }
         server.run(requests)
     }
 
@@ -617,6 +668,19 @@ mod tests {
                 assert!(!known.is_empty());
             }
             other => panic!("expected UnknownModel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn builder_rejects_non_power_of_two_page_size() {
+        let r = Engine::builder()
+            .model("llama1-7b")
+            .page_size(12)
+            .synthetic_fallback(true)
+            .build();
+        match r.err().expect("must not build") {
+            EngineError::InvalidOption { option: "page-size", value } => assert_eq!(value, "12"),
+            other => panic!("expected InvalidOption(page-size), got {other:?}"),
         }
     }
 

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::engine::backend::{Backend, Capabilities, DecodeSession, WeightsRef};
+use crate::engine::backend::{Backend, Capabilities, DecodeSession, SessionOpts, WeightsRef};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::{self, DecodeState};
 use crate::model::ModelWeights;
@@ -64,6 +64,7 @@ impl Backend for NativeBackend<'_> {
             // dense `proj` (matmul_bt) is not row-wise bit-consistent with
             // `proj_vec` (matvec), so native keeps per-session stepping
             fused_decode: false,
+            paged_kv: true,
         }
     }
 
@@ -73,6 +74,14 @@ impl Backend for NativeBackend<'_> {
 
     fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>> {
         Ok(Box::new(NativeSession { be: self, st: DecodeState::new(&self.cfg, capacity) }))
+    }
+
+    fn begin_decode_with(&self, opts: &SessionOpts<'_>) -> Result<Box<dyn DecodeSession + '_>> {
+        let st = match &opts.pool {
+            Some(pool) => DecodeState::new_paged(&self.cfg, opts.capacity, pool, opts.prompt)?,
+            None => DecodeState::new(&self.cfg, opts.capacity),
+        };
+        Ok(Box::new(NativeSession { be: self, st }))
     }
 }
 

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{Context, Result};
 
-use crate::engine::backend::{Backend, Capabilities, DecodeSession};
+use crate::engine::backend::{Backend, Capabilities, DecodeSession, SessionOpts};
 use crate::model::config::ModelConfig;
 use crate::model::transformer::{self, DecodeState, ModelOps};
 use crate::model::ModelWeights;
@@ -167,6 +167,7 @@ impl Backend for PackedBackend {
             fixed_seq_len: None,
             sub_1bit_storage: true,
             fused_decode: true,
+            paged_kv: true,
         }
     }
 
@@ -176,6 +177,14 @@ impl Backend for PackedBackend {
 
     fn begin_decode(&self, capacity: usize) -> Result<Box<dyn DecodeSession + '_>> {
         Ok(Box::new(PackedSession { be: self, st: DecodeState::new(&self.cfg, capacity) }))
+    }
+
+    fn begin_decode_with(&self, opts: &SessionOpts<'_>) -> Result<Box<dyn DecodeSession + '_>> {
+        let st = match &opts.pool {
+            Some(pool) => DecodeState::new_paged(&self.cfg, opts.capacity, pool, opts.prompt)?,
+            None => DecodeState::new(&self.cfg, opts.capacity),
+        };
+        Ok(Box::new(PackedSession { be: self, st }))
     }
 
     /// Fused cross-session tick: one packed GEMM per projection over the

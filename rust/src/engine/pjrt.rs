@@ -111,6 +111,8 @@ impl Backend for PjrtBackend<'_> {
             fixed_seq_len: Some(self.cfg.seq_len),
             sub_1bit_storage: false,
             fused_decode: false,
+            // no decode path at all, so no paged-KV sessions either
+            paged_kv: false,
         }
     }
 

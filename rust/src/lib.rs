@@ -33,5 +33,5 @@ pub mod util;
 // entry point for downstream users.
 pub use engine::{
     Backend, BackendKind, Capabilities, DecodeSession, Engine, EngineBuilder, EngineError,
-    NativeBackend, PackedBackend, PjrtBackend,
+    NativeBackend, PackedBackend, PjrtBackend, SessionOpts,
 };

@@ -19,10 +19,13 @@
 
 use anyhow::{bail, Result};
 
-use stbllm::engine::{method_from_args, BackendKind, Engine};
+use stbllm::coordinator::{BatchServer, Request, ServerStats};
+use stbllm::engine::{method_from_args, BackendKind, Engine, PackedBackend};
+use stbllm::packed::PackedModel;
 use stbllm::report::fmt_ppl;
 use stbllm::runtime::Artifacts;
 use stbllm::util::cli::{defaults, Args};
+use stbllm::util::json::{num, obj, Json};
 
 fn main() {
     let args = Args::from_env();
@@ -68,7 +71,9 @@ COMMANDS
   eval        perplexity on a corpus (PJRT AOT path when available, else
               native; --native / --backend X to pin one)
   zeroshot    7-task zero-shot accuracy suite
-  serve       batched-serving smoke run (continuous batching + metrics)
+  serve       batched serving: continuous batching over a paged KV pool
+              (admission control + prefix caching; --flat-kv for the
+              legacy per-session buffers; --smoke runs the CI gate)
   flip        sign-flip redundancy study (Fig. 1)
   bench-kernels
               packed-kernel perf suite -> reports/BENCH_kernels.json
@@ -90,6 +95,17 @@ OPTIONS
   --batch B          serve: max batch size (default {batch})
   --prompt N         serve: prompt length (default {prompt})
   --max-new N        serve: generated tokens per request (default {max_new})
+  --kv-pages N       serve: KV pool size in pages; 0 = auto-size to the
+                     batch's worst case (default {kv_pages})
+  --page-size N      serve: token slots per KV page, power of two
+                     (default {page_size}); pages/request =
+                     ceil((prompt + max-new) / page-size)
+  --flat-kv          serve: disable the paged pool (flat per-session KV)
+  --stbp PATH        serve: save + reload the .stbp deployment container
+                     and serve from the reloaded store (packed backend)
+  --stats-json PATH  serve: write ServerStats (+ KV pool counters) as JSON
+  --smoke            serve: scripted shared-prompt workload + CI gate
+                     (asserts prefix reuse saves pages, no bad rejections)
   --ratio R          flip: fraction of signs to flip (default {ratio})
   --workers N        thread budget: quantization jobs, packed `_par` kernels,
                      window-parallel eval (default {workers})
@@ -115,6 +131,8 @@ OPTIONS
         max_new = defaults::MAX_NEW,
         ratio = defaults::FLIP_RATIO,
         workers = defaults::WORKERS,
+        kv_pages = defaults::KV_PAGES,
+        page_size = defaults::PAGE_SIZE,
     )
 }
 
@@ -140,6 +158,9 @@ fn build_engine(args: &Args, backend_default: &str) -> Result<Engine> {
         .eval_tokens(args.get_usize("eval-tokens", defaults::EVAL_TOKENS))
         .max_batch(args.get_usize("batch", defaults::MAX_BATCH))
         .workers(args.get_usize("workers", defaults::WORKERS))
+        .kv_pages(args.get_usize("kv-pages", defaults::KV_PAGES))
+        .page_size(args.get_usize("page-size", defaults::PAGE_SIZE))
+        .flat_kv(args.flag("flat-kv"))
         .synthetic_fallback(args.flag("synthetic"))
         .build()?;
     Ok(engine)
@@ -218,12 +239,64 @@ fn zeroshot_cmd(args: &Args) -> Result<()> {
 
 fn serve(args: &Args) -> Result<()> {
     let engine = build_engine(args, defaults::SERVE_BACKEND)?;
+    let smoke = args.flag("smoke");
     let n_req = args.get_usize("requests", defaults::SERVE_REQUESTS);
     let batch = args.get_usize("batch", defaults::MAX_BATCH);
-    let prompt_len = args.get_usize("prompt", defaults::PROMPT_LEN);
+    let page_size = args.get_usize("page-size", defaults::PAGE_SIZE);
+    let kv_pages = args.get_usize("kv-pages", defaults::KV_PAGES);
+    let flat_kv = args.flag("flat-kv");
+    // smoke default: a prompt spanning several pages so prefix reuse shows
+    let prompt_len = args
+        .get_usize("prompt", if smoke { page_size * 5 / 2 } else { defaults::PROMPT_LEN });
     let max_new = args.get_usize("max-new", defaults::MAX_NEW);
-    let reqs = engine.synthetic_workload(n_req, prompt_len, max_new);
-    let (_, stats) = engine.serve(reqs)?;
+
+    let reqs = if smoke {
+        if n_req <= batch {
+            bail!(
+                "serve --smoke needs --requests > --batch so later admission waves \
+                 can hit the prefix cache (got {n_req} <= {batch})"
+            );
+        }
+        // scripted workload: every request decodes the SAME prompt, so
+        // prefix caching has something to share across admission waves
+        let proto = engine.synthetic_workload(1, prompt_len, max_new).remove(0);
+        (0..n_req as u64)
+            .map(|id| Request { id, prompt: proto.prompt.clone(), max_new })
+            .collect()
+    } else {
+        engine.synthetic_workload(n_req, prompt_len, max_new)
+    };
+
+    // --stbp PATH: exercise the deployment container end-to-end — save the
+    // quantized model, reload it, and serve from the RELOADED store
+    let (resps, stats) = if let Some(path) = args.get("stbp") {
+        if engine.backend().label() != "packed" {
+            bail!("--stbp requires --backend packed (got {})", engine.backend().label());
+        }
+        let path = std::path::Path::new(path);
+        // note: this re-packs the quantized weights (the engine's own
+        // packed backend packed them once already at build) — accepted so
+        // the saved container comes from the public PackedModel path the
+        // deployment docs describe; the CI smoke model is tiny
+        let pm = PackedModel::from_weights(engine.cfg(), engine.weights())?;
+        pm.save(path)?;
+        let store = PackedModel::load(path)?;
+        let be = PackedBackend::from_store(engine.cfg(), &store)?
+            .with_workers(args.get_usize("workers", defaults::WORKERS).max(1));
+        println!(
+            "serving from reloaded {} ({:.2} bits/weight resident)",
+            path.display(),
+            be.bits_per_weight()
+        );
+        let mut server = BatchServer::new(&be, batch);
+        if !flat_kv {
+            server = server.with_kv_pool(kv_pages, page_size);
+        }
+        server.run(reqs)?
+    } else {
+        engine.serve(reqs)?
+    };
+
     let r = engine.quantize();
     println!(
         "serve {} [{}, {:.2} bits, {} backend] batch={batch}:",
@@ -238,7 +311,117 @@ fn serve(args: &Args) -> Result<()> {
     println!("  p50 latency    : {:.1} ms", stats.p50_latency_s * 1e3);
     println!("  p95 latency    : {:.1} ms", stats.p95_latency_s * 1e3);
     println!("  mean TTFT      : {:.1} ms", stats.mean_ttft_s * 1e3);
+    if let Some(kv) = &stats.kv {
+        println!(
+            "  kv pool        : {} pages x {} slots, peak {} in use",
+            kv.total_pages, kv.page_size, kv.peak_pages
+        );
+        println!(
+            "  prefix cache   : {} page hits ({} tokens skipped), {} CoW copies",
+            kv.prefix_hits, kv.prefix_hit_tokens, kv.cow_copies
+        );
+        println!(
+            "  admission      : {} deferred, {} rejected",
+            stats.deferred,
+            stats.rejections.len()
+        );
+    }
+    for e in &stats.rejections {
+        println!("  rejected       : {e}");
+    }
+
+    // stats JSON (always written before the smoke gate so CI can upload
+    // the artifact even when the gate fails)
+    let json_path = match args.get("stats-json") {
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None if smoke => Some(stbllm::report::reports_dir().join("SERVE_stats.json")),
+        None => None,
+    };
+    if let Some(p) = json_path {
+        if let Some(dir) = p.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&p, serve_stats_json(&stats))?;
+        println!("stats JSON -> {}", p.display());
+    }
+
+    if smoke {
+        let pages_per_req = (prompt_len + max_new).div_ceil(page_size);
+        if stats.completed != n_req {
+            bail!("serve smoke gate FAILED: {}/{} requests completed", stats.completed, n_req);
+        }
+        if stats.rejected_with_capacity_free != 0 {
+            bail!(
+                "serve smoke gate FAILED: {} requests rejected while capacity was free",
+                stats.rejected_with_capacity_free
+            );
+        }
+        let Some(kv) = stats.kv.as_ref() else {
+            bail!("serve smoke gate FAILED: paged serving required (drop --flat-kv)");
+        };
+        if kv.prefix_hits == 0 {
+            bail!("serve smoke gate FAILED: shared-prompt workload never hit the prefix cache");
+        }
+        if kv.allocated_total >= n_req * pages_per_req {
+            bail!(
+                "serve smoke gate FAILED: {} pages allocated — no better than the \
+                 {} (= {} sessions x {} pages/request) a pool without prefix sharing would use",
+                kv.allocated_total,
+                n_req * pages_per_req,
+                n_req,
+                pages_per_req
+            );
+        }
+        // identical prompts + greedy decode ⇒ identical continuations;
+        // divergence would mean prefix reuse corrupted the KV stream
+        if resps.iter().any(|r| r.tokens != resps[0].tokens) {
+            bail!("serve smoke gate FAILED: divergent generations for identical prompts");
+        }
+        println!(
+            "serve smoke gate OK: {} completed, 0 bad rejections, {} prefix page hits, \
+             {} pages allocated (naive {})",
+            stats.completed,
+            kv.prefix_hits,
+            kv.allocated_total,
+            n_req * pages_per_req
+        );
+    }
     Ok(())
+}
+
+/// Flatten [`ServerStats`] (+ KV pool counters) into the stats JSON the
+/// `serve-smoke` CI job uploads.
+fn serve_stats_json(stats: &ServerStats) -> String {
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("completed", num(stats.completed as f64)),
+        ("generated_tokens", num(stats.generated_tokens as f64)),
+        ("tokens_per_s", num(stats.tokens_per_s())),
+        ("wall_s", num(stats.wall_s)),
+        ("mean_latency_s", num(stats.mean_latency_s)),
+        ("p50_latency_s", num(stats.p50_latency_s)),
+        ("p95_latency_s", num(stats.p95_latency_s)),
+        ("mean_ttft_s", num(stats.mean_ttft_s)),
+        ("rejected", num(stats.rejections.len() as f64)),
+        ("rejected_with_capacity_free", num(stats.rejected_with_capacity_free as f64)),
+        ("deferred", num(stats.deferred as f64)),
+    ];
+    if let Some(kv) = &stats.kv {
+        fields.push((
+            "kv",
+            obj(vec![
+                ("total_pages", num(kv.total_pages as f64)),
+                ("page_size", num(kv.page_size as f64)),
+                ("pages_in_use", num(kv.pages_in_use as f64)),
+                ("peak_pages", num(kv.peak_pages as f64)),
+                ("allocated_total", num(kv.allocated_total as f64)),
+                ("cow_copies", num(kv.cow_copies as f64)),
+                ("prefix_hits", num(kv.prefix_hits as f64)),
+                ("prefix_hit_tokens", num(kv.prefix_hit_tokens as f64)),
+                ("evictions", num(kv.evictions as f64)),
+            ]),
+        ));
+    }
+    obj(fields).dump()
 }
 
 fn flip(args: &Args) -> Result<()> {

@@ -13,6 +13,9 @@
 //! (see `engine::packed`), so quantized deployment artifacts run the exact
 //! same attention/FFN code as full-precision weights.
 
+use std::sync::Arc;
+
+use crate::coordinator::kvpool::{KvPool, KvPoolError, PagedKv};
 use crate::model::config::{Family, ModelConfig, HEAD_DIM, ROPE_THETA};
 use crate::model::weights::{LayerWeights, ModelWeights};
 use crate::tensor::{matmul_bt, Mat};
@@ -338,11 +341,64 @@ pub fn model_fwd_with_taps(
 // Incremental decoding (serving hot path)
 // ---------------------------------------------------------------------------
 
-/// Per-layer KV cache for one sequence.
+/// Per-layer KV cache for one sequence (the flat, session-private layout).
 pub struct KvCache {
     pub k: Mat, // (capacity, dim)
     pub v: Mat,
     pub len: usize,
+}
+
+/// Where a sequence's KV rows live: session-private flat matrices, or a
+/// page table borrowing fixed-size pages from a shared
+/// [`crate::coordinator::KvPool`] (with prefix reuse + copy-on-write).
+/// Both variants store identical f32 rows, so the decode math below is
+/// bit-identical across them.
+pub enum KvStore {
+    Flat(Vec<KvCache>),
+    Paged(PagedKv),
+}
+
+impl KvStore {
+    /// K row for layer `li`, position `j` (must already be written).
+    #[inline]
+    pub fn k_row(&self, li: usize, j: usize) -> &[f32] {
+        match self {
+            KvStore::Flat(c) => c[li].k.row(j),
+            KvStore::Paged(p) => p.k_row(li, j),
+        }
+    }
+
+    /// V row for layer `li`, position `j` (must already be written).
+    #[inline]
+    pub fn v_row(&self, li: usize, j: usize) -> &[f32] {
+        match self {
+            KvStore::Flat(c) => c[li].v.row(j),
+            KvStore::Paged(p) => p.v_row(li, j),
+        }
+    }
+
+    /// Store the K and V rows for position `p` of layer `li`.
+    #[inline]
+    pub fn write(&mut self, li: usize, p: usize, k: &[f32], v: &[f32]) {
+        match self {
+            KvStore::Flat(c) => {
+                let cache = &mut c[li];
+                cache.k.row_mut(p).copy_from_slice(k);
+                cache.v.row_mut(p).copy_from_slice(v);
+                cache.len = p + 1;
+            }
+            KvStore::Paged(pg) => pg.write(li, p, k, v),
+        }
+    }
+
+    /// Hook run after a full token step (all layers written): paged stores
+    /// publish completed pages to the prefix cache.
+    #[inline]
+    fn on_token(&mut self, tok: u8) {
+        if let KvStore::Paged(p) = self {
+            p.on_token(tok);
+        }
+    }
 }
 
 /// Reusable per-session buffers for the decode step — one allocation at
@@ -393,9 +449,9 @@ impl DecodeScratch {
     }
 }
 
-/// Decode state: caches for all layers + current position.
+/// Decode state: KV storage for all layers + current position.
 pub struct DecodeState {
-    pub caches: Vec<KvCache>,
+    pub kv: KvStore,
     pub pos: usize,
     capacity: usize,
     /// RoPE tables precomputed to capacity (§Perf L3: recomputing per step
@@ -406,20 +462,47 @@ pub struct DecodeState {
 }
 
 impl DecodeState {
+    /// Flat (session-private) KV storage, zero-initialized to `capacity`.
     pub fn new(cfg: &ModelConfig, capacity: usize) -> DecodeState {
         DecodeState {
-            caches: (0..cfg.n_layers)
-                .map(|_| KvCache {
-                    k: Mat::zeros(capacity, cfg.dim),
-                    v: Mat::zeros(capacity, cfg.dim),
-                    len: 0,
-                })
-                .collect(),
+            kv: KvStore::Flat(
+                (0..cfg.n_layers)
+                    .map(|_| KvCache {
+                        k: Mat::zeros(capacity, cfg.dim),
+                        v: Mat::zeros(capacity, cfg.dim),
+                        len: 0,
+                    })
+                    .collect(),
+            ),
             pos: 0,
             capacity,
             rope: rope_tables(capacity),
             scratch: DecodeScratch::new(cfg, capacity),
         }
+    }
+
+    /// Paged KV storage borrowing pages from a shared pool. Reserves
+    /// worst-case pages for `capacity` tokens up front (typed error when
+    /// the pool cannot cover them) and maps any prefix of `prompt` already
+    /// cached by earlier sessions — the returned state then starts at
+    /// `pos == matched`, and the caller feeds `prompt[matched..]` onward.
+    /// Logits are bit-identical to the flat path for the same token
+    /// stream.
+    pub fn new_paged(
+        cfg: &ModelConfig,
+        capacity: usize,
+        pool: &Arc<KvPool>,
+        prompt: &[u8],
+    ) -> Result<DecodeState, KvPoolError> {
+        let paged = PagedKv::new(pool, cfg, capacity, prompt)?;
+        let pos = paged.matched();
+        Ok(DecodeState {
+            kv: KvStore::Paged(paged),
+            pos,
+            capacity,
+            rope: rope_tables(capacity),
+            scratch: DecodeScratch::new(cfg, capacity),
+        })
     }
 
     /// Process one token through dense weights; returns logits over the
@@ -459,10 +542,7 @@ impl DecodeState {
                     apply_rope_vec(&mut sc.k[h * HEAD_DIM..(h + 1) * HEAD_DIM], cos, sin, p);
                 }
             }
-            let cache = &mut self.caches[li];
-            cache.k.row_mut(p).copy_from_slice(&sc.k);
-            cache.v.row_mut(p).copy_from_slice(&sc.v);
-            cache.len = p + 1;
+            self.kv.write(li, p, &sc.k, &sc.v);
 
             let lo = if cfg.window > 0 { (p + 1).saturating_sub(cfg.window) } else { 0 };
             let scale = 1.0 / (HEAD_DIM as f32).sqrt();
@@ -472,13 +552,13 @@ impl DecodeState {
                 let hoff = h * HEAD_DIM;
                 let qh = &sc.q[hoff..hoff + HEAD_DIM];
                 for j in lo..=p {
-                    att[j] =
-                        crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
+                    let kj = &self.kv.k_row(li, j)[hoff..hoff + HEAD_DIM];
+                    att[j] = crate::tensor::dot(qh, kj) * scale;
                 }
                 softmax_inplace(&mut att[lo..=p]);
                 for j in lo..=p {
                     let wgt = att[j];
-                    let vj = &cache.v.row(j)[hoff..hoff + HEAD_DIM];
+                    let vj = &self.kv.v_row(li, j)[hoff..hoff + HEAD_DIM];
                     for (o, vv) in sc.attn_out[hoff..hoff + HEAD_DIM].iter_mut().zip(vj) {
                         *o += wgt * vv;
                     }
@@ -507,6 +587,7 @@ impl DecodeState {
             }
         }
         self.pos += 1;
+        self.kv.on_token(token);
         rmsnorm_vec_into(&sc.x, ops.ln_f(), cfg.norm_eps, &mut sc.xn);
         crate::tensor::matvec(ops.embed_mat(), &sc.xn)
     }
@@ -565,10 +646,7 @@ pub fn step_ops_batch(
                     apply_rope_vec(&mut k.row_mut(i)[hd], cos, sin, p);
                 }
             }
-            let cache = &mut st.caches[li];
-            cache.k.row_mut(p).copy_from_slice(k.row(i));
-            cache.v.row_mut(p).copy_from_slice(v.row(i));
-            cache.len = p + 1;
+            st.kv.write(li, p, k.row(i), v.row(i));
 
             let lo = if cfg.window > 0 { (p + 1).saturating_sub(cfg.window) } else { 0 };
             let att = &mut st.scratch.att[..p + 1];
@@ -576,13 +654,13 @@ pub fn step_ops_batch(
                 let hoff = h * HEAD_DIM;
                 let qh = &q.row(i)[hoff..hoff + HEAD_DIM];
                 for j in lo..=p {
-                    att[j] =
-                        crate::tensor::dot(qh, &cache.k.row(j)[hoff..hoff + HEAD_DIM]) * scale;
+                    let kj = &st.kv.k_row(li, j)[hoff..hoff + HEAD_DIM];
+                    att[j] = crate::tensor::dot(qh, kj) * scale;
                 }
                 softmax_inplace(&mut att[lo..=p]);
                 for j in lo..=p {
                     let wgt = att[j];
-                    let vj = &cache.v.row(j)[hoff..hoff + HEAD_DIM];
+                    let vj = &st.kv.v_row(li, j)[hoff..hoff + HEAD_DIM];
                     for (o, vv) in attn_out.row_mut(i)[hoff..hoff + HEAD_DIM].iter_mut().zip(vj) {
                         *o += wgt * vv;
                     }
@@ -607,8 +685,9 @@ pub fn step_ops_batch(
         };
         x.add_assign(&ffn);
     }
-    for st in states.iter_mut() {
+    for (st, &tok) in states.iter_mut().zip(tokens) {
         st.pos += 1;
+        st.kv.on_token(tok);
     }
     let xn = rmsnorm(&x, ops.ln_f(), cfg.norm_eps);
     // per-row matvec (not matmul_bt) so the head bit-matches the
@@ -753,6 +832,48 @@ mod tests {
         let (cfg, w) = tiny("llama1-7b");
         let out = step_ops_batch(&cfg, &w, &mut [], &[]);
         assert!(out.is_empty());
+    }
+
+    /// Paged KV storage must reproduce the flat path bit-for-bit — same
+    /// f32 rows, different residency.
+    #[test]
+    fn paged_decode_bitmatches_flat_decode() {
+        for name in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+            let (cfg, w) = tiny(name);
+            let toks: Vec<u8> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8, 9, 7];
+            for page_size in [4usize, 16] {
+                let pool = Arc::new(KvPool::new(&cfg, 16, page_size));
+                let mut flat = DecodeState::new(&cfg, 32);
+                let mut paged = DecodeState::new_paged(&cfg, 32, &pool, &toks).unwrap();
+                assert_eq!(paged.pos, 0, "fresh pool must not prefix-match");
+                for &t in &toks {
+                    let a = flat.step_ops(&cfg, &w, t);
+                    let b = paged.step_ops(&cfg, &w, t);
+                    assert_eq!(a, b, "{name} ps={page_size}: paged must bit-match flat");
+                }
+            }
+        }
+    }
+
+    /// A second paged session sharing the first's prompt starts at
+    /// `pos == matched` and still produces bit-identical logits.
+    #[test]
+    fn prefix_matched_session_bitmatches_fresh_session() {
+        let (cfg, w) = tiny("llama1-7b");
+        let toks: Vec<u8> = (0..20).map(|i| (i * 3 % 32) as u8).collect();
+        let pool = Arc::new(KvPool::new(&cfg, 32, 4));
+        let mut first = DecodeState::new_paged(&cfg, 32, &pool, &toks).unwrap();
+        let mut want = Vec::new();
+        for &t in &toks {
+            want.push(first.step_ops(&cfg, &w, t));
+        }
+        let mut second = DecodeState::new_paged(&cfg, 32, &pool, &toks).unwrap();
+        let matched = second.pos;
+        assert!(matched >= 16, "expected ≥4 reused pages, matched {matched}");
+        for (p, &t) in toks.iter().enumerate().skip(matched) {
+            let got = second.step_ops(&cfg, &w, t);
+            assert_eq!(got, want[p], "prefix-matched logits must bit-match");
+        }
     }
 
     #[test]

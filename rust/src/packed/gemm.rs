@@ -17,10 +17,10 @@
 //!   * v3 — [`packed_gemm`] / [`packed_gemv`] (gemv v2): word-level LUT
 //!     decode. One `u16` meta word + one `u8` sign byte cover 4 groups
 //!     (16 weights, 8 non-zeros); each 6-bit group code maps through the
-//!     64-entry [`GROUP_COEF`] LUT to its dense ±1/0 coefficient quad, so
+//!     64-entry `GROUP_COEF` LUT to its dense ±1/0 coefficient quad, so
 //!     the inner loop is 16 contiguous FMAs per word — branch-free and
 //!     auto-vectorizable. The micro-kernel is register-blocked 4 output
-//!     rows × K/2 ([`packed_row_dot4`]); `_into` variants write
+//!     rows × K/2 (`packed_row_dot4`); `_into` variants write
 //!     caller-owned buffers (zero allocations on the decode path); `_par`
 //!     variants split output across the `coordinator::scheduler` pool above
 //!     the [`PAR_MIN_MACS`] serial cutoff. Every variant funnels through
@@ -483,7 +483,7 @@ const fn build_code_coef() -> [[f32; 4]; 256] {
 }
 
 /// y = x @ W_2bit^T: dense inner loop over all K, byte-at-a-time (4 codes
-/// per byte through [`CODE_COEF`], hoisted row base) — no sparsity skip.
+/// per byte through `CODE_COEF`, hoisted row base) — no sparsity skip.
 pub fn gemm_2bit(x: &Mat, w: &Dense2Bit) -> Mat {
     assert_eq!(x.cols, w.cols);
     let mut y = Mat::zeros(x.rows, w.rows);

@@ -44,7 +44,7 @@ pub struct KernelBenchOpts {
 /// jitter a 3-sample measurement by a few percent, and a red CI from one
 /// scheduling blip is worse than a 10% blind spot (real regressions from a
 /// kernel bug are far larger than 10%).
-const GATE_NOISE_MARGIN: f64 = 0.10;
+pub const GATE_NOISE_MARGIN: f64 = 0.10;
 
 /// Headline numbers the CLI gates on (`bench-kernels --smoke` fails CI when
 /// a check regresses) — the full measurement set lands in the JSON.

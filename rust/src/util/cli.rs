@@ -29,6 +29,11 @@ pub mod defaults {
     pub const WORKERS: usize = 1;
     pub const SERVE_BACKEND: &str = "native";
     pub const EVAL_BACKEND: &str = "pjrt";
+    /// KV pool size in pages for paged serving (0 = auto-size to
+    /// `max_batch` worst-case sessions).
+    pub const KV_PAGES: usize = 0;
+    /// Token slots per KV page (must be a power of two).
+    pub const PAGE_SIZE: usize = 16;
 }
 
 /// Parsed command-line arguments: options + positionals.
@@ -70,7 +75,7 @@ impl Args {
     }
 
     /// Boolean flags used across the stbllm CLI / examples / benches.
-    pub const COMMON_FLAGS: [&'static str; 10] = [
+    pub const COMMON_FLAGS: [&'static str; 11] = [
         "verbose",
         "fast",
         "full",
@@ -81,6 +86,7 @@ impl Args {
         "synthetic",
         "salient-aware",
         "smoke",
+        "flat-kv",
     ];
 
     pub fn from_env() -> Args {

@@ -1,0 +1,170 @@
+//! Paged KV-cache integration tests.
+//!
+//! The contract under test: decoding through a shared [`KvPool`] (page
+//! tables, prefix caching, copy-on-write) is **bit-identical** to the flat
+//! per-session KV path — for random prompts, across page sizes, solo and
+//! through the fused `step_ops_batch` tick — and prefix reuse/CoW behave
+//! as advertised end-to-end through the `Backend` and `BatchServer` APIs.
+//!
+//! Artifact-free: preset configs + synthetic weights only.
+
+use std::sync::Arc;
+
+use stbllm::coordinator::{BatchServer, KvPool, KvPoolError, Request};
+use stbllm::engine::{Backend, NativeBackend, PackedBackend, SessionOpts};
+use stbllm::model::config::ModelConfig;
+use stbllm::model::transformer::{step_ops_batch, DecodeState};
+use stbllm::model::ModelWeights;
+use stbllm::prop_assert;
+use stbllm::util::prop::prop_check;
+
+// ---------------------------------------------------------------------------
+// Property: paged decode is bit-identical to flat decode
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paged_solo_decode_bitmatches_flat_across_page_sizes() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 31);
+    prop_check("paged solo decode == flat decode", 12, |rng| {
+        let len = 2 + rng.bounded(18) as usize;
+        let toks: Vec<u8> = (0..len).map(|_| rng.bounded(32) as u8).collect();
+        for ps in [4usize, 8, 16] {
+            let pool = Arc::new(KvPool::new(&cfg, 64, ps));
+            let mut flat = DecodeState::new(&cfg, 32);
+            let mut paged =
+                DecodeState::new_paged(&cfg, 32, &pool, &toks).map_err(|e| e.to_string())?;
+            prop_assert!(paged.pos == 0, "fresh pool must not prefix-match");
+            for &t in &toks {
+                let a = flat.step_ops(&cfg, &w, t);
+                let b = paged.step_ops(&cfg, &w, t);
+                prop_assert!(a == b, "ps={ps} len={len}: paged logits diverged");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn paged_fused_batch_decode_bitmatches_flat() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 33);
+    prop_check("paged fused decode == flat fused decode", 8, |rng| {
+        let ticks = 2 + rng.bounded(10) as usize;
+        let ps = 1usize << (2 + rng.bounded(3)); // 4, 8 or 16
+        let pool = Arc::new(KvPool::new(&cfg, 64, ps));
+        let mut flat: Vec<DecodeState> = (0..3).map(|_| DecodeState::new(&cfg, 32)).collect();
+        let mut paged: Vec<DecodeState> = Vec::new();
+        for _ in 0..3 {
+            paged.push(DecodeState::new_paged(&cfg, 32, &pool, &[]).map_err(|e| e.to_string())?);
+        }
+        for tick in 0..ticks {
+            let toks: Vec<u8> = (0..3).map(|_| rng.bounded(32) as u8).collect();
+            let a = {
+                let mut refs: Vec<&mut DecodeState> = flat.iter_mut().collect();
+                step_ops_batch(&cfg, &w, &mut refs, &toks)
+            };
+            let b = {
+                let mut refs: Vec<&mut DecodeState> = paged.iter_mut().collect();
+                step_ops_batch(&cfg, &w, &mut refs, &toks)
+            };
+            prop_assert!(a == b, "ps={ps} tick={tick}: fused paged logits diverged");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Prefix caching + copy-on-write through the public APIs
+// ---------------------------------------------------------------------------
+
+/// A second session over the same prompt resumes mid-prompt (`pos() > 0`)
+/// and still ends with bit-identical logits.
+#[test]
+fn begin_decode_with_prefix_resumes_mid_prompt() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 37);
+    let be = NativeBackend::borrowed(&cfg, &w);
+    let pool = Arc::new(KvPool::new(&cfg, 32, 4));
+    let prompt: Vec<u8> = (0..10).collect();
+
+    let mut s1 = be
+        .begin_decode_with(&SessionOpts { capacity: 16, pool: Some(pool.clone()), prompt: &prompt })
+        .unwrap();
+    assert_eq!(s1.pos(), 0);
+    let mut want = Vec::new();
+    for &t in &prompt {
+        want = s1.step(t).unwrap();
+    }
+
+    let mut s2 = be
+        .begin_decode_with(&SessionOpts { capacity: 16, pool: Some(pool.clone()), prompt: &prompt })
+        .unwrap();
+    let matched = s2.pos();
+    assert!(
+        matched >= 8 && matched < prompt.len(),
+        "expected the two completed pages reused, matched {matched}"
+    );
+    let mut got = Vec::new();
+    for &t in &prompt[matched..] {
+        got = s2.step(t).unwrap();
+    }
+    assert_eq!(got, want, "prefix-matched session must finish with identical logits");
+    assert!(pool.stats().prefix_hits >= 2);
+}
+
+/// `begin_decode_with` on flat options is exactly `begin_decode`.
+#[test]
+fn begin_decode_with_flat_opts_matches_begin_decode() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 39);
+    let be = NativeBackend::borrowed(&cfg, &w);
+    let mut a = be.begin_decode(16).unwrap();
+    let mut b = be.begin_decode_with(&SessionOpts::flat(16)).unwrap();
+    for &t in &[3u8, 1, 4, 1, 5] {
+        assert_eq!(a.step(t).unwrap(), b.step(t).unwrap());
+    }
+    assert_eq!(a.pos(), b.pos());
+}
+
+/// Shared-prompt serving through the packed backend: later waves reuse the
+/// earlier waves' pages (including a CoW partial page) and generate exactly
+/// the tokens flat serving generates.
+#[test]
+fn packed_paged_serving_with_prefix_cache_matches_flat() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let w = ModelWeights::synthetic(&cfg, 35);
+    let be = PackedBackend::from_weights(&cfg, &w).unwrap();
+    let prompt: Vec<u8> = (0..12).map(|i| (i * 7 % 32) as u8).collect();
+    let reqs: Vec<Request> =
+        (0..6).map(|id| Request { id, prompt: prompt.clone(), max_new: 5 }).collect();
+
+    let (mut flat, _) = BatchServer::new(&be, 2).run(reqs.clone()).unwrap();
+    let (mut paged, stats) = BatchServer::new(&be, 2).with_kv_pool(0, 4).run(reqs).unwrap();
+    let kv = stats.kv.expect("paged serving must report pool stats");
+    assert!(kv.prefix_hits > 0, "later waves must reuse cached prefix pages");
+    assert!(kv.cow_copies > 0, "partial-page reuse must trigger copy-on-write");
+    assert_eq!(stats.rejected_with_capacity_free, 0);
+
+    flat.sort_by_key(|r| r.id);
+    paged.sort_by_key(|r| r.id);
+    assert_eq!(flat.len(), paged.len());
+    for (a, b) in flat.iter().zip(&paged) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "req {}: paged+prefix serving must match flat", a.id);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn impossible_reservation_is_a_typed_error() {
+    let cfg = ModelConfig::preset("llama1-7b").unwrap();
+    let pool = Arc::new(KvPool::new(&cfg, 2, 8));
+    match DecodeState::new_paged(&cfg, 1000, &pool, &[]) {
+        Err(KvPoolError::TooLarge { need_pages: 125, total_pages: 2 }) => {}
+        other => panic!("expected TooLarge, got {:?}", other.map(|_| "a session")),
+    }
+}
