@@ -23,6 +23,20 @@
 //! mid-decode. Sessions admitted against the pool also reuse prefix-cached
 //! pages from earlier sequences — their prefill skips straight past the
 //! reused tokens.
+//!
+//! ## Head-of-line aging
+//!
+//! A deferred request does not hard-block the queue: smaller requests
+//! behind it may be admitted in its place (bypass) so free pages are never
+//! left idle. To keep a steady stream of small admits from starving a
+//! large request forever, every tick the head waits adds one deferral to
+//! its age; once the age reaches [`BatchServer::hol_boost_deferrals`] the
+//! bypass is switched off and admission holds until the aged head fits.
+//!
+//! The per-tick scheduling itself (`top_up` + `tick`) is shared verbatim
+//! with the streaming HTTP bridge (`crate::net::bridge`), so tokens
+//! streamed over the network are byte-identical to a direct
+//! [`BatchServer::run`] of the same workload.
 
 use std::collections::VecDeque;
 use std::sync::mpsc;
@@ -99,20 +113,63 @@ pub struct ServerStats {
 }
 
 impl ServerStats {
+    /// Aggregate decode throughput. Always finite: an empty or
+    /// zero-duration run reports `0.0` rather than `NaN`/`inf` (pinned by
+    /// unit test — the JSON stats sinks require finite numbers).
     pub fn tokens_per_s(&self) -> f64 {
-        self.generated_tokens as f64 / self.wall_s.max(1e-9)
+        if self.generated_tokens == 0 || !self.wall_s.is_finite() || self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / self.wall_s
     }
 }
 
-struct Active<'a> {
-    req: Request,
+/// A queued request plus its head-of-line age (deferral count) — the
+/// starvation-avoidance bookkeeping of the admission loop.
+pub(crate) struct Queued {
+    pub(crate) req: Request,
+    /// times this request was deferred while at the head of the queue
+    pub(crate) deferrals: u32,
+}
+
+impl Queued {
+    pub(crate) fn new(req: Request) -> Queued {
+        Queued { req, deferrals: 0 }
+    }
+}
+
+pub(crate) struct Active<'a> {
+    pub(crate) req: Request,
     session: Box<dyn DecodeSession + 'a>,
-    produced: Vec<u8>,
-    submitted: Instant,
-    first_token: Option<f64>,
+    pub(crate) produced: Vec<u8>,
+    pub(crate) submitted: Instant,
+    pub(crate) first_token: Option<f64>,
     /// position in the prompt during prefill
     prefill_pos: usize,
     last_logits: Vec<f32>,
+}
+
+/// Outcome of one [`BatchServer::top_up`] round.
+#[derive(Default)]
+pub(crate) struct TopUp {
+    /// request ids admitted this round, in admission order
+    pub(crate) admitted: Vec<u64>,
+    /// typed refusals (request can never fit)
+    pub(crate) rejected: Vec<ServeError>,
+    /// of which issued while capacity was free (bug canary)
+    pub(crate) rejected_free: usize,
+    /// backpressure events (deferred admissions) this round
+    pub(crate) deferred_events: usize,
+}
+
+/// Outcome of one [`BatchServer::tick`].
+pub(crate) struct TickResult {
+    /// `(slot in active, token)` for every token generated this tick, in
+    /// slot order — what a streaming frontend forwards to its clients
+    pub(crate) emitted: Vec<(usize, u8)>,
+    /// slots whose sequences finished, ascending (retire with
+    /// `swap_remove` in REVERSE order)
+    pub(crate) finished: Vec<usize>,
 }
 
 /// Outcome of one admission attempt.
@@ -133,13 +190,28 @@ pub struct BatchServer<'a> {
     pub max_batch: usize,
     /// per-session KV token capacity of the flat (pool-less) path
     pub kv_capacity: usize,
+    /// Deferral age at which a head-of-line request stops being bypassed
+    /// by smaller admits: once the head has been deferred this many times,
+    /// admission holds (no bypass) until it fits, so a large request
+    /// cannot be starved forever by a stream of small ones.
+    pub hol_boost_deferrals: u32,
     pool: Option<Arc<KvPool>>,
 }
+
+/// Default [`BatchServer::hol_boost_deferrals`]: a deferred head tolerates
+/// this many bypass rounds before it locks the admission queue.
+pub const DEFAULT_HOL_BOOST_DEFERRALS: u32 = 8;
 
 impl<'a> BatchServer<'a> {
     pub fn new(backend: &'a dyn Backend, max_batch: usize) -> Self {
         let kv_capacity = 4 * backend.cfg().seq_len;
-        BatchServer { backend, max_batch, kv_capacity, pool: None }
+        BatchServer {
+            backend,
+            max_batch,
+            kv_capacity,
+            hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
+            pool: None,
+        }
     }
 
     /// Attach an existing shared KV pool.
@@ -240,12 +312,121 @@ impl<'a> BatchServer<'a> {
         }
     }
 
+    /// One admission round: move queued requests into `active` until the
+    /// batch is full or nothing else is admissible. A deferred head is
+    /// bypassed by later (smaller) requests until its age reaches
+    /// `hol_boost_deferrals`, after which admission holds for it (the
+    /// starvation guard — see the module docs). Shared verbatim between
+    /// [`BatchServer::run`] and the streaming HTTP bridge.
+    pub(crate) fn top_up(
+        &self,
+        queue: &mut VecDeque<Queued>,
+        active: &mut Vec<Active<'a>>,
+    ) -> Result<TopUp> {
+        let mut out = TopUp::default();
+        let mut idx = 0usize;
+        while active.len() < self.max_batch && idx < queue.len() {
+            let q = queue.remove(idx).expect("idx < queue.len()");
+            let age = q.deferrals;
+            match self.admit(q.req, Instant::now())? {
+                Admission::Admitted(a) => {
+                    out.admitted.push(a.req.id);
+                    active.push(a);
+                    // idx now points at the next not-yet-tried entry
+                }
+                Admission::Deferred(req) => {
+                    out.deferred_events += 1;
+                    // only the true head accrues starvation age; bypassed
+                    // followers just wait their turn
+                    let age = if idx == 0 { age + 1 } else { age };
+                    queue.insert(idx, Queued { req, deferrals: age });
+                    if idx == 0 && age >= self.hol_boost_deferrals {
+                        // aged head: stop bypassing so retiring sessions
+                        // can only free pages INTO this request
+                        break;
+                    }
+                    idx += 1;
+                }
+                Admission::Rejected(e) => {
+                    if self.capacity_was_free(&e) {
+                        out.rejected_free += 1;
+                    }
+                    out.rejected.push(e);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// One decode tick over `active`: pick each sequence's input token
+    /// (prefill consumes the prompt, decode feeds the greedy argmax), run
+    /// ONE [`Backend::decode_batch`] across every stepping sequence, and
+    /// report the tokens generated plus which slots finished. The caller
+    /// retires `finished` in descending index order (`swap_remove`).
+    ///
+    /// This is THE scheduling kernel: `run` and the HTTP streaming bridge
+    /// both call it, which is what makes network-streamed tokens
+    /// byte-identical to a direct batch run.
+    pub(crate) fn tick(&self, active: &mut Vec<Active<'a>>) -> Result<TickResult> {
+        // Phase 1: pick inputs; sequences that just produced their last
+        // token finish without another step.
+        let mut stepping: Vec<usize> = Vec::with_capacity(active.len());
+        let mut tokens: Vec<u8> = Vec::with_capacity(active.len());
+        let mut emitted: Vec<(usize, u8)> = Vec::new();
+        let mut finished: Vec<usize> = Vec::new();
+        for (i, a) in active.iter_mut().enumerate() {
+            if a.prefill_pos < a.req.prompt.len() {
+                // prefill one token per tick (chunked prefill)
+                tokens.push(a.req.prompt[a.prefill_pos]);
+                a.prefill_pos += 1;
+                stepping.push(i);
+            } else {
+                // greedy decode
+                let next = argmax(&a.last_logits);
+                if a.first_token.is_none() {
+                    a.first_token = Some(a.submitted.elapsed().as_secs_f64());
+                }
+                a.produced.push(next);
+                emitted.push((i, next));
+                if a.produced.len() >= a.req.max_new {
+                    finished.push(i);
+                } else {
+                    tokens.push(next);
+                    stepping.push(i);
+                }
+            }
+        }
+        // Phase 2: ONE decode_batch per tick — a fused backend runs a
+        // single packed GEMM per projection across every stepping
+        // sequence (the weight stream is read once per tick, not once
+        // per session); other backends step per-session inside the
+        // default implementation.
+        if !stepping.is_empty() {
+            let logits = {
+                let mut sessions: Vec<&mut (dyn DecodeSession + 'a)> =
+                    Vec::with_capacity(stepping.len());
+                let mut k = 0usize;
+                for (i, a) in active.iter_mut().enumerate() {
+                    if k < stepping.len() && stepping[k] == i {
+                        sessions.push(a.session.as_mut());
+                        k += 1;
+                    }
+                }
+                self.backend.decode_batch(&mut sessions, &tokens)?
+            };
+            for (&i, lg) in stepping.iter().zip(logits) {
+                active[i].last_logits = lg;
+            }
+        }
+        Ok(TickResult { emitted, finished })
+    }
+
     /// Run the whole workload; returns responses in completion order.
     /// Requests that can never fit the KV capacity are refused with a
     /// typed entry in [`ServerStats::rejections`]; the rest are served.
     pub fn run(&self, workload: Vec<Request>) -> Result<(Vec<Response>, ServerStats)> {
         let wall0 = Instant::now();
-        let mut queue: VecDeque<Request> = workload.into();
+        let mut queue: VecDeque<Queued> = workload.into_iter().map(Queued::new).collect();
         let mut active: Vec<Active> = Vec::new();
         let mut done: Vec<Response> = Vec::new();
         let mut latencies = Vec::new();
@@ -257,25 +438,11 @@ impl<'a> BatchServer<'a> {
 
         while !queue.is_empty() || !active.is_empty() {
             // continuous batching: top up the active set, respecting the
-            // KV pool's admission budget
-            while active.len() < self.max_batch {
-                let Some(r) = queue.pop_front() else { break };
-                match self.admit(r, Instant::now())? {
-                    Admission::Admitted(a) => active.push(a),
-                    Admission::Deferred(r) => {
-                        // backpressure: head-of-line wait for pages to free
-                        queue.push_front(r);
-                        deferred += 1;
-                        break;
-                    }
-                    Admission::Rejected(e) => {
-                        if self.capacity_was_free(&e) {
-                            rejected_with_capacity_free += 1;
-                        }
-                        rejections.push(e);
-                    }
-                }
-            }
+            // KV pool's admission budget + head-of-line aging
+            let up = self.top_up(&mut queue, &mut active)?;
+            deferred += up.deferred_events;
+            rejected_with_capacity_free += up.rejected_free;
+            rejections.extend(up.rejected);
             if active.is_empty() {
                 if queue.is_empty() {
                     break;
@@ -286,60 +453,11 @@ impl<'a> BatchServer<'a> {
                 std::thread::yield_now();
                 continue;
             }
-            // Phase 1: pick each active sequence's input token for this tick
-            // (prefill consumes the prompt, decode feeds the greedy argmax);
-            // sequences that just produced their last token finish without
-            // another step.
-            let mut stepping: Vec<usize> = Vec::with_capacity(active.len());
-            let mut tokens: Vec<u8> = Vec::with_capacity(active.len());
-            let mut finished: Vec<usize> = Vec::new();
-            for (i, a) in active.iter_mut().enumerate() {
-                if a.prefill_pos < a.req.prompt.len() {
-                    // prefill one token per tick (chunked prefill)
-                    tokens.push(a.req.prompt[a.prefill_pos]);
-                    a.prefill_pos += 1;
-                    stepping.push(i);
-                } else {
-                    // greedy decode
-                    let next = argmax(&a.last_logits);
-                    if a.first_token.is_none() {
-                        a.first_token = Some(a.submitted.elapsed().as_secs_f64());
-                    }
-                    a.produced.push(next);
-                    generated += 1;
-                    if a.produced.len() >= a.req.max_new {
-                        finished.push(i);
-                    } else {
-                        tokens.push(next);
-                        stepping.push(i);
-                    }
-                }
-            }
-            // Phase 2: ONE decode_batch per tick — a fused backend runs a
-            // single packed GEMM per projection across every stepping
-            // sequence (the weight stream is read once per tick, not once
-            // per session); other backends step per-session inside the
-            // default implementation.
-            if !stepping.is_empty() {
-                let logits = {
-                    let mut sessions: Vec<&mut (dyn DecodeSession + 'a)> =
-                        Vec::with_capacity(stepping.len());
-                    let mut k = 0usize;
-                    for (i, a) in active.iter_mut().enumerate() {
-                        if k < stepping.len() && stepping[k] == i {
-                            sessions.push(a.session.as_mut());
-                            k += 1;
-                        }
-                    }
-                    self.backend.decode_batch(&mut sessions, &tokens)?
-                };
-                for (&i, lg) in stepping.iter().zip(logits) {
-                    active[i].last_logits = lg;
-                }
-            }
-            // Phase 3: retire finished sequences (descending index order so
+            let t = self.tick(&mut active)?;
+            generated += t.emitted.len();
+            // retire finished sequences (descending index order so
             // swap_remove never disturbs a pending index)
-            for &i in finished.iter().rev() {
+            for &i in t.finished.iter().rev() {
                 let a = active.swap_remove(i);
                 let lat = a.submitted.elapsed().as_secs_f64();
                 latencies.push(lat);
@@ -663,6 +781,82 @@ mod tests {
         // degenerate inputs
         assert_eq!(percentile(&[], 95.0), 0.0);
         assert_eq!(percentile(&[3.5], 95.0), 3.5);
+    }
+
+    /// Starvation regression: a request needing the WHOLE pool, followed by
+    /// a stream of staggered small requests that keeps at least one page
+    /// reserved at all times. Pure bypass admission (no aging) would only
+    /// admit the big request once every small one has drained — it finishes
+    /// dead last. The head-of-line age boost locks admission after a few
+    /// deferrals, so the big request completes well before the small-stream
+    /// tail.
+    #[test]
+    fn aged_head_of_line_request_is_not_starved_by_small_stream() {
+        let (cfg, w) = tiny();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let pool = Arc::new(KvPool::new(&cfg, 4, 4));
+        // big: 8 prompt + 6 new = 14 tokens -> 4 pages (the whole pool);
+        // smalls: <= 4 tokens -> 1 page, alternating max_new so their
+        // retirements interleave and the pool is never all-free by luck.
+        // Two smalls go FIRST so they already hold pages when the big one
+        // is tried — otherwise it would be admitted into the empty pool
+        // and the starvation scenario never arises.
+        let small = |i: u64| Request {
+            id: 1 + i,
+            prompt: vec![1, 2],
+            max_new: if i % 2 == 0 { 1 } else { 2 },
+        };
+        let mut reqs = vec![small(0), small(1)];
+        reqs.push(Request { id: 0, prompt: vec![9; 8], max_new: 6 });
+        reqs.extend((2..20u64).map(small));
+        let mut server = BatchServer::new(&be, 2).with_pool(pool);
+        server.hol_boost_deferrals = 3;
+        let (resps, stats) = server.run(reqs).unwrap();
+        assert_eq!(resps.len(), 21, "everything must complete");
+        assert!(stats.deferred > 0, "the big request must have been deferred");
+        let big_rank = resps.iter().position(|r| r.id == 0).unwrap();
+        assert!(
+            big_rank < 12,
+            "big request finished {}th of 21 — starved past the age boost",
+            big_rank + 1
+        );
+        // smalls DID bypass the deferred head before it aged out
+        // (otherwise the boost test proves nothing about bypass admission)
+        assert!(
+            resps.iter().take(2).all(|r| r.id != 0),
+            "small requests should have been served while the big one waited"
+        );
+    }
+
+    /// Empty / degenerate runs must report finite stats — the JSON sinks
+    /// (`--stats-json`, `/stats`, BENCH_http.json) reject NaN/inf.
+    #[test]
+    fn stats_are_finite_on_empty_runs() {
+        let empty = ServerStats::default();
+        assert_eq!(empty.tokens_per_s(), 0.0);
+        let weird = ServerStats { generated_tokens: 5, wall_s: f64::NAN, ..Default::default() };
+        assert_eq!(weird.tokens_per_s(), 0.0);
+        let zero_wall = ServerStats { generated_tokens: 5, wall_s: 0.0, ..Default::default() };
+        assert_eq!(zero_wall.tokens_per_s(), 0.0);
+        let ok = ServerStats { generated_tokens: 10, wall_s: 2.0, ..Default::default() };
+        assert_eq!(ok.tokens_per_s(), 5.0);
+        // percentile of nothing is 0.0, never an index panic or NaN
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert!(ServerStats::default().mean_latency_s.is_finite());
+    }
+
+    /// An empty workload through the full server must also come out finite.
+    #[test]
+    fn empty_workload_serves_to_finite_stats() {
+        let (cfg, w) = tiny();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let (resps, stats) = BatchServer::new(&be, 2).run(Vec::new()).unwrap();
+        assert!(resps.is_empty());
+        assert_eq!(stats.completed, 0);
+        assert!(stats.tokens_per_s().is_finite());
+        assert!(stats.p50_latency_s.is_finite() && stats.p95_latency_s.is_finite());
+        assert!(stats.mean_ttft_s.is_finite());
     }
 
     #[test]

@@ -515,6 +515,32 @@ impl Engine {
         server.run(requests)
     }
 
+    /// Serve over HTTP (`stbllm serve --http ADDR`): stream tokens to
+    /// network clients through the same continuous-batching scheduler
+    /// [`Engine::serve`] uses, so HTTP output is byte-identical to a
+    /// direct batch run. The engine's serving knobs (`max_batch`,
+    /// `kv_pages`, `page_size`, `flat_kv`) override the corresponding
+    /// fields of `opts`; blocks until `ctl` drains and returns the final
+    /// gateway report (check `leaked_pages == 0`).
+    pub fn serve_http(
+        &self,
+        mut opts: crate::net::HttpServeOpts,
+        ctl: &crate::net::GatewayCtl,
+    ) -> Result<crate::net::GatewayReport> {
+        if !self.backend.capabilities().decode {
+            return Err(EngineError::Unsupported {
+                backend: self.backend.label(),
+                what: "incremental decode (serving)".to_string(),
+            }
+            .into());
+        }
+        opts.max_batch = self.max_batch;
+        opts.kv_pages = self.kv_pages;
+        opts.page_size = self.page_size;
+        opts.flat_kv = self.flat_kv;
+        crate::net::serve_http(self.backend.as_ref(), &opts, ctl)
+    }
+
     /// Synthetic serving workload: `n_req` prompts sliced from the prose
     /// corpus (the smoke workload `stbllm serve` and the examples use).
     pub fn synthetic_workload(

@@ -15,6 +15,8 @@
 //! * [`runtime`] — PJRT client executing AOT-lowered JAX/Pallas artifacts.
 //! * [`coordinator`] — calibration, layer scheduling, the full-model PTQ
 //!   driver and the batched inference server.
+//! * [`net`] — the HTTP/1.1 streaming gateway (`stbllm serve --http`):
+//!   chunked/SSE token streaming, deadlines, drain, live stats.
 //! * [`eval`] — perplexity, zero-shot harness, sign-flip study.
 //! * [`report`] — table/figure rendering for the bench harness.
 
@@ -22,6 +24,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod eval;
 pub mod model;
+pub mod net;
 pub mod packed;
 pub mod quant;
 pub mod report;

@@ -14,6 +14,8 @@
 //!   eval      --model M [...]    perplexity (PJRT path by default)
 //!   zeroshot  --model M [...]    7-task zero-shot suite
 //!   serve     --model M [...]    batched-serving smoke run with metrics
+//!                                (--http ADDR: streaming HTTP gateway)
+//!   loadgen   --target H:P [...] drive concurrent streams at a gateway
 //!   flip      --model M [...]    sign-flip motivation study
 //!   selfcheck                    PJRT ⇄ native forward parity
 
@@ -47,6 +49,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "eval" => eval(args),
         "zeroshot" => zeroshot_cmd(args),
         "serve" => serve(args),
+        "loadgen" => loadgen(args),
         "flip" => flip(args),
         "bench-kernels" => bench_kernels(args),
         "selfcheck" => selfcheck(args),
@@ -73,7 +76,10 @@ COMMANDS
   zeroshot    7-task zero-shot accuracy suite
   serve       batched serving: continuous batching over a paged KV pool
               (admission control + prefix caching; --flat-kv for the
-              legacy per-session buffers; --smoke runs the CI gate)
+              legacy per-session buffers; --smoke runs the CI gate;
+              --http ADDR serves the model over a streaming HTTP gateway)
+  loadgen     drive N concurrent streaming connections at a gateway and
+              write reports/BENCH_http.json (--smoke: the CI gate)
   flip        sign-flip redundancy study (Fig. 1)
   bench-kernels
               packed-kernel perf suite -> reports/BENCH_kernels.json
@@ -106,6 +112,20 @@ OPTIONS
   --stats-json PATH  serve: write ServerStats (+ KV pool counters) as JSON
   --smoke            serve: scripted shared-prompt workload + CI gate
                      (asserts prefix reuse saves pages, no bad rejections)
+  --http ADDR        serve: bind the streaming HTTP gateway on ADDR
+                     (e.g. 127.0.0.1:8090; :0 picks a free port); blocks
+                     until POST /admin/drain, then exits non-zero if any
+                     KV pages leaked
+  --http-threads N   serve --http: connection handler threads (default {http_threads})
+  --deadline-ms N    serve --http: default per-request deadline (none)
+  --keepalive-ms N   serve --http: idle keep-alive timeout (default {keepalive_ms})
+  --addr-file PATH   serve --http: write the bound address to PATH (CI
+                     uses this to discover a --http :0 port)
+  --target H:P       loadgen: gateway address to drive (required)
+  --connections N    loadgen: concurrent connections (default {lg_conns})
+                     (--requests/--prompt/--max-new shape the workload;
+                     --drain sends POST /admin/drain afterwards;
+                     --out PATH overrides the JSON report path)
   --ratio R          flip: fraction of signs to flip (default {ratio})
   --workers N        thread budget: quantization jobs, packed `_par` kernels,
                      window-parallel eval (default {workers})
@@ -133,6 +153,9 @@ OPTIONS
         workers = defaults::WORKERS,
         kv_pages = defaults::KV_PAGES,
         page_size = defaults::PAGE_SIZE,
+        http_threads = defaults::HTTP_THREADS,
+        keepalive_ms = defaults::HTTP_KEEPALIVE_MS,
+        lg_conns = defaults::LOADGEN_CONNECTIONS,
     )
 }
 
@@ -238,6 +261,9 @@ fn zeroshot_cmd(args: &Args) -> Result<()> {
 }
 
 fn serve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("http") {
+        return serve_http(args, addr);
+    }
     let engine = build_engine(args, defaults::SERVE_BACKEND)?;
     let smoke = args.flag("smoke");
     let n_req = args.get_usize("requests", defaults::SERVE_REQUESTS);
@@ -422,6 +448,101 @@ fn serve_stats_json(stats: &ServerStats) -> String {
         ));
     }
     obj(fields).dump()
+}
+
+/// `serve --http ADDR`: stand the model up behind the streaming HTTP
+/// gateway and block until a drain (`POST /admin/drain` or SIGTERM-less
+/// environments just kill the process). Exits non-zero if the drained
+/// pool reports leaked pages.
+fn serve_http(args: &Args, addr: &str) -> Result<()> {
+    let engine = build_engine(args, defaults::SERVE_BACKEND)?;
+    let mut opts = stbllm::net::HttpServeOpts::new(addr);
+    opts.threads = args.get_usize("http-threads", defaults::HTTP_THREADS).max(1);
+    opts.keepalive_ms =
+        args.get_usize("keepalive-ms", defaults::HTTP_KEEPALIVE_MS as usize) as u64;
+    opts.default_deadline_ms = args.get("deadline-ms").and_then(|v| v.parse().ok());
+    opts.addr_file = args.get("addr-file").map(|s| s.to_string());
+
+    let r = engine.quantize();
+    println!(
+        "http serve {} [{}, {:.2} bits, {} backend] batch={} on {}",
+        r.model,
+        r.method,
+        r.avg_bits,
+        engine.backend().label(),
+        args.get_usize("batch", defaults::MAX_BATCH),
+        addr
+    );
+    let ctl = stbllm::net::GatewayCtl::new();
+    let report = engine.serve_http(opts, &ctl)?;
+    println!("drain report: {}", report.to_json().dump());
+    if report.leaked_pages != 0 {
+        bail!("http serve FAILED: {} KV pages still reserved after drain", report.leaked_pages);
+    }
+    Ok(())
+}
+
+/// `loadgen --target HOST:PORT`: drive concurrent streaming connections
+/// at a running gateway and write `reports/BENCH_http.json`. With
+/// `--smoke` the workload is fixed and gated (the CI `http-smoke` job).
+fn loadgen(args: &Args) -> Result<()> {
+    let Some(target) = args.get("target") else {
+        bail!("loadgen requires --target HOST:PORT (see `stbllm serve --http`)");
+    };
+    let smoke = args.flag("smoke");
+    let mut opts = if smoke {
+        stbllm::report::loadgen::LoadgenOpts::smoke(target)
+    } else {
+        stbllm::report::loadgen::LoadgenOpts {
+            target: target.to_string(),
+            connections: args.get_usize("connections", defaults::LOADGEN_CONNECTIONS).max(1),
+            requests: args.get_usize("requests", defaults::LOADGEN_REQUESTS).max(1),
+            prompt_len: args.get_usize("prompt", defaults::PROMPT_LEN).max(1),
+            max_new: args.get_usize("max-new", defaults::MAX_NEW).max(1),
+            shared_prompt: true,
+            drain: false,
+            out: None,
+        }
+    };
+    opts.drain = args.flag("drain");
+    opts.out = args.get("out").map(std::path::PathBuf::from);
+
+    let rep = stbllm::report::loadgen::run_loadgen(&opts)?;
+    println!(
+        "loadgen {}: {} connections x {} requests ({} tokens streamed)",
+        opts.target, opts.connections, opts.requests, rep.generated_tokens
+    );
+    println!("  completed      : {} ({} errors)", rep.completed, rep.errors);
+    println!("  throughput     : {:.1} tok/s over {:.2}s", rep.tok_s, rep.wall_s);
+    println!("  TTFT p50/p95   : {:.1} / {:.1} ms", rep.ttft_p50_s * 1e3, rep.ttft_p95_s * 1e3);
+    println!(
+        "  latency p50/p95: {:.1} / {:.1} ms",
+        rep.latency_p50_s * 1e3,
+        rep.latency_p95_s * 1e3
+    );
+    println!("  prefix hits    : {} (server-side)", rep.prefix_hits);
+    println!("BENCH_http.json -> {}", rep.json_path.display());
+
+    if smoke {
+        if rep.errors != 0 {
+            bail!("loadgen smoke gate FAILED: {} request errors", rep.errors);
+        }
+        if rep.completed != opts.requests {
+            bail!(
+                "loadgen smoke gate FAILED: {}/{} requests completed",
+                rep.completed,
+                opts.requests
+            );
+        }
+        if rep.prefix_hits == 0 {
+            bail!("loadgen smoke gate FAILED: shared-prompt workload never hit the prefix cache");
+        }
+        println!(
+            "loadgen smoke gate OK: {} completed, 0 errors, {} prefix page hits",
+            rep.completed, rep.prefix_hits
+        );
+    }
+    Ok(())
 }
 
 fn flip(args: &Args) -> Result<()> {

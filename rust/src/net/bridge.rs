@@ -1,0 +1,504 @@
+//! The bridge between HTTP handlers and the continuous batch decode loop.
+//!
+//! One bridge worker thread owns the decode side: it ingests
+//! [`StreamRequest`]s from a bounded channel, admits them through the SAME
+//! [`BatchServer`] admission path (`top_up`: KV reservation, head-of-line
+//! aging) and steps the SAME scheduling kernel (`tick`: one fused
+//! `decode_batch` per round) that [`BatchServer::run`] uses — which is why
+//! tokens streamed over the network are byte-identical to a direct batch
+//! run of the same workload.
+//!
+//! Per-request extras the batch path does not have:
+//!
+//! * **Streaming** — every generated token is forwarded on the request's
+//!   [`StreamEvent`] channel the tick it retires from the decode loop.
+//! * **Cancellation** — when the receiving side hangs up (HTTP client
+//!   disconnected), the next token send fails, the session is dropped on
+//!   the spot and its KV pages return to the pool.
+//! * **Deadlines** — a request past its deadline is finished early with
+//!   [`StopReason::Deadline`]; queued requests past their deadline never
+//!   start.
+//! * **Drain** — once every [`StreamRequest`] sender is gone, the worker
+//!   finishes all in-flight sequences and exits; with a paged pool, zero
+//!   reserved pages remain (asserted by the gateway's drain report).
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::kvpool::KvPool;
+use crate::coordinator::server::{BatchServer, Queued, Request, ServeError};
+use crate::engine::Backend;
+use crate::net::gateway::GatewayCtl;
+use crate::net::stats::StopReason;
+
+/// A generation request entering the bridge, with its event channel.
+pub struct StreamRequest {
+    /// Prompt tokens to prefill.
+    pub prompt: Vec<u8>,
+    /// Tokens to generate after the prompt.
+    pub max_new: usize,
+    /// Absolute deadline; `None` = no limit.
+    pub deadline: Option<Instant>,
+    /// Where the bridge delivers [`StreamEvent`]s. Dropping the receiver
+    /// cancels the stream (the session's KV pages are released).
+    pub tx: mpsc::Sender<StreamEvent>,
+}
+
+/// Events delivered on a stream's channel, in order: zero or more
+/// `Token`s, then exactly one `Done` or `Rejected`.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// One generated token.
+    Token(u8),
+    /// The stream ended (completed or deadline-stopped).
+    Done(DoneInfo),
+    /// Admission refused the request (it can never fit the KV budget).
+    Rejected(String),
+}
+
+/// Terminal accounting for one stream.
+#[derive(Clone, Copy, Debug)]
+pub struct DoneInfo {
+    /// Tokens generated (may be short of `max_new` on deadline stop).
+    pub generated: usize,
+    /// Seconds from admission to first generated token.
+    pub ttft_s: f64,
+    /// Seconds from admission to the end of the stream.
+    pub latency_s: f64,
+    /// Why the stream stopped.
+    pub stopped: StopReason,
+}
+
+/// Decode-side configuration of the bridge worker.
+#[derive(Clone)]
+pub struct BridgeOpts {
+    /// Max concurrently decoding sequences (continuous batching width).
+    pub max_batch: usize,
+    /// Shared paged KV pool; `None` = flat per-session buffers.
+    pub pool: Option<Arc<KvPool>>,
+    /// Head-of-line age boost threshold (see
+    /// [`BatchServer::hol_boost_deferrals`]).
+    pub hol_boost_deferrals: u32,
+}
+
+impl BridgeOpts {
+    /// Flat-KV bridge with the default aging threshold.
+    pub fn new(max_batch: usize) -> BridgeOpts {
+        BridgeOpts {
+            max_batch,
+            pool: None,
+            hol_boost_deferrals: crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS,
+        }
+    }
+
+    /// Attach a shared KV pool.
+    pub fn with_pool(mut self, pool: Arc<KvPool>) -> BridgeOpts {
+        self.pool = Some(pool);
+        self
+    }
+}
+
+struct Meta {
+    tx: mpsc::Sender<StreamEvent>,
+    deadline: Option<Instant>,
+}
+
+/// How long the worker sleeps on the request channel when fully idle.
+const IDLE_POLL: Duration = Duration::from_millis(20);
+
+/// Run the bridge worker until every request sender is dropped and all
+/// admitted work has finished (graceful drain). Normally called on a
+/// dedicated thread — by the gateway (`net::gateway::serve_http`) or via
+/// [`serve_stream`].
+pub fn run_bridge(
+    backend: &dyn Backend,
+    opts: &BridgeOpts,
+    rx: mpsc::Receiver<StreamRequest>,
+    ctl: &GatewayCtl,
+) -> Result<()> {
+    let mut server = BatchServer::new(backend, opts.max_batch.max(1));
+    server.hol_boost_deferrals = opts.hol_boost_deferrals;
+    if let Some(pool) = &opts.pool {
+        server = server.with_pool(pool.clone());
+    }
+
+    let mut queue: VecDeque<Queued> = VecDeque::new();
+    let mut active = Vec::new();
+    let mut meta: HashMap<u64, Meta> = HashMap::new();
+    let mut next_id = 0u64;
+    let mut senders_gone = false;
+
+    loop {
+        // 1. ingest: drain everything queued on the channel; block briefly
+        //    only when there is no decode work at all
+        if !senders_gone && active.is_empty() && queue.is_empty() {
+            match rx.recv_timeout(IDLE_POLL) {
+                Ok(sr) => enqueue(sr, &mut next_id, &mut queue, &mut meta, ctl),
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => senders_gone = true,
+            }
+        }
+        if !senders_gone {
+            loop {
+                match rx.try_recv() {
+                    Ok(sr) => enqueue(sr, &mut next_id, &mut queue, &mut meta, ctl),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        senders_gone = true;
+                        break;
+                    }
+                }
+            }
+        }
+
+        let now = Instant::now();
+
+        // 2. queued requests whose deadline already passed never start
+        let expired_ids: Vec<u64> = queue
+            .iter()
+            .filter(|q| {
+                meta.get(&q.req.id)
+                    .and_then(|m| m.deadline)
+                    .is_some_and(|d| now >= d)
+            })
+            .map(|q| q.req.id)
+            .collect();
+        if !expired_ids.is_empty() {
+            queue.retain(|q| !expired_ids.contains(&q.req.id));
+            for id in expired_ids {
+                if let Some(m) = meta.remove(&id) {
+                    let _ = m.tx.send(StreamEvent::Done(DoneInfo {
+                        generated: 0,
+                        ttft_s: 0.0,
+                        latency_s: 0.0,
+                        stopped: StopReason::Deadline,
+                    }));
+                }
+                ctl.with_stats(|s| s.deadline_expired += 1);
+            }
+        }
+
+        // 3. admission (shared with BatchServer::run — reservation +
+        //    head-of-line aging)
+        let up = server.top_up(&mut queue, &mut active)?;
+        if up.deferred_events > 0 || !up.rejected.is_empty() {
+            ctl.with_stats(|s| {
+                s.deferred += up.deferred_events;
+                s.rejected += up.rejected.len();
+            });
+        }
+        for e in up.rejected {
+            let ServeError::RequestTooLarge { id, .. } = &e;
+            if let Some(m) = meta.remove(id) {
+                let _ = m.tx.send(StreamEvent::Rejected(e.to_string()));
+            }
+        }
+
+        ctl.set_gauges(active.len(), queue.len());
+
+        if active.is_empty() {
+            if senders_gone && queue.is_empty() {
+                break; // drained: nothing in flight, nothing can arrive
+            }
+            if !queue.is_empty() {
+                // deferred head waiting on another server of a shared pool
+                std::thread::yield_now();
+            }
+            continue;
+        }
+
+        // 4. active requests past their deadline finish early with
+        //    whatever they produced; their sessions (and KV pages) drop now
+        let expired: Vec<usize> = active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| {
+                meta.get(&a.req.id)
+                    .and_then(|m| m.deadline)
+                    .is_some_and(|d| now >= d)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        for &slot in expired.iter().rev() {
+            let a = active.swap_remove(slot);
+            let lat = a.submitted.elapsed().as_secs_f64();
+            if let Some(m) = meta.remove(&a.req.id) {
+                let _ = m.tx.send(StreamEvent::Done(DoneInfo {
+                    generated: a.produced.len(),
+                    ttft_s: a.first_token.unwrap_or(lat),
+                    latency_s: lat,
+                    stopped: StopReason::Deadline,
+                }));
+            }
+            ctl.with_stats(|s| s.deadline_expired += 1);
+        }
+        if active.is_empty() {
+            continue;
+        }
+
+        // 5. ONE scheduling tick (the shared kernel) + forward each token
+        //    as it retires; a failed send = client hung up = cancel
+        let t = server.tick(&mut active)?;
+        if !t.emitted.is_empty() {
+            ctl.with_stats(|s| s.generated_tokens += t.emitted.len());
+        }
+        let mut removals: BTreeMap<usize, bool> = BTreeMap::new(); // slot -> deliver Done
+        for &f in &t.finished {
+            removals.insert(f, true);
+        }
+        for &(slot, tok) in &t.emitted {
+            let id = active[slot].req.id;
+            let gone = match meta.get(&id) {
+                Some(m) => m.tx.send(StreamEvent::Token(tok)).is_err(),
+                None => true,
+            };
+            if gone {
+                removals.insert(slot, false); // cancellation wins over Done
+            }
+        }
+
+        // 6. retire (descending slot order so swap_remove is stable);
+        //    dropping the Active drops its session, returning KV pages
+        for (&slot, &deliver) in removals.iter().rev() {
+            let a = active.swap_remove(slot);
+            let m = meta.remove(&a.req.id);
+            if deliver {
+                let lat = a.submitted.elapsed().as_secs_f64();
+                let ttft = a.first_token.unwrap_or(lat);
+                if let Some(m) = m {
+                    let _ = m.tx.send(StreamEvent::Done(DoneInfo {
+                        generated: a.produced.len(),
+                        ttft_s: ttft,
+                        latency_s: lat,
+                        stopped: StopReason::Completed,
+                    }));
+                }
+                ctl.with_stats(|s| {
+                    s.completed += 1;
+                    s.record_finished(ttft, lat);
+                });
+            } else {
+                ctl.with_stats(|s| s.cancelled += 1);
+            }
+        }
+        ctl.set_gauges(active.len(), queue.len());
+    }
+    ctl.set_gauges(0, 0);
+    Ok(())
+}
+
+fn enqueue(
+    sr: StreamRequest,
+    next_id: &mut u64,
+    queue: &mut VecDeque<Queued>,
+    meta: &mut HashMap<u64, Meta>,
+    ctl: &GatewayCtl,
+) {
+    let id = *next_id;
+    *next_id += 1;
+    meta.insert(id, Meta { tx: sr.tx, deadline: sr.deadline });
+    queue.push_back(Queued::new(Request { id, prompt: sr.prompt, max_new: sr.max_new.max(1) }));
+    ctl.with_stats(|s| s.streams_started += 1);
+    ctl.queued_gauge().fetch_add(1, Ordering::Relaxed);
+}
+
+/// Channel facade: spawn a bridge worker thread owning `backend`; returns
+/// the request sender. Dropping every sender clone drains the worker. This
+/// is the in-process streaming API (the HTTP gateway is a network skin
+/// over the same worker).
+pub fn serve_stream(
+    backend: Box<dyn Backend + Send>,
+    opts: BridgeOpts,
+    ctl: GatewayCtl,
+) -> (mpsc::SyncSender<StreamRequest>, std::thread::JoinHandle<Result<()>>) {
+    let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
+    let handle = std::thread::spawn(move || run_bridge(&*backend, &opts, rx, &ctl));
+    (tx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{BatchServer, Request};
+    use crate::engine::NativeBackend;
+    use crate::model::config::ModelConfig;
+    use crate::model::ModelWeights;
+
+    fn tiny() -> (ModelConfig, ModelWeights) {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        (cfg.clone(), ModelWeights::synthetic(&cfg, 1))
+    }
+
+    fn drain_stream(rx: &mpsc::Receiver<StreamEvent>) -> (Vec<u8>, Option<DoneInfo>) {
+        let mut toks = Vec::new();
+        let mut done = None;
+        while let Ok(ev) = rx.recv_timeout(Duration::from_secs(60)) {
+            match ev {
+                StreamEvent::Token(t) => toks.push(t),
+                StreamEvent::Done(d) => {
+                    done = Some(d);
+                    break;
+                }
+                StreamEvent::Rejected(e) => panic!("unexpected rejection: {e}"),
+            }
+        }
+        (toks, done)
+    }
+
+    /// Streamed tokens must be byte-identical to a direct batch run of the
+    /// same workload — both paths run the same top_up/tick kernel.
+    #[test]
+    fn streamed_tokens_match_batch_run() {
+        let (cfg, w) = tiny();
+        let reqs: Vec<Request> = (0..3)
+            .map(|id| Request { id, prompt: vec![1, 2, 3 + id as u8], max_new: 4 })
+            .collect();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let (mut direct, _) = BatchServer::new(&be, 2).run(reqs.clone()).unwrap();
+        direct.sort_by_key(|r| r.id);
+
+        let ctl = GatewayCtl::new();
+        let (tx, handle) = serve_stream(
+            Box::new(NativeBackend::new(cfg, w)),
+            BridgeOpts::new(2),
+            ctl.clone(),
+        );
+        let mut rxs = Vec::new();
+        for r in &reqs {
+            let (etx, erx) = mpsc::channel();
+            tx.send(StreamRequest {
+                prompt: r.prompt.clone(),
+                max_new: r.max_new,
+                deadline: None,
+                tx: etx,
+            })
+            .unwrap();
+            rxs.push(erx);
+        }
+        for (r, erx) in reqs.iter().zip(&rxs) {
+            let (toks, done) = drain_stream(erx);
+            let want = &direct.iter().find(|d| d.id == r.id).unwrap().tokens;
+            assert_eq!(&toks, want, "stream for req {} diverged from batch run", r.id);
+            let d = done.expect("stream must end with Done");
+            assert_eq!(d.stopped, StopReason::Completed);
+            assert_eq!(d.generated, toks.len());
+            assert!(d.latency_s >= d.ttft_s);
+        }
+        drop(tx);
+        handle.join().unwrap().unwrap();
+        let s = ctl.stats_snapshot(|s| (s.completed, s.generated_tokens));
+        assert_eq!(s.0, 3);
+        assert_eq!(s.1, 12);
+    }
+
+    /// Dropping a stream's receiver mid-generation must retire the session
+    /// and return its KV pages to the pool (the serve-channel cancellation
+    /// contract): the pool's unreserved page count fully recovers while
+    /// other streams keep running.
+    #[test]
+    fn dropping_receiver_mid_stream_releases_kv_pages() {
+        let (cfg, w) = tiny();
+        let pool = Arc::new(KvPool::new(&cfg, 16, 4));
+        let ctl = GatewayCtl::new();
+        let (tx, handle) = serve_stream(
+            Box::new(NativeBackend::new(cfg, w)),
+            BridgeOpts::new(2).with_pool(pool.clone()),
+            ctl.clone(),
+        );
+        // a long stream we will abandon mid-flight
+        let (etx, erx) = mpsc::channel();
+        tx.send(StreamRequest { prompt: vec![3, 1, 4, 1], max_new: 40, deadline: None, tx: etx })
+            .unwrap();
+        for _ in 0..3 {
+            match erx.recv_timeout(Duration::from_secs(60)).unwrap() {
+                StreamEvent::Token(_) => {}
+                other => panic!("expected tokens first, got {other:?}"),
+            }
+        }
+        assert!(pool.stats().pages_reserved > 0, "stream must hold a reservation");
+        drop(erx); // client hangs up mid-stream
+        // a short follow-up stream keeps the worker ticking and proves the
+        // pool still serves after the cancellation
+        let (etx2, erx2) = mpsc::channel();
+        tx.send(StreamRequest { prompt: vec![5, 6], max_new: 2, deadline: None, tx: etx2 })
+            .unwrap();
+        let (toks, done) = drain_stream(&erx2);
+        assert_eq!(toks.len(), 2);
+        assert_eq!(done.unwrap().stopped, StopReason::Completed);
+        // the cancelled session's reservation must come back
+        let t0 = Instant::now();
+        loop {
+            if pool.stats().pages_reserved == 0 {
+                break;
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(30),
+                "cancelled stream leaked its KV reservation: {:?}",
+                pool.stats()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(tx);
+        handle.join().unwrap().unwrap();
+        assert_eq!(ctl.stats_snapshot(|s| s.cancelled), 1);
+        assert_eq!(pool.stats().pages_reserved, 0, "drain must leave zero reserved pages");
+    }
+
+    /// An already-expired deadline stops the stream with partial (here
+    /// zero) output and releases everything.
+    #[test]
+    fn expired_deadline_stops_stream() {
+        let (cfg, w) = tiny();
+        let pool = Arc::new(KvPool::new(&cfg, 16, 4));
+        let ctl = GatewayCtl::new();
+        let (tx, handle) = serve_stream(
+            Box::new(NativeBackend::new(cfg, w)),
+            BridgeOpts::new(2).with_pool(pool.clone()),
+            ctl.clone(),
+        );
+        let (etx, erx) = mpsc::channel();
+        tx.send(StreamRequest {
+            prompt: vec![1, 2, 3],
+            max_new: 8,
+            deadline: Some(Instant::now() - Duration::from_millis(1)),
+            tx: etx,
+        })
+        .unwrap();
+        let (toks, done) = drain_stream(&erx);
+        let d = done.expect("deadline stream must still end with Done");
+        assert_eq!(d.stopped, StopReason::Deadline);
+        assert!(toks.len() < 8, "an expired deadline cannot deliver the full request");
+        drop(tx);
+        handle.join().unwrap().unwrap();
+        assert_eq!(ctl.stats_snapshot(|s| s.deadline_expired), 1);
+        assert_eq!(pool.stats().pages_reserved, 0);
+    }
+
+    /// An impossible request is rejected with a typed message, not hung.
+    #[test]
+    fn oversized_request_rejected_on_stream() {
+        let (cfg, w) = tiny();
+        let pool = Arc::new(KvPool::new(&cfg, 2, 4)); // 8 token slots total
+        let ctl = GatewayCtl::new();
+        let (tx, handle) = serve_stream(
+            Box::new(NativeBackend::new(cfg, w)),
+            BridgeOpts::new(2).with_pool(pool.clone()),
+            ctl.clone(),
+        );
+        let (etx, erx) = mpsc::channel();
+        tx.send(StreamRequest { prompt: vec![1; 30], max_new: 10, deadline: None, tx: etx })
+            .unwrap();
+        match erx.recv_timeout(Duration::from_secs(60)).unwrap() {
+            StreamEvent::Rejected(msg) => assert!(msg.contains("KV"), "got: {msg}"),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        drop(tx);
+        handle.join().unwrap().unwrap();
+        assert_eq!(ctl.stats_snapshot(|s| s.rejected), 1);
+    }
+}

@@ -1,0 +1,589 @@
+//! The HTTP gateway: endpoints, per-connection protocol handling, and the
+//! lifecycle that ties the [listener](crate::net::listener) to the
+//! [bridge](crate::net::bridge).
+//!
+//! Endpoints:
+//!
+//! * `POST /generate` — body `{"prompt": "..." | [tokens], "max_new": N,
+//!   "deadline_ms": M}`. Streams one JSON line per token
+//!   (`{"t":N}`) over chunked transfer encoding, ending with a
+//!   `{"done":true, ...}` line; with `Accept: text/event-stream` the same
+//!   documents arrive as SSE `data:` events. Impossible requests get `413`
+//!   before any stream bytes; closing the connection mid-stream cancels
+//!   the request and releases its KV pages.
+//! * `GET /healthz` — liveness probe.
+//! * `GET /stats` — live [`GatewayStats`] + a current
+//!   [`KvPoolStats`] snapshot.
+//! * `POST /admin/drain` — stop accepting connections, finish in-flight
+//!   streams, then [`serve_http`] returns a [`GatewayReport`] whose
+//!   `leaked_pages` must be 0.
+//!
+//! The gateway holds no decode state of its own: every generation request
+//! funnels into the single bridge worker, which runs the same
+//! `BatchServer` scheduling kernel as offline serving — HTTP-streamed
+//! tokens are byte-identical to a direct batch run.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::kvpool::{KvPool, KvPoolStats};
+use crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS;
+use crate::engine::Backend;
+use crate::net::bridge::{run_bridge, BridgeOpts, StreamEvent, StreamRequest};
+use crate::net::http::{write_response, ChunkedWriter, HttpError, HttpRequest};
+use crate::net::listener::serve_connections;
+use crate::net::stats::GatewayStats;
+use crate::util::cli::defaults;
+use crate::util::json::{num, obj, s, Json};
+
+/// Shared control handle for a running gateway: drain flag, live stats,
+/// bound address, and the KV pool (for `/stats` and leak checks). Clone
+/// freely — all clones share one state.
+#[derive(Clone, Default)]
+pub struct GatewayCtl {
+    inner: Arc<CtlInner>,
+}
+
+#[derive(Default)]
+struct CtlInner {
+    draining: AtomicBool,
+    stats: Mutex<GatewayStats>,
+    bound: Mutex<Option<SocketAddr>>,
+    bound_cv: Condvar,
+    active: AtomicUsize,
+    queued: AtomicUsize,
+    pool: Mutex<Option<Arc<KvPool>>>,
+}
+
+impl GatewayCtl {
+    /// Fresh control handle (pass the same one to [`serve_http`] and to
+    /// whatever needs to drain or observe it).
+    pub fn new() -> GatewayCtl {
+        GatewayCtl::default()
+    }
+
+    /// Begin graceful shutdown: the acceptor stops taking connections,
+    /// in-flight streams run to completion, then [`serve_http`] returns.
+    pub fn drain(&self) {
+        self.inner.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a drain has been requested.
+    pub fn is_draining(&self) -> bool {
+        self.inner.draining.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` with the live stats locked (counter updates + snapshots).
+    pub fn with_stats<R>(&self, f: impl FnOnce(&mut GatewayStats) -> R) -> R {
+        let mut guard = self.inner.stats.lock().expect("gateway stats poisoned");
+        f(&mut guard)
+    }
+
+    /// Read-only snapshot accessor.
+    pub fn stats_snapshot<R>(&self, f: impl FnOnce(&GatewayStats) -> R) -> R {
+        self.with_stats(|st| f(st))
+    }
+
+    /// Publish the in-flight gauges (bridge-internal).
+    pub(crate) fn set_gauges(&self, active: usize, queued: usize) {
+        self.inner.active.store(active, Ordering::Relaxed);
+        self.inner.queued.store(queued, Ordering::Relaxed);
+    }
+
+    /// The queued-streams gauge (bridge-internal; bumped at enqueue so
+    /// `/stats` sees requests the scheduler has not looked at yet).
+    pub(crate) fn queued_gauge(&self) -> &AtomicUsize {
+        &self.inner.queued
+    }
+
+    /// Current `(active, queued)` stream gauges.
+    pub fn gauges(&self) -> (usize, usize) {
+        (self.inner.active.load(Ordering::Relaxed), self.inner.queued.load(Ordering::Relaxed))
+    }
+
+    fn set_bound(&self, addr: SocketAddr) {
+        *self.inner.bound.lock().expect("bound poisoned") = Some(addr);
+        self.inner.bound_cv.notify_all();
+    }
+
+    /// Block until the gateway has bound its socket (e.g. after handing
+    /// `addr` `:0`) and return the actual address; `None` on timeout.
+    pub fn wait_bound(&self, timeout: Duration) -> Option<SocketAddr> {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.inner.bound.lock().expect("bound poisoned");
+        loop {
+            if let Some(addr) = *guard {
+                return Some(addr);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (next, _) = self
+                .inner
+                .bound_cv
+                .wait_timeout(guard, deadline - now)
+                .expect("bound poisoned");
+            guard = next;
+        }
+    }
+
+    fn set_pool(&self, pool: Option<Arc<KvPool>>) {
+        *self.inner.pool.lock().expect("pool slot poisoned") = pool;
+    }
+
+    /// The gateway's KV pool, once serving has started (None on flat KV).
+    pub fn pool(&self) -> Option<Arc<KvPool>> {
+        self.inner.pool.lock().expect("pool slot poisoned").clone()
+    }
+
+    /// The `/stats` document: counters + gauges + a live KV snapshot.
+    pub fn stats_json(&self) -> Json {
+        let kv = self.pool().map(|p| p.stats());
+        let (active, queued) = self.gauges();
+        self.with_stats(|st| st.to_json(kv.as_ref(), active, queued))
+    }
+}
+
+/// Configuration for [`serve_http`].
+#[derive(Clone, Debug)]
+pub struct HttpServeOpts {
+    /// Bind address, e.g. `127.0.0.1:8090` (`:0` picks a free port —
+    /// recover it via [`GatewayCtl::wait_bound`] or `addr_file`).
+    pub addr: String,
+    /// HTTP worker threads (concurrent connections being handled).
+    pub threads: usize,
+    /// Max concurrently decoding streams (continuous batching width).
+    pub max_batch: usize,
+    /// KV pool size in pages; `0` auto-sizes to `max_batch` worst-case
+    /// sessions.
+    pub kv_pages: usize,
+    /// KV page size in token slots.
+    pub page_size: usize,
+    /// Serve with flat per-session KV buffers instead of the paged pool.
+    pub flat_kv: bool,
+    /// Deadline applied to requests that do not send `deadline_ms`.
+    pub default_deadline_ms: Option<u64>,
+    /// Idle keep-alive read timeout per connection (also bounds how long a
+    /// drain waits on idle connections).
+    pub keepalive_ms: u64,
+    /// If set, the bound address is written to this file once listening
+    /// (how CI discovers a `:0` port).
+    pub addr_file: Option<String>,
+    /// Head-of-line age boost threshold for the admission queue.
+    pub hol_boost_deferrals: u32,
+}
+
+impl HttpServeOpts {
+    /// Defaults: 8 HTTP threads, the CLI's serving batch width, auto-sized
+    /// paged KV, 1s keep-alive polls, no default deadline.
+    pub fn new(addr: &str) -> HttpServeOpts {
+        HttpServeOpts {
+            addr: addr.to_string(),
+            threads: defaults::HTTP_THREADS,
+            max_batch: defaults::MAX_BATCH,
+            kv_pages: defaults::KV_PAGES,
+            page_size: defaults::PAGE_SIZE,
+            flat_kv: false,
+            default_deadline_ms: None,
+            keepalive_ms: defaults::HTTP_KEEPALIVE_MS,
+            addr_file: None,
+            hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
+        }
+    }
+}
+
+/// What a drained gateway hands back — the CLI prints it and exits
+/// non-zero if `leaked_pages > 0`.
+#[derive(Clone, Debug)]
+pub struct GatewayReport {
+    /// Streams that ran to completion.
+    pub completed: usize,
+    /// Streams cancelled by client disconnect.
+    pub cancelled: usize,
+    /// Streams stopped by their deadline.
+    pub deadline_expired: usize,
+    /// Requests refused at admission.
+    pub rejected: usize,
+    /// Total tokens generated.
+    pub generated_tokens: usize,
+    /// Final KV pool counters (`None` on flat serving).
+    pub kv: Option<KvPoolStats>,
+    /// Pages still reserved after the drain — MUST be 0; anything else
+    /// means a session leaked its reservation.
+    pub leaked_pages: usize,
+}
+
+impl GatewayReport {
+    /// JSON form of the drain report.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("completed", num(self.completed as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("deadline_expired", num(self.deadline_expired as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("leaked_pages", num(self.leaked_pages as f64)),
+        ];
+        if let Some(kv) = &self.kv {
+            fields.push(("kv", crate::net::stats::kv_json(kv)));
+        }
+        obj(fields)
+    }
+}
+
+/// Serve HTTP on `opts.addr` until `ctl` drains; returns the final
+/// [`GatewayReport`]. Spawns one bridge worker (the decode loop) plus
+/// `opts.threads` connection workers, all scoped to this call — nothing
+/// outlives it.
+pub fn serve_http(
+    backend: &dyn Backend,
+    opts: &HttpServeOpts,
+    ctl: &GatewayCtl,
+) -> Result<GatewayReport> {
+    let cfg = backend.cfg();
+    let pool = if !opts.flat_kv && backend.capabilities().paged_kv {
+        let page_size = opts.page_size.max(1);
+        let pages = if opts.kv_pages == 0 {
+            // mirror BatchServer::with_kv_pool's auto-size: max_batch
+            // worst-case flat sessions
+            opts.max_batch.max(1) * (4 * cfg.seq_len).div_ceil(page_size)
+        } else {
+            opts.kv_pages
+        };
+        Some(Arc::new(KvPool::new(cfg, pages, page_size)))
+    } else {
+        None
+    };
+    ctl.set_pool(pool.clone());
+
+    let listener = TcpListener::bind(&opts.addr)?;
+    let local = listener.local_addr()?;
+    if let Some(path) = &opts.addr_file {
+        std::fs::write(path, local.to_string())?;
+    }
+    ctl.set_bound(local);
+    eprintln!("[gateway] listening on http://{local}");
+
+    let bopts = BridgeOpts {
+        max_batch: opts.max_batch.max(1),
+        pool: pool.clone(),
+        hol_boost_deferrals: opts.hol_boost_deferrals,
+    };
+    let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
+
+    std::thread::scope(|scope| -> Result<()> {
+        let bridge = scope.spawn(|| run_bridge(backend, &bopts, rx, ctl));
+        let hc = HandlerCtx {
+            tx,
+            default_deadline: opts.default_deadline_ms.map(Duration::from_millis),
+            keepalive: Duration::from_millis(opts.keepalive_ms.max(10)),
+            vocab: cfg.vocab,
+        };
+        let listened = serve_connections(listener, ctl, opts.threads.max(1), |stream| {
+            handle_connection(stream, ctl, &hc);
+        });
+        // dropping the request sender is the bridge's drain signal: it
+        // finishes everything in flight, then exits
+        drop(hc);
+        let bridged = match bridge.join() {
+            Ok(r) => r,
+            Err(_) => Err(anyhow::anyhow!("bridge worker panicked")),
+        };
+        listened?;
+        bridged
+    })?;
+
+    let kv = pool.as_ref().map(|p| p.stats());
+    let leaked_pages = kv.as_ref().map_or(0, |k| k.pages_reserved);
+    Ok(ctl.with_stats(|st| GatewayReport {
+        completed: st.completed,
+        cancelled: st.cancelled,
+        deadline_expired: st.deadline_expired,
+        rejected: st.rejected,
+        generated_tokens: st.generated_tokens,
+        kv: kv.clone(),
+        leaked_pages,
+    }))
+}
+
+/// Everything one connection handler needs; owns a clone-free handle on
+/// the bridge's request sender (dropping the ctx after the listener exits
+/// is what drains the bridge).
+struct HandlerCtx {
+    tx: mpsc::SyncSender<StreamRequest>,
+    default_deadline: Option<Duration>,
+    keepalive: Duration,
+    vocab: usize,
+}
+
+/// Keep-alive connection loop: parse requests until the peer closes, a
+/// protocol error occurs, or a drain is requested.
+fn handle_connection(mut stream: TcpStream, ctl: &GatewayCtl, hc: &HandlerCtx) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(hc.keepalive));
+    loop {
+        match HttpRequest::read_from(&mut stream) {
+            Ok(None) => break, // peer closed between requests
+            Ok(Some(req)) => {
+                ctl.with_stats(|st| st.http_requests += 1);
+                let keep = req.keep_alive() && !ctl.is_draining();
+                let served = dispatch(&mut stream, &req, keep, ctl, hc);
+                if served.is_err() || !keep {
+                    break;
+                }
+            }
+            Err(HttpError::IdleTimeout) => {
+                // idle keep-alive poll: stay open unless draining
+                if ctl.is_draining() {
+                    break;
+                }
+            }
+            Err(HttpError::BadRequest(msg)) => {
+                let _ = write_response(&mut stream, 400, "text/plain", msg.as_bytes(), false);
+                break;
+            }
+            Err(HttpError::TooLarge(what)) => {
+                let status = if what.contains("head") { 431 } else { 413 };
+                let _ = write_response(&mut stream, status, "text/plain", what.as_bytes(), false);
+                break;
+            }
+            Err(HttpError::Io(_)) => break,
+        }
+    }
+}
+
+fn dispatch(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep: bool,
+    ctl: &GatewayCtl,
+    hc: &HandlerCtx,
+) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => {
+            write_response(stream, 200, "application/json", b"{\"ok\":true}", keep)
+        }
+        ("GET", "/stats") => {
+            let doc = ctl.stats_json().dump();
+            write_response(stream, 200, "application/json", doc.as_bytes(), keep)
+        }
+        ("POST", "/admin/drain") => {
+            ctl.drain();
+            write_response(stream, 200, "application/json", b"{\"draining\":true}", false)
+        }
+        ("POST", "/generate") if ctl.is_draining() => {
+            write_response(stream, 503, "text/plain", b"draining", false)
+        }
+        ("POST", "/generate") => handle_generate(stream, req, keep, hc),
+        (_, "/healthz" | "/stats" | "/admin/drain" | "/generate") => {
+            write_response(stream, 405, "text/plain", b"method not allowed", keep)
+        }
+        _ => write_response(stream, 404, "text/plain", b"not found", keep),
+    }
+}
+
+/// Upper bound on `max_new` accepted over HTTP.
+const MAX_MAX_NEW: usize = 4096;
+/// `max_new` when the request omits it.
+const DEFAULT_MAX_NEW: usize = 16;
+
+struct GenSpec {
+    prompt: Vec<u8>,
+    max_new: usize,
+    deadline_ms: Option<u64>,
+}
+
+fn parse_generate(body: &[u8], vocab: usize) -> Result<GenSpec, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let doc = Json::parse(text).map_err(|e| format!("bad json: {e}"))?;
+    let vocab = vocab.max(1) as u32;
+    let prompt: Vec<u8> = match doc.get("prompt") {
+        // string prompts are byte-tokenized, wrapped into the model vocab
+        Some(Json::Str(st)) if !st.is_empty() => {
+            st.bytes().map(|b| (b as u32 % vocab) as u8).collect()
+        }
+        Some(Json::Arr(items)) if !items.is_empty() => {
+            let mut toks = Vec::with_capacity(items.len());
+            for item in items {
+                let n = item
+                    .as_f64()
+                    .ok_or_else(|| "prompt array entries must be numbers".to_string())?;
+                if !(0.0..=255.0).contains(&n) || n.fract() != 0.0 {
+                    return Err(format!("prompt token {n} out of range 0..=255"));
+                }
+                toks.push((n as u32 % vocab) as u8);
+            }
+            toks
+        }
+        Some(Json::Str(_)) | Some(Json::Arr(_)) => return Err("empty prompt".to_string()),
+        _ => return Err("missing \"prompt\" (string or token array)".to_string()),
+    };
+    let max_new = match doc.get("max_new") {
+        None => DEFAULT_MAX_NEW,
+        Some(v) => match v.as_f64() {
+            Some(n) if (1.0..=MAX_MAX_NEW as f64).contains(&n) && n.fract() == 0.0 => {
+                n as usize
+            }
+            _ => return Err(format!("max_new must be an integer in 1..={MAX_MAX_NEW}")),
+        },
+    };
+    let deadline_ms = match doc.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms >= 0.0 => Some(ms as u64),
+            _ => return Err("deadline_ms must be a non-negative number".to_string()),
+        },
+    };
+    Ok(GenSpec { prompt, max_new, deadline_ms })
+}
+
+/// `POST /generate`: admit the request into the bridge and stream its
+/// tokens back. The status line is withheld until the FIRST stream event,
+/// so a rejection is a clean `413` rather than a broken 200-stream.
+fn handle_generate(
+    stream: &mut TcpStream,
+    req: &HttpRequest,
+    keep: bool,
+    hc: &HandlerCtx,
+) -> std::io::Result<()> {
+    let spec = match parse_generate(&req.body, hc.vocab) {
+        Ok(spec) => spec,
+        Err(msg) => return write_response(stream, 400, "text/plain", msg.as_bytes(), keep),
+    };
+    let deadline = spec
+        .deadline_ms
+        .map(Duration::from_millis)
+        .or(hc.default_deadline)
+        .map(|d| Instant::now() + d);
+    let (etx, erx) = mpsc::channel::<StreamEvent>();
+    let sr =
+        StreamRequest { prompt: spec.prompt, max_new: spec.max_new, deadline, tx: etx };
+    if hc.tx.send(sr).is_err() {
+        return write_response(stream, 503, "text/plain", b"server shutting down", false);
+    }
+    let first = match erx.recv() {
+        Ok(ev) => ev,
+        Err(_) => {
+            return write_response(stream, 500, "text/plain", b"stream worker gone", false)
+        }
+    };
+    if let StreamEvent::Rejected(msg) = first {
+        let doc = obj(vec![("error", s(&msg))]).dump();
+        return write_response(stream, 413, "application/json", doc.as_bytes(), keep);
+    }
+    let sse = req.wants_sse();
+    let content_type = if sse { "text/event-stream" } else { "application/json" };
+    let mut cw = ChunkedWriter::start(stream, 200, content_type, keep)?;
+    let mut ev = first;
+    loop {
+        let line = match &ev {
+            StreamEvent::Token(t) => format!("{{\"t\":{t}}}"),
+            StreamEvent::Done(d) => obj(vec![
+                ("done", Json::Bool(true)),
+                ("generated", num(d.generated as f64)),
+                ("ttft_s", num(d.ttft_s)),
+                ("latency_s", num(d.latency_s)),
+                ("stopped", s(d.stopped.label())),
+            ])
+            .dump(),
+            // a rejection is always the first event; unreachable here, but
+            // surface it rather than hang if that invariant ever breaks
+            StreamEvent::Rejected(msg) => obj(vec![("error", s(msg))]).dump(),
+        };
+        if sse {
+            cw.sse_event(&line)?;
+        } else {
+            cw.chunk(format!("{line}\n").as_bytes())?;
+        }
+        if !matches!(ev, StreamEvent::Token(_)) {
+            break;
+        }
+        ev = match erx.recv() {
+            Ok(next) => next,
+            Err(_) => break, // bridge died mid-stream; terminate the chunks
+        };
+    }
+    cw.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_accepts_string_and_array_prompts() {
+        let spec =
+            parse_generate(br#"{"prompt": "hi", "max_new": 3}"#, 32).expect("string prompt");
+        assert_eq!(spec.prompt, vec![b'h' % 32, b'i' % 32]);
+        assert_eq!(spec.max_new, 3);
+        assert_eq!(spec.deadline_ms, None);
+
+        let spec = parse_generate(br#"{"prompt": [1, 2, 40], "deadline_ms": 250}"#, 32)
+            .expect("array prompt");
+        assert_eq!(spec.prompt, vec![1, 2, 40 % 32]);
+        assert_eq!(spec.max_new, DEFAULT_MAX_NEW);
+        assert_eq!(spec.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn parse_generate_rejects_bad_bodies() {
+        for (body, why) in [
+            (&b"not json"[..], "garbage"),
+            (br#"{}"#, "missing prompt"),
+            (br#"{"prompt": ""}"#, "empty string prompt"),
+            (br#"{"prompt": []}"#, "empty array prompt"),
+            (br#"{"prompt": [1, "x"]}"#, "non-numeric token"),
+            (br#"{"prompt": [300]}"#, "token out of range"),
+            (br#"{"prompt": "a", "max_new": 0}"#, "zero max_new"),
+            (br#"{"prompt": "a", "max_new": 99999}"#, "huge max_new"),
+            (br#"{"prompt": "a", "deadline_ms": -5}"#, "negative deadline"),
+        ] {
+            assert!(parse_generate(body, 32).is_err(), "should reject: {why}");
+        }
+    }
+
+    #[test]
+    fn ctl_drain_flag_and_gauges() {
+        let ctl = GatewayCtl::new();
+        assert!(!ctl.is_draining());
+        ctl.drain();
+        assert!(ctl.is_draining());
+        ctl.set_gauges(3, 7);
+        assert_eq!(ctl.gauges(), (3, 7));
+        // stats JSON carries the gauges and stays parseable
+        let doc = Json::parse(&ctl.stats_json().dump()).unwrap();
+        assert_eq!(doc.get("active").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.get("queued").unwrap().as_usize().unwrap(), 7);
+    }
+
+    #[test]
+    fn ctl_wait_bound_times_out_then_resolves() {
+        let ctl = GatewayCtl::new();
+        assert!(ctl.wait_bound(Duration::from_millis(20)).is_none());
+        let addr: SocketAddr = "127.0.0.1:4242".parse().unwrap();
+        ctl.set_bound(addr);
+        assert_eq!(ctl.wait_bound(Duration::from_secs(1)), Some(addr));
+    }
+
+    #[test]
+    fn report_json_includes_leak_count() {
+        let report = GatewayReport {
+            completed: 4,
+            cancelled: 1,
+            deadline_expired: 0,
+            rejected: 2,
+            generated_tokens: 40,
+            kv: None,
+            leaked_pages: 0,
+        };
+        let doc = Json::parse(&report.to_json().dump()).unwrap();
+        assert_eq!(doc.get("completed").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(doc.get("leaked_pages").unwrap().as_usize().unwrap(), 0);
+        assert!(doc.get("kv").is_none());
+    }
+}

@@ -1,0 +1,532 @@
+//! Minimal HTTP/1.1 over `std::net` — request parsing, response writing,
+//! chunked transfer encoding and server-sent events.
+//!
+//! No external crates: the gateway only needs the sliver of HTTP/1.1 that
+//! `curl`, browsers and the `stbllm loadgen` client speak — request line +
+//! headers + `Content-Length` bodies in, fixed or chunked responses out.
+//! The client-side helpers ([`read_response_head`], [`BodyReader`]) exist
+//! so the load generator and the integration tests exercise the gateway
+//! over real sockets instead of mocks.
+//!
+//! Headers are parsed with lowercased names; bodies are bounded by
+//! [`MAX_BODY_BYTES`] and heads by [`MAX_HEAD_BYTES`] so a misbehaving
+//! client cannot balloon server memory.
+
+use std::io::{Read, Write};
+
+/// Upper bound on the request line + headers of one request.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Upper bound on a request body (`Content-Length`).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Errors surfaced while reading or parsing HTTP traffic.
+#[derive(Debug)]
+pub enum HttpError {
+    /// The underlying socket failed mid-message.
+    Io(std::io::Error),
+    /// The peer sent something that is not HTTP/1.x (maps to `400`).
+    BadRequest(String),
+    /// Head or body exceeded its size bound (maps to `431`/`413`).
+    TooLarge(&'static str),
+    /// The read timed out while the connection was idle between requests —
+    /// a keep-alive poll, not a protocol error.
+    IdleTimeout,
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "http i/o error: {e}"),
+            HttpError::BadRequest(m) => write!(f, "bad request: {m}"),
+            HttpError::TooLarge(what) => write!(f, "{what} too large"),
+            HttpError::IdleTimeout => write!(f, "idle keep-alive timeout"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    /// Request method, uppercased by the client ("GET", "POST", ...).
+    pub method: String,
+    /// Raw request target, e.g. `/generate?mode=sse`.
+    pub target: String,
+    /// Protocol version string, e.g. `HTTP/1.1`.
+    pub version: String,
+    /// Header `(name, value)` pairs; names are lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty unless `Content-Length` was sent).
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header value for `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The target path with any query string stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// Whether the connection should stay open after the response
+    /// (HTTP/1.1 defaults to keep-alive unless `Connection: close`).
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(|v| v.to_ascii_lowercase()) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.version == "HTTP/1.1",
+        }
+    }
+
+    /// Whether the client asked for a server-sent-events stream.
+    pub fn wants_sse(&self) -> bool {
+        self.header("accept").is_some_and(|a| a.contains("text/event-stream"))
+    }
+
+    /// Read and parse one request from `r`.
+    ///
+    /// Returns `Ok(None)` on clean EOF before any byte arrives (the peer
+    /// closed an idle keep-alive connection); [`HttpError::IdleTimeout`]
+    /// when the socket's read timeout fires while idle, so the caller can
+    /// poll a drain flag and keep waiting.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Option<HttpRequest>, HttpError> {
+        // Byte-at-a-time head read: never consumes past the blank line, so
+        // sequential requests on a keep-alive connection stay framed.
+        let mut head: Vec<u8> = Vec::with_capacity(256);
+        let mut byte = [0u8; 1];
+        loop {
+            match r.read(&mut byte) {
+                Ok(0) => {
+                    if head.is_empty() {
+                        return Ok(None); // clean close between requests
+                    }
+                    return Err(HttpError::BadRequest("eof mid-header".into()));
+                }
+                Ok(_) => {
+                    head.push(byte[0]);
+                    if head.len() > MAX_HEAD_BYTES {
+                        return Err(HttpError::TooLarge("request head"));
+                    }
+                    if head.ends_with(b"\r\n\r\n") {
+                        break;
+                    }
+                }
+                Err(e) if is_timeout(&e) && head.is_empty() => {
+                    return Err(HttpError::IdleTimeout)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+        let text = std::str::from_utf8(&head)
+            .map_err(|_| HttpError::BadRequest("non-utf8 header block".into()))?;
+        let mut lines = text.split("\r\n");
+        let request_line = lines.next().unwrap_or("");
+        let mut parts = request_line.split_whitespace();
+        let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v)) if v.starts_with("HTTP/1") => {
+                (m.to_string(), t.to_string(), v.to_string())
+            }
+            _ => {
+                return Err(HttpError::BadRequest(format!("bad request line {request_line:?}")))
+            }
+        };
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(HttpError::BadRequest(format!("bad header line {line:?}")));
+            };
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let req = HttpRequest { method, target, version, headers, body: Vec::new() };
+        let len = match req.header("content-length") {
+            None => 0,
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| HttpError::BadRequest(format!("bad content-length {v:?}")))?,
+        };
+        if len > MAX_BODY_BYTES {
+            return Err(HttpError::TooLarge("request body"));
+        }
+        let mut req = req;
+        if len > 0 {
+            let mut body = vec![0u8; len];
+            r.read_exact(&mut body).map_err(HttpError::Io)?;
+            req.body = body;
+        }
+        Ok(Some(req))
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// Write a complete fixed-length response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// A streaming response using chunked transfer encoding. Each
+/// [`ChunkedWriter::chunk`] is flushed immediately so the peer observes
+/// tokens as they are generated; [`ChunkedWriter::finish`] writes the
+/// zero-length terminator.
+pub struct ChunkedWriter<'w, W: Write> {
+    w: &'w mut W,
+}
+
+impl<'w, W: Write> ChunkedWriter<'w, W> {
+    /// Write the response head and switch the connection to chunked
+    /// transfer encoding.
+    pub fn start(
+        w: &'w mut W,
+        status: u16,
+        content_type: &str,
+        keep_alive: bool,
+    ) -> std::io::Result<ChunkedWriter<'w, W>> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ntransfer-encoding: chunked\r\nconnection: {}\r\n\r\n",
+            status,
+            reason(status),
+            content_type,
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    /// Emit one chunk (flushed).
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Emit one server-sent event carrying `data` (flushed).
+    pub fn sse_event(&mut self, data: &str) -> std::io::Result<()> {
+        self.chunk(format!("data: {data}\n\n").as_bytes())
+    }
+
+    /// Terminate the stream with the zero-length chunk.
+    pub fn finish(self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Status line + headers of a response, as read by the client helpers.
+#[derive(Debug)]
+pub struct ResponseHead {
+    /// HTTP status code.
+    pub status: u16,
+    /// Header `(name, value)` pairs, names lowercased.
+    pub headers: Vec<(String, String)>,
+}
+
+impl ResponseHead {
+    /// First header value for `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the body uses chunked transfer encoding.
+    pub fn chunked(&self) -> bool {
+        self.header("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked"))
+    }
+
+    /// The `Content-Length`, if declared.
+    pub fn content_length(&self) -> Option<usize> {
+        self.header("content-length").and_then(|v| v.parse().ok())
+    }
+}
+
+/// Client side: read a response's status line + headers from `r`.
+pub fn read_response_head<R: Read>(r: &mut R) -> Result<ResponseHead, HttpError> {
+    let mut head: Vec<u8> = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => return Err(HttpError::BadRequest("eof before response head".into())),
+            Ok(_) => {
+                head.push(byte[0]);
+                if head.len() > MAX_HEAD_BYTES {
+                    return Err(HttpError::TooLarge("response head"));
+                }
+                if head.ends_with(b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+    }
+    let text = std::str::from_utf8(&head)
+        .map_err(|_| HttpError::BadRequest("non-utf8 response head".into()))?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| HttpError::BadRequest(format!("bad status line {status_line:?}")))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    Ok(ResponseHead { status, headers })
+}
+
+/// Client side: incremental body reader for a [`ResponseHead`] — yields
+/// chunk payloads one at a time for chunked bodies (what the streaming
+/// endpoints emit per token), or the whole body once for fixed-length
+/// responses.
+pub struct BodyReader {
+    chunked: bool,
+    remaining_fixed: usize,
+    done: bool,
+}
+
+impl BodyReader {
+    /// Build a reader matching `head`'s framing.
+    pub fn new(head: &ResponseHead) -> BodyReader {
+        BodyReader {
+            chunked: head.chunked(),
+            remaining_fixed: head.content_length().unwrap_or(0),
+            done: false,
+        }
+    }
+
+    /// Next piece of the body: one chunk payload (chunked) or the whole
+    /// remaining body (fixed length). `Ok(None)` once the body ends.
+    pub fn next_piece<R: Read>(&mut self, r: &mut R) -> Result<Option<Vec<u8>>, HttpError> {
+        if self.done {
+            return Ok(None);
+        }
+        if !self.chunked {
+            self.done = true;
+            if self.remaining_fixed == 0 {
+                return Ok(None);
+            }
+            let mut body = vec![0u8; self.remaining_fixed];
+            r.read_exact(&mut body).map_err(HttpError::Io)?;
+            return Ok(Some(body));
+        }
+        // chunk-size line (hex) \r\n payload \r\n
+        let mut line = Vec::with_capacity(8);
+        let mut byte = [0u8; 1];
+        loop {
+            match r.read(&mut byte) {
+                Ok(0) => return Err(HttpError::BadRequest("eof in chunk size".into())),
+                Ok(_) => {
+                    line.push(byte[0]);
+                    if line.len() > 32 {
+                        return Err(HttpError::BadRequest("chunk size line too long".into()));
+                    }
+                    if line.ends_with(b"\r\n") {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(HttpError::Io(e)),
+            }
+        }
+        let size_txt = std::str::from_utf8(&line[..line.len() - 2])
+            .map_err(|_| HttpError::BadRequest("non-utf8 chunk size".into()))?
+            .trim();
+        let size = usize::from_str_radix(size_txt.split(';').next().unwrap_or(""), 16)
+            .map_err(|_| HttpError::BadRequest(format!("bad chunk size {size_txt:?}")))?;
+        if size == 0 {
+            // terminator: consume the trailing CRLF
+            let mut crlf = [0u8; 2];
+            r.read_exact(&mut crlf).map_err(HttpError::Io)?;
+            self.done = true;
+            return Ok(None);
+        }
+        if size > MAX_BODY_BYTES {
+            return Err(HttpError::TooLarge("response chunk"));
+        }
+        let mut payload = vec![0u8; size + 2];
+        r.read_exact(&mut payload).map_err(HttpError::Io)?;
+        payload.truncate(size); // drop the trailing CRLF
+        Ok(Some(payload))
+    }
+
+    /// Drain the rest of the body into one buffer.
+    pub fn read_all<R: Read>(&mut self, r: &mut R) -> Result<Vec<u8>, HttpError> {
+        let mut out = Vec::new();
+        while let Some(piece) = self.next_piece(r)? {
+            out.extend_from_slice(&piece);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body_and_headers() {
+        let raw = b"POST /generate?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 5\r\nAccept: text/event-stream\r\n\r\nhello";
+        let req = HttpRequest::read_from(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path(), "/generate");
+        assert_eq!(req.target, "/generate?x=1");
+        assert_eq!(req.header("host"), Some("a"));
+        assert_eq!(req.header("HOST"), Some("a"));
+        assert_eq!(req.body, b"hello");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert!(req.wants_sse());
+    }
+
+    #[test]
+    fn keep_alive_semantics() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = HttpRequest::read_from(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        let req = HttpRequest::read_from(&mut Cursor::new(&raw[..])).unwrap().unwrap();
+        assert!(!req.keep_alive(), "HTTP/1.0 defaults to close");
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_bad_request() {
+        assert!(HttpRequest::read_from(&mut Cursor::new(&b""[..])).unwrap().is_none());
+        match HttpRequest::read_from(&mut Cursor::new(&b"NOT HTTP\r\n\r\n"[..])) {
+            Err(HttpError::BadRequest(_)) => {}
+            other => panic!("expected BadRequest, got {other:?}"),
+        }
+        match HttpRequest::read_from(&mut Cursor::new(&b"GET /x HTTP/1.1\r\ntrunc"[..])) {
+            Err(HttpError::BadRequest(_)) => {}
+            other => panic!("expected BadRequest on eof mid-header, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_head_rejected() {
+        let mut raw = b"GET / HTTP/1.1\r\nx: ".to_vec();
+        raw.resize(raw.len() + MAX_HEAD_BYTES + 10, b'a');
+        match HttpRequest::read_from(&mut Cursor::new(&raw[..])) {
+            Err(HttpError::TooLarge(_)) => {}
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn two_requests_on_one_connection_stay_framed() {
+        let raw =
+            b"POST /a HTTP/1.1\r\nContent-Length: 3\r\n\r\nabcGET /b HTTP/1.1\r\n\r\n".to_vec();
+        let mut cur = Cursor::new(&raw[..]);
+        let a = HttpRequest::read_from(&mut cur).unwrap().unwrap();
+        assert_eq!((a.path(), &a.body[..]), ("/a", &b"abc"[..]));
+        let b = HttpRequest::read_from(&mut cur).unwrap().unwrap();
+        assert_eq!(b.path(), "/b");
+        assert!(HttpRequest::read_from(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn fixed_response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "application/json", b"{\"ok\":true}", true).unwrap();
+        let mut cur = Cursor::new(&wire[..]);
+        let head = read_response_head(&mut cur).unwrap();
+        assert_eq!(head.status, 200);
+        assert_eq!(head.content_length(), Some(11));
+        assert!(!head.chunked());
+        let body = BodyReader::new(&head).read_all(&mut cur).unwrap();
+        assert_eq!(body, b"{\"ok\":true}");
+    }
+
+    #[test]
+    fn chunked_roundtrip_streams_piecewise() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut wire, 200, "application/json", false).unwrap();
+            cw.chunk(b"{\"t\":1}\n").unwrap();
+            cw.chunk(b"{\"t\":2}\n").unwrap();
+            cw.chunk(b"{\"done\":true}\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let mut cur = Cursor::new(&wire[..]);
+        let head = read_response_head(&mut cur).unwrap();
+        assert!(head.chunked());
+        let mut br = BodyReader::new(&head);
+        assert_eq!(br.next_piece(&mut cur).unwrap().unwrap(), b"{\"t\":1}\n");
+        assert_eq!(br.next_piece(&mut cur).unwrap().unwrap(), b"{\"t\":2}\n");
+        assert_eq!(br.next_piece(&mut cur).unwrap().unwrap(), b"{\"done\":true}\n");
+        assert!(br.next_piece(&mut cur).unwrap().is_none());
+        assert!(br.next_piece(&mut cur).unwrap().is_none(), "stays done");
+    }
+
+    #[test]
+    fn sse_event_formatting() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut wire, 200, "text/event-stream", false).unwrap();
+            cw.sse_event("{\"t\":7}").unwrap();
+            cw.finish().unwrap();
+        }
+        let mut cur = Cursor::new(&wire[..]);
+        let head = read_response_head(&mut cur).unwrap();
+        assert_eq!(head.header("content-type"), Some("text/event-stream"));
+        let body = BodyReader::new(&head).read_all(&mut cur).unwrap();
+        assert_eq!(body, b"data: {\"t\":7}\n\n");
+    }
+}

@@ -1,0 +1,31 @@
+//! `net/` — the HTTP streaming gateway over the batch server.
+//!
+//! Dependency-free (`std::net` only) HTTP/1.1 serving for the packed
+//! sub-1-bit model: many concurrent clients share ONE resident model
+//! through the same continuous-batching scheduler offline serving uses.
+//!
+//! Module map:
+//! * [`http`] — request parsing, fixed/chunked/SSE response writing, and
+//!   the client-side helpers the load generator uses.
+//! * [`listener`] — nonblocking acceptor + bounded worker pool.
+//! * [`bridge`] — the decode-side worker: feeds requests into the shared
+//!   `BatchServer` scheduling kernel and streams tokens back per tick,
+//!   with deadlines, disconnect cancellation, and graceful drain.
+//! * [`gateway`] — endpoints (`/generate`, `/healthz`, `/stats`,
+//!   `/admin/drain`), connection handling, and [`serve_http`] tying it
+//!   all together.
+//! * [`stats`] — live [`GatewayStats`] counters and their JSON form.
+//!
+//! Entry points: `stbllm serve --http ADDR` (CLI), [`serve_http`]
+//! (library), [`bridge::serve_stream`] (in-process streaming without
+//! sockets).
+
+pub mod bridge;
+pub mod gateway;
+pub mod http;
+pub mod listener;
+pub mod stats;
+
+pub use bridge::{serve_stream, BridgeOpts, DoneInfo, StreamEvent, StreamRequest};
+pub use gateway::{serve_http, GatewayCtl, GatewayReport, HttpServeOpts};
+pub use stats::{GatewayStats, StopReason};

@@ -1,0 +1,195 @@
+//! Live gateway counters — what `GET /stats` serializes and what the
+//! final drain report aggregates.
+//!
+//! One [`GatewayStats`] lives behind a mutex shared by the HTTP workers
+//! (request/connection counters), the bridge worker (stream lifecycle,
+//! token counters, latency samples) and the `/stats` endpoint (snapshot).
+//! KV pool counters are NOT stored here — the endpoint snapshots the live
+//! [`KvPoolStats`] straight from the pool so the numbers are current, not
+//! end-of-run.
+
+use std::time::Instant;
+
+use crate::coordinator::kvpool::KvPoolStats;
+use crate::coordinator::server::percentile;
+use crate::util::json::{num, obj, Json};
+
+/// Why a stream ended — reported in the final event of every stream and
+/// tallied in [`GatewayStats`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// The request generated its full `max_new` tokens.
+    Completed,
+    /// The per-request deadline expired; the stream carries the tokens
+    /// generated up to that point.
+    Deadline,
+}
+
+impl StopReason {
+    /// Wire label used in the final stream event and the stats JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StopReason::Completed => "completed",
+            StopReason::Deadline => "deadline",
+        }
+    }
+}
+
+/// Counters for the HTTP gateway, accumulated across connections and
+/// streams. All derived rates are finite by construction (empty runs
+/// report zeros).
+#[derive(Debug)]
+pub struct GatewayStats {
+    /// Connections accepted by the listener.
+    pub connections: usize,
+    /// HTTP requests parsed (all endpoints).
+    pub http_requests: usize,
+    /// Generation streams admitted into the batch loop.
+    pub streams_started: usize,
+    /// Streams that ran to completion.
+    pub completed: usize,
+    /// Streams cancelled because the client disconnected mid-stream
+    /// (their KV pages were released back to the pool).
+    pub cancelled: usize,
+    /// Streams stopped by their deadline (partial output delivered).
+    pub deadline_expired: usize,
+    /// Requests refused at admission (can never fit the KV budget).
+    pub rejected: usize,
+    /// Admission backpressure events (deferred, later admitted).
+    pub deferred: usize,
+    /// Tokens generated across all streams.
+    pub generated_tokens: usize,
+    /// Seconds-to-first-token samples of completed streams.
+    ttfts: Vec<f64>,
+    /// End-to-end latency samples of completed streams.
+    latencies: Vec<f64>,
+    started: Instant,
+}
+
+impl Default for GatewayStats {
+    fn default() -> GatewayStats {
+        GatewayStats {
+            connections: 0,
+            http_requests: 0,
+            streams_started: 0,
+            completed: 0,
+            cancelled: 0,
+            deadline_expired: 0,
+            rejected: 0,
+            deferred: 0,
+            generated_tokens: 0,
+            ttfts: Vec::new(),
+            latencies: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl GatewayStats {
+    /// Record a finished stream's latency samples.
+    pub fn record_finished(&mut self, ttft_s: f64, latency_s: f64) {
+        self.ttfts.push(ttft_s);
+        self.latencies.push(latency_s);
+    }
+
+    /// Wall-clock seconds since the gateway started.
+    pub fn uptime_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Aggregate decode throughput over the gateway's uptime; `0.0` when
+    /// nothing was generated (always finite).
+    pub fn tokens_per_s(&self) -> f64 {
+        let up = self.uptime_s();
+        if self.generated_tokens == 0 || up <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / up
+    }
+
+    /// Serialize the counters (+ a live [`KvPoolStats`] snapshot and the
+    /// current in-flight gauges) into the `/stats` JSON document.
+    pub fn to_json(&self, kv: Option<&KvPoolStats>, active: usize, queued: usize) -> Json {
+        let mut ttfts = self.ttfts.clone();
+        let mut lats = self.latencies.clone();
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("uptime_s", num(self.uptime_s())),
+            ("connections", num(self.connections as f64)),
+            ("http_requests", num(self.http_requests as f64)),
+            ("streams_started", num(self.streams_started as f64)),
+            ("completed", num(self.completed as f64)),
+            ("cancelled", num(self.cancelled as f64)),
+            ("deadline_expired", num(self.deadline_expired as f64)),
+            ("rejected", num(self.rejected as f64)),
+            ("deferred", num(self.deferred as f64)),
+            ("active", num(active as f64)),
+            ("queued", num(queued as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("tokens_per_s", num(self.tokens_per_s())),
+            ("ttft_p50_s", num(percentile(&ttfts, 50.0))),
+            ("ttft_p95_s", num(percentile(&ttfts, 95.0))),
+            ("latency_p50_s", num(percentile(&lats, 50.0))),
+            ("latency_p95_s", num(percentile(&lats, 95.0))),
+        ];
+        if let Some(kv) = kv {
+            fields.push(("kv", kv_json(kv)));
+        }
+        obj(fields)
+    }
+}
+
+/// Serialize a [`KvPoolStats`] snapshot (shared by `/stats` and the CLI's
+/// drain report).
+pub fn kv_json(kv: &KvPoolStats) -> Json {
+    obj(vec![
+        ("total_pages", num(kv.total_pages as f64)),
+        ("page_size", num(kv.page_size as f64)),
+        ("pages_in_use", num(kv.pages_in_use as f64)),
+        ("pages_reserved", num(kv.pages_reserved as f64)),
+        ("peak_pages", num(kv.peak_pages as f64)),
+        ("allocated_total", num(kv.allocated_total as f64)),
+        ("cow_copies", num(kv.cow_copies as f64)),
+        ("prefix_hits", num(kv.prefix_hits as f64)),
+        ("prefix_hit_tokens", num(kv.prefix_hit_tokens as f64)),
+        ("evictions", num(kv.evictions as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stats_serialize_finite() {
+        let s = GatewayStats::default();
+        assert_eq!(s.tokens_per_s(), 0.0);
+        let j = s.to_json(None, 0, 0);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("completed").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(parsed.get("ttft_p95_s").unwrap().as_f64().unwrap(), 0.0);
+        assert!(parsed.get("kv").is_none());
+    }
+
+    #[test]
+    fn latency_percentiles_appear_in_json() {
+        let mut s = GatewayStats::default();
+        for i in 1..=20 {
+            s.record_finished(i as f64 / 100.0, i as f64 / 10.0);
+        }
+        s.completed = 20;
+        s.generated_tokens = 100;
+        let j = s.to_json(None, 2, 3);
+        assert_eq!(j.get("ttft_p50_s").unwrap().as_f64().unwrap(), 0.10);
+        assert_eq!(j.get("latency_p95_s").unwrap().as_f64().unwrap(), 1.9);
+        assert_eq!(j.get("active").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("queued").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn stop_reason_labels() {
+        assert_eq!(StopReason::Completed.label(), "completed");
+        assert_eq!(StopReason::Deadline.label(), "deadline");
+    }
+}

@@ -1,0 +1,308 @@
+//! `stbllm loadgen` — a concurrent streaming load generator for the HTTP
+//! gateway.
+//!
+//! Drives N keep-alive connections against `POST /generate`, measuring
+//! time-to-first-token and end-to-end latency per request from the
+//! client's side of the socket (the numbers the serving trajectory in
+//! EXPERIMENTS.md tracks), then snapshots `GET /stats` for the server-side
+//! prefix-cache counters and writes `reports/BENCH_http.json`.
+//!
+//! Built on the same `net::http` client helpers the integration tests
+//! use — real sockets, no mocks.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::server::percentile;
+use crate::net::http::{read_response_head, BodyReader};
+use crate::util::json::{num, obj, Json};
+
+/// Configuration for [`run_loadgen`].
+#[derive(Clone, Debug)]
+pub struct LoadgenOpts {
+    /// Gateway address, `host:port`.
+    pub target: String,
+    /// Concurrent keep-alive connections.
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Tokens to generate per request.
+    pub max_new: usize,
+    /// Send the SAME prompt on every request (exercises the server's
+    /// prefix cache — the `--smoke` gate requires hits > 0).
+    pub shared_prompt: bool,
+    /// `POST /admin/drain` after the workload (the CI job uses this to
+    /// shut the server down and collect its drain report).
+    pub drain: bool,
+    /// Where to write `BENCH_http.json`; `None` = `reports/`.
+    pub out: Option<PathBuf>,
+}
+
+impl LoadgenOpts {
+    /// The `--smoke` workload: 4 connections × 2 requests each, shared
+    /// 10-token prompt, 8 new tokens — small enough for CI, shared enough
+    /// to hit the prefix cache.
+    pub fn smoke(target: &str) -> LoadgenOpts {
+        LoadgenOpts {
+            target: target.to_string(),
+            connections: 4,
+            requests: 8,
+            prompt_len: 10,
+            max_new: 8,
+            shared_prompt: true,
+            drain: false,
+            out: None,
+        }
+    }
+}
+
+/// Client-side results of one loadgen run.
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    /// Requests that streamed to a `done` event.
+    pub completed: usize,
+    /// Requests that failed (connect, non-200, protocol, truncation).
+    pub errors: usize,
+    /// Tokens received across all streams.
+    pub generated_tokens: usize,
+    /// Wall-clock seconds for the whole workload.
+    pub wall_s: f64,
+    /// Aggregate client-observed throughput (finite; 0.0 on empty runs).
+    pub tok_s: f64,
+    /// Client-observed time-to-first-token percentiles (seconds).
+    pub ttft_p50_s: f64,
+    /// 95th-percentile TTFT.
+    pub ttft_p95_s: f64,
+    /// Client-observed end-to-end latency percentiles (seconds).
+    pub latency_p50_s: f64,
+    /// 95th-percentile latency.
+    pub latency_p95_s: f64,
+    /// Server-side prefix-cache hits (from `GET /stats` after the run).
+    pub prefix_hits: usize,
+    /// Where `BENCH_http.json` was written.
+    pub json_path: PathBuf,
+}
+
+struct Sample {
+    ttft_s: f64,
+    latency_s: f64,
+    tokens: usize,
+}
+
+/// Deterministic prompt for request index `i` (all-same when shared).
+fn prompt_tokens(opts: &LoadgenOpts, i: usize) -> Vec<u8> {
+    let salt = if opts.shared_prompt { 0 } else { i };
+    (0..opts.prompt_len).map(|k| ((k * 7 + salt * 13) % 31) as u8).collect()
+}
+
+fn body_for(opts: &LoadgenOpts, i: usize) -> String {
+    let toks: Vec<String> =
+        prompt_tokens(opts, i).iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\":[{}],\"max_new\":{}}}", toks.join(","), opts.max_new)
+}
+
+/// One `POST /generate` on an open connection; returns the stream sample.
+fn run_request(stream: &mut TcpStream, body: &str) -> Result<Sample> {
+    let t0 = Instant::now();
+    write!(
+        stream,
+        "POST /generate HTTP/1.1\r\nhost: stbllm\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )?;
+    stream.flush()?;
+    let head = read_response_head(stream).map_err(|e| anyhow!("response head: {e}"))?;
+    let mut reader = BodyReader::new(&head);
+    if head.status != 200 {
+        let detail = reader.read_all(stream).unwrap_or_default();
+        return Err(anyhow!(
+            "status {} from /generate: {}",
+            head.status,
+            String::from_utf8_lossy(&detail)
+        ));
+    }
+    let mut ttft = None;
+    let mut tokens = 0usize;
+    let mut done = false;
+    while let Some(piece) = reader.next_piece(stream).map_err(|e| anyhow!("stream: {e}"))? {
+        let text = String::from_utf8_lossy(&piece);
+        for line in text.lines() {
+            if line.contains("\"t\":") {
+                tokens += 1;
+                if ttft.is_none() {
+                    ttft = Some(t0.elapsed().as_secs_f64());
+                }
+            }
+            if line.contains("\"done\":true") {
+                done = true;
+            }
+        }
+    }
+    if !done {
+        return Err(anyhow!("stream ended without a done event ({tokens} tokens in)"));
+    }
+    let latency_s = t0.elapsed().as_secs_f64();
+    Ok(Sample { ttft_s: ttft.unwrap_or(latency_s), latency_s, tokens })
+}
+
+/// Simple GET returning the body (used for `/stats`) or POST with an
+/// empty body (used for `/admin/drain`).
+fn simple_request(target: &str, method: &str, path: &str) -> Result<Vec<u8>> {
+    let mut stream = TcpStream::connect(target)
+        .with_context(|| format!("connect {target}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: stbllm\r\nconnection: close\r\n\r\n"
+    )?;
+    stream.flush()?;
+    let head = read_response_head(&mut stream).map_err(|e| anyhow!("{path}: {e}"))?;
+    let body = BodyReader::new(&head)
+        .read_all(&mut stream)
+        .map_err(|e| anyhow!("{path} body: {e}"))?;
+    if head.status != 200 {
+        return Err(anyhow!("status {} from {path}", head.status));
+    }
+    Ok(body)
+}
+
+/// Run the workload, snapshot `/stats`, write `BENCH_http.json`.
+pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    let connections = opts.connections.max(1);
+    let requests = opts.requests.max(1);
+    let samples: Mutex<Vec<Sample>> = Mutex::new(Vec::with_capacity(requests));
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let wall0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..connections {
+            let samples = &samples;
+            let errors = &errors;
+            scope.spawn(move || {
+                // one keep-alive connection per worker, requests
+                // round-robined by index
+                let mut stream = match TcpStream::connect(&opts.target) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let mut errs = errors.lock().unwrap();
+                        for i in (c..requests).step_by(connections) {
+                            errs.push(format!("req {i}: connect: {e}"));
+                        }
+                        return;
+                    }
+                };
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
+                let _ = stream.set_nodelay(true);
+                for i in (c..requests).step_by(connections) {
+                    match run_request(&mut stream, &body_for(opts, i)) {
+                        Ok(sample) => samples.lock().unwrap().push(sample),
+                        Err(e) => errors.lock().unwrap().push(format!("req {i}: {e:#}")),
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = wall0.elapsed().as_secs_f64();
+    let samples = samples.into_inner().unwrap();
+    let errors = errors.into_inner().unwrap();
+    for e in &errors {
+        eprintln!("[loadgen] {e}");
+    }
+
+    // server-side counters AFTER the workload so prefix hits are visible
+    let prefix_hits = match simple_request(&opts.target, "GET", "/stats") {
+        Ok(body) => Json::parse(&String::from_utf8_lossy(&body))
+            .ok()
+            .and_then(|j| j.path(&["kv", "prefix_hits"]).and_then(Json::as_usize))
+            .unwrap_or(0),
+        Err(e) => {
+            eprintln!("[loadgen] stats fetch failed: {e:#}");
+            0
+        }
+    };
+    if opts.drain {
+        simple_request(&opts.target, "POST", "/admin/drain").context("drain request")?;
+    }
+
+    let generated_tokens: usize = samples.iter().map(|s| s.tokens).sum();
+    let mut ttfts: Vec<f64> = samples.iter().map(|s| s.ttft_s).collect();
+    let mut lats: Vec<f64> = samples.iter().map(|s| s.latency_s).collect();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let tok_s = if generated_tokens == 0 || wall_s <= 0.0 {
+        0.0
+    } else {
+        generated_tokens as f64 / wall_s
+    };
+    let report = LoadgenReport {
+        completed: samples.len(),
+        errors: errors.len(),
+        generated_tokens,
+        wall_s,
+        tok_s,
+        ttft_p50_s: percentile(&ttfts, 50.0),
+        ttft_p95_s: percentile(&ttfts, 95.0),
+        latency_p50_s: percentile(&lats, 50.0),
+        latency_p95_s: percentile(&lats, 95.0),
+        prefix_hits,
+        json_path: PathBuf::new(),
+    };
+
+    let json_path = match &opts.out {
+        Some(p) => p.clone(),
+        None => crate::report::reports_dir().join("BENCH_http.json"),
+    };
+    if let Some(dir) = json_path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let doc = obj(vec![
+        ("target", crate::util::json::s(&opts.target)),
+        ("connections", num(connections as f64)),
+        ("requests", num(requests as f64)),
+        ("prompt_len", num(opts.prompt_len as f64)),
+        ("max_new", num(opts.max_new as f64)),
+        ("shared_prompt", Json::Bool(opts.shared_prompt)),
+        ("completed", num(report.completed as f64)),
+        ("errors", num(report.errors as f64)),
+        ("generated_tokens", num(generated_tokens as f64)),
+        ("wall_s", num(wall_s)),
+        ("tok_s", num(tok_s)),
+        ("ttft_p50_s", num(report.ttft_p50_s)),
+        ("ttft_p95_s", num(report.ttft_p95_s)),
+        ("latency_p50_s", num(report.latency_p50_s)),
+        ("latency_p95_s", num(report.latency_p95_s)),
+        ("prefix_hits", num(prefix_hits as f64)),
+    ]);
+    std::fs::write(&json_path, doc.dump())
+        .with_context(|| format!("write {}", json_path.display()))?;
+    Ok(LoadgenReport { json_path, ..report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_prompts_are_identical_and_salted_ones_differ() {
+        let shared = LoadgenOpts { shared_prompt: true, ..LoadgenOpts::smoke("x") };
+        assert_eq!(prompt_tokens(&shared, 0), prompt_tokens(&shared, 5));
+        let distinct = LoadgenOpts { shared_prompt: false, ..LoadgenOpts::smoke("x") };
+        assert_ne!(prompt_tokens(&distinct, 0), prompt_tokens(&distinct, 5));
+        assert!(prompt_tokens(&shared, 0).iter().all(|&t| t < 31));
+    }
+
+    #[test]
+    fn request_body_is_valid_json() {
+        let opts = LoadgenOpts::smoke("x");
+        let body = body_for(&opts, 3);
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("prompt").unwrap().as_arr().unwrap().len(), 10);
+        assert_eq!(doc.get("max_new").unwrap().as_usize().unwrap(), 8);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod kernels;
+pub mod loadgen;
 
 use std::io::Write;
 use std::path::PathBuf;

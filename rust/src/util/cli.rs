@@ -34,6 +34,14 @@ pub mod defaults {
     pub const KV_PAGES: usize = 0;
     /// Token slots per KV page (must be a power of two).
     pub const PAGE_SIZE: usize = 16;
+    /// Connection-handler threads for `serve --http`.
+    pub const HTTP_THREADS: usize = 8;
+    /// Keep-alive idle read timeout (ms) for `serve --http`.
+    pub const HTTP_KEEPALIVE_MS: u64 = 1000;
+    /// Concurrent connections for `stbllm loadgen`.
+    pub const LOADGEN_CONNECTIONS: usize = 4;
+    /// Total requests for `stbllm loadgen`.
+    pub const LOADGEN_REQUESTS: usize = 16;
 }
 
 /// Parsed command-line arguments: options + positionals.
@@ -75,7 +83,7 @@ impl Args {
     }
 
     /// Boolean flags used across the stbllm CLI / examples / benches.
-    pub const COMMON_FLAGS: [&'static str; 11] = [
+    pub const COMMON_FLAGS: [&'static str; 12] = [
         "verbose",
         "fast",
         "full",
@@ -87,6 +95,7 @@ impl Args {
         "salient-aware",
         "smoke",
         "flat-kv",
+        "drain",
     ];
 
     pub fn from_env() -> Args {
