@@ -110,6 +110,14 @@ pub struct KvPoolStats {
     pub evictions: usize,
 }
 
+impl KvPoolStats {
+    /// Pages not promised to any live session — what the gateway's
+    /// load-shed watermark compares against.
+    pub fn free_pages(&self) -> usize {
+        self.total_pages.saturating_sub(self.pages_reserved)
+    }
+}
+
 struct PrefixEntry {
     /// the exact token history `[0, (k+1)·page_size)` this page encodes
     key: Vec<u8>,
@@ -571,6 +579,18 @@ mod tests {
             kv.on_token(t);
         }
         kv
+    }
+
+    #[test]
+    fn free_pages_tracks_reservations() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 8, 4));
+        assert_eq!(pool.stats().free_pages(), 8);
+        let toks: Vec<u8> = (0..10).collect();
+        let kv = run_seq(&pool, &cfg, 16, &toks);
+        assert_eq!(pool.stats().free_pages(), 8 - 4); // ceil(16/4) reserved
+        drop(kv);
+        assert_eq!(pool.stats().free_pages(), 8);
     }
 
     #[test]

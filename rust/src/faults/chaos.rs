@@ -1,0 +1,686 @@
+//! The chaos gauntlets: scripted fault injection with hard gates.
+//!
+//! [`run_chaos`] runs two gauntlets against the real implementations (no
+//! mocks) and records one [`FaultOutcome`] per injected fault:
+//!
+//! 1. **Artifacts** — a tiny packed model is saved as a v2 `.stbp` and a
+//!    `SBW2` weights file, then corrupted per the [`FaultPlan`]: seeded
+//!    random bit flips, a targeted flip inside the first entry's payload,
+//!    truncation, and a header lying about its sizes. Every corruption
+//!    must be rejected with a typed
+//!    [`ArtifactError`](crate::util::artifact::ArtifactError) (the
+//!    targeted flip must *name* the corrupt entry), rejections must be
+//!    byte-for-byte deterministic, and an untouched v1 container must
+//!    still load.
+//! 2. **Serving** — a real gateway (`serve_http` on `127.0.0.1:0`, small
+//!    KV pool) survives, in order: a client vanishing mid-stream, a
+//!    stalled half-written request, KV-pool exhaustion (at least one
+//!    shed `503 + Retry-After`, then a backoff retry that completes),
+//!    and a decode-loop panic injected through the bridge tick hook
+//!    (supervisor restart + a fresh stream on the same channel).
+//!    `/healthz` must answer 200 after every fault and the final drain
+//!    must report zero leaked KV pages.
+//!
+//! The report always lands on disk (default
+//! `reports/CHAOS_report.json`) before the pass/fail verdict, so CI can
+//! upload it even when the gate fails.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::NativeBackend;
+use crate::faults::plan::{flip_bit, FaultPlan};
+use crate::model::config::ModelConfig;
+use crate::model::weights::{parse_stbw, ModelWeights};
+use crate::net::http::{read_response_head, BodyReader};
+use crate::net::{serve_http, GatewayCtl, HttpServeOpts};
+use crate::packed::PackedModel;
+use crate::util::artifact::ArtifactError;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Configuration for [`run_chaos`].
+#[derive(Clone, Debug)]
+pub struct ChaosOpts {
+    /// Seed for the [`FaultPlan`] (CI pins `7`).
+    pub seed: u64,
+    /// CI mode: same gauntlet, smoke-sized phrasing in the summary.
+    pub smoke: bool,
+    /// Report path override (default `reports/CHAOS_report.json`).
+    pub out: Option<PathBuf>,
+}
+
+impl ChaosOpts {
+    /// Defaults: seed 7, report under `reports/`.
+    pub fn new(seed: u64) -> ChaosOpts {
+        ChaosOpts { seed, smoke: false, out: None }
+    }
+}
+
+/// One injected fault and whether the system held its guarantee.
+#[derive(Clone, Debug)]
+pub struct FaultOutcome {
+    /// Stable fault id, e.g. `stbp-bit-flips`.
+    pub name: String,
+    /// Whether the gate held.
+    pub ok: bool,
+    /// Human-readable evidence (error text, counter values, timings).
+    pub detail: String,
+}
+
+/// Everything one chaos run produced.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    /// The plan seed the run derived every fault from.
+    pub seed: u64,
+    /// Per-fault outcomes, in injection order.
+    pub outcomes: Vec<FaultOutcome>,
+    /// Whether every gate held.
+    pub passed: bool,
+    /// Where the JSON report was written.
+    pub json_path: PathBuf,
+}
+
+impl ChaosReport {
+    /// JSON form (what `reports/CHAOS_report.json` holds).
+    pub fn to_json(&self) -> Json {
+        let faults = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                obj(vec![
+                    ("name", s(&o.name)),
+                    ("ok", Json::Bool(o.ok)),
+                    ("detail", s(&o.detail)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("seed", num(self.seed as f64)),
+            ("passed", Json::Bool(self.passed)),
+            ("faults", arr(faults)),
+        ])
+    }
+}
+
+fn gate(outcomes: &mut Vec<FaultOutcome>, name: &str, ok: bool, detail: String) {
+    eprintln!("[chaos] {} {name}: {detail}", if ok { "ok  " } else { "FAIL" });
+    outcomes.push(FaultOutcome { name: name.to_string(), ok, detail });
+}
+
+/// Run both gauntlets and write the report. The returned report's
+/// `passed` is the CI gate; infrastructure failures (bind errors, a
+/// wedged gateway) surface as `Err` and fail the run the same way.
+pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
+    let plan = FaultPlan::new(opts.seed);
+    let mut outcomes = Vec::new();
+    artifact_gauntlet(&plan, &mut outcomes)?;
+    serving_gauntlet(&plan, &mut outcomes)?;
+
+    let passed = outcomes.iter().all(|o| o.ok);
+    let json_path = opts
+        .out
+        .clone()
+        .unwrap_or_else(|| crate::report::reports_dir().join("CHAOS_report.json"));
+    if let Some(dir) = json_path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let report = ChaosReport { seed: opts.seed, outcomes, passed, json_path };
+    std::fs::write(&report.json_path, report.to_json().dump())
+        .with_context(|| format!("writing {}", report.json_path.display()))?;
+    Ok(report)
+}
+
+/// Tiny model every fault is injected against (synthetic weights keyed by
+/// the plan seed, so even the victim model is reproducible).
+fn tiny_model(seed: u64) -> Result<(ModelConfig, ModelWeights)> {
+    let cfg = ModelConfig::preset("llama1-7b")
+        .context("preset llama1-7b missing from the model zoo")?;
+    let w = ModelWeights::synthetic(&cfg, seed);
+    Ok((cfg, w))
+}
+
+// ---------------------------------------------------------------------
+// gauntlet 1: artifact corruption
+// ---------------------------------------------------------------------
+
+/// Number of seeded random bit flips thrown at each container.
+const N_BIT_FLIPS: usize = 6;
+
+/// Byte offset of the first byte *inside the first entry's payload* of an
+/// encoded container, parsed from the wire bytes themselves (so the
+/// harness needs no access to the store's private field order). `header`
+/// is the fixed prefix before the first entry; the layout after the entry
+/// name differs per container kind.
+fn first_payload_offset(buf: &[u8], header: usize, kind_byte: bool) -> Option<usize> {
+    let u32_at = |off: usize| -> Option<u32> {
+        Some(u32::from_le_bytes(buf.get(off..off + 4)?.try_into().ok()?))
+    };
+    let mut off = header;
+    let kind = if kind_byte {
+        let k = *buf.get(off)?;
+        off += 1;
+        Some(k)
+    } else {
+        None
+    };
+    let name_len = u32_at(off)? as usize;
+    off += 4 + name_len;
+    match kind {
+        // .stbp: packed24 (rows u32 | cols u32 | meta...) or f32 tensor
+        Some(0) => Some(off + 8 + 2),
+        // f32 tensor (both .stbp kind 1 and SBW2): ndim | dims | data
+        _ => {
+            let ndim = u32_at(off)? as usize;
+            Some(off + 4 + 4 * ndim + 1)
+        }
+    }
+}
+
+/// Name of the first entry, parsed from the wire bytes.
+fn first_entry_name(buf: &[u8], header: usize, kind_byte: bool) -> Option<String> {
+    let off = header + usize::from(kind_byte);
+    let name_len =
+        u32::from_le_bytes(buf.get(off..off + 4)?.try_into().ok()?) as usize;
+    let name = buf.get(off + 4..off + 4 + name_len)?;
+    String::from_utf8(name.to_vec()).ok()
+}
+
+pub(crate) fn artifact_gauntlet(
+    plan: &FaultPlan,
+    outcomes: &mut Vec<FaultOutcome>,
+) -> Result<()> {
+    let dir = std::env::temp_dir().join(format!("stbllm-chaos-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let result = artifact_gauntlet_in(plan, outcomes, &dir);
+    std::fs::remove_dir_all(&dir).ok();
+    result
+}
+
+fn artifact_gauntlet_in(
+    plan: &FaultPlan,
+    outcomes: &mut Vec<FaultOutcome>,
+    dir: &std::path::Path,
+) -> Result<()> {
+    let (cfg, w) = tiny_model(plan.seed)?;
+    let pm = PackedModel::from_weights(&cfg, &w)?;
+
+    // clean v2 roundtrip is the baseline every corruption deviates from
+    let stbp = dir.join("chaos.stbp");
+    pm.save(&stbp)?;
+    let clean = std::fs::read(&stbp)?;
+    gate(
+        outcomes,
+        "stbp-roundtrip",
+        PackedModel::load_bytes(&clean).is_ok(),
+        format!("v2 container ({} bytes) reloads clean", clean.len()),
+    );
+
+    // seeded random bit flips: every one must be rejected with a typed
+    // error, and rejections must be deterministic (same seed, same errors)
+    let flips = plan.bit_flips(clean.len(), N_BIT_FLIPS);
+    let reject = |bits: &[u64]| -> Vec<Option<String>> {
+        bits.iter()
+            .map(|&bit| {
+                let mut bad = clean.clone();
+                flip_bit(&mut bad, bit);
+                PackedModel::load_bytes(&bad).err().map(|e| e.to_string())
+            })
+            .collect()
+    };
+    let first_pass = reject(&flips);
+    let all_rejected = first_pass.iter().all(|e| e.is_some());
+    gate(
+        outcomes,
+        "stbp-bit-flips",
+        all_rejected,
+        format!(
+            "{}/{} seeded flips rejected (first: {})",
+            first_pass.iter().filter(|e| e.is_some()).count(),
+            flips.len(),
+            first_pass[0].as_deref().unwrap_or("NOT REJECTED"),
+        ),
+    );
+    gate(
+        outcomes,
+        "stbp-deterministic-rejection",
+        reject(&flips) == first_pass,
+        format!("two passes over {} flips produced identical errors", flips.len()),
+    );
+
+    // targeted payload flip: the error must NAME the corrupt entry
+    let payload_off = first_payload_offset(&clean, 12, true)
+        .context("could not locate the first .stbp entry payload")?;
+    let victim = first_entry_name(&clean, 12, true)
+        .context("could not parse the first .stbp entry name")?;
+    let mut bad = clean.clone();
+    flip_bit(&mut bad, payload_off as u64 * 8);
+    let (named, detail) = match PackedModel::load_bytes(&bad) {
+        Err(ArtifactError::EntryChecksum { entry, offset, .. }) => {
+            (entry == victim, format!("entry {entry:?} @ offset {offset}"))
+        }
+        Err(other) => (false, format!("wrong error kind: {other}")),
+        Ok(_) => (false, "corrupt payload ACCEPTED".to_string()),
+    };
+    gate(outcomes, "stbp-names-corrupt-entry", named, detail);
+
+    // truncation: typed, never a panic or an OOM
+    let cut = plan.truncate_to(clean.len());
+    let truncated = PackedModel::load_bytes(&clean[..cut]);
+    gate(
+        outcomes,
+        "stbp-truncation",
+        truncated.is_err(),
+        match truncated.err() {
+            Some(e) => format!("cut to {cut}/{} bytes: {e}", clean.len()),
+            None => "truncated container ACCEPTED".to_string(),
+        },
+    );
+
+    // a header lying about its entry count must bound-check, not allocate
+    let mut lying = clean.clone();
+    lying[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    let lied = PackedModel::load_bytes(&lying);
+    gate(
+        outcomes,
+        "stbp-lying-header",
+        matches!(lied, Err(ArtifactError::BoundExceeded { .. })),
+        match lied.err() {
+            Some(e) => e.to_string(),
+            None => "u32::MAX entry count ACCEPTED".to_string(),
+        },
+    );
+
+    // v1 compatibility: yesterday's containers still load unchanged
+    let v1 = dir.join("chaos_v1.stbp");
+    pm.save_v1(&v1)?;
+    let v1_bytes = std::fs::read(&v1)?;
+    gate(
+        outcomes,
+        "stbp-v1-compat",
+        v1_bytes[4..8] == 1u32.to_le_bytes() && PackedModel::load_bytes(&v1_bytes).is_ok(),
+        format!("v1 container ({} bytes) loads without checksums", v1_bytes.len()),
+    );
+
+    // the weights container gets the same treatment
+    let sbw = dir.join("chaos.sbw2");
+    w.save(&sbw)?;
+    let wclean = std::fs::read(&sbw)?;
+    let woff = first_payload_offset(&wclean, 8, false)
+        .context("could not locate the first SBW2 tensor payload")?;
+    let wvictim = first_entry_name(&wclean, 8, false)
+        .context("could not parse the first SBW2 tensor name")?;
+    let mut wbad = wclean.clone();
+    flip_bit(&mut wbad, woff as u64 * 8);
+    let (wnamed, wdetail) = match parse_stbw(&wbad) {
+        Err(ArtifactError::EntryChecksum { entry, offset, .. }) => {
+            (entry == wvictim, format!("tensor {entry:?} @ offset {offset}"))
+        }
+        Err(other) => (false, format!("wrong error kind: {other}")),
+        Ok(_) => (false, "corrupt tensor ACCEPTED".to_string()),
+    };
+    gate(
+        outcomes,
+        "sbw2-flip-rejected",
+        parse_stbw(&wclean).is_ok() && wnamed,
+        wdetail,
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// gauntlet 2: the live gateway
+// ---------------------------------------------------------------------
+
+/// Serving-side chaos sizing: a pool small enough to exhaust on purpose.
+const CHAOS_KV_PAGES: usize = 16;
+const CHAOS_PAGE_SIZE: usize = 4;
+const CHAOS_MAX_BATCH: usize = 2;
+/// Free-page watermark for the exhaustion fault: two saturating streams
+/// (7 pages each) leave 2 free pages, below this, so the probe sheds.
+const CHAOS_SHED_WATERMARK: usize = 4;
+/// Per-fault patience (CI machines can be slow).
+const WAIT: Duration = Duration::from_secs(60);
+
+/// Shared fault-injection state behind the bridge tick hook: an optional
+/// per-tick stall (keeps streams in flight while a fault needs them) and
+/// a one-shot armed panic.
+struct TickChaos {
+    stall_ms: AtomicU64,
+    panic_armed: AtomicBool,
+}
+
+fn connect(addr: SocketAddr) -> Result<TcpStream> {
+    let s = TcpStream::connect(addr).context("connect to chaos gateway")?;
+    s.set_read_timeout(Some(WAIT)).context("set read timeout")?;
+    s.set_nodelay(true).ok();
+    Ok(s)
+}
+
+/// One-shot request (`connection: close`); returns status, headers, body.
+fn fetch(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+    let mut stream = connect(addr)?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nhost: chaos\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .context("send request")?;
+    let head = read_response_head(&mut stream).context("read response head")?;
+    let bytes = BodyReader::new(&head).read_all(&mut stream).context("read response body")?;
+    Ok((head.status, head.headers, bytes))
+}
+
+fn healthz_ok(addr: SocketAddr) -> bool {
+    matches!(fetch(addr, "GET", "/healthz", ""), Ok((200, _, _)))
+}
+
+fn stats(addr: SocketAddr) -> Result<Json> {
+    let (status, _, bytes) = fetch(addr, "GET", "/stats", "")?;
+    if status != 200 {
+        anyhow::bail!("/stats answered {status}");
+    }
+    Json::parse(&String::from_utf8_lossy(&bytes))
+        .map_err(|e| anyhow::anyhow!("bad /stats json: {e}"))
+}
+
+/// Poll `/stats` until `pred` holds (asynchronous retirement).
+fn wait_stats(
+    addr: SocketAddr,
+    what: &str,
+    pred: impl Fn(&Json) -> bool,
+) -> Result<Json> {
+    let deadline = Instant::now() + WAIT;
+    loop {
+        let doc = stats(addr)?;
+        if pred(&doc) {
+            return Ok(doc);
+        }
+        if Instant::now() >= deadline {
+            anyhow::bail!("timed out waiting for {what}: {}", doc.dump());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn generate_body(prompt: &[u8], max_new: usize) -> String {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!("{{\"prompt\":[{}],\"max_new\":{max_new}}}", toks.join(","))
+}
+
+/// Streamed `POST /generate` that completed: returns the token count once
+/// the `done` line arrives.
+fn run_stream(addr: SocketAddr, prompt: &[u8], max_new: usize) -> Result<usize> {
+    let (status, _, bytes) =
+        fetch(addr, "POST", "/generate", &generate_body(prompt, max_new))?;
+    if status != 200 {
+        anyhow::bail!("generate answered {status}: {}", String::from_utf8_lossy(&bytes));
+    }
+    let text = String::from_utf8_lossy(&bytes);
+    let mut tokens = 0usize;
+    let mut done = false;
+    for line in text.lines() {
+        let doc =
+            Json::parse(line).map_err(|e| anyhow::anyhow!("bad stream line {line:?}: {e}"))?;
+        if doc.get("t").is_some() {
+            tokens += 1;
+        } else if doc.get("done").is_some() {
+            done = true;
+        }
+    }
+    if !done {
+        anyhow::bail!("stream ended without a done event");
+    }
+    Ok(tokens)
+}
+
+fn serving_gauntlet(plan: &FaultPlan, outcomes: &mut Vec<FaultOutcome>) -> Result<()> {
+    let (cfg, w) = tiny_model(1)?;
+    let ctl = GatewayCtl::new();
+    let chaos_state =
+        Arc::new(TickChaos { stall_ms: AtomicU64::new(0), panic_armed: AtomicBool::new(false) });
+    {
+        let cs = chaos_state.clone();
+        ctl.set_tick_hook(Some(Arc::new(move |_tick| {
+            if cs.panic_armed.swap(false, Ordering::SeqCst) {
+                panic!("chaos: injected bridge panic");
+            }
+            let ms = cs.stall_ms.load(Ordering::Relaxed);
+            if ms > 0 {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+        })));
+    }
+
+    let ctl2 = ctl.clone();
+    let handle = std::thread::spawn(move || {
+        let be = NativeBackend::new(cfg, w);
+        let mut opts = HttpServeOpts::new("127.0.0.1:0");
+        opts.threads = 4;
+        opts.max_batch = CHAOS_MAX_BATCH;
+        opts.kv_pages = CHAOS_KV_PAGES;
+        opts.page_size = CHAOS_PAGE_SIZE;
+        opts.keepalive_ms = 50;
+        opts.shed_watermark = CHAOS_SHED_WATERMARK;
+        serve_http(&be, &opts, &ctl2)
+    });
+    let addr = ctl.wait_bound(WAIT).context("chaos gateway never bound")?;
+    if !healthz_ok(addr) {
+        anyhow::bail!("gateway unhealthy before any fault");
+    }
+
+    // ---- fault: client vanishes mid-stream -------------------------
+    // slow the decode loop so the stream is provably in flight when the
+    // client disconnects (otherwise a fast tiny model could complete
+    // before the shutdown lands and the fault would test nothing)
+    chaos_state.stall_ms.store(plan.decode_stall_ms(), Ordering::Relaxed);
+    {
+        let mut s = connect(addr)?;
+        let body = generate_body(&[1, 2, 3], 24);
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nhost: chaos\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )?;
+        let head = read_response_head(&mut s).context("disconnect victim head")?;
+        if head.status != 200 {
+            anyhow::bail!("victim stream answered {}", head.status);
+        }
+        let mut reader = BodyReader::new(&head);
+        for _ in 0..plan.disconnect_after() {
+            reader.next_piece(&mut s).context("victim stream chunk")?;
+        }
+        let _ = s.shutdown(std::net::Shutdown::Both);
+    }
+    let doc = wait_stats(addr, "disconnect cancellation", |d| {
+        d.get("cancelled").and_then(Json::as_usize) >= Some(1)
+            && d.path(&["kv", "pages_reserved"]).and_then(Json::as_usize) == Some(0)
+    })?;
+    chaos_state.stall_ms.store(0, Ordering::Relaxed);
+    gate(
+        outcomes,
+        "client-disconnect",
+        healthz_ok(addr),
+        format!(
+            "cancelled after {} chunks, pages recovered ({} cancelled total)",
+            plan.disconnect_after(),
+            doc.get("cancelled").and_then(Json::as_usize).unwrap_or(0)
+        ),
+    );
+
+    // ---- fault: stalled client, half-written requests --------------
+    let stall = plan.stall_ms();
+    {
+        // half a request head, then EOF
+        let mut s = connect(addr)?;
+        s.write_all(b"POST /generate HTTP/1.1\r\ncontent-le")?;
+        std::thread::sleep(Duration::from_millis(stall));
+        drop(s);
+        // a body shorter than its content-length claims, then EOF
+        let mut s = connect(addr)?;
+        s.write_all(b"POST /generate HTTP/1.1\r\nhost: chaos\r\ncontent-length: 100\r\n\r\nshort")?;
+        std::thread::sleep(Duration::from_millis(stall));
+        drop(s);
+    }
+    gate(
+        outcomes,
+        "stalled-client",
+        healthz_ok(addr) && run_stream(addr, &[4, 5], 2).is_ok(),
+        format!("two half-written requests held {stall}ms; gateway still serves"),
+    );
+
+    // ---- fault: KV-pool exhaustion -> shed -> retry ----------------
+    // two stalled streams reserve 14/16 pages; free (2) < watermark (4),
+    // so the probe request must shed with 503 + Retry-After
+    chaos_state.stall_ms.store(plan.decode_stall_ms(), Ordering::Relaxed);
+    let saturators: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                // prompt 4 + max_new 24 = 28 tokens -> 7 pages each
+                run_stream(addr, &[1, 2, 3, 4 + i], 24)
+            })
+        })
+        .collect();
+    wait_stats(addr, "pool saturation", |d| {
+        d.path(&["kv", "pages_reserved"]).and_then(Json::as_usize) >= Some(14)
+    })?;
+    let (status, headers, _) =
+        fetch(addr, "POST", "/generate", &generate_body(&[9, 9], 2))?;
+    let shed_seen = status == 503
+        && headers.iter().any(|(n, v)| n == "retry-after" && !v.is_empty());
+    // lift the stall so the saturators finish, then retry with backoff
+    chaos_state.stall_ms.store(0, Ordering::Relaxed);
+    let mut retried_ok = false;
+    let mut attempts = 0usize;
+    let retry_deadline = Instant::now() + WAIT;
+    while Instant::now() < retry_deadline {
+        attempts += 1;
+        match fetch(addr, "POST", "/generate", &generate_body(&[9, 9], 2))? {
+            (200, _, _) => {
+                retried_ok = true;
+                break;
+            }
+            (503, _, _) => std::thread::sleep(Duration::from_millis(
+                (25 * attempts as u64).min(500),
+            )),
+            (other, _, body) => anyhow::bail!(
+                "retry answered {other}: {}",
+                String::from_utf8_lossy(&body)
+            ),
+        }
+    }
+    for t in saturators {
+        t.join()
+            .map_err(|_| anyhow::anyhow!("saturator thread panicked"))?
+            .context("saturating stream failed")?;
+    }
+    let shed_count =
+        stats(addr)?.get("shed").and_then(Json::as_usize).unwrap_or(0);
+    gate(
+        outcomes,
+        "kv-exhaustion-shed",
+        shed_seen && retried_ok && shed_count >= 1 && healthz_ok(addr),
+        format!(
+            "probe shed with 503+Retry-After ({shed_count} sheds), \
+             retry completed after {attempts} attempt(s)"
+        ),
+    );
+
+    // ---- fault: decode-loop panic ----------------------------------
+    chaos_state.panic_armed.store(true, Ordering::SeqCst);
+    // the victim request trips the armed hook on its first tick; it may
+    // see a 500 or a truncated stream — either is fine, a HANG is not
+    let victim = fetch(addr, "POST", "/generate", &generate_body(&[1, 2], 8));
+    let victim_note = match &victim {
+        Ok((code, _, _)) => format!("victim answered {code}"),
+        Err(e) => format!("victim stream cut: {e:#}"),
+    };
+    wait_stats(addr, "bridge restart", |d| {
+        d.get("bridge_restarts").and_then(Json::as_usize) >= Some(1)
+    })?;
+    let revived = run_stream(addr, &[6, 7], 3).is_ok();
+    let doc = stats(addr)?;
+    gate(
+        outcomes,
+        "bridge-panic-restart",
+        revived
+            && healthz_ok(addr)
+            && doc.get("bridge_panics").and_then(Json::as_usize) >= Some(1),
+        format!(
+            "{victim_note}; {} panic(s), {} restart(s), fresh stream completed",
+            doc.get("bridge_panics").and_then(Json::as_usize).unwrap_or(0),
+            doc.get("bridge_restarts").and_then(Json::as_usize).unwrap_or(0)
+        ),
+    );
+
+    // ---- drain: zero leaked pages after all of the above -----------
+    let (status, _, _) = fetch(addr, "POST", "/admin/drain", "")?;
+    if status != 200 {
+        anyhow::bail!("drain answered {status}");
+    }
+    let report = handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("gateway thread panicked"))?
+        .context("gateway errored")?;
+    gate(
+        outcomes,
+        "drain-leak-free",
+        report.leaked_pages == 0,
+        format!(
+            "{} completed, {} cancelled, {} leaked pages",
+            report.completed, report.cancelled, report.leaked_pages
+        ),
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The artifact gauntlet must pass under the CI seed — this is the
+    /// offline half of the `chaos-smoke` job, cheap enough for `cargo
+    /// test`.
+    #[test]
+    fn artifact_gauntlet_passes_under_ci_seed() {
+        let plan = FaultPlan::new(7);
+        let mut outcomes = Vec::new();
+        artifact_gauntlet(&plan, &mut outcomes).expect("gauntlet infrastructure");
+        assert!(!outcomes.is_empty());
+        for o in &outcomes {
+            assert!(o.ok, "fault {} failed its gate: {}", o.name, o.detail);
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips() {
+        let report = ChaosReport {
+            seed: 7,
+            outcomes: vec![FaultOutcome {
+                name: "stbp-bit-flips".into(),
+                ok: true,
+                detail: "6/6 rejected".into(),
+            }],
+            passed: true,
+            json_path: PathBuf::from("reports/CHAOS_report.json"),
+        };
+        let doc = Json::parse(&report.to_json().dump()).expect("parse");
+        assert_eq!(doc.get("seed").and_then(Json::as_usize), Some(7));
+        assert_eq!(doc.get("passed"), Some(&Json::Bool(true)));
+        let faults = match doc.get("faults") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("faults not an array: {other:?}"),
+        };
+        assert_eq!(faults[0].get("name").and_then(Json::as_str), Some("stbp-bit-flips"));
+    }
+}

@@ -1,0 +1,32 @@
+//! `faults/` — the chaos harness: seeded fault injection against the
+//! artifact loaders and the live HTTP gateway.
+//!
+//! The robustness claims this crate makes (typed rejection of corrupt
+//! artifacts, panic supervision, load shedding, leak-free drains) are only
+//! worth something if they hold under *injected* failure, not just happy
+//! paths. This module turns each claim into a scripted fault:
+//!
+//! * [`plan`] — [`FaultPlan`](plan::FaultPlan): every fault parameter
+//!   (which bits to flip, where to truncate, how long a client stalls)
+//!   is derived from one seed through independent PCG streams, so a run
+//!   is reproducible with `--seed N` and CI failures replay locally.
+//! * [`chaos`] — [`run_chaos`](chaos::run_chaos): the two gauntlets.
+//!   The *artifact* gauntlet corrupts `.stbp` / `.sbw2` containers
+//!   (random bit flips, targeted payload flips, truncation, lying
+//!   headers) and requires every corruption to be rejected with a typed
+//!   [`ArtifactError`](crate::util::artifact::ArtifactError) — naming
+//!   the corrupt entry where one exists — while v1 containers still
+//!   load. The *serving* gauntlet stands a real gateway up and injects
+//!   mid-stream disconnects, stalled clients, KV-pool exhaustion (the
+//!   shed + retry path) and a decode-loop panic, requiring `/healthz`
+//!   to answer after every fault and the final drain to leak zero KV
+//!   pages.
+//!
+//! Entry point: `stbllm chaos [--smoke] [--seed N]` (the CI
+//! `chaos-smoke` job); results land in `reports/CHAOS_report.json`.
+
+pub mod chaos;
+pub mod plan;
+
+pub use chaos::{run_chaos, ChaosOpts, ChaosReport, FaultOutcome};
+pub use plan::{flip_bit, FaultPlan};

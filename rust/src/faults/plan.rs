@@ -1,0 +1,135 @@
+//! Seeded fault plans — the deterministic random core of the chaos
+//! harness.
+//!
+//! Every fault parameter is drawn from its own PCG stream keyed by the
+//! plan seed, so adding a fault class (or reordering the gauntlet) never
+//! shifts the draws of the existing ones: `--seed 7` means the same bit
+//! flips, the same truncation point and the same stall durations on every
+//! machine, every run.
+
+use crate::util::rng::Pcg32;
+
+/// PCG stream ids, one per fault class (see module doc for why each class
+/// gets its own stream).
+mod stream {
+    pub const BIT_FLIPS: u64 = 0xb17;
+    pub const TRUNCATE: u64 = 0x7c4;
+    pub const CLIENT: u64 = 0xc11;
+    pub const STALL: u64 = 0x57a;
+    pub const DECODE: u64 = 0xdec;
+}
+
+/// A deterministic fault plan derived from one seed.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// The seed every draw derives from (reported in CHAOS_report.json).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Plan keyed by `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed }
+    }
+
+    fn rng(&self, stream: u64) -> Pcg32 {
+        Pcg32::new(self.seed, stream)
+    }
+
+    /// `n` distinct bit positions to flip in a `len`-byte artifact.
+    pub fn bit_flips(&self, len: usize, n: usize) -> Vec<u64> {
+        let total_bits = (len as u64) * 8;
+        let mut rng = self.rng(stream::BIT_FLIPS);
+        let mut out: Vec<u64> = Vec::with_capacity(n);
+        while out.len() < n && (out.len() as u64) < total_bits {
+            let bit = (rng.next_u32() as u64) % total_bits;
+            if !out.contains(&bit) {
+                out.push(bit);
+            }
+        }
+        out
+    }
+
+    /// Where to truncate a `len`-byte artifact (always keeps the magic so
+    /// the failure exercises the bounded entry readers, not just BadMagic).
+    pub fn truncate_to(&self, len: usize) -> usize {
+        if len <= 8 {
+            return len.saturating_sub(1);
+        }
+        let span = (len - 8) as u32;
+        8 + self.rng(stream::TRUNCATE).bounded(span) as usize
+    }
+
+    /// How many streamed token chunks a chaos client reads before
+    /// vanishing mid-stream (1..=3).
+    pub fn disconnect_after(&self) -> usize {
+        1 + self.rng(stream::CLIENT).bounded(3) as usize
+    }
+
+    /// How long the stalled-client fault holds a half-written request
+    /// open, in milliseconds (20..=100).
+    pub fn stall_ms(&self) -> u64 {
+        20 + self.rng(stream::STALL).bounded(81) as u64
+    }
+
+    /// Per-tick decode slowdown while a serving fault needs streams to
+    /// stay in flight, in milliseconds (10..=40).
+    pub fn decode_stall_ms(&self) -> u64 {
+        10 + self.rng(stream::DECODE).bounded(31) as u64
+    }
+}
+
+/// Flip one bit (global bit index, LSB-first within each byte) in `buf`.
+pub fn flip_bit(buf: &mut [u8], bit: u64) {
+    let byte = (bit / 8) as usize;
+    if byte < buf.len() {
+        buf[byte] ^= 1 << (bit % 8);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let a = FaultPlan::new(7);
+        let b = FaultPlan::new(7);
+        assert_eq!(a.bit_flips(1024, 6), b.bit_flips(1024, 6));
+        assert_eq!(a.truncate_to(1024), b.truncate_to(1024));
+        assert_eq!(a.stall_ms(), b.stall_ms());
+        // a different seed draws a different gauntlet
+        assert_ne!(a.bit_flips(1024, 6), FaultPlan::new(8).bit_flips(1024, 6));
+    }
+
+    #[test]
+    fn draws_stay_in_range() {
+        for seed in 0..32 {
+            let p = FaultPlan::new(seed);
+            let flips = p.bit_flips(100, 6);
+            assert_eq!(flips.len(), 6);
+            assert!(flips.iter().all(|&b| b < 800));
+            // distinct positions: a duplicate would waste a flip
+            let mut sorted = flips.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 6);
+            let t = p.truncate_to(100);
+            assert!((8..100).contains(&t), "truncate_to({seed}) = {t}");
+            assert!((1..=3).contains(&p.disconnect_after()));
+            assert!((20..=100).contains(&p.stall_ms()));
+            assert!((10..=40).contains(&p.decode_stall_ms()));
+        }
+    }
+
+    #[test]
+    fn flip_bit_is_an_involution() {
+        let mut buf = vec![0u8; 4];
+        flip_bit(&mut buf, 9);
+        assert_eq!(buf, vec![0, 2, 0, 0]);
+        flip_bit(&mut buf, 9);
+        assert_eq!(buf, vec![0, 0, 0, 0]);
+        flip_bit(&mut buf, 1000); // out of range: no-op, no panic
+        assert_eq!(buf, vec![0, 0, 0, 0]);
+    }
+}

@@ -17,13 +17,20 @@
 //!   driver and the batched inference server.
 //! * [`net`] — the HTTP/1.1 streaming gateway (`stbllm serve --http`):
 //!   chunked/SSE token streaming, deadlines, drain, live stats.
+//! * [`faults`] — the chaos harness (`stbllm chaos`): seeded fault plans
+//!   injected against the artifact loaders and the live gateway.
 //! * [`eval`] — perplexity, zero-shot harness, sign-flip study.
 //! * [`report`] — table/figure rendering for the bench harness.
 
 pub mod coordinator;
 pub mod engine;
 pub mod eval;
+pub mod faults;
 pub mod model;
+// The gateway faces untrusted input: a stray `.unwrap()` on a parse or a
+// lock is a remote panic, so unwrap is denied throughout net/ non-test
+// code (tests opt back in per-module).
+#[deny(clippy::unwrap_used)]
 pub mod net;
 pub mod packed;
 pub mod quant;

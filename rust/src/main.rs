@@ -16,6 +16,7 @@
 //!   serve     --model M [...]    batched-serving smoke run with metrics
 //!                                (--http ADDR: streaming HTTP gateway)
 //!   loadgen   --target H:P [...] drive concurrent streams at a gateway
+//!   chaos     [--seed N]         seeded fault-injection gauntlet + gates
 //!   flip      --model M [...]    sign-flip motivation study
 //!   selfcheck                    PJRT ⇄ native forward parity
 
@@ -50,6 +51,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "zeroshot" => zeroshot_cmd(args),
         "serve" => serve(args),
         "loadgen" => loadgen(args),
+        "chaos" => chaos(args),
         "flip" => flip(args),
         "bench-kernels" => bench_kernels(args),
         "selfcheck" => selfcheck(args),
@@ -80,6 +82,10 @@ COMMANDS
               --http ADDR serves the model over a streaming HTTP gateway)
   loadgen     drive N concurrent streaming connections at a gateway and
               write reports/BENCH_http.json (--smoke: the CI gate)
+  chaos       seeded fault injection: corrupt artifacts + a live gateway
+              under disconnects, stalls, KV exhaustion and bridge panics;
+              writes reports/CHAOS_report.json and exits non-zero if any
+              gate fails (--seed N replays a run; --smoke: the CI gate)
   flip        sign-flip redundancy study (Fig. 1)
   bench-kernels
               packed-kernel perf suite -> reports/BENCH_kernels.json
@@ -121,6 +127,10 @@ OPTIONS
   --keepalive-ms N   serve --http: idle keep-alive timeout (default {keepalive_ms})
   --addr-file PATH   serve --http: write the bound address to PATH (CI
                      uses this to discover a --http :0 port)
+  --shed-watermark N serve --http: shed new /generate admits with 503 +
+                     Retry-After when free KV pages drop below N
+                     (0 = auto: an eighth of the pool, min 1)
+  --seed N           chaos: fault-plan seed (default 7; CI pins 7)
   --target H:P       loadgen: gateway address to drive (required)
   --connections N    loadgen: concurrent connections (default {lg_conns})
                      (--requests/--prompt/--max-new shape the workload;
@@ -462,6 +472,7 @@ fn serve_http(args: &Args, addr: &str) -> Result<()> {
         args.get_usize("keepalive-ms", defaults::HTTP_KEEPALIVE_MS as usize) as u64;
     opts.default_deadline_ms = args.get("deadline-ms").and_then(|v| v.parse().ok());
     opts.addr_file = args.get("addr-file").map(|s| s.to_string());
+    opts.shed_watermark = args.get_usize("shed-watermark", 0);
 
     let r = engine.quantize();
     println!(
@@ -512,7 +523,10 @@ fn loadgen(args: &Args) -> Result<()> {
         "loadgen {}: {} connections x {} requests ({} tokens streamed)",
         opts.target, opts.connections, opts.requests, rep.generated_tokens
     );
-    println!("  completed      : {} ({} errors)", rep.completed, rep.errors);
+    println!(
+        "  completed      : {} ({} errors, {} shed retries)",
+        rep.completed, rep.errors, rep.retries
+    );
     println!("  throughput     : {:.1} tok/s over {:.2}s", rep.tok_s, rep.wall_s);
     println!("  TTFT p50/p95   : {:.1} / {:.1} ms", rep.ttft_p50_s * 1e3, rep.ttft_p95_s * 1e3);
     println!(
@@ -542,6 +556,35 @@ fn loadgen(args: &Args) -> Result<()> {
             rep.completed, rep.prefix_hits
         );
     }
+    Ok(())
+}
+
+/// `chaos [--smoke] [--seed N]`: run the seeded fault-injection gauntlets
+/// (artifact corruption + live-gateway faults) and gate on every outcome.
+/// The CI `chaos-smoke` job runs `chaos --smoke --seed 7`.
+fn chaos(args: &Args) -> Result<()> {
+    let opts = stbllm::faults::ChaosOpts {
+        seed: args.get_usize("seed", 7) as u64,
+        smoke: args.flag("smoke"),
+        out: args.get("out").map(std::path::PathBuf::from),
+    };
+    let rep = stbllm::faults::run_chaos(&opts)?;
+    println!("chaos seed {}: {} faults injected", rep.seed, rep.outcomes.len());
+    for o in &rep.outcomes {
+        println!("  {} {:<28} {}", if o.ok { "ok  " } else { "FAIL" }, o.name, o.detail);
+    }
+    println!("CHAOS_report.json -> {}", rep.json_path.display());
+    if !rep.passed {
+        let failed: Vec<&str> =
+            rep.outcomes.iter().filter(|o| !o.ok).map(|o| o.name.as_str()).collect();
+        bail!("chaos gate FAILED: {} (seed {} replays this run)", failed.join(", "), rep.seed);
+    }
+    println!(
+        "chaos{} gate OK: all {} injected faults survived (seed {})",
+        if opts.smoke { " smoke" } else { "" },
+        rep.outcomes.len(),
+        rep.seed
+    );
     Ok(())
 }
 

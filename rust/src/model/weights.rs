@@ -1,6 +1,12 @@
 //! Model weights: STBW binary loader (format written by
 //! `python/compile/train.py::save_weights`), in-memory layout, and synthetic
 //! initialization for artifact-free paths (unit tests, pure benches).
+//!
+//! Two container flavors parse here: legacy `"STBW"` (what the Python side
+//! writes — no checksums) and `"SBW2"` (what [`ModelWeights::save`] writes —
+//! per-tensor CRC32 plus a whole-file trailer, saved atomically). Both paths
+//! bound every untrusted length field against the remaining file size before
+//! allocating, so a corrupt header is a typed [`ArtifactError`], not an OOM.
 
 use std::collections::BTreeMap;
 use std::io::Read;
@@ -8,6 +14,7 @@ use std::path::Path;
 
 use crate::model::config::{Family, ModelConfig};
 use crate::tensor::Mat;
+use crate::util::artifact::{atomic_write, crc32, ArtifactError, ByteReader};
 use crate::util::rng::Pcg32;
 
 /// One transformer block's parameters.
@@ -31,12 +38,40 @@ pub struct ModelWeights {
 impl ModelWeights {
     /// Parse the STBW container:
     /// magic "STBW" | u32 n | per tensor: u32 name_len | name | u32 ndim |
-    /// u32 dims... | f32 LE data.
+    /// u32 dims... | f32 LE data. The checksummed "SBW2" flavor is accepted
+    /// too (see [`parse_stbw`]).
     pub fn load(cfg: &ModelConfig, path: &Path) -> anyhow::Result<ModelWeights> {
         let mut buf = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        let named = parse_stbw(&buf).map_err(anyhow::Error::msg)?;
+        let named = parse_stbw(&buf)?;
         Self::from_named(cfg, &named).map_err(anyhow::Error::msg)
+    }
+
+    /// Flatten into the named-tensor map the containers serialize.
+    pub fn to_named(&self) -> BTreeMap<String, (Vec<usize>, Vec<f32>)> {
+        let mut named: BTreeMap<String, (Vec<usize>, Vec<f32>)> = BTreeMap::new();
+        named.insert("embed".into(), (vec![self.embed.rows, self.embed.cols], self.embed.data.clone()));
+        named.insert("ln_f".into(), (vec![self.ln_f.len()], self.ln_f.clone()));
+        if let Some(p) = &self.pos {
+            named.insert("pos".into(), (vec![p.rows, p.cols], p.data.clone()));
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            named.insert(format!("layers.{i}.ln1"), (vec![l.ln1.len()], l.ln1.clone()));
+            named.insert(format!("layers.{i}.ln2"), (vec![l.ln2.len()], l.ln2.clone()));
+            for (n, m) in &l.mats {
+                named.insert(format!("layers.{i}.{n}"), (vec![m.rows, m.cols], m.data.clone()));
+            }
+        }
+        named
+    }
+
+    /// Write the checksummed "SBW2" container atomically (temp + fsync +
+    /// rename): per-tensor CRC32 after each entry, whole-file CRC32 trailer.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let bytes = encode_sbw2(&self.to_named());
+        atomic_write(path, &bytes)
+            .map_err(|e| anyhow::Error::msg(format!("save {}: {e}", path.display())))?;
+        Ok(())
     }
 
     pub fn from_named(
@@ -119,41 +154,96 @@ impl ModelWeights {
     }
 }
 
-fn parse_stbw(buf: &[u8]) -> Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>, String> {
-    let mut p = 0usize;
-    let take = |p: &mut usize, n: usize| -> Result<&[u8], String> {
-        if *p + n > buf.len() {
-            return Err("truncated STBW file".into());
+/// Serialize a named-tensor map as the checksummed "SBW2" container:
+/// magic "SBW2" | u32 n | per tensor: entry bytes (u32 name_len | name |
+/// u32 ndim | dims | f32 data) followed by u32 crc32(entry bytes) | final
+/// u32 crc32 over everything before it.
+pub fn encode_sbw2(named: &BTreeMap<String, (Vec<usize>, Vec<f32>)>) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"SBW2");
+    out.extend_from_slice(&(named.len() as u32).to_le_bytes());
+    let mut entry = Vec::new();
+    for (name, (dims, data)) in named {
+        entry.clear();
+        entry.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        entry.extend_from_slice(name.as_bytes());
+        entry.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in dims {
+            entry.extend_from_slice(&(*d as u32).to_le_bytes());
         }
-        let s = &buf[*p..*p + n];
-        *p += n;
-        Ok(s)
-    };
-    let read_u32 = |p: &mut usize| -> Result<u32, String> {
-        let b = take(p, 4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-    };
-    if take(&mut p, 4)? != b"STBW" {
-        return Err("bad magic (expected STBW)".into());
+        for v in data {
+            entry.extend_from_slice(&v.to_le_bytes());
+        }
+        let crc = crc32(&entry);
+        out.extend_from_slice(&entry);
+        out.extend_from_slice(&crc.to_le_bytes());
     }
-    let n = read_u32(&mut p)? as usize;
+    let file_crc = crc32(&out);
+    out.extend_from_slice(&file_crc.to_le_bytes());
+    out
+}
+
+/// Parse a weights container from untrusted bytes. Dispatches on magic:
+/// legacy `"STBW"` (no checksums, what the Python exporter writes) or
+/// `"SBW2"` (per-entry + whole-file CRC32). Every length field is bounded
+/// against the remaining file size before allocation; corruption yields a
+/// typed [`ArtifactError`] naming the tensor and byte offset.
+pub fn parse_stbw(buf: &[u8]) -> Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>, ArtifactError> {
+    let mut r = ByteReader::new(buf);
+    let magic = r.take(4)?;
+    let checksummed = match magic {
+        b"STBW" => false,
+        b"SBW2" => true,
+        other => {
+            return Err(ArtifactError::BadMagic { found: other.to_vec(), expected: "STBW|SBW2" })
+        }
+    };
+    let raw_n = r.u32()?;
+    let n = r.bounded_count(raw_n as u64, 8, "tensor count")?; // name_len + ndim floor
     let mut out = BTreeMap::new();
     for _ in 0..n {
-        let name_len = read_u32(&mut p)? as usize;
-        let name = String::from_utf8(take(&mut p, name_len)?.to_vec()).map_err(|e| e.to_string())?;
-        let ndim = read_u32(&mut p)? as usize;
+        let entry_start = r.pos();
+        let raw_nl = r.u32()?;
+        let name_len = r.bounded_count(raw_nl as u64, 1, "name_len")?;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| r.invalid("tensor name is not utf-8"))?;
+        r.entry = Some(name.clone());
+        let raw_ndim = r.u32()?;
+        let ndim = r.bounded_count(raw_ndim as u64, 4, "ndim")?;
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            dims.push(read_u32(&mut p)? as usize);
+            dims.push(r.u32()? as usize);
         }
-        let count: usize = dims.iter().product::<usize>().max(1);
-        let raw = take(&mut p, 4 * count)?;
-        let data: Vec<f32> = raw
+        let count: u64 = dims.iter().map(|&d| d as u64).fold(1u64, u64::saturating_mul).max(1);
+        let n_vals = r.bounded_count(count, 4, "tensor data")?;
+        let data: Vec<f32> = r
+            .take(4 * n_vals)?
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
+        if checksummed {
+            let computed = crc32(r.consumed_since(entry_start));
+            let stored = r.u32()?;
+            if stored != computed {
+                return Err(ArtifactError::EntryChecksum {
+                    entry: name.clone(),
+                    offset: entry_start,
+                    stored,
+                    computed,
+                });
+            }
+        }
+        r.entry = None;
         out.insert(name, (dims, data));
     }
+    if checksummed {
+        let computed = crc32(r.consumed_since(0));
+        let stored = r.u32()?;
+        if stored != computed {
+            return Err(ArtifactError::FileChecksum { stored, computed });
+        }
+    }
+    r.expect_end()?;
     Ok(out)
 }
 
@@ -193,10 +283,78 @@ mod tests {
 
     #[test]
     fn stbw_rejects_bad_magic_and_truncation() {
-        assert!(parse_stbw(b"NOPE").is_err());
+        match parse_stbw(b"NOPE") {
+            Err(ArtifactError::BadMagic { .. }) => {}
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
         let mut buf = write_stbw(&[("a", vec![4], vec![1., 2., 3., 4.])]);
         buf.truncate(buf.len() - 3);
-        assert!(parse_stbw(&buf).is_err());
+        match parse_stbw(&buf) {
+            Err(ArtifactError::Truncated { entry, .. }) => {
+                assert_eq!(entry.as_deref(), Some("a"));
+            }
+            other => panic!("expected Truncated naming the tensor, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stbw_bounds_lying_lengths_without_alloc() {
+        // legacy header claiming u32::MAX dims: typed BoundExceeded, no OOM
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"STBW");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // name_len 1
+        buf.push(b'a');
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // ndim lie
+        match parse_stbw(&buf) {
+            Err(ArtifactError::BoundExceeded { field, entry, .. }) => {
+                assert_eq!(field, "ndim");
+                assert_eq!(entry.as_deref(), Some("a"));
+            }
+            other => panic!("expected BoundExceeded, got {other:?}"),
+        }
+        // dims whose product saturates u64 must also be rejected
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"STBW");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(b'b');
+        buf.extend_from_slice(&4u32.to_le_bytes()); // ndim 4
+        for _ in 0..4 {
+            buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        match parse_stbw(&buf) {
+            Err(ArtifactError::BoundExceeded { field, .. }) => assert_eq!(field, "tensor data"),
+            other => panic!("expected BoundExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sbw2_roundtrips_and_catches_flipped_bits() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 5);
+        let path = std::env::temp_dir().join(format!("stbw2_{}.stbw", std::process::id()));
+        w.save(&path).unwrap();
+        let back = ModelWeights::load(&cfg, &path).unwrap();
+        assert_eq!(back.embed.data, w.embed.data);
+        assert_eq!(back.layers[0].mats["wq"].data, w.layers[0].mats["wq"].data);
+
+        // flip one payload bit: the corrupt tensor must be named
+        let mut bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let named = w.to_named();
+        let first = named.keys().next().unwrap().clone();
+        // first entry payload starts after magic(4)+n(4)+name_len(4)+name+ndim(4)+dims
+        let ndims = named[&first].0.len();
+        let flip_at = 8 + 4 + first.len() + 4 + 4 * ndims + 1;
+        bytes[flip_at] ^= 0x40;
+        match parse_stbw(&bytes) {
+            Err(ArtifactError::EntryChecksum { entry, offset, .. }) => {
+                assert_eq!(entry, first);
+                assert_eq!(offset, 8);
+            }
+            other => panic!("expected EntryChecksum naming {first}, got {other:?}"),
+        }
     }
 
     #[test]

@@ -114,11 +114,14 @@ const IDLE_POLL: Duration = Duration::from_millis(20);
 /// Run the bridge worker until every request sender is dropped and all
 /// admitted work has finished (graceful drain). Normally called on a
 /// dedicated thread — by the gateway (`net::gateway::serve_http`) or via
-/// [`serve_stream`].
+/// [`serve_stream`] — under the gateway's panic supervisor, which is why
+/// the receiver is borrowed: the channel (and any requests still queued on
+/// it) survives a panic-unwind of this function, so a restarted bridge
+/// picks up where the crashed one left off.
 pub fn run_bridge(
     backend: &dyn Backend,
     opts: &BridgeOpts,
-    rx: mpsc::Receiver<StreamRequest>,
+    rx: &mpsc::Receiver<StreamRequest>,
     ctl: &GatewayCtl,
 ) -> Result<()> {
     let mut server = BatchServer::new(backend, opts.max_batch.max(1));
@@ -132,6 +135,7 @@ pub fn run_bridge(
     let mut meta: HashMap<u64, Meta> = HashMap::new();
     let mut next_id = 0u64;
     let mut senders_gone = false;
+    let mut tick_no = 0u64;
 
     loop {
         // 1. ingest: drain everything queued on the channel; block briefly
@@ -242,7 +246,12 @@ pub fn run_bridge(
         }
 
         // 5. ONE scheduling tick (the shared kernel) + forward each token
-        //    as it retires; a failed send = client hung up = cancel
+        //    as it retires; a failed send = client hung up = cancel.
+        //    The tick hook fires first — the chaos harness injects bridge
+        //    panics here, and an unwind at this point drops every in-flight
+        //    session (KV pages return to the pool, stream senders vanish).
+        ctl.fire_tick_hook(tick_no);
+        tick_no += 1;
         let t = server.tick(&mut active)?;
         if !t.emitted.is_empty() {
             ctl.with_stats(|s| s.generated_tokens += t.emitted.len());
@@ -310,19 +319,24 @@ fn enqueue(
 /// Channel facade: spawn a bridge worker thread owning `backend`; returns
 /// the request sender. Dropping every sender clone drains the worker. This
 /// is the in-process streaming API (the HTTP gateway is a network skin
-/// over the same worker).
+/// over the same worker). The worker runs under the same panic supervisor
+/// as the gateway's bridge: a panicking decode loop retires its in-flight
+/// sessions and restarts instead of killing the thread.
 pub fn serve_stream(
     backend: Box<dyn Backend + Send>,
     opts: BridgeOpts,
     ctl: GatewayCtl,
 ) -> (mpsc::SyncSender<StreamRequest>, std::thread::JoinHandle<Result<()>>) {
     let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
-    let handle = std::thread::spawn(move || run_bridge(&*backend, &opts, rx, &ctl));
+    let handle = std::thread::spawn(move || {
+        crate::net::gateway::supervise_bridge(&*backend, &opts, &rx, &ctl)
+    });
     (tx, handle)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::coordinator::server::{BatchServer, Request};
     use crate::engine::NativeBackend;
@@ -477,6 +491,53 @@ mod tests {
         handle.join().unwrap().unwrap();
         assert_eq!(ctl.stats_snapshot(|s| s.deadline_expired), 1);
         assert_eq!(pool.stats().pages_reserved, 0);
+    }
+
+    /// A panic inside the decode loop must not kill the worker thread: the
+    /// supervisor retires the in-flight sessions (pages back to the pool),
+    /// restarts the bridge on the same channel, and later requests complete.
+    #[test]
+    fn bridge_panic_is_supervised_and_pages_recover() {
+        let (cfg, w) = tiny();
+        let pool = Arc::new(KvPool::new(&cfg, 16, 4));
+        let ctl = GatewayCtl::new();
+        // one-shot injected panic: fires on the first scheduler tick only
+        let armed = Arc::new(std::sync::atomic::AtomicBool::new(true));
+        let a2 = armed.clone();
+        ctl.set_tick_hook(Some(Arc::new(move |_| {
+            if a2.swap(false, Ordering::SeqCst) {
+                panic!("injected bridge panic");
+            }
+        })));
+        let (tx, handle) = serve_stream(
+            Box::new(NativeBackend::new(cfg, w)),
+            BridgeOpts::new(2).with_pool(pool.clone()),
+            ctl.clone(),
+        );
+        // the victim stream dies with the crashed bridge: its sender is
+        // dropped in the unwind, so the receiver disconnects without Done
+        let (etx, erx) = mpsc::channel();
+        tx.send(StreamRequest { prompt: vec![1, 2, 3], max_new: 8, deadline: None, tx: etx })
+            .unwrap();
+        let (_, done) = drain_stream(&erx);
+        assert!(done.is_none(), "victim stream must end by disconnect, not Done");
+        // the supervisor must have counted and restarted
+        let t0 = Instant::now();
+        while ctl.stats_snapshot(|s| s.bridge_restarts) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "bridge was not restarted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(ctl.stats_snapshot(|s| s.bridge_panics), 1);
+        // the restarted bridge serves new work on the SAME channel
+        let (etx2, erx2) = mpsc::channel();
+        tx.send(StreamRequest { prompt: vec![4, 5], max_new: 3, deadline: None, tx: etx2 })
+            .unwrap();
+        let (toks, done) = drain_stream(&erx2);
+        assert_eq!(toks.len(), 3);
+        assert_eq!(done.unwrap().stopped, StopReason::Completed);
+        drop(tx);
+        handle.join().unwrap().unwrap();
+        assert_eq!(pool.stats().pages_reserved, 0, "crashed sessions leaked KV pages");
     }
 
     /// An impossible request is rejected with a typed message, not hung.

@@ -24,21 +24,28 @@
 //! tokens are byte-identical to a direct batch run.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::kvpool::{KvPool, KvPoolStats};
 use crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS;
 use crate::engine::Backend;
 use crate::net::bridge::{run_bridge, BridgeOpts, StreamEvent, StreamRequest};
-use crate::net::http::{write_response, ChunkedWriter, HttpError, HttpRequest};
+use crate::net::http::{
+    write_response, write_response_with, ChunkedWriter, HttpError, HttpRequest,
+};
 use crate::net::listener::serve_connections;
 use crate::net::stats::GatewayStats;
 use crate::util::cli::defaults;
 use crate::util::json::{num, obj, s, Json};
+
+/// Per-tick callback the bridge fires before each scheduler tick — the
+/// chaos harness's fault-injection point.
+pub type TickHook = Arc<dyn Fn(u64) + Send + Sync>;
 
 /// Shared control handle for a running gateway: drain flag, live stats,
 /// bound address, and the KV pool (for `/stats` and leak checks). Clone
@@ -57,6 +64,8 @@ struct CtlInner {
     active: AtomicUsize,
     queued: AtomicUsize,
     pool: Mutex<Option<Arc<KvPool>>>,
+    tick_hook: Mutex<Option<TickHook>>,
+    panic_logged: AtomicBool,
 }
 
 impl GatewayCtl {
@@ -141,6 +150,35 @@ impl GatewayCtl {
         self.inner.pool.lock().expect("pool slot poisoned").clone()
     }
 
+    /// Install (or clear) the per-tick callback the bridge fires right
+    /// before each scheduler tick. The chaos harness uses this to inject a
+    /// bridge panic at a chosen tick.
+    pub fn set_tick_hook(&self, hook: Option<TickHook>) {
+        *self.inner.tick_hook.lock().expect("tick hook poisoned") = hook;
+    }
+
+    /// Fire the tick hook (bridge-internal). The hook is cloned out of the
+    /// lock BEFORE the call, so a panicking hook unwinds the bridge without
+    /// poisoning the hook slot — the supervisor can restart cleanly.
+    pub(crate) fn fire_tick_hook(&self, tick: u64) {
+        let hook = self.inner.tick_hook.lock().expect("tick hook poisoned").clone();
+        if let Some(h) = hook {
+            h(tick);
+        }
+    }
+
+    /// Count a panicking connection handler; logged once per gateway so a
+    /// panic loop cannot flood stderr.
+    pub(crate) fn note_handler_panic(&self) {
+        self.with_stats(|st| st.handler_panics += 1);
+        if !self.inner.panic_logged.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[gateway] a connection handler panicked; connection answered 500/closed \
+                 (further panics counted in handler_panics, not logged)"
+            );
+        }
+    }
+
     /// The `/stats` document: counters + gauges + a live KV snapshot.
     pub fn stats_json(&self) -> Json {
         let kv = self.pool().map(|p| p.stats());
@@ -176,6 +214,11 @@ pub struct HttpServeOpts {
     pub addr_file: Option<String>,
     /// Head-of-line age boost threshold for the admission queue.
     pub hol_boost_deferrals: u32,
+    /// Load-shed watermark in free KV pages: when `total - reserved` drops
+    /// below this, new `/generate` admits get `503 + Retry-After` instead
+    /// of queueing indefinitely. `0` auto-sizes to an eighth of the pool
+    /// (min 1). Ignored on flat (unpaged) serving.
+    pub shed_watermark: usize,
 }
 
 impl HttpServeOpts {
@@ -193,6 +236,7 @@ impl HttpServeOpts {
             keepalive_ms: defaults::HTTP_KEEPALIVE_MS,
             addr_file: None,
             hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
+            shed_watermark: 0,
         }
     }
 }
@@ -276,13 +320,21 @@ pub fn serve_http(
     };
     let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
 
+    let shed_watermark = match (&pool, opts.shed_watermark) {
+        (None, _) => 0,
+        (Some(p), 0) => (p.total_pages() / 8).max(1),
+        (Some(_), w) => w,
+    };
+
     std::thread::scope(|scope| -> Result<()> {
-        let bridge = scope.spawn(|| run_bridge(backend, &bopts, rx, ctl));
+        let bridge = scope.spawn(|| supervise_bridge(backend, &bopts, &rx, ctl));
         let hc = HandlerCtx {
             tx,
             default_deadline: opts.default_deadline_ms.map(Duration::from_millis),
             keepalive: Duration::from_millis(opts.keepalive_ms.max(10)),
             vocab: cfg.vocab,
+            pool: pool.clone(),
+            shed_watermark,
         };
         let listened = serve_connections(listener, ctl, opts.threads.max(1), |stream| {
             handle_connection(stream, ctl, &hc);
@@ -292,7 +344,7 @@ pub fn serve_http(
         drop(hc);
         let bridged = match bridge.join() {
             Ok(r) => r,
-            Err(_) => Err(anyhow::anyhow!("bridge worker panicked")),
+            Err(_) => Err(anyhow::anyhow!("bridge supervisor panicked")),
         };
         listened?;
         bridged
@@ -311,6 +363,43 @@ pub fn serve_http(
     }))
 }
 
+/// Max automatic bridge restarts before the gateway gives up and errors
+/// out — a backstop against a deterministic crash loop.
+const MAX_BRIDGE_RESTARTS: usize = 8;
+
+/// Run the bridge under a supervisor: a panic inside the decode loop
+/// unwinds the bridge (dropping every in-flight session, which releases
+/// its KV pages back to the pool and disconnects its stream senders, so
+/// each waiting handler answers 500 / terminates its chunk stream) and the
+/// bridge is restarted on the same request channel — queued requests that
+/// had not been ingested yet survive the crash.
+pub(crate) fn supervise_bridge(
+    backend: &dyn Backend,
+    opts: &BridgeOpts,
+    rx: &mpsc::Receiver<StreamRequest>,
+    ctl: &GatewayCtl,
+) -> Result<()> {
+    let mut restarts = 0usize;
+    loop {
+        match catch_unwind(AssertUnwindSafe(|| run_bridge(backend, opts, rx, ctl))) {
+            Ok(r) => return r,
+            Err(_) => {
+                ctl.set_gauges(0, 0);
+                ctl.with_stats(|st| st.bridge_panics += 1);
+                if restarts >= MAX_BRIDGE_RESTARTS {
+                    bail!("bridge worker panicked; {restarts} restarts exhausted");
+                }
+                restarts += 1;
+                ctl.with_stats(|st| st.bridge_restarts += 1);
+                eprintln!(
+                    "[gateway] bridge worker panicked; in-flight sessions retired, \
+                     restarting ({restarts}/{MAX_BRIDGE_RESTARTS})"
+                );
+            }
+        }
+    }
+}
+
 /// Everything one connection handler needs; owns a clone-free handle on
 /// the bridge's request sender (dropping the ctx after the listener exits
 /// is what drains the bridge).
@@ -319,6 +408,10 @@ struct HandlerCtx {
     default_deadline: Option<Duration>,
     keepalive: Duration,
     vocab: usize,
+    /// The paged KV pool, for the load-shed free-page check.
+    pool: Option<Arc<KvPool>>,
+    /// Shed new admits when free pages drop below this (0 disables).
+    shed_watermark: usize,
 }
 
 /// Keep-alive connection loop: parse requests until the peer closes, a
@@ -332,9 +425,27 @@ fn handle_connection(mut stream: TcpStream, ctl: &GatewayCtl, hc: &HandlerCtx) {
             Ok(Some(req)) => {
                 ctl.with_stats(|st| st.http_requests += 1);
                 let keep = req.keep_alive() && !ctl.is_draining();
-                let served = dispatch(&mut stream, &req, keep, ctl, hc);
-                if served.is_err() || !keep {
-                    break;
+                // a panic while serving one request must not take the
+                // worker down: answer 500, count it, close this connection
+                let served =
+                    catch_unwind(AssertUnwindSafe(|| dispatch(&mut stream, &req, keep, ctl, hc)));
+                match served {
+                    Ok(r) => {
+                        if r.is_err() || !keep {
+                            break;
+                        }
+                    }
+                    Err(_) => {
+                        ctl.note_handler_panic();
+                        let _ = write_response(
+                            &mut stream,
+                            500,
+                            "text/plain",
+                            b"internal server error",
+                            false,
+                        );
+                        break;
+                    }
                 }
             }
             Err(HttpError::IdleTimeout) => {
@@ -379,7 +490,25 @@ fn dispatch(
         ("POST", "/generate") if ctl.is_draining() => {
             write_response(stream, 503, "text/plain", b"draining", false)
         }
-        ("POST", "/generate") => handle_generate(stream, req, keep, hc),
+        ("POST", "/generate") => {
+            // load shedding: when the pool is nearly exhausted, refuse the
+            // admit NOW with a retry hint instead of deferring indefinitely
+            if let Some(pool) = &hc.pool {
+                let kv = pool.stats();
+                if hc.shed_watermark > 0 && kv.free_pages() < hc.shed_watermark {
+                    ctl.with_stats(|st| st.shed += 1);
+                    return write_response_with(
+                        stream,
+                        503,
+                        "application/json",
+                        &[("retry-after", "1")],
+                        b"{\"error\":\"kv pool exhausted, retry\"}",
+                        keep,
+                    );
+                }
+            }
+            handle_generate(stream, req, keep, hc)
+        }
         (_, "/healthz" | "/stats" | "/admin/drain" | "/generate") => {
             write_response(stream, 405, "text/plain", b"method not allowed", keep)
         }
@@ -513,6 +642,7 @@ fn handle_generate(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     #[test]
@@ -568,6 +698,25 @@ mod tests {
         let addr: SocketAddr = "127.0.0.1:4242".parse().unwrap();
         ctl.set_bound(addr);
         assert_eq!(ctl.wait_bound(Duration::from_secs(1)), Some(addr));
+    }
+
+    #[test]
+    fn tick_hook_fires_and_a_panicking_hook_does_not_poison_the_slot() {
+        let ctl = GatewayCtl::new();
+        let count = Arc::new(AtomicUsize::new(0));
+        let c2 = count.clone();
+        ctl.set_tick_hook(Some(Arc::new(move |t| {
+            c2.fetch_add(t as usize + 1, Ordering::SeqCst);
+        })));
+        ctl.fire_tick_hook(0);
+        ctl.fire_tick_hook(1);
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+        // the hook is called OUTSIDE the slot lock: a panicking hook
+        // unwinds the caller but the slot stays usable
+        ctl.set_tick_hook(Some(Arc::new(|_| panic!("injected hook panic"))));
+        assert!(catch_unwind(AssertUnwindSafe(|| ctl.fire_tick_hook(2))).is_err());
+        ctl.set_tick_hook(None);
+        ctl.fire_tick_hook(3); // must not panic on a poisoned lock
     }
 
     #[test]

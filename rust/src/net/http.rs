@@ -199,15 +199,32 @@ pub fn write_response<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_with(w, status, content_type, &[], body, keep_alive)
+}
+
+/// Write a complete fixed-length response with extra headers (e.g.
+/// `Retry-After` on a load-shed 503).
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         status,
         reason(status),
         content_type,
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     )?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.write_all(body)?;
     w.flush()
 }
@@ -419,8 +436,21 @@ impl BodyReader {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use std::io::Cursor;
+
+    #[test]
+    fn extra_headers_are_emitted() {
+        let mut wire = Vec::new();
+        write_response_with(&mut wire, 503, "application/json", &[("retry-after", "1")], b"{}", false)
+            .unwrap();
+        let mut cur = Cursor::new(&wire[..]);
+        let head = read_response_head(&mut cur).unwrap();
+        assert_eq!(head.status, 503);
+        assert_eq!(head.header("retry-after"), Some("1"));
+        assert_eq!(BodyReader::new(&head).read_all(&mut cur).unwrap(), b"{}");
+    }
 
     #[test]
     fn parses_request_with_body_and_headers() {

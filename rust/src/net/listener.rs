@@ -10,6 +10,7 @@
 
 use std::io;
 use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::time::Duration;
@@ -39,7 +40,7 @@ where
     let rx = Mutex::new(rx);
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| worker(&rx, &handler));
+            s.spawn(|| worker(&rx, ctl, &handler));
         }
         let r = accept_loop(&listener, ctl, &tx);
         // closing the queue is what lets the workers exit; it must happen
@@ -72,16 +73,26 @@ fn accept_loop(
     Ok(())
 }
 
-fn worker<H: Fn(TcpStream)>(rx: &Mutex<mpsc::Receiver<TcpStream>>, handler: &H) {
+fn worker<H: Fn(TcpStream)>(rx: &Mutex<mpsc::Receiver<TcpStream>>, ctl: &GatewayCtl, handler: &H) {
     loop {
         // hold the lock only while waiting for a connection, never while
-        // handling one — otherwise the pool serializes
+        // handling one — otherwise the pool serializes. The lock is never
+        // held across `handler`, so a poisoned mutex means another worker
+        // panicked BETWEEN recv and drop — count it rather than silently
+        // shrinking the pool.
         let stream = match rx.lock() {
             Ok(guard) => guard.recv(),
-            Err(_) => return, // a handler panicked holding nothing we need
+            Err(poisoned) => poisoned.into_inner().recv(),
         };
         match stream {
-            Ok(s) => handler(s),
+            Ok(s) => {
+                // a panicking handler must not take the worker (or, through
+                // the scope, the whole gateway) down with it — catch it,
+                // count it, keep serving
+                if catch_unwind(AssertUnwindSafe(|| handler(s))).is_err() {
+                    ctl.note_handler_panic();
+                }
+            }
             Err(_) => return, // queue closed: drain complete
         }
     }
@@ -89,6 +100,7 @@ fn worker<H: Fn(TcpStream)>(rx: &Mutex<mpsc::Receiver<TcpStream>>, handler: &H) 
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use std::io::{Read, Write};
     use std::net::TcpStream;
@@ -121,5 +133,42 @@ mod tests {
             server.join().unwrap();
         });
         assert_eq!(ctl.stats_snapshot(|s| s.connections), 5);
+    }
+
+    /// A handler panic must not kill the worker pool: the panic is counted
+    /// in `handler_panics` and the NEXT connection is still served.
+    #[test]
+    fn handler_panic_is_counted_and_pool_survives() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ctl = GatewayCtl::new();
+        let ctl2 = ctl.clone();
+        std::thread::scope(|s| {
+            let server = s.spawn(move || {
+                serve_connections(listener, &ctl2, 1, |mut stream| {
+                    let mut byte = [0u8; 1];
+                    stream.read_exact(&mut byte).unwrap();
+                    if byte[0] == 0xFF {
+                        panic!("injected handler panic");
+                    }
+                    stream.write_all(&[byte[0] + 1]).unwrap();
+                })
+                .unwrap();
+            });
+            // first connection panics the (single) worker's handler
+            let mut bad = TcpStream::connect(addr).unwrap();
+            bad.write_all(&[0xFF]).unwrap();
+            let mut sink = Vec::new();
+            bad.read_to_end(&mut sink).ok(); // server closes without reply
+            // the same worker must still serve the next connection
+            let mut good = TcpStream::connect(addr).unwrap();
+            good.write_all(&[7]).unwrap();
+            let mut reply = [0u8; 1];
+            good.read_exact(&mut reply).unwrap();
+            assert_eq!(reply[0], 8);
+            ctl.drain();
+            server.join().unwrap();
+        });
+        assert_eq!(ctl.stats_snapshot(|s| s.handler_panics), 1);
     }
 }

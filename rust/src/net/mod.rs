@@ -12,9 +12,12 @@
 //!   `BatchServer` scheduling kernel and streams tokens back per tick,
 //!   with deadlines, disconnect cancellation, and graceful drain.
 //! * [`gateway`] — endpoints (`/generate`, `/healthz`, `/stats`,
-//!   `/admin/drain`), connection handling, and [`serve_http`] tying it
-//!   all together.
-//! * [`stats`] — live [`GatewayStats`] counters and their JSON form.
+//!   `/admin/drain`), connection handling, load shedding (503 +
+//!   `Retry-After` when the KV pool nears exhaustion), the bridge panic
+//!   supervisor, and [`serve_http`] tying it all together.
+//! * [`stats`] — live [`GatewayStats`] counters (including the fault
+//!   counters: `shed`, `handler_panics`, `bridge_panics`,
+//!   `bridge_restarts`) and their JSON form.
 //!
 //! Entry points: `stbllm serve --http ADDR` (CLI), [`serve_http`]
 //! (library), [`bridge::serve_stream`] (in-process streaming without
@@ -27,5 +30,5 @@ pub mod listener;
 pub mod stats;
 
 pub use bridge::{serve_stream, BridgeOpts, DoneInfo, StreamEvent, StreamRequest};
-pub use gateway::{serve_http, GatewayCtl, GatewayReport, HttpServeOpts};
+pub use gateway::{serve_http, GatewayCtl, GatewayReport, HttpServeOpts, TickHook};
 pub use stats::{GatewayStats, StopReason};

@@ -57,6 +57,17 @@ pub struct GatewayStats {
     pub rejected: usize,
     /// Admission backpressure events (deferred, later admitted).
     pub deferred: usize,
+    /// New admits shed with `503 + Retry-After` because free KV pages were
+    /// below the load-shed watermark.
+    pub shed: usize,
+    /// Connection handlers that panicked (the connection got a 500 or was
+    /// dropped; the gateway kept serving).
+    pub handler_panics: usize,
+    /// Bridge decode-worker panics caught by the supervisor (each one
+    /// retired all in-flight sessions and released their KV pages).
+    pub bridge_panics: usize,
+    /// Bridge restarts performed by the supervisor after a panic.
+    pub bridge_restarts: usize,
     /// Tokens generated across all streams.
     pub generated_tokens: usize,
     /// Seconds-to-first-token samples of completed streams.
@@ -77,6 +88,10 @@ impl Default for GatewayStats {
             deadline_expired: 0,
             rejected: 0,
             deferred: 0,
+            shed: 0,
+            handler_panics: 0,
+            bridge_panics: 0,
+            bridge_restarts: 0,
             generated_tokens: 0,
             ttfts: Vec::new(),
             latencies: Vec::new(),
@@ -124,6 +139,10 @@ impl GatewayStats {
             ("deadline_expired", num(self.deadline_expired as f64)),
             ("rejected", num(self.rejected as f64)),
             ("deferred", num(self.deferred as f64)),
+            ("shed", num(self.shed as f64)),
+            ("handler_panics", num(self.handler_panics as f64)),
+            ("bridge_panics", num(self.bridge_panics as f64)),
+            ("bridge_restarts", num(self.bridge_restarts as f64)),
             ("active", num(active as f64)),
             ("queued", num(queued as f64)),
             ("generated_tokens", num(self.generated_tokens as f64)),
@@ -159,6 +178,7 @@ pub fn kv_json(kv: &KvPoolStats) -> Json {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     #[test]
@@ -170,6 +190,20 @@ mod tests {
         assert_eq!(parsed.get("completed").unwrap().as_f64().unwrap(), 0.0);
         assert_eq!(parsed.get("ttft_p95_s").unwrap().as_f64().unwrap(), 0.0);
         assert!(parsed.get("kv").is_none());
+    }
+
+    #[test]
+    fn fault_counters_serialize() {
+        let mut s = GatewayStats::default();
+        s.shed = 3;
+        s.handler_panics = 1;
+        s.bridge_panics = 2;
+        s.bridge_restarts = 2;
+        let j = s.to_json(None, 0, 0);
+        assert_eq!(j.get("shed").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(j.get("handler_panics").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(j.get("bridge_panics").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(j.get("bridge_restarts").unwrap().as_f64().unwrap(), 2.0);
     }
 
     #[test]

@@ -4,22 +4,37 @@
 //! weights: ~19× smaller on disk and mmap-friendly (flat little-endian
 //! layout).
 //!
-//! Layout: magic "STBP" | u32 version | u32 n_entries | per entry:
-//!   u8 kind (0 = packed24, 1 = f32 tensor)
-//!   u32 name_len | name
-//!   packed24: u32 rows | u32 cols | meta u16[] | signs u8[] | alpha f32[]
-//!   f32:      u32 ndim | dims | data
+//! v2 layout (what [`PackedModel::save`] writes):
+//!   magic "STBP" | u32 version=2 | u32 n_entries | per entry:
+//!     entry bytes:
+//!       u8 kind (0 = packed24, 1 = f32 tensor)
+//!       u32 name_len | name
+//!       packed24: u32 rows | u32 cols | meta u16[] | signs u8[] | alpha f32[]
+//!       f32:      u32 ndim | dims | data
+//!     u32 crc32(entry bytes)
+//!   u32 crc32(everything above)   — the whole-file trailer
+//!
+//! v1 is the same without any checksums; [`PackedModel::load`] still reads
+//! it (deployed artifacts keep working). Saves are atomic (temp file +
+//! fsync + rename via [`atomic_write`]) and every load validates untrusted
+//! length fields against the remaining file size before allocating, so a
+//! corrupt header is a typed [`ArtifactError`] naming the entry and byte
+//! offset — never an OOM abort or silently wrong weights.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::model::config::ModelConfig;
-use crate::model::{ModelWeights};
+use crate::model::ModelWeights;
 use crate::packed::format::{enforce_24, Packed24};
 use crate::tensor::Mat;
+use crate::util::artifact::{atomic_write, crc32, ArtifactError, ByteReader};
+
+/// Container version written by [`PackedModel::save`].
+pub const STBP_VERSION: u32 = 2;
 
 /// A deployable packed model.
 pub struct PackedModel {
@@ -92,109 +107,200 @@ impl PackedModel {
         p + f
     }
 
-    pub fn save(&self, path: &Path) -> Result<()> {
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(b"STBP")?;
-        f.write_all(&1u32.to_le_bytes())?;
-        f.write_all(&((self.packed.len() + self.fp.len()) as u32).to_le_bytes())?;
+    /// One entry's bytes (kind | name | payload), shared by both writers.
+    fn encode_entry(out: &mut Vec<u8>, kind: u8, name: &str, body: &dyn Fn(&mut Vec<u8>)) {
+        out.push(kind);
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        body(out);
+    }
+
+    /// Serialize the container at `version` (1 = legacy, no checksums;
+    /// 2 = per-entry CRC32 + whole-file trailer).
+    fn encode(&self, version: u32) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.total_bytes() + 64);
+        out.extend_from_slice(b"STBP");
+        out.extend_from_slice(&version.to_le_bytes());
+        out.extend_from_slice(&((self.packed.len() + self.fp.len()) as u32).to_le_bytes());
+        let mut entry = Vec::new();
+        let push_entry = |out: &mut Vec<u8>, entry: &mut Vec<u8>| {
+            if version >= 2 {
+                let crc = crc32(entry);
+                entry.extend_from_slice(&crc.to_le_bytes());
+            }
+            out.extend_from_slice(entry);
+            entry.clear();
+        };
         for (name, p) in &self.packed {
-            f.write_all(&[0u8])?;
-            write_name(&mut f, name)?;
-            f.write_all(&(p.rows as u32).to_le_bytes())?;
-            f.write_all(&(p.cols as u32).to_le_bytes())?;
-            for m in &p.meta {
-                f.write_all(&m.to_le_bytes())?;
-            }
-            f.write_all(&p.signs)?;
-            for a in &p.alpha {
-                f.write_all(&a.to_le_bytes())?;
-            }
+            Self::encode_entry(&mut entry, 0, name, &|b| {
+                b.extend_from_slice(&(p.rows as u32).to_le_bytes());
+                b.extend_from_slice(&(p.cols as u32).to_le_bytes());
+                for m in &p.meta {
+                    b.extend_from_slice(&m.to_le_bytes());
+                }
+                b.extend_from_slice(&p.signs);
+                for a in &p.alpha {
+                    b.extend_from_slice(&a.to_le_bytes());
+                }
+            });
+            push_entry(&mut out, &mut entry);
         }
         for (name, (dims, data)) in &self.fp {
-            f.write_all(&[1u8])?;
-            write_name(&mut f, name)?;
-            f.write_all(&(dims.len() as u32).to_le_bytes())?;
-            for d in dims {
-                f.write_all(&(*d as u32).to_le_bytes())?;
-            }
-            for v in data {
-                f.write_all(&v.to_le_bytes())?;
-            }
+            Self::encode_entry(&mut entry, 1, name, &|b| {
+                b.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+                for d in dims {
+                    b.extend_from_slice(&(*d as u32).to_le_bytes());
+                }
+                for v in data {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            });
+            push_entry(&mut out, &mut entry);
         }
+        if version >= 2 {
+            let file_crc = crc32(&out);
+            out.extend_from_slice(&file_crc.to_le_bytes());
+        }
+        out
+    }
+
+    /// Save the v2 checksummed container, atomically (temp + fsync +
+    /// rename — a crash mid-save never leaves a torn artifact).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.encode(STBP_VERSION))
+            .with_context(|| format!("save {}", path.display()))?;
         Ok(())
     }
 
+    /// Save the legacy v1 container (no checksums) — kept so the
+    /// version-compat contract ("a v1 `.stbp` still loads") stays testable
+    /// against bytes this build actually wrote.
+    pub fn save_v1(&self, path: &Path) -> Result<()> {
+        atomic_write(path, &self.encode(1)).with_context(|| format!("save {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a `.stbp` file (v1 or v2).
     pub fn load(path: &Path) -> Result<PackedModel> {
         let mut buf = Vec::new();
         std::fs::File::open(path)?.read_to_end(&mut buf)?;
-        let mut p = 0usize;
-        let take = |p: &mut usize, n: usize| -> Result<&[u8]> {
-            if *p + n > buf.len() {
-                bail!("truncated STBP");
-            }
-            let s = &buf[*p..*p + n];
-            *p += n;
-            Ok(s)
-        };
-        let u32r = |p: &mut usize| -> Result<u32> {
-            let b = take(p, 4)?;
-            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        };
-        if take(&mut p, 4)? != b"STBP" {
-            bail!("bad magic");
+        let pm = Self::load_bytes(&buf).with_context(|| format!("load {}", path.display()))?;
+        Ok(pm)
+    }
+
+    /// Parse a `.stbp` container from bytes, with typed corruption errors
+    /// ([`ArtifactError`] names the entry and byte offset). v2 verifies
+    /// per-entry CRC32s and the whole-file trailer; v1 parses without
+    /// checksums. Both bound every length field before allocating.
+    pub fn load_bytes(buf: &[u8]) -> Result<PackedModel, ArtifactError> {
+        let mut r = ByteReader::new(buf);
+        let magic = r.take(4)?;
+        if magic != b"STBP" {
+            return Err(ArtifactError::BadMagic { found: magic.to_vec(), expected: "STBP" });
         }
-        let ver = u32r(&mut p)?;
-        if ver != 1 {
-            bail!("unsupported STBP version {ver}");
+        let ver = r.u32()?;
+        if ver != 1 && ver != 2 {
+            return Err(ArtifactError::UnsupportedVersion { version: ver });
         }
-        let n = u32r(&mut p)? as usize;
+        let raw_n = r.u32()?;
+        let n = r.bounded_count(raw_n as u64, 5, "entry count")?; // kind + name_len floor
         let mut packed = BTreeMap::new();
         let mut fp = BTreeMap::new();
         for _ in 0..n {
-            let kind = take(&mut p, 1)?[0];
-            let nl = u32r(&mut p)? as usize;
-            let name = String::from_utf8(take(&mut p, nl)?.to_vec())?;
+            let entry_start = r.pos();
+            let (name, kind) = read_entry_header(&mut r)?;
             match kind {
                 0 => {
-                    let rows = u32r(&mut p)? as usize;
-                    let cols = u32r(&mut p)? as usize;
-                    let total_groups = rows * (cols / 4);
-                    let n_words = (total_groups + 3) / 4;
-                    let meta: Vec<u16> = take(&mut p, 2 * n_words)?
-                        .chunks_exact(2)
-                        .map(|c| u16::from_le_bytes([c[0], c[1]]))
-                        .collect();
-                    let signs = take(&mut p, n_words)?.to_vec();
-                    let alpha: Vec<f32> = take(&mut p, 4 * rows)?
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect();
-                    packed.insert(name, Packed24 { rows, cols, meta, signs, alpha });
+                    let p = read_packed24(&mut r)?;
+                    packed.insert(name.clone(), p);
                 }
                 1 => {
-                    let ndim = u32r(&mut p)? as usize;
-                    let mut dims = Vec::with_capacity(ndim);
-                    for _ in 0..ndim {
-                        dims.push(u32r(&mut p)? as usize);
-                    }
-                    let count: usize = dims.iter().product::<usize>().max(1);
-                    let data: Vec<f32> = take(&mut p, 4 * count)?
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect();
-                    fp.insert(name, (dims, data));
+                    let t = read_fp_tensor(&mut r)?;
+                    fp.insert(name.clone(), t);
                 }
-                k => bail!("unknown entry kind {k}"),
+                k => return Err(r.invalid(format!("unknown entry kind {k}"))),
+            }
+            if ver >= 2 {
+                let computed = crc32(r.consumed_since(entry_start));
+                let stored = r.u32()?;
+                if stored != computed {
+                    return Err(ArtifactError::EntryChecksum {
+                        entry: name,
+                        offset: entry_start,
+                        stored,
+                        computed,
+                    });
+                }
+            }
+            r.entry = None;
+        }
+        if ver >= 2 {
+            let body = r.consumed_since(0);
+            let computed = crc32(body);
+            let stored = r.u32()?;
+            if stored != computed {
+                return Err(ArtifactError::FileChecksum { stored, computed });
             }
         }
+        r.expect_end()?;
         Ok(PackedModel { packed, fp })
     }
 }
 
-fn write_name<W: Write>(f: &mut W, name: &str) -> Result<()> {
-    f.write_all(&(name.len() as u32).to_le_bytes())?;
-    f.write_all(name.as_bytes())?;
-    Ok(())
+/// Entry prefix: kind + bounded name. Sets `r.entry` so every later error
+/// in this entry names it.
+fn read_entry_header(r: &mut ByteReader<'_>) -> Result<(String, u8), ArtifactError> {
+    let kind = r.u8()?;
+    let raw_nl = r.u32()?;
+    let nl = r.bounded_count(raw_nl as u64, 1, "name_len")?;
+    let name = String::from_utf8(r.take(nl)?.to_vec())
+        .map_err(|_| r.invalid("entry name is not utf-8"))?;
+    r.entry = Some(name.clone());
+    Ok((name, kind))
+}
+
+/// Packed24 payload: rows | cols | meta | signs | alpha, all bounded.
+fn read_packed24(r: &mut ByteReader<'_>) -> Result<Packed24, ArtifactError> {
+    let rows = r.u32()? as u64;
+    let cols = r.u32()? as u64;
+    if cols % 4 != 0 {
+        return Err(r.invalid(format!("cols {cols} not divisible by 4 (2:4 packing)")));
+    }
+    let total_groups = rows * (cols / 4);
+    let n_words = total_groups.div_ceil(4);
+    let n_meta = r.bounded_count(n_words, 2, "meta words")?;
+    let meta: Vec<u16> = r
+        .take(2 * n_meta)?
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect();
+    let n_signs = r.bounded_count(n_words, 1, "sign bytes")?;
+    let signs = r.take(n_signs)?.to_vec();
+    let n_alpha = r.bounded_count(rows, 4, "alpha scales")?;
+    let alpha: Vec<f32> = r
+        .take(4 * n_alpha)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Packed24 { rows: rows as usize, cols: cols as usize, meta, signs, alpha })
+}
+
+/// FP tensor payload: ndim | dims | f32 data, all bounded.
+fn read_fp_tensor(r: &mut ByteReader<'_>) -> Result<(Vec<usize>, Vec<f32>), ArtifactError> {
+    let raw_ndim = r.u32()?;
+    let ndim = r.bounded_count(raw_ndim as u64, 4, "ndim")?;
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        dims.push(r.u32()? as usize);
+    }
+    let count: u64 = dims.iter().map(|&d| d as u64).fold(1u64, u64::saturating_mul).max(1);
+    let n = r.bounded_count(count, 4, "tensor data")?;
+    let data: Vec<f32> = r
+        .take(4 * n)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((dims, data))
 }
 
 #[cfg(test)]
@@ -206,11 +312,16 @@ mod tests {
         std::env::temp_dir().join(format!("stbp_{}_{}.stbp", tag, std::process::id()))
     }
 
-    #[test]
-    fn save_load_roundtrip() {
+    fn tiny_model() -> (ModelConfig, PackedModel) {
         let cfg = ModelConfig::preset("llama1-7b").unwrap();
         let w = ModelWeights::synthetic(&cfg, 1);
         let pm = PackedModel::from_weights(&cfg, &w).unwrap();
+        (cfg, pm)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (cfg, pm) = tiny_model();
         let path = tmpfile("rt");
         pm.save(&path).unwrap();
         let back = PackedModel::load(&path).unwrap();
@@ -220,6 +331,20 @@ mod tests {
         let b = back.to_weights(&cfg).unwrap();
         assert_eq!(a.layers[0].mats["wq"].data, b.layers[0].mats["wq"].data);
         assert_eq!(a.embed.data, b.embed.data);
+    }
+
+    #[test]
+    fn v1_container_still_loads() {
+        let (cfg, pm) = tiny_model();
+        let path = tmpfile("v1");
+        pm.save_v1(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[4..8], &1u32.to_le_bytes(), "save_v1 must write version 1");
+        let back = PackedModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let a = pm.to_weights(&cfg).unwrap();
+        let b = back.to_weights(&cfg).unwrap();
+        assert_eq!(a.layers[0].mats["wq"].data, b.layers[0].mats["wq"].data);
     }
 
     #[test]
@@ -255,5 +380,80 @@ mod tests {
         std::fs::write(&path, b"NOPE").unwrap();
         assert!(PackedModel::load(&path).is_err());
         std::fs::remove_file(&path).ok();
+        match PackedModel::load_bytes(b"NOPExxxx") {
+            Err(ArtifactError::BadMagic { expected, .. }) => assert_eq!(expected, "STBP"),
+            other => panic!("expected BadMagic, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flipped_payload_bit_fails_entry_checksum_naming_the_entry() {
+        let (_, pm) = tiny_model();
+        let mut bytes = pm.encode(STBP_VERSION);
+        // flip one bit inside the FIRST entry's meta words (past the 12-byte
+        // header, kind, name_len, name, rows, cols — pure payload, so the
+        // entry parses and only the checksum can catch it); entries are
+        // BTreeMap-ordered so the first packed entry is deterministic
+        let first_name = pm.packed.keys().next().unwrap().clone();
+        let flip_at = 12 + 1 + 4 + first_name.len() + 8 + 2;
+        bytes[flip_at] ^= 0x10;
+        match PackedModel::load_bytes(&bytes) {
+            Err(ArtifactError::EntryChecksum { entry, offset, .. }) => {
+                assert_eq!(entry, first_name);
+                assert_eq!(offset, 12, "first entry starts right after the header");
+            }
+            other => panic!("expected EntryChecksum naming {first_name}, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_v2_is_typed() {
+        let (_, pm) = tiny_model();
+        let bytes = pm.encode(STBP_VERSION);
+        match PackedModel::load_bytes(&bytes[..bytes.len() - 9]) {
+            Err(
+                ArtifactError::Truncated { .. }
+                | ArtifactError::EntryChecksum { .. }
+                | ArtifactError::BoundExceeded { .. },
+            ) => {}
+            other => panic!("expected a typed corruption error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lying_header_lengths_rejected_without_alloc() {
+        // v1 container claiming a huge name_len: must be BoundExceeded
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"STBP");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one entry
+        buf.push(1u8); // fp tensor
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // name_len lie
+        match PackedModel::load_bytes(&buf) {
+            Err(ArtifactError::BoundExceeded { field, .. }) => assert_eq!(field, "name_len"),
+            other => panic!("expected BoundExceeded, got {other:?}"),
+        }
+        // huge entry count with no entry bytes behind it
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"STBP");
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        match PackedModel::load_bytes(&buf) {
+            Err(ArtifactError::BoundExceeded { field, .. }) => assert_eq!(field, "entry count"),
+            other => panic!("expected BoundExceeded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn file_checksum_guards_the_header() {
+        let (_, pm) = tiny_model();
+        let mut bytes = pm.encode(STBP_VERSION);
+        // corrupt the trailer itself: entries all verify, the file CRC must not
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        match PackedModel::load_bytes(&bytes) {
+            Err(ArtifactError::FileChecksum { .. }) => {}
+            other => panic!("expected FileChecksum, got {other:?}"),
+        }
     }
 }

@@ -13,6 +13,7 @@
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -21,6 +22,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::coordinator::server::percentile;
 use crate::net::http::{read_response_head, BodyReader};
 use crate::util::json::{num, obj, Json};
+use crate::util::rng::Pcg32;
 
 /// Configuration for [`run_loadgen`].
 #[derive(Clone, Debug)]
@@ -70,6 +72,9 @@ pub struct LoadgenReport {
     pub completed: usize,
     /// Requests that failed (connect, non-200, protocol, truncation).
     pub errors: usize,
+    /// Shed (`503 + Retry-After`) attempts that were retried with jittered
+    /// exponential backoff before completing or giving up.
+    pub retries: usize,
     /// Tokens received across all streams.
     pub generated_tokens: usize,
     /// Wall-clock seconds for the whole workload.
@@ -108,8 +113,18 @@ fn body_for(opts: &LoadgenOpts, i: usize) -> String {
     format!("{{\"prompt\":[{}],\"max_new\":{}}}", toks.join(","), opts.max_new)
 }
 
-/// One `POST /generate` on an open connection; returns the stream sample.
-fn run_request(stream: &mut TcpStream, body: &str) -> Result<Sample> {
+/// Outcome of one wire attempt of a `/generate` request.
+enum Attempt {
+    /// Streamed to a `done` event.
+    Done(Sample),
+    /// The gateway shed the admit (`503 + Retry-After`): back off and
+    /// retry. `keep_alive` says whether the connection is still usable.
+    Shed { keep_alive: bool },
+}
+
+/// One `POST /generate` on an open connection; returns the stream sample
+/// or a shed signal.
+fn run_request(stream: &mut TcpStream, body: &str) -> Result<Attempt> {
     let t0 = Instant::now();
     write!(
         stream,
@@ -120,6 +135,15 @@ fn run_request(stream: &mut TcpStream, body: &str) -> Result<Sample> {
     stream.flush()?;
     let head = read_response_head(stream).map_err(|e| anyhow!("response head: {e}"))?;
     let mut reader = BodyReader::new(&head);
+    if head.status == 503 && head.header("retry-after").is_some() {
+        // consume the body so a keep-alive connection stays framed
+        let _ = reader.read_all(stream);
+        let keep_alive = head
+            .header("connection")
+            .map(|c| c.eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(false);
+        return Ok(Attempt::Shed { keep_alive });
+    }
     if head.status != 200 {
         let detail = reader.read_all(stream).unwrap_or_default();
         return Err(anyhow!(
@@ -149,7 +173,27 @@ fn run_request(stream: &mut TcpStream, body: &str) -> Result<Sample> {
         return Err(anyhow!("stream ended without a done event ({tokens} tokens in)"));
     }
     let latency_s = t0.elapsed().as_secs_f64();
-    Ok(Sample { ttft_s: ttft.unwrap_or(latency_s), latency_s, tokens })
+    Ok(Attempt::Done(Sample { ttft_s: ttft.unwrap_or(latency_s), latency_s, tokens }))
+}
+
+/// Max wire attempts per request (first try + shed retries).
+const MAX_ATTEMPTS: usize = 8;
+
+/// Jittered exponential backoff delay before shed retry `attempt`
+/// (1-based): `10ms · 2^(attempt-1) · U[0.5, 1.0)`, capped at 2s. The
+/// jitter comes from a seeded PCG stream, so a fixed-seed chaos run backs
+/// off identically every time.
+fn backoff_delay(attempt: usize, rng: &mut Pcg32) -> Duration {
+    let exp = (1u64 << (attempt - 1).min(6)) as f64;
+    let jitter = 0.5 + 0.5 * rng.next_f32() as f64;
+    Duration::from_secs_f64((0.010 * exp * jitter).min(2.0))
+}
+
+fn connect(target: &str) -> std::io::Result<TcpStream> {
+    let stream = TcpStream::connect(target)?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
 }
 
 /// Simple GET returning the body (used for `/stats`) or POST with an
@@ -179,15 +223,18 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     let requests = opts.requests.max(1);
     let samples: Mutex<Vec<Sample>> = Mutex::new(Vec::with_capacity(requests));
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let retries = AtomicUsize::new(0);
     let wall0 = Instant::now();
     std::thread::scope(|scope| {
         for c in 0..connections {
             let samples = &samples;
             let errors = &errors;
+            let retries = &retries;
             scope.spawn(move || {
                 // one keep-alive connection per worker, requests
-                // round-robined by index
-                let mut stream = match TcpStream::connect(&opts.target) {
+                // round-robined by index; deterministic per-worker jitter
+                let mut rng = Pcg32::new(0x6c6f_6164, c as u64);
+                let mut stream = match connect(&opts.target) {
                     Ok(s) => s,
                     Err(e) => {
                         let mut errs = errors.lock().unwrap();
@@ -197,12 +244,43 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
                         return;
                     }
                 };
-                let _ = stream.set_read_timeout(Some(Duration::from_secs(120)));
-                let _ = stream.set_nodelay(true);
                 for i in (c..requests).step_by(connections) {
-                    match run_request(&mut stream, &body_for(opts, i)) {
-                        Ok(sample) => samples.lock().unwrap().push(sample),
-                        Err(e) => errors.lock().unwrap().push(format!("req {i}: {e:#}")),
+                    let body = body_for(opts, i);
+                    let mut attempt = 1usize;
+                    loop {
+                        match run_request(&mut stream, &body) {
+                            Ok(Attempt::Done(sample)) => {
+                                samples.lock().unwrap().push(sample);
+                                break;
+                            }
+                            Ok(Attempt::Shed { keep_alive }) => {
+                                if attempt >= MAX_ATTEMPTS {
+                                    errors.lock().unwrap().push(format!(
+                                        "req {i}: still shed after {attempt} attempts"
+                                    ));
+                                    break;
+                                }
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(backoff_delay(attempt, &mut rng));
+                                attempt += 1;
+                                if !keep_alive {
+                                    match connect(&opts.target) {
+                                        Ok(s) => stream = s,
+                                        Err(e) => {
+                                            errors
+                                                .lock()
+                                                .unwrap()
+                                                .push(format!("req {i}: reconnect: {e}"));
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                errors.lock().unwrap().push(format!("req {i}: {e:#}"));
+                                break;
+                            }
+                        }
                     }
                 }
             });
@@ -211,6 +289,7 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     let wall_s = wall0.elapsed().as_secs_f64();
     let samples = samples.into_inner().unwrap();
     let errors = errors.into_inner().unwrap();
+    let retries = retries.into_inner();
     for e in &errors {
         eprintln!("[loadgen] {e}");
     }
@@ -243,6 +322,7 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     let report = LoadgenReport {
         completed: samples.len(),
         errors: errors.len(),
+        retries,
         generated_tokens,
         wall_s,
         tok_s,
@@ -270,6 +350,7 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         ("shared_prompt", Json::Bool(opts.shared_prompt)),
         ("completed", num(report.completed as f64)),
         ("errors", num(report.errors as f64)),
+        ("retries", num(report.retries as f64)),
         ("generated_tokens", num(generated_tokens as f64)),
         ("wall_s", num(wall_s)),
         ("tok_s", num(tok_s)),
@@ -287,6 +368,21 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        let mut rng = Pcg32::new(0x6c6f_6164, 0);
+        let d1 = backoff_delay(1, &mut rng);
+        assert!(d1 >= Duration::from_millis(5) && d1 <= Duration::from_millis(10), "{d1:?}");
+        let d4 = backoff_delay(4, &mut rng);
+        assert!(d4 >= Duration::from_millis(40) && d4 <= Duration::from_millis(80), "{d4:?}");
+        // capped: huge attempt numbers cannot sleep forever
+        assert!(backoff_delay(60, &mut rng) <= Duration::from_secs(2));
+        // deterministic under a fixed seed
+        let mut a = Pcg32::new(1, 7);
+        let mut b = Pcg32::new(1, 7);
+        assert_eq!(backoff_delay(3, &mut a), backoff_delay(3, &mut b));
+    }
 
     #[test]
     fn shared_prompts_are_identical_and_salted_ones_differ() {

@@ -1,0 +1,378 @@
+//! Artifact integrity substrate shared by the `.stbp` and `.stbw` binary
+//! containers: CRC32 checksums, a bounds-checked byte reader, typed
+//! corruption errors, and atomic (temp + fsync + rename) file writes.
+//!
+//! The loaders in [`crate::packed::store`] and [`crate::model::weights`]
+//! parse untrusted bytes: every length field is validated against the
+//! remaining file size BEFORE any allocation, so a corrupt header yields a
+//! typed [`ArtifactError`] naming the entry and byte offset instead of an
+//! OOM abort, and a flipped payload bit fails its entry checksum instead
+//! of silently decoding to wrong weights.
+
+use std::io::Write;
+use std::path::Path;
+
+/// CRC-32 (IEEE 802.3, polynomial `0xEDB88320`) lookup table, built at
+/// compile time — no crates, no lazy init.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 of `data` (the common IEEE variant: init `!0`, final xor `!0`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Typed corruption error for the binary artifact containers. Every
+/// variant carries the byte offset where parsing failed and, when known,
+/// the entry being parsed — the contract the chaos harness gates on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactError {
+    /// The file does not start with the expected magic bytes.
+    BadMagic {
+        /// What the first bytes actually were.
+        found: Vec<u8>,
+        /// The magic this loader accepts.
+        expected: &'static str,
+    },
+    /// The version field names a format this build cannot parse.
+    UnsupportedVersion {
+        /// Version read from the header.
+        version: u32,
+    },
+    /// The file ended before a read completed.
+    Truncated {
+        /// Entry being parsed, when known.
+        entry: Option<String>,
+        /// Byte offset of the failed read.
+        offset: usize,
+        /// Bytes the read needed.
+        needed: usize,
+        /// Bytes actually remaining.
+        have: usize,
+    },
+    /// An untrusted length field implies more bytes than the file holds —
+    /// rejected before any allocation.
+    BoundExceeded {
+        /// Entry being parsed, when known.
+        entry: Option<String>,
+        /// Which length field lied.
+        field: &'static str,
+        /// The value it claimed.
+        value: u64,
+        /// Bytes remaining in the file at that point.
+        remaining: usize,
+        /// Byte offset of the field.
+        offset: usize,
+    },
+    /// An entry's stored CRC32 does not match its bytes.
+    EntryChecksum {
+        /// Name of the corrupt entry.
+        entry: String,
+        /// Byte offset where the entry starts.
+        offset: usize,
+        /// CRC stored in the file.
+        stored: u32,
+        /// CRC computed over the entry bytes.
+        computed: u32,
+    },
+    /// The whole-file checksum trailer does not match the file bytes.
+    FileChecksum {
+        /// CRC stored in the trailer.
+        stored: u32,
+        /// CRC computed over the file body.
+        computed: u32,
+    },
+    /// A field parsed but its value is structurally invalid.
+    Invalid {
+        /// Entry being parsed, when known.
+        entry: Option<String>,
+        /// Byte offset of the bad field.
+        offset: usize,
+        /// What was wrong.
+        what: String,
+    },
+    /// Bytes remain after the container's declared end.
+    TrailingBytes {
+        /// Offset where the container ended.
+        offset: usize,
+        /// Unclaimed bytes after it.
+        extra: usize,
+    },
+}
+
+impl std::fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        fn ent(e: &Option<String>) -> String {
+            e.as_deref().map(|n| format!(" in entry {n:?}")).unwrap_or_default()
+        }
+        match self {
+            ArtifactError::BadMagic { found, expected } => {
+                write!(f, "bad magic {found:?} (expected {expected})")
+            }
+            ArtifactError::UnsupportedVersion { version } => {
+                write!(f, "unsupported container version {version}")
+            }
+            ArtifactError::Truncated { entry, offset, needed, have } => write!(
+                f,
+                "truncated{} at offset {offset}: need {needed} bytes, {have} remain",
+                ent(entry)
+            ),
+            ArtifactError::BoundExceeded { entry, field, value, remaining, offset } => write!(
+                f,
+                "corrupt {field}{} at offset {offset}: claims {value}, only {remaining} bytes remain",
+                ent(entry)
+            ),
+            ArtifactError::EntryChecksum { entry, offset, stored, computed } => write!(
+                f,
+                "checksum mismatch in entry {entry:?} at offset {offset}: stored {stored:#010x}, computed {computed:#010x}",
+            ),
+            ArtifactError::FileChecksum { stored, computed } => write!(
+                f,
+                "whole-file checksum mismatch: stored {stored:#010x}, computed {computed:#010x}"
+            ),
+            ArtifactError::Invalid { entry, offset, what } => {
+                write!(f, "invalid field{} at offset {offset}: {what}", ent(entry))
+            }
+            ArtifactError::TrailingBytes { offset, extra } => {
+                write!(f, "{extra} trailing bytes after container end at offset {offset}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+impl ArtifactError {
+    /// The entry name the error points at, when it names one.
+    pub fn entry(&self) -> Option<&str> {
+        match self {
+            ArtifactError::Truncated { entry, .. }
+            | ArtifactError::BoundExceeded { entry, .. }
+            | ArtifactError::Invalid { entry, .. } => entry.as_deref(),
+            ArtifactError::EntryChecksum { entry, .. } => Some(entry.as_str()),
+            _ => None,
+        }
+    }
+}
+
+/// Bounds-checked cursor over an untrusted byte buffer. Every read is
+/// validated against the remaining length first; length fields go through
+/// [`ByteReader::bounded_count`] so a lying header can never trigger a
+/// huge allocation.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// Entry currently being parsed — carried into every error.
+    pub entry: Option<String>,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Cursor at the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0, entry: None }
+    }
+
+    /// Current byte offset.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// The slice already consumed (for checksumming parsed regions).
+    pub fn consumed_since(&self, start: usize) -> &'a [u8] {
+        &self.buf[start..self.pos]
+    }
+
+    /// Read `n` bytes or fail with a typed truncation error.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], ArtifactError> {
+        if n > self.remaining() {
+            return Err(ArtifactError::Truncated {
+                entry: self.entry.clone(),
+                offset: self.pos,
+                needed: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32, ArtifactError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Validate an untrusted element count BEFORE allocating: `count`
+    /// elements of `elem_bytes` each must fit in the remaining buffer.
+    /// Returns the count as `usize` on success.
+    pub fn bounded_count(
+        &self,
+        count: u64,
+        elem_bytes: usize,
+        field: &'static str,
+    ) -> Result<usize, ArtifactError> {
+        let need = count.saturating_mul(elem_bytes as u64);
+        if need > self.remaining() as u64 {
+            return Err(ArtifactError::BoundExceeded {
+                entry: self.entry.clone(),
+                field,
+                value: count,
+                remaining: self.remaining(),
+                offset: self.pos,
+            });
+        }
+        Ok(count as usize)
+    }
+
+    /// A typed `Invalid` error at the current offset.
+    pub fn invalid(&self, what: impl Into<String>) -> ArtifactError {
+        ArtifactError::Invalid { entry: self.entry.clone(), offset: self.pos, what: what.into() }
+    }
+
+    /// Fail unless the buffer is fully consumed.
+    pub fn expect_end(&self) -> Result<(), ArtifactError> {
+        if self.remaining() != 0 {
+            return Err(ArtifactError::TrailingBytes { offset: self.pos, extra: self.remaining() });
+        }
+        Ok(())
+    }
+}
+
+/// Crash-safe file write: the bytes land in a sibling temp file, are
+/// fsynced, then renamed over `path` — a crash mid-save leaves either the
+/// old artifact or the new one, never a torn half-write.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(&format!(".tmp.{}", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp);
+    let write = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if write.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    write
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    #[test]
+    fn reader_truncation_is_typed_with_offset() {
+        let mut r = ByteReader::new(&[1, 2, 3]);
+        r.entry = Some("wq".into());
+        assert_eq!(r.u8().unwrap(), 1);
+        match r.u32() {
+            Err(ArtifactError::Truncated { entry, offset, needed, have }) => {
+                assert_eq!(entry.as_deref(), Some("wq"));
+                assert_eq!((offset, needed, have), (1, 4, 2));
+            }
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_count_rejects_lying_lengths_without_allocating() {
+        let buf = vec![0u8; 16];
+        let r = ByteReader::new(&buf);
+        // a corrupt header claiming u32::MAX elements must be rejected
+        match r.bounded_count(u32::MAX as u64, 4, "name_len") {
+            Err(ArtifactError::BoundExceeded { field, value, remaining, .. }) => {
+                assert_eq!(field, "name_len");
+                assert_eq!(value, u32::MAX as u64);
+                assert_eq!(remaining, 16);
+            }
+            other => panic!("expected BoundExceeded, got {other:?}"),
+        }
+        // saturating_mul: count * elem_bytes overflowing u64 still rejects
+        assert!(r.bounded_count(u64::MAX, 8, "dims").is_err());
+        assert_eq!(r.bounded_count(4, 4, "alpha").unwrap(), 4);
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut r = ByteReader::new(&[9, 9]);
+        r.u8().unwrap();
+        match r.expect_end() {
+            Err(ArtifactError::TrailingBytes { offset, extra }) => {
+                assert_eq!((offset, extra), (1, 1));
+            }
+            other => panic!("expected TrailingBytes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("stb_atomic_{}.bin", std::process::id()));
+        atomic_write(&path, b"first").unwrap();
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        let stale: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().starts_with(&format!(
+                    "stb_atomic_{}.bin.tmp",
+                    std::process::id()
+                ))
+            })
+            .collect();
+        assert!(stale.is_empty(), "temp file left behind");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn errors_render_entry_and_offset() {
+        let e = ArtifactError::EntryChecksum {
+            entry: "layers.0.wq".into(),
+            offset: 1234,
+            stored: 1,
+            computed: 2,
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("layers.0.wq"), "{msg}");
+        assert!(msg.contains("1234"), "{msg}");
+        assert_eq!(e.entry(), Some("layers.0.wq"));
+    }
+}

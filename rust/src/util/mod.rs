@@ -4,6 +4,7 @@
 //! `xla` + `anyhow`, so the conveniences usually pulled from clap / serde /
 //! criterion / proptest live in this module instead.
 
+pub mod artifact;
 pub mod cli;
 pub mod json;
 pub mod prop;

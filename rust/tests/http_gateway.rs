@@ -8,7 +8,7 @@
 //!
 //! Artifact-free: preset configs + synthetic weights only.
 
-use std::io::Write as _;
+use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpStream};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -190,4 +190,178 @@ fn mid_stream_disconnect_releases_kv_pages() {
     assert_eq!(report.cancelled, 1);
     assert_eq!(report.completed, 1);
     assert_eq!(report.leaked_pages, 0, "disconnect leaked KV pages: {report:?}");
+}
+
+/// Send `raw` bytes verbatim and return `(status, closed)` — `status` is
+/// `None` if the server closed without answering. The read deadline makes
+/// a hang a test failure instead of a wedge.
+fn send_raw(addr: SocketAddr, raw: &[u8]) -> (Option<u16>, bool) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    // the peer may already have answered 4xx and closed: a write error is
+    // acceptable, a hang is not
+    let _ = s.write_all(raw);
+    let status = read_response_head(&mut s).ok().map(|h| h.status);
+    // drain any response body until EOF so the close is observed directly
+    let mut sink = [0u8; 4096];
+    let closed = loop {
+        match s.read(&mut sink) {
+            Ok(0) => break true, // clean close
+            Ok(_) => continue,   // drain body bytes until EOF
+            Err(_) => break false,
+        }
+    };
+    (status, closed)
+}
+
+/// Malformed input must be answered (or dropped) and the connection
+/// closed — never a hang, never a panic, and the gateway keeps serving.
+#[test]
+fn malformed_http_yields_clean_rejections() {
+    let (cfg, w) = tiny();
+    let gw = Gateway::start(&cfg, &w, 2);
+
+    // oversized request head -> 431 (or a reset once the server stops
+    // reading — the unread tail can RST-discard the reply in transit;
+    // either way: no hang, connection over)
+    let mut huge = b"GET /healthz HTTP/1.1\r\nx-pad: ".to_vec();
+    huge.resize(huge.len() + 20 * 1024, b'a');
+    huge.extend_from_slice(b"\r\n\r\n");
+    let (status, _) = send_raw(gw.addr, &huge);
+    assert!(
+        status.is_none() || status == Some(431),
+        "oversized head must answer 431 or drop the connection, got {status:?}"
+    );
+
+    // not HTTP at all -> 400 + close
+    let (status, closed) = send_raw(gw.addr, b"THIS IS NOT HTTP\r\n\r\n");
+    assert_eq!(status, Some(400), "garbage request line must answer 400");
+    assert!(closed);
+
+    // unparseable content-length -> 400 + close
+    let (status, closed) =
+        send_raw(gw.addr, b"POST /generate HTTP/1.1\r\ncontent-length: banana\r\n\r\n");
+    assert_eq!(status, Some(400), "bad content-length must answer 400");
+    assert!(closed);
+
+    // content-length beyond the body bound -> 413 + close, no allocation
+    let (status, closed) = send_raw(
+        gw.addr,
+        b"POST /generate HTTP/1.1\r\ncontent-length: 999999999\r\n\r\n",
+    );
+    assert_eq!(status, Some(413), "oversized body claim must answer 413");
+    assert!(closed);
+
+    // EOF mid-header -> clean close (no reply owed), no hang
+    let (_, closed) = send_raw(gw.addr, b"GET /healthz HTTP/1.1\r\ntrunc");
+    assert!(closed, "eof mid-header must close cleanly");
+
+    // EOF mid-body (content-length says 50, send 5) -> close, no hang
+    let (_, closed) =
+        send_raw(gw.addr, b"POST /generate HTTP/1.1\r\ncontent-length: 50\r\n\r\nhello");
+    assert!(closed, "eof mid-body must close cleanly");
+
+    // chunked request bodies are not supported: the framing is treated as
+    // a zero-length body and the junk on the wire breaks the next parse —
+    // the connection must end closed either way, never hung
+    let (_, closed) = send_raw(
+        gw.addr,
+        b"POST /generate HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\nZZ\r\njunk\r\n0\r\n\r\n",
+    );
+    assert!(closed, "bad chunked framing must end in a close");
+
+    // after all of that abuse the gateway still serves real traffic
+    let (tokens, done) = post_generate(gw.addr, &[1, 2], 3);
+    assert_eq!(tokens.len(), 3);
+    assert_eq!(done.get("stopped").unwrap().as_str(), Some("completed"));
+    let report = gw.drain();
+    assert_eq!(report.leaked_pages, 0, "malformed input leaked KV pages: {report:?}");
+}
+
+/// Load shedding: with a tiny pool and a low watermark, a `/generate`
+/// racing two saturating streams gets `503 + Retry-After` on a kept-alive
+/// connection, and a later retry on the same socket succeeds.
+#[test]
+fn exhausted_pool_sheds_with_retry_after() {
+    let (cfg, w) = tiny();
+    let ctl = GatewayCtl::new();
+    let (cfg2, w2, ctl2) = (cfg.clone(), w.clone(), ctl.clone());
+    let handle = std::thread::spawn(move || {
+        let be = NativeBackend::new(cfg2, w2);
+        let mut opts = HttpServeOpts::new("127.0.0.1:0");
+        opts.max_batch = 2;
+        opts.kv_pages = 16;
+        opts.page_size = 4;
+        opts.threads = 4;
+        opts.keepalive_ms = 50;
+        opts.shed_watermark = 4;
+        serve_http(&be, &opts, &ctl2)
+    });
+    let addr = ctl.wait_bound(Duration::from_secs(30)).expect("gateway never bound");
+
+    // slow each scheduler tick down so the saturating streams are still
+    // holding their reservations when the probe lands (the tiny model
+    // would otherwise finish 24 tokens in milliseconds)
+    ctl.set_tick_hook(Some(std::sync::Arc::new(|_| {
+        std::thread::sleep(Duration::from_millis(10));
+    })));
+
+    // two streams of 7 pages each leave 2 free pages — below the
+    // watermark of 4, so the probe must shed. Long streams (max_new 24)
+    // keep the reservations held while the probe runs.
+    let saturators: Vec<_> = (0..2u8)
+        .map(|i| {
+            std::thread::spawn(move || post_generate(addr, &[1, 2, 3, 4 + i], 24))
+        })
+        .collect();
+    wait_for(addr, "pool saturation", |d| {
+        d.path(&["kv", "pages_reserved"]).and_then(Json::as_usize) >= Some(14)
+    });
+
+    // keep-alive probe: shed answer must carry Retry-After and leave the
+    // connection usable for the retry
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let body = generate_body(&[9, 9], 2);
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nhost: t\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let head = read_response_head(&mut s).expect("shed head");
+    assert_eq!(head.status, 503, "probe must shed while the pool is saturated");
+    assert!(
+        head.header("retry-after").is_some(),
+        "shed 503 must carry Retry-After: {head:?}"
+    );
+    let _ = BodyReader::new(&head).read_all(&mut s).expect("shed body");
+    ctl.set_tick_hook(None); // let the saturators finish at full speed
+
+    // wait out the saturators, then retry ON THE SAME CONNECTION
+    for t in saturators {
+        t.join().expect("saturator panicked");
+    }
+    wait_for(addr, "pool release", |d| {
+        d.path(&["kv", "pages_reserved"]).and_then(Json::as_usize) == Some(0)
+    });
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nhost: t\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let head = read_response_head(&mut s).expect("retry head");
+    assert_eq!(head.status, 200, "retry after shed must succeed");
+    let _ = BodyReader::new(&head).read_all(&mut s).expect("retry body");
+
+    let doc = stats(addr);
+    assert!(
+        doc.get("shed").and_then(Json::as_usize) >= Some(1),
+        "shed counter must record the refusal: {}",
+        doc.dump()
+    );
+    ctl.drain();
+    let report = handle.join().expect("gateway panicked").expect("gateway errored");
+    assert_eq!(report.leaked_pages, 0, "shedding leaked KV pages: {report:?}");
 }
