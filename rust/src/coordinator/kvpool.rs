@@ -36,6 +36,8 @@ use std::fmt;
 use std::sync::{Arc, Mutex};
 
 use crate::model::config::ModelConfig;
+use crate::obs::{Counter, Gauge, Registry, Snapshot};
+use crate::util::json::{num, obj, Json};
 
 /// One physical KV page: `page_size` token slots of K and V rows for every
 /// layer, laid out `[layer][k=0|v=1][slot][dim]`. Deliberately NOT `Clone`:
@@ -118,6 +120,62 @@ impl KvPoolStats {
     }
 }
 
+impl Snapshot for KvPoolStats {
+    fn name(&self) -> &'static str {
+        "kv"
+    }
+
+    /// The pool's section of the schema-2 stats envelope (nested under
+    /// `"kv"` in the server/gateway sections) — the pre-redesign fields
+    /// preserved, plus the counters that previously had no JSON surface.
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("total_pages", num(self.total_pages as f64)),
+            ("page_size", num(self.page_size as f64)),
+            ("pages_in_use", num(self.pages_in_use as f64)),
+            ("pages_reserved", num(self.pages_reserved as f64)),
+            ("free_pages", num(self.free_pages() as f64)),
+            ("peak_pages", num(self.peak_pages as f64)),
+            ("allocated_total", num(self.allocated_total as f64)),
+            ("cow_copies", num(self.cow_copies as f64)),
+            ("prefix_hits", num(self.prefix_hits as f64)),
+            ("prefix_hit_partial", num(self.prefix_hit_partial as f64)),
+            ("prefix_hit_tokens", num(self.prefix_hit_tokens as f64)),
+            ("registered", num(self.registered as f64)),
+            ("evictions", num(self.evictions as f64)),
+        ])
+    }
+}
+
+/// The pool's registered metric handles — mirrored from the authoritative
+/// `PoolInner` counters at each mutation point, under the pool lock.
+struct KvMetrics {
+    allocated: Arc<Counter>,
+    cow: Arc<Counter>,
+    evictions: Arc<Counter>,
+    prefix_hits: Arc<Counter>,
+    prefix_hit_tokens: Arc<Counter>,
+    registered: Arc<Counter>,
+    in_use: Arc<Gauge>,
+    reserved: Arc<Gauge>,
+}
+
+impl KvMetrics {
+    fn new(reg: &Registry) -> KvMetrics {
+        KvMetrics {
+            allocated: reg.counter("stbllm_kv_pages_allocated", "physical page allocations"),
+            cow: reg.counter("stbllm_kv_cow_copies", "copy-on-write page duplications"),
+            evictions: reg.counter("stbllm_kv_evictions", "cached pages evicted under pressure"),
+            prefix_hits: reg.counter("stbllm_kv_prefix_hits", "pages mapped from the prefix cache"),
+            prefix_hit_tokens: reg
+                .counter("stbllm_kv_prefix_hit_tokens", "prompt tokens served from cache"),
+            registered: reg.counter("stbllm_kv_prefix_registered", "pages registered for reuse"),
+            in_use: reg.gauge("stbllm_kv_pages_in_use", "physical pages live right now"),
+            reserved: reg.gauge("stbllm_kv_pages_reserved", "pages promised to live sessions"),
+        }
+    }
+}
+
 struct PrefixEntry {
     /// the exact token history `[0, (k+1)·page_size)` this page encodes
     key: Vec<u8>,
@@ -134,6 +192,22 @@ struct PoolInner {
     /// logical clock for LRU bookkeeping
     clock: u64,
     stats: KvPoolStats,
+    /// registry mirror, attached by the serving stack (`None` until then)
+    metrics: Option<KvMetrics>,
+    /// address of the attached registry — makes `attach_registry`
+    /// idempotent (re-attaching the same one must not re-seed counters)
+    metrics_reg: usize,
+}
+
+impl PoolInner {
+    /// Refresh the level gauges from the authoritative counters. Called
+    /// under the pool lock after any mutation of `physical`/`reserved`.
+    fn sync_gauges(&self) {
+        if let Some(m) = &self.metrics {
+            m.in_use.set(self.physical as i64);
+            m.reserved.set(self.reserved as i64);
+        }
+    }
 }
 
 /// A shared, fixed-budget arena of KV pages (see the module docs).
@@ -173,8 +247,32 @@ impl KvPool {
                 index: Vec::new(),
                 clock: 0,
                 stats: KvPoolStats::default(),
+                metrics: None,
+                metrics_reg: 0,
             }),
         }
+    }
+
+    /// Mirror this pool's counters into `registry` (`stbllm_kv_*`).
+    /// Counters are seeded with the pool's lifetime totals so a
+    /// late-attached registry still reads monotonic, truthful values;
+    /// re-attaching to the same registry re-uses the same handles.
+    pub fn attach_registry(&self, registry: &Registry) {
+        let reg_id = std::ptr::from_ref(registry) as usize;
+        let m = KvMetrics::new(registry);
+        let mut g = self.inner.lock().unwrap();
+        if g.metrics_reg == reg_id {
+            return; // already mirroring into this registry
+        }
+        g.metrics_reg = reg_id;
+        m.allocated.add(g.stats.allocated_total as u64);
+        m.cow.add(g.stats.cow_copies as u64);
+        m.evictions.add(g.stats.evictions as u64);
+        m.prefix_hits.add(g.stats.prefix_hits as u64);
+        m.prefix_hit_tokens.add(g.stats.prefix_hit_tokens as u64);
+        m.registered.add(g.stats.registered as u64);
+        g.metrics = Some(m);
+        g.sync_gauges();
     }
 
     pub fn page_size(&self) -> usize {
@@ -238,6 +336,7 @@ impl KvPool {
             });
         }
         g.reserved += pages;
+        g.sync_gauges();
         Ok(())
     }
 
@@ -265,6 +364,13 @@ impl KvPool {
         if g.physical > g.stats.peak_pages {
             g.stats.peak_pages = g.physical;
         }
+        if let Some(m) = &g.metrics {
+            m.allocated.inc();
+            if cow {
+                m.cow.inc();
+            }
+        }
+        g.sync_gauges();
         let data = g.free.pop().unwrap_or_else(|| vec![0.0f32; self.page_floats]);
         KvPage { data }
     }
@@ -290,9 +396,13 @@ impl KvPool {
                 g.physical -= 1;
                 g.free.push(pg.data);
                 g.stats.evictions += 1;
+                if let Some(m) = &g.metrics {
+                    m.evictions.inc();
+                }
                 freed += 1;
             }
         }
+        g.sync_gauges();
     }
 
     /// Return one page reference to the pool (the COW path replacing a
@@ -300,6 +410,7 @@ impl KvPool {
     fn release_one(&self, page: Arc<KvPage>) {
         let mut g = self.inner.lock().unwrap();
         Self::drop_ref_locked(&mut g, page);
+        g.sync_gauges();
     }
 
     /// Return a whole page table + its reservation (session teardown).
@@ -309,6 +420,7 @@ impl KvPool {
         for p in pages {
             Self::drop_ref_locked(&mut g, p);
         }
+        g.sync_gauges();
     }
 
     fn drop_ref_locked(g: &mut PoolInner, page: Arc<KvPage>) {
@@ -349,6 +461,9 @@ impl KvPool {
         }
         g.index.push(PrefixEntry { key: history.to_vec(), page: page.clone(), last_used: clock });
         g.stats.registered += 1;
+        if let Some(m) = &g.metrics {
+            m.registered.inc();
+        }
     }
 
     /// Map as many cached pages as match `prompt`, up to `max_tokens`
@@ -398,6 +513,10 @@ impl KvPool {
         }
         g.stats.prefix_hits += pages.len();
         g.stats.prefix_hit_tokens += matched;
+        if let Some(m) = &g.metrics {
+            m.prefix_hits.add(pages.len() as u64);
+            m.prefix_hit_tokens.add(matched as u64);
+        }
         (pages, matched)
     }
 }
@@ -579,6 +698,50 @@ mod tests {
             kv.on_token(t);
         }
         kv
+    }
+
+    /// The registry mirror (`stbllm_kv_*`) must agree with the pool's own
+    /// stats snapshot, survive a redundant re-attach without double
+    /// counting, and drop the level gauges back to zero at release.
+    #[test]
+    fn registry_mirror_tracks_pool_counters() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 8, 4));
+        let reg = Registry::new();
+        pool.attach_registry(&reg);
+        pool.attach_registry(&reg); // idempotent: must not re-seed
+        let toks: Vec<u8> = (0..10).collect();
+        let kv = run_seq(&pool, &cfg, 16, &toks);
+        let mid = reg.render_prometheus();
+        assert!(mid.contains("stbllm_kv_pages_reserved 4"));
+        assert!(mid.contains("stbllm_kv_pages_in_use 3"));
+        drop(kv);
+        let s = pool.stats();
+        let text = reg.render_prometheus();
+        assert!(
+            text.contains(&format!("stbllm_kv_pages_allocated_total {}\n", s.allocated_total)),
+            "mirror drifted from stats: {text}"
+        );
+        assert!(text.contains(&format!("stbllm_kv_prefix_registered_total {}\n", s.registered)));
+        assert!(text.contains("stbllm_kv_pages_reserved 0"));
+        assert!(text.contains(&format!("stbllm_kv_pages_in_use {}\n", s.pages_in_use)));
+    }
+
+    /// `KvPoolStats` serializes under `"kv"` with the old field names.
+    #[test]
+    fn kv_stats_snapshot_json_shape() {
+        let cfg = tiny_cfg();
+        let pool = Arc::new(KvPool::new(&cfg, 8, 4));
+        let toks: Vec<u8> = (0..10).collect();
+        let kv = run_seq(&pool, &cfg, 16, &toks);
+        drop(kv);
+        let s = pool.stats();
+        let j = s.to_json();
+        assert_eq!(j.get("total_pages").and_then(Json::as_usize), Some(8));
+        assert_eq!(j.get("page_size").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("registered").and_then(Json::as_usize), Some(s.registered));
+        assert_eq!(j.get("free_pages").and_then(Json::as_usize), Some(8));
+        assert_eq!(s.name(), "kv");
     }
 
     #[test]

@@ -47,6 +47,12 @@ use anyhow::Result;
 
 use crate::coordinator::kvpool::{KvPool, KvPoolStats};
 use crate::engine::backend::{Backend, DecodeSession, SessionOpts};
+use crate::obs::{Counter, Gauge, Histogram, Registry, Snapshot, TraceSpan, TraceSummary};
+use crate::util::json::{arr, num, obj, s as jstr, Json};
+
+// The one percentile implementation (nearest-rank), re-exported here for
+// the pre-obs call sites that imported it from this module.
+pub use crate::obs::percentile;
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -65,6 +71,8 @@ pub struct Response {
     pub latency_s: f64,
     /// seconds from submission to first generated token
     pub ttft_s: f64,
+    /// per-stage breakdown of where this request's time went
+    pub trace: TraceSummary,
 }
 
 /// Typed admission refusal — returned in [`ServerStats::rejections`]
@@ -124,17 +132,49 @@ impl ServerStats {
     }
 }
 
+impl Snapshot for ServerStats {
+    fn name(&self) -> &'static str {
+        "server"
+    }
+
+    /// The batch server's section of the schema-2 stats envelope — the
+    /// pre-redesign `--stats-json` fields, preserved verbatim.
+    fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("completed", num(self.completed as f64)),
+            ("generated_tokens", num(self.generated_tokens as f64)),
+            ("tokens_per_s", num(self.tokens_per_s())),
+            ("wall_s", num(self.wall_s)),
+            ("mean_latency_s", num(self.mean_latency_s)),
+            ("p50_latency_s", num(self.p50_latency_s)),
+            ("p95_latency_s", num(self.p95_latency_s)),
+            ("mean_ttft_s", num(self.mean_ttft_s)),
+            ("rejected", num(self.rejections.len() as f64)),
+            ("rejections", arr(self.rejections.iter().map(|e| jstr(&e.to_string())).collect())),
+            ("rejected_with_capacity_free", num(self.rejected_with_capacity_free as f64)),
+            ("deferred", num(self.deferred as f64)),
+        ];
+        if let Some(kv) = &self.kv {
+            fields.push(("kv", kv.to_json()));
+        }
+        obj(fields)
+    }
+}
+
 /// A queued request plus its head-of-line age (deferral count) — the
-/// starvation-avoidance bookkeeping of the admission loop.
+/// starvation-avoidance bookkeeping of the admission loop — and its
+/// trace span, opened at enqueue so queue wait is never lost.
 pub(crate) struct Queued {
     pub(crate) req: Request,
     /// times this request was deferred while at the head of the queue
     pub(crate) deferrals: u32,
+    /// per-request span; follows the request into `Active` at admission
+    pub(crate) span: TraceSpan,
 }
 
 impl Queued {
     pub(crate) fn new(req: Request) -> Queued {
-        Queued { req, deferrals: 0 }
+        Queued { req, deferrals: 0, span: TraceSpan::begin(Instant::now()) }
     }
 }
 
@@ -147,6 +187,16 @@ pub(crate) struct Active<'a> {
     /// position in the prompt during prefill
     prefill_pos: usize,
     last_logits: Vec<f32>,
+    /// per-request span, accumulating stage times tick by tick
+    pub(crate) span: TraceSpan,
+}
+
+impl Active<'_> {
+    /// Close this request's span (used at retirement, both here and in
+    /// the streaming bridge).
+    pub(crate) fn finish_span(&self, now: Instant) -> TraceSummary {
+        self.span.finish(now)
+    }
 }
 
 /// Outcome of one [`BatchServer::top_up`] round.
@@ -176,10 +226,51 @@ pub(crate) struct TickResult {
 enum Admission<'a> {
     Admitted(Active<'a>),
     /// Not enough free KV pages right now — the request goes back to the
-    /// head of the queue and waits for running sequences to retire.
-    Deferred(Request),
+    /// head of the queue (span intact, still accruing queue wait) and
+    /// waits for running sequences to retire.
+    Deferred(Queued),
     /// The request can never be served by this server's KV capacity.
     Rejected(ServeError),
+}
+
+/// The batch server's registered metric handles — one mint per server,
+/// recorded lock-free on the scheduling hot path (`top_up`/`tick`).
+pub(crate) struct ServerMetrics {
+    pub(crate) admitted: Arc<Counter>,
+    pub(crate) rejected: Arc<Counter>,
+    pub(crate) deferred: Arc<Counter>,
+    pub(crate) completed: Arc<Counter>,
+    pub(crate) tokens: Arc<Counter>,
+    pub(crate) queue_h: Arc<Histogram>,
+    pub(crate) prefill_h: Arc<Histogram>,
+    pub(crate) decode_h: Arc<Histogram>,
+    pub(crate) kernel_h: Arc<Histogram>,
+    pub(crate) ttft_h: Arc<Histogram>,
+    pub(crate) latency_h: Arc<Histogram>,
+    pub(crate) active_g: Arc<Gauge>,
+    pub(crate) queued_g: Arc<Gauge>,
+}
+
+impl ServerMetrics {
+    pub(crate) fn new(reg: &Registry) -> Self {
+        ServerMetrics {
+            admitted: reg.counter("stbllm_server_admitted", "requests admitted to the batch"),
+            rejected: reg.counter("stbllm_server_rejected", "requests refused at admission"),
+            deferred: reg.counter("stbllm_server_deferred", "admission backpressure events"),
+            completed: reg.counter("stbllm_server_completed", "requests retired complete"),
+            tokens: reg.counter("stbllm_server_generated_tokens", "tokens generated"),
+            queue_h: reg.histogram("stbllm_server_queue_seconds", "enqueue to admission wait"),
+            prefill_h: reg
+                .histogram("stbllm_server_prefill_seconds", "per-tick prefill wall time"),
+            decode_h: reg.histogram("stbllm_server_decode_seconds", "per-tick decode wall time"),
+            kernel_h: reg
+                .histogram("stbllm_server_kernel_seconds", "per-tick batched kernel time"),
+            ttft_h: reg.histogram("stbllm_server_ttft_seconds", "admission to first token"),
+            latency_h: reg.histogram("stbllm_server_latency_seconds", "admission to retirement"),
+            active_g: reg.gauge("stbllm_server_active", "sequences decoding right now"),
+            queued_g: reg.gauge("stbllm_server_queued", "requests waiting for admission"),
+        }
+    }
 }
 
 /// Synchronous batch server: processes a workload of requests with
@@ -196,6 +287,8 @@ pub struct BatchServer<'a> {
     /// cannot be starved forever by a stream of small ones.
     pub hol_boost_deferrals: u32,
     pool: Option<Arc<KvPool>>,
+    registry: Arc<Registry>,
+    metrics: ServerMetrics,
 }
 
 /// Default [`BatchServer::hol_boost_deferrals`]: a deferred head tolerates
@@ -205,19 +298,45 @@ pub const DEFAULT_HOL_BOOST_DEFERRALS: u32 = 8;
 impl<'a> BatchServer<'a> {
     pub fn new(backend: &'a dyn Backend, max_batch: usize) -> Self {
         let kv_capacity = 4 * backend.cfg().seq_len;
+        // each server gets its own registry by default (test isolation);
+        // serving stacks share one via `with_registry`
+        let registry = Arc::new(Registry::new());
+        let metrics = ServerMetrics::new(&registry);
         BatchServer {
             backend,
             max_batch,
             kv_capacity,
             hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
             pool: None,
+            registry,
+            metrics,
         }
     }
 
-    /// Attach an existing shared KV pool.
+    /// Attach an existing shared KV pool; it mirrors its page counters
+    /// into this server's registry.
     pub fn with_pool(mut self, pool: Arc<KvPool>) -> Self {
+        pool.attach_registry(&self.registry);
         self.pool = Some(pool);
         self
+    }
+
+    /// Record into `registry` instead of the server's private one — the
+    /// serving stacks (gateway, `Engine::serve`) pass theirs so
+    /// `GET /metrics` exposes scheduler histograms. The KV pool (attached
+    /// before or after) mirrors into the same registry.
+    pub fn with_registry(mut self, registry: Arc<Registry>) -> Self {
+        self.metrics = ServerMetrics::new(&registry);
+        self.registry = registry;
+        if let Some(pool) = &self.pool {
+            pool.attach_registry(&self.registry);
+        }
+        self
+    }
+
+    /// The registry this server records into.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Attach a paged KV pool of `pages` pages of `page_size` token slots;
@@ -233,7 +352,9 @@ impl<'a> BatchServer<'a> {
         } else {
             pages
         };
-        self.pool = Some(Arc::new(KvPool::new(self.backend.cfg(), pages, page_size)));
+        let pool = Arc::new(KvPool::new(self.backend.cfg(), pages, page_size));
+        pool.attach_registry(&self.registry);
+        self.pool = Some(pool);
         self
     }
 
@@ -242,10 +363,14 @@ impl<'a> BatchServer<'a> {
         self.pool.as_ref()
     }
 
-    /// Try to admit `req`: open its decode session (paged against the pool
-    /// when one is attached, flat otherwise) or report why it cannot run.
-    fn admit(&self, req: Request, t0: Instant) -> Result<Admission<'a>> {
+    /// Try to admit the queued request: open its decode session (paged
+    /// against the pool when one is attached, flat otherwise) or report
+    /// why it cannot run. Admission closes the span's queue stage and
+    /// stamps the request's KV page footprint.
+    fn admit(&self, q: Queued) -> Result<Admission<'a>> {
+        let Queued { req, mut span, deferrals } = q;
         let need_tokens = req.prompt.len() + req.max_new;
+        let mut pages = 0usize;
         let session = match &self.pool {
             Some(pool) => {
                 let need_pages = pool.pages_for(need_tokens);
@@ -257,7 +382,7 @@ impl<'a> BatchServer<'a> {
                     }));
                 }
                 if !pool.can_reserve(need_pages) {
-                    return Ok(Admission::Deferred(req));
+                    return Ok(Admission::Deferred(Queued { req, span, deferrals }));
                 }
                 let opts = SessionOpts {
                     capacity: need_tokens,
@@ -265,14 +390,17 @@ impl<'a> BatchServer<'a> {
                     prompt: &req.prompt,
                 };
                 match self.backend.begin_decode_with(&opts) {
-                    Ok(session) => session,
+                    Ok(session) => {
+                        pages = need_pages;
+                        session
+                    }
                     // another server on a shared pool can win the
                     // reservation between our can_reserve peek and the
                     // session's atomic reserve — a now-exhausted pool is
                     // backpressure, not a failure; genuine backend errors
                     // (pool still reservable) propagate
                     Err(_) if !pool.can_reserve(need_pages) => {
-                        return Ok(Admission::Deferred(req))
+                        return Ok(Admission::Deferred(Queued { req, span, deferrals }))
                     }
                     Err(e) => return Err(e),
                 }
@@ -288,9 +416,14 @@ impl<'a> BatchServer<'a> {
                 self.backend.begin_decode(self.kv_capacity)?
             }
         };
+        let t0 = Instant::now();
+        let queue_s = span.admitted(t0);
+        self.metrics.queue_h.record_secs(queue_s);
+        span.set_pages(pages);
         // prefix-cache hits come back with pos() > 0: prefill resumes
         // right after the reused tokens
         let prefill_pos = session.pos();
+        span.add_prefix_hit_tokens(prefill_pos);
         Ok(Admission::Admitted(Active {
             session,
             produced: Vec::with_capacity(req.max_new),
@@ -298,6 +431,7 @@ impl<'a> BatchServer<'a> {
             first_token: None,
             prefill_pos,
             last_logits: Vec::new(),
+            span,
             req,
         }))
     }
@@ -328,18 +462,21 @@ impl<'a> BatchServer<'a> {
         while active.len() < self.max_batch && idx < queue.len() {
             let q = queue.remove(idx).expect("idx < queue.len()");
             let age = q.deferrals;
-            match self.admit(q.req, Instant::now())? {
+            match self.admit(q)? {
                 Admission::Admitted(a) => {
+                    self.metrics.admitted.inc();
                     out.admitted.push(a.req.id);
                     active.push(a);
                     // idx now points at the next not-yet-tried entry
                 }
-                Admission::Deferred(req) => {
+                Admission::Deferred(mut q) => {
                     out.deferred_events += 1;
+                    self.metrics.deferred.inc();
                     // only the true head accrues starvation age; bypassed
                     // followers just wait their turn
                     let age = if idx == 0 { age + 1 } else { age };
-                    queue.insert(idx, Queued { req, deferrals: age });
+                    q.deferrals = age;
+                    queue.insert(idx, q);
                     if idx == 0 && age >= self.hol_boost_deferrals {
                         // aged head: stop bypassing so retiring sessions
                         // can only free pages INTO this request
@@ -348,6 +485,7 @@ impl<'a> BatchServer<'a> {
                     idx += 1;
                 }
                 Admission::Rejected(e) => {
+                    self.metrics.rejected.inc();
                     if self.capacity_was_free(&e) {
                         out.rejected_free += 1;
                     }
@@ -355,6 +493,8 @@ impl<'a> BatchServer<'a> {
                 }
             }
         }
+        self.metrics.active_g.set(active.len() as i64);
+        self.metrics.queued_g.set(queue.len() as i64);
         Ok(out)
     }
 
@@ -368,9 +508,13 @@ impl<'a> BatchServer<'a> {
     /// both call it, which is what makes network-streamed tokens
     /// byte-identical to a direct batch run.
     pub(crate) fn tick(&self, active: &mut Vec<Active<'a>>) -> Result<TickResult> {
+        let tick0 = Instant::now();
         // Phase 1: pick inputs; sequences that just produced their last
         // token finish without another step.
         let mut stepping: Vec<usize> = Vec::with_capacity(active.len());
+        // parallel to `stepping`: was this step prompt prefill (true) or
+        // token decode (false)? Drives per-stage span/histogram credit.
+        let mut prefilling: Vec<bool> = Vec::with_capacity(active.len());
         let mut tokens: Vec<u8> = Vec::with_capacity(active.len());
         let mut emitted: Vec<(usize, u8)> = Vec::new();
         let mut finished: Vec<usize> = Vec::new();
@@ -380,11 +524,13 @@ impl<'a> BatchServer<'a> {
                 tokens.push(a.req.prompt[a.prefill_pos]);
                 a.prefill_pos += 1;
                 stepping.push(i);
+                prefilling.push(true);
             } else {
                 // greedy decode
                 let next = argmax(&a.last_logits);
                 if a.first_token.is_none() {
                     a.first_token = Some(a.submitted.elapsed().as_secs_f64());
+                    a.span.first_token(Instant::now());
                 }
                 a.produced.push(next);
                 emitted.push((i, next));
@@ -393,15 +539,18 @@ impl<'a> BatchServer<'a> {
                 } else {
                     tokens.push(next);
                     stepping.push(i);
+                    prefilling.push(false);
                 }
             }
         }
+        self.metrics.tokens.add(emitted.len() as u64);
         // Phase 2: ONE decode_batch per tick — a fused backend runs a
         // single packed GEMM per projection across every stepping
         // sequence (the weight stream is read once per tick, not once
         // per session); other backends step per-session inside the
         // default implementation.
         if !stepping.is_empty() {
+            let kernel0 = Instant::now();
             let logits = {
                 let mut sessions: Vec<&mut (dyn DecodeSession + 'a)> =
                     Vec::with_capacity(stepping.len());
@@ -414,8 +563,28 @@ impl<'a> BatchServer<'a> {
                 }
                 self.backend.decode_batch(&mut sessions, &tokens)?
             };
+            let kernel_s = kernel0.elapsed().as_secs_f64();
             for (&i, lg) in stepping.iter().zip(logits) {
                 active[i].last_logits = lg;
+            }
+            // Stage attribution: the tick's wall time is credited to each
+            // stepping sequence's current stage, the decode_batch share to
+            // its kernel time. Tick windows are disjoint intervals inside
+            // each request's admit→retire lifetime, so per-request stage
+            // sums can never exceed the span total (the trace invariant
+            // the metrics-smoke gate asserts).
+            let tick_s = tick0.elapsed().as_secs_f64();
+            self.metrics.kernel_h.record_secs(kernel_s);
+            for (&i, &pf) in stepping.iter().zip(prefilling.iter()) {
+                let a = &mut active[i];
+                if pf {
+                    a.span.add_prefill(tick_s);
+                    self.metrics.prefill_h.record_secs(tick_s);
+                } else {
+                    a.span.add_decode(tick_s);
+                    self.metrics.decode_h.record_secs(tick_s);
+                }
+                a.span.add_kernel(kernel_s);
             }
         }
         Ok(TickResult { emitted, finished })
@@ -459,14 +628,21 @@ impl<'a> BatchServer<'a> {
             // swap_remove never disturbs a pending index)
             for &i in t.finished.iter().rev() {
                 let a = active.swap_remove(i);
-                let lat = a.submitted.elapsed().as_secs_f64();
+                let now = Instant::now();
+                let lat = now.duration_since(a.submitted).as_secs_f64();
+                let ttft = a.first_token.unwrap_or(lat);
                 latencies.push(lat);
-                ttfts.push(a.first_token.unwrap_or(lat));
+                ttfts.push(ttft);
+                self.metrics.completed.inc();
+                self.metrics.latency_h.record_secs(lat);
+                self.metrics.ttft_h.record_secs(ttft);
+                let trace = a.finish_span(now);
                 done.push(Response {
                     id: a.req.id,
                     tokens: a.produced,
                     latency_s: lat,
-                    ttft_s: a.first_token.unwrap_or(lat),
+                    ttft_s: ttft,
+                    trace,
                 });
             }
         }
@@ -539,19 +715,6 @@ fn mean(v: &[f64]) -> f64 {
     } else {
         v.iter().sum::<f64>() / v.len() as f64
     }
-}
-
-/// Nearest-rank percentile of an ascending-sorted slice: the smallest value
-/// such that at least `p`% of the samples are ≤ it (rank = ⌈p/100 · n⌉,
-/// 1-based). The previous `round((p/100)·(n-1))` interpolation over-read
-/// e.g. p50 of a 2-sample vector as the max.
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
-    }
-    let n = sorted.len();
-    let rank = ((p / 100.0) * n as f64).ceil() as usize;
-    sorted[rank.clamp(1, n) - 1]
 }
 
 #[cfg(test)]
@@ -766,21 +929,13 @@ mod tests {
         }
     }
 
+    /// The percentile used by this module is THE shared nearest-rank
+    /// implementation — its semantics are pinned once, in
+    /// `crate::obs::percentile` (`percentile_nearest_rank_pinned`).
     #[test]
-    fn percentile_nearest_rank_pinned() {
-        // known vector 1..=20: p50 = 10 (rank ⌈0.5·20⌉ = 10), p95 = 19,
-        // p100 = 20, tiny p → min
-        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
-        assert_eq!(percentile(&v, 50.0), 10.0);
-        assert_eq!(percentile(&v, 95.0), 19.0);
-        assert_eq!(percentile(&v, 100.0), 20.0);
-        assert_eq!(percentile(&v, 1.0), 1.0);
-        // two samples: the median by nearest-rank is the FIRST, not the max
+    fn percentile_is_the_shared_obs_implementation() {
+        // spot-check the re-export resolves to nearest-rank behavior
         assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
-        assert_eq!(percentile(&[1.0, 2.0], 95.0), 2.0);
-        // degenerate inputs
-        assert_eq!(percentile(&[], 95.0), 0.0);
-        assert_eq!(percentile(&[3.5], 95.0), 3.5);
     }
 
     /// Starvation regression: a request needing the WHOLE pool, followed by
@@ -868,5 +1023,51 @@ mod tests {
         let (_, stats) = BatchServer::new(&be, 2).run(reqs).unwrap();
         assert!(stats.p50_latency_s > 0.0);
         assert!(stats.p95_latency_s >= stats.p50_latency_s);
+    }
+
+    /// Every retired response carries a per-stage trace whose accounting
+    /// is conservative (`queue+prefill+decode ≤ total`), and the server's
+    /// registry fills its stage histograms while serving.
+    #[test]
+    fn responses_carry_consistent_traces_and_metrics() {
+        let (cfg, w) = tiny();
+        let be = NativeBackend::borrowed(&cfg, &w);
+        let server = BatchServer::new(&be, 2);
+        let reqs: Vec<Request> =
+            (0..3).map(|id| Request { id, prompt: vec![1, 2, 3], max_new: 4 }).collect();
+        let (resps, _) = server.run(reqs).unwrap();
+        assert_eq!(resps.len(), 3);
+        for r in &resps {
+            assert!(r.trace.stages_within_total(0.5), "stage overshoot: {:?}", r.trace);
+            assert!(r.trace.ttft_ms <= r.trace.total_ms + 0.5);
+            assert!(r.trace.prefill_ms > 0.0, "prefill ticks untraced");
+            assert!(r.trace.decode_ms > 0.0, "decode ticks untraced");
+            assert!(r.trace.ticks >= 1);
+        }
+        let text = server.registry().render_prometheus();
+        assert!(text.contains("stbllm_server_completed_total 3"));
+        assert!(text.contains("stbllm_server_generated_tokens_total 12"));
+        for h in ["queue", "prefill", "decode", "kernel", "ttft", "latency"] {
+            let needle = format!("stbllm_server_{h}_seconds_count");
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&needle))
+                .unwrap_or_else(|| panic!("{needle} missing from exposition"));
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n > 0, "{needle} is empty");
+        }
+    }
+
+    /// `ServerStats` is a [`Snapshot`]: it serializes under `"server"`
+    /// inside the schema-2 envelope with the old flat fields intact.
+    #[test]
+    fn server_stats_snapshot_in_schema2_envelope() {
+        let stats =
+            ServerStats { completed: 2, generated_tokens: 8, wall_s: 2.0, ..Default::default() };
+        let doc = crate::obs::envelope(&[&stats]);
+        assert_eq!(doc.get("schema").and_then(Json::as_usize), Some(2));
+        assert_eq!(doc.path(&["server", "completed"]).and_then(Json::as_usize), Some(2));
+        assert_eq!(doc.path(&["server", "tokens_per_s"]).and_then(Json::as_f64), Some(4.0));
+        assert_eq!(doc.path(&["server", "deferred"]).and_then(Json::as_usize), Some(0));
     }
 }

@@ -501,6 +501,19 @@ impl Engine {
     /// flat per-session buffers. Generated tokens are bit-identical either
     /// way.
     pub fn serve(&self, requests: Vec<Request>) -> Result<(Vec<crate::coordinator::Response>, ServerStats)> {
+        self.serve_with_registry(requests, None)
+    }
+
+    /// [`Engine::serve`] with an explicit observability seam: when
+    /// `registry` is `Some`, the batch server (and its KV pool) mint
+    /// their counters and per-stage histograms in that registry, so an
+    /// embedding caller can scrape one process-wide exposition across
+    /// engine runs. `None` keeps a private per-run registry.
+    pub fn serve_with_registry(
+        &self,
+        requests: Vec<Request>,
+        registry: Option<std::sync::Arc<crate::obs::Registry>>,
+    ) -> Result<(Vec<crate::coordinator::Response>, ServerStats)> {
         if !self.backend.capabilities().decode {
             return Err(EngineError::Unsupported {
                 backend: self.backend.label(),
@@ -509,6 +522,9 @@ impl Engine {
             .into());
         }
         let mut server = BatchServer::new(self.backend.as_ref(), self.max_batch);
+        if let Some(reg) = registry {
+            server = server.with_registry(reg);
+        }
         if !self.flat_kv {
             server = server.with_kv_pool(self.kv_pages, self.page_size);
         }

@@ -385,13 +385,22 @@ fn healthz_ok(addr: SocketAddr) -> bool {
     matches!(fetch(addr, "GET", "/healthz", ""), Ok((200, _, _)))
 }
 
+/// Fetch `/stats` and return its `"gateway"` section, asserting the
+/// schema-2 envelope on every read (the chaos run doubles as a gate on
+/// the stats API contract).
 fn stats(addr: SocketAddr) -> Result<Json> {
     let (status, _, bytes) = fetch(addr, "GET", "/stats", "")?;
     if status != 200 {
         anyhow::bail!("/stats answered {status}");
     }
-    Json::parse(&String::from_utf8_lossy(&bytes))
-        .map_err(|e| anyhow::anyhow!("bad /stats json: {e}"))
+    let doc = Json::parse(&String::from_utf8_lossy(&bytes))
+        .map_err(|e| anyhow::anyhow!("bad /stats json: {e}"))?;
+    if doc.get("schema").and_then(Json::as_usize) != Some(2) {
+        anyhow::bail!("/stats is not a schema-2 envelope: {}", doc.dump());
+    }
+    doc.get("gateway")
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("/stats envelope missing \"gateway\": {}", doc.dump()))
 }
 
 /// Poll `/stats` until `pred` holds (asynchronous retirement).

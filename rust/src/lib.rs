@@ -17,6 +17,9 @@
 //!   driver and the batched inference server.
 //! * [`net`] — the HTTP/1.1 streaming gateway (`stbllm serve --http`):
 //!   chunked/SSE token streaming, deadlines, drain, live stats.
+//! * [`obs`] — the observability substrate: lock-free metrics registry
+//!   (`GET /metrics` Prometheus exposition), per-request trace spans,
+//!   the shared percentile, and the schema-2 stats envelope.
 //! * [`faults`] — the chaos harness (`stbllm chaos`): seeded fault plans
 //!   injected against the artifact loaders and the live gateway.
 //! * [`eval`] — perplexity, zero-shot harness, sign-flip study.
@@ -32,6 +35,7 @@ pub mod model;
 // code (tests opt back in per-module).
 #[deny(clippy::unwrap_used)]
 pub mod net;
+pub mod obs;
 pub mod packed;
 pub mod quant;
 pub mod report;

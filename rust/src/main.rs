@@ -22,13 +22,13 @@
 
 use anyhow::{bail, Result};
 
-use stbllm::coordinator::{BatchServer, Request, ServerStats};
+use stbllm::coordinator::{BatchServer, Request};
 use stbllm::engine::{method_from_args, BackendKind, Engine, PackedBackend};
+use stbllm::obs::{envelope, Registry};
 use stbllm::packed::PackedModel;
 use stbllm::report::fmt_ppl;
 use stbllm::runtime::Artifacts;
 use stbllm::util::cli::{defaults, Args};
-use stbllm::util::json::{num, obj, Json};
 
 fn main() {
     let args = Args::from_env();
@@ -115,7 +115,8 @@ OPTIONS
   --flat-kv          serve: disable the paged pool (flat per-session KV)
   --stbp PATH        serve: save + reload the .stbp deployment container
                      and serve from the reloaded store (packed backend)
-  --stats-json PATH  serve: write ServerStats (+ KV pool counters) as JSON
+  --stats-json PATH  serve: write the schema-2 stats envelope (server
+                     section + KV pool counters) as JSON
   --smoke            serve: scripted shared-prompt workload + CI gate
                      (asserts prefix reuse saves pages, no bad rejections)
   --http ADDR        serve: bind the streaming HTTP gateway on ADDR
@@ -130,12 +131,20 @@ OPTIONS
   --shed-watermark N serve --http: shed new /generate admits with 503 +
                      Retry-After when free KV pages drop below N
                      (0 = auto: an eighth of the pool, min 1)
+  --no-obs           serve --http: disable the metrics registry (no-op
+                     counters/histograms; the A/B baseline for measuring
+                     recording overhead — /metrics renders empty)
   --seed N           chaos: fault-plan seed (default 7; CI pins 7)
   --target H:P       loadgen: gateway address to drive (required)
   --connections N    loadgen: concurrent connections (default {lg_conns})
                      (--requests/--prompt/--max-new shape the workload;
                      --drain sends POST /admin/drain afterwards;
                      --out PATH overrides the JSON report path)
+  --metrics-check    loadgen: scrape GET /metrics before + after the run
+                     and gate on it — counters monotone, server token
+                     counts match the client's, per-stage histograms
+                     populated, every stream carried a trace trailer;
+                     writes the final exposition next to the report
   --ratio R          flip: fraction of signs to flip (default {ratio})
   --workers N        thread budget: quantization jobs, packed `_par` kernels,
                      window-parallel eval (default {workers})
@@ -377,7 +386,7 @@ fn serve(args: &Args) -> Result<()> {
         if let Some(dir) = p.parent() {
             std::fs::create_dir_all(dir).ok();
         }
-        std::fs::write(&p, serve_stats_json(&stats))?;
+        std::fs::write(&p, envelope(&[&stats]).dump())?;
         println!("stats JSON -> {}", p.display());
     }
 
@@ -425,41 +434,6 @@ fn serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Flatten [`ServerStats`] (+ KV pool counters) into the stats JSON the
-/// `serve-smoke` CI job uploads.
-fn serve_stats_json(stats: &ServerStats) -> String {
-    let mut fields: Vec<(&str, Json)> = vec![
-        ("completed", num(stats.completed as f64)),
-        ("generated_tokens", num(stats.generated_tokens as f64)),
-        ("tokens_per_s", num(stats.tokens_per_s())),
-        ("wall_s", num(stats.wall_s)),
-        ("mean_latency_s", num(stats.mean_latency_s)),
-        ("p50_latency_s", num(stats.p50_latency_s)),
-        ("p95_latency_s", num(stats.p95_latency_s)),
-        ("mean_ttft_s", num(stats.mean_ttft_s)),
-        ("rejected", num(stats.rejections.len() as f64)),
-        ("rejected_with_capacity_free", num(stats.rejected_with_capacity_free as f64)),
-        ("deferred", num(stats.deferred as f64)),
-    ];
-    if let Some(kv) = &stats.kv {
-        fields.push((
-            "kv",
-            obj(vec![
-                ("total_pages", num(kv.total_pages as f64)),
-                ("page_size", num(kv.page_size as f64)),
-                ("pages_in_use", num(kv.pages_in_use as f64)),
-                ("peak_pages", num(kv.peak_pages as f64)),
-                ("allocated_total", num(kv.allocated_total as f64)),
-                ("cow_copies", num(kv.cow_copies as f64)),
-                ("prefix_hits", num(kv.prefix_hits as f64)),
-                ("prefix_hit_tokens", num(kv.prefix_hit_tokens as f64)),
-                ("evictions", num(kv.evictions as f64)),
-            ]),
-        ));
-    }
-    obj(fields).dump()
-}
-
 /// `serve --http ADDR`: stand the model up behind the streaming HTTP
 /// gateway and block until a drain (`POST /admin/drain` or SIGTERM-less
 /// environments just kill the process). Exits non-zero if the drained
@@ -484,7 +458,13 @@ fn serve_http(args: &Args, addr: &str) -> Result<()> {
         args.get_usize("batch", defaults::MAX_BATCH),
         addr
     );
-    let ctl = stbllm::net::GatewayCtl::new();
+    // --no-obs: a disabled registry turns every counter/histogram into a
+    // no-op — the A/B baseline for the recording-overhead benchmark
+    let ctl = if args.flag("no-obs") {
+        stbllm::net::GatewayCtl::with_registry(std::sync::Arc::new(Registry::disabled()))
+    } else {
+        stbllm::net::GatewayCtl::new()
+    };
     let report = engine.serve_http(opts, &ctl)?;
     println!("drain report: {}", report.to_json().dump());
     if report.leaked_pages != 0 {
@@ -513,10 +493,12 @@ fn loadgen(args: &Args) -> Result<()> {
             shared_prompt: true,
             drain: false,
             out: None,
+            metrics_check: false,
         }
     };
     opts.drain = args.flag("drain");
     opts.out = args.get("out").map(std::path::PathBuf::from);
+    opts.metrics_check = args.flag("metrics-check");
 
     let rep = stbllm::report::loadgen::run_loadgen(&opts)?;
     println!(

@@ -35,6 +35,7 @@ use crate::coordinator::server::{BatchServer, Queued, Request, ServeError};
 use crate::engine::Backend;
 use crate::net::gateway::GatewayCtl;
 use crate::net::stats::StopReason;
+use crate::obs::TraceSummary;
 
 /// A generation request entering the bridge, with its event channel.
 pub struct StreamRequest {
@@ -72,6 +73,8 @@ pub struct DoneInfo {
     pub latency_s: f64,
     /// Why the stream stopped.
     pub stopped: StopReason,
+    /// Per-stage breakdown of the request's life (enqueue → retirement).
+    pub trace: TraceSummary,
 }
 
 /// Decode-side configuration of the bridge worker.
@@ -124,7 +127,10 @@ pub fn run_bridge(
     rx: &mpsc::Receiver<StreamRequest>,
     ctl: &GatewayCtl,
 ) -> Result<()> {
-    let mut server = BatchServer::new(backend, opts.max_batch.max(1));
+    // the gateway's registry backs the server's stage histograms and the
+    // pool's counter mirror, so `GET /metrics` sees all three layers
+    let mut server =
+        BatchServer::new(backend, opts.max_batch.max(1)).with_registry(ctl.registry());
     server.hol_boost_deferrals = opts.hol_boost_deferrals;
     if let Some(pool) = &opts.pool {
         server = server.with_pool(pool.clone());
@@ -162,28 +168,29 @@ pub fn run_bridge(
 
         let now = Instant::now();
 
-        // 2. queued requests whose deadline already passed never start
-        let expired_ids: Vec<u64> = queue
-            .iter()
-            .filter(|q| {
-                meta.get(&q.req.id)
-                    .and_then(|m| m.deadline)
-                    .is_some_and(|d| now >= d)
-            })
-            .map(|q| q.req.id)
-            .collect();
-        if !expired_ids.is_empty() {
-            queue.retain(|q| !expired_ids.contains(&q.req.id));
-            for id in expired_ids {
-                if let Some(m) = meta.remove(&id) {
+        // 2. queued requests whose deadline already passed never start;
+        //    their spans close with pure queue-wait traces
+        let any_expired = queue.iter().any(|q| {
+            meta.get(&q.req.id).and_then(|m| m.deadline).is_some_and(|d| now >= d)
+        });
+        if any_expired {
+            for q in std::mem::take(&mut queue) {
+                let expired =
+                    meta.get(&q.req.id).and_then(|m| m.deadline).is_some_and(|d| now >= d);
+                if !expired {
+                    queue.push_back(q);
+                    continue;
+                }
+                if let Some(m) = meta.remove(&q.req.id) {
                     let _ = m.tx.send(StreamEvent::Done(DoneInfo {
                         generated: 0,
                         ttft_s: 0.0,
                         latency_s: 0.0,
                         stopped: StopReason::Deadline,
+                        trace: q.span.finish(now),
                     }));
                 }
-                ctl.with_stats(|s| s.deadline_expired += 1);
+                ctl.stats().deadline_expired.inc();
             }
         }
 
@@ -191,10 +198,8 @@ pub fn run_bridge(
         //    head-of-line aging)
         let up = server.top_up(&mut queue, &mut active)?;
         if up.deferred_events > 0 || !up.rejected.is_empty() {
-            ctl.with_stats(|s| {
-                s.deferred += up.deferred_events;
-                s.rejected += up.rejected.len();
-            });
+            ctl.stats().deferred.add(up.deferred_events as u64);
+            ctl.stats().rejected.add(up.rejected.len() as u64);
         }
         for e in up.rejected {
             let ServeError::RequestTooLarge { id, .. } = &e;
@@ -237,9 +242,10 @@ pub fn run_bridge(
                     ttft_s: a.first_token.unwrap_or(lat),
                     latency_s: lat,
                     stopped: StopReason::Deadline,
+                    trace: a.finish_span(Instant::now()),
                 }));
             }
-            ctl.with_stats(|s| s.deadline_expired += 1);
+            ctl.stats().deadline_expired.inc();
         }
         if active.is_empty() {
             continue;
@@ -254,7 +260,7 @@ pub fn run_bridge(
         tick_no += 1;
         let t = server.tick(&mut active)?;
         if !t.emitted.is_empty() {
-            ctl.with_stats(|s| s.generated_tokens += t.emitted.len());
+            ctl.stats().generated_tokens.add(t.emitted.len() as u64);
         }
         let mut removals: BTreeMap<usize, bool> = BTreeMap::new(); // slot -> deliver Done
         for &f in &t.finished {
@@ -277,7 +283,8 @@ pub fn run_bridge(
             let a = active.swap_remove(slot);
             let m = meta.remove(&a.req.id);
             if deliver {
-                let lat = a.submitted.elapsed().as_secs_f64();
+                let now2 = Instant::now();
+                let lat = now2.duration_since(a.submitted).as_secs_f64();
                 let ttft = a.first_token.unwrap_or(lat);
                 if let Some(m) = m {
                     let _ = m.tx.send(StreamEvent::Done(DoneInfo {
@@ -285,14 +292,13 @@ pub fn run_bridge(
                         ttft_s: ttft,
                         latency_s: lat,
                         stopped: StopReason::Completed,
+                        trace: a.finish_span(now2),
                     }));
                 }
-                ctl.with_stats(|s| {
-                    s.completed += 1;
-                    s.record_finished(ttft, lat);
-                });
+                ctl.stats().completed.inc();
+                ctl.stats().record_finished(ttft, lat);
             } else {
-                ctl.with_stats(|s| s.cancelled += 1);
+                ctl.stats().cancelled.inc();
             }
         }
         ctl.set_gauges(active.len(), queue.len());
@@ -312,7 +318,8 @@ fn enqueue(
     *next_id += 1;
     meta.insert(id, Meta { tx: sr.tx, deadline: sr.deadline });
     queue.push_back(Queued::new(Request { id, prompt: sr.prompt, max_new: sr.max_new.max(1) }));
-    ctl.with_stats(|s| s.streams_started += 1);
+    ctl.stats().streams_started.inc();
+    ctl.stats().queued_g.add(1);
     ctl.queued_gauge().fetch_add(1, Ordering::Relaxed);
 }
 
@@ -402,12 +409,28 @@ mod tests {
             assert_eq!(d.stopped, StopReason::Completed);
             assert_eq!(d.generated, toks.len());
             assert!(d.latency_s >= d.ttft_s);
+            // every done-event carries a closed span obeying the
+            // conservative stage-accounting invariant
+            assert!(d.trace.stages_within_total(0.5), "bad trace: {:?}", d.trace);
+            assert!(d.trace.decode_ms > 0.0, "decode stage empty: {:?}", d.trace);
+            assert!(d.trace.ticks >= 1);
         }
         drop(tx);
         handle.join().unwrap().unwrap();
-        let s = ctl.stats_snapshot(|s| (s.completed, s.generated_tokens));
-        assert_eq!(s.0, 3);
-        assert_eq!(s.1, 12);
+        assert_eq!(ctl.stats().completed.get(), 3);
+        assert_eq!(ctl.stats().generated_tokens.get(), 12);
+        // the bridge's batch server shares the gateway registry: the
+        // per-stage histograms must be populated in the exposition
+        let text = ctl.registry().render_prometheus();
+        for h in ["queue", "prefill", "decode", "kernel"] {
+            let needle = format!("stbllm_server_{h}_seconds_count");
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(&needle))
+                .unwrap_or_else(|| panic!("missing {needle} in:\n{text}"));
+            let n: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n > 0.0, "empty stage histogram: {line}");
+        }
     }
 
     /// Dropping a stream's receiver mid-generation must retire the session
@@ -459,7 +482,7 @@ mod tests {
         }
         drop(tx);
         handle.join().unwrap().unwrap();
-        assert_eq!(ctl.stats_snapshot(|s| s.cancelled), 1);
+        assert_eq!(ctl.stats().cancelled.get(), 1);
         assert_eq!(pool.stats().pages_reserved, 0, "drain must leave zero reserved pages");
     }
 
@@ -489,7 +512,7 @@ mod tests {
         assert!(toks.len() < 8, "an expired deadline cannot deliver the full request");
         drop(tx);
         handle.join().unwrap().unwrap();
-        assert_eq!(ctl.stats_snapshot(|s| s.deadline_expired), 1);
+        assert_eq!(ctl.stats().deadline_expired.get(), 1);
         assert_eq!(pool.stats().pages_reserved, 0);
     }
 
@@ -523,11 +546,11 @@ mod tests {
         assert!(done.is_none(), "victim stream must end by disconnect, not Done");
         // the supervisor must have counted and restarted
         let t0 = Instant::now();
-        while ctl.stats_snapshot(|s| s.bridge_restarts) == 0 {
+        while ctl.stats().bridge_restarts.get() == 0 {
             assert!(t0.elapsed() < Duration::from_secs(30), "bridge was not restarted");
             std::thread::sleep(Duration::from_millis(5));
         }
-        assert_eq!(ctl.stats_snapshot(|s| s.bridge_panics), 1);
+        assert_eq!(ctl.stats().bridge_panics.get(), 1);
         // the restarted bridge serves new work on the SAME channel
         let (etx2, erx2) = mpsc::channel();
         tx.send(StreamRequest { prompt: vec![4, 5], max_new: 3, deadline: None, tx: etx2 })
@@ -560,6 +583,6 @@ mod tests {
         }
         drop(tx);
         handle.join().unwrap().unwrap();
-        assert_eq!(ctl.stats_snapshot(|s| s.rejected), 1);
+        assert_eq!(ctl.stats().rejected.get(), 1);
     }
 }

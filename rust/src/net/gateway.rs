@@ -12,11 +12,18 @@
 //!   before any stream bytes; closing the connection mid-stream cancels
 //!   the request and releases its KV pages.
 //! * `GET /healthz` — liveness probe.
-//! * `GET /stats` — live [`GatewayStats`] + a current
-//!   [`KvPoolStats`] snapshot.
+//! * `GET /stats` — the schema-2 stats envelope:
+//!   `{"schema": 2, "gateway": {... counters, percentiles, "kv": {...}}}`.
+//! * `GET /metrics` — Prometheus text exposition of the gateway's
+//!   [`Registry`]: gateway counters, the bridge server's per-stage
+//!   latency histograms, and the KV pool mirror.
 //! * `POST /admin/drain` — stop accepting connections, finish in-flight
 //!   streams, then [`serve_http`] returns a [`GatewayReport`] whose
 //!   `leaked_pages` must be 0.
+//!
+//! Every `/generate` response carries a per-request trace: a `"trace"`
+//! object on the final done-event and an `x-stbllm-trace` chunked
+//! trailer with the same JSON (queue/prefill/decode/kernel breakdown).
 //!
 //! The gateway holds no decode state of its own: every generation request
 //! funnels into the single bridge worker, which runs the same
@@ -40,6 +47,7 @@ use crate::net::http::{
 };
 use crate::net::listener::serve_connections;
 use crate::net::stats::GatewayStats;
+use crate::obs::{envelope, Registry};
 use crate::util::cli::defaults;
 use crate::util::json::{num, obj, s, Json};
 
@@ -58,7 +66,7 @@ pub struct GatewayCtl {
 #[derive(Default)]
 struct CtlInner {
     draining: AtomicBool,
-    stats: Mutex<GatewayStats>,
+    stats: GatewayStats,
     bound: Mutex<Option<SocketAddr>>,
     bound_cv: Condvar,
     active: AtomicUsize,
@@ -75,6 +83,18 @@ impl GatewayCtl {
         GatewayCtl::default()
     }
 
+    /// Control handle whose metrics live in `registry` — pass
+    /// `Registry::disabled()` to measure recording overhead (`serve
+    /// --no-obs`), or a shared registry to aggregate several gateways.
+    pub fn with_registry(registry: Arc<Registry>) -> GatewayCtl {
+        GatewayCtl {
+            inner: Arc::new(CtlInner {
+                stats: GatewayStats::new(registry),
+                ..CtlInner::default()
+            }),
+        }
+    }
+
     /// Begin graceful shutdown: the acceptor stops taking connections,
     /// in-flight streams run to completion, then [`serve_http`] returns.
     pub fn drain(&self) {
@@ -86,21 +106,23 @@ impl GatewayCtl {
         self.inner.draining.load(Ordering::SeqCst)
     }
 
-    /// Run `f` with the live stats locked (counter updates + snapshots).
-    pub fn with_stats<R>(&self, f: impl FnOnce(&mut GatewayStats) -> R) -> R {
-        let mut guard = self.inner.stats.lock().expect("gateway stats poisoned");
-        f(&mut guard)
+    /// The live stats handles (lock-free: bump or read counters directly).
+    pub fn stats(&self) -> &GatewayStats {
+        &self.inner.stats
     }
 
-    /// Read-only snapshot accessor.
-    pub fn stats_snapshot<R>(&self, f: impl FnOnce(&GatewayStats) -> R) -> R {
-        self.with_stats(|st| f(st))
+    /// The metrics registry backing this gateway (rendered by `/metrics`;
+    /// also wired into the bridge's batch server and the KV pool).
+    pub fn registry(&self) -> Arc<Registry> {
+        self.inner.stats.registry().clone()
     }
 
     /// Publish the in-flight gauges (bridge-internal).
     pub(crate) fn set_gauges(&self, active: usize, queued: usize) {
         self.inner.active.store(active, Ordering::Relaxed);
         self.inner.queued.store(queued, Ordering::Relaxed);
+        self.inner.stats.active_g.set(active as i64);
+        self.inner.stats.queued_g.set(queued as i64);
     }
 
     /// The queued-streams gauge (bridge-internal; bumped at enqueue so
@@ -170,7 +192,7 @@ impl GatewayCtl {
     /// Count a panicking connection handler; logged once per gateway so a
     /// panic loop cannot flood stderr.
     pub(crate) fn note_handler_panic(&self) {
-        self.with_stats(|st| st.handler_panics += 1);
+        self.inner.stats.handler_panics.inc();
         if !self.inner.panic_logged.swap(true, Ordering::Relaxed) {
             eprintln!(
                 "[gateway] a connection handler panicked; connection answered 500/closed \
@@ -179,11 +201,13 @@ impl GatewayCtl {
         }
     }
 
-    /// The `/stats` document: counters + gauges + a live KV snapshot.
+    /// The `/stats` document: the schema-2 envelope with the gateway
+    /// snapshot (counters + gauges + a live KV section) under `"gateway"`.
     pub fn stats_json(&self) -> Json {
         let kv = self.pool().map(|p| p.stats());
         let (active, queued) = self.gauges();
-        self.with_stats(|st| st.to_json(kv.as_ref(), active, queued))
+        let snap = self.inner.stats.snapshot(kv, active, queued);
+        envelope(&[&snap])
     }
 }
 
@@ -352,15 +376,16 @@ pub fn serve_http(
 
     let kv = pool.as_ref().map(|p| p.stats());
     let leaked_pages = kv.as_ref().map_or(0, |k| k.pages_reserved);
-    Ok(ctl.with_stats(|st| GatewayReport {
-        completed: st.completed,
-        cancelled: st.cancelled,
-        deadline_expired: st.deadline_expired,
-        rejected: st.rejected,
-        generated_tokens: st.generated_tokens,
-        kv: kv.clone(),
+    let st = ctl.stats();
+    Ok(GatewayReport {
+        completed: st.completed.get() as usize,
+        cancelled: st.cancelled.get() as usize,
+        deadline_expired: st.deadline_expired.get() as usize,
+        rejected: st.rejected.get() as usize,
+        generated_tokens: st.generated_tokens.get() as usize,
+        kv,
         leaked_pages,
-    }))
+    })
 }
 
 /// Max automatic bridge restarts before the gateway gives up and errors
@@ -385,12 +410,12 @@ pub(crate) fn supervise_bridge(
             Ok(r) => return r,
             Err(_) => {
                 ctl.set_gauges(0, 0);
-                ctl.with_stats(|st| st.bridge_panics += 1);
+                ctl.stats().bridge_panics.inc();
                 if restarts >= MAX_BRIDGE_RESTARTS {
                     bail!("bridge worker panicked; {restarts} restarts exhausted");
                 }
                 restarts += 1;
-                ctl.with_stats(|st| st.bridge_restarts += 1);
+                ctl.stats().bridge_restarts.inc();
                 eprintln!(
                     "[gateway] bridge worker panicked; in-flight sessions retired, \
                      restarting ({restarts}/{MAX_BRIDGE_RESTARTS})"
@@ -423,7 +448,7 @@ fn handle_connection(mut stream: TcpStream, ctl: &GatewayCtl, hc: &HandlerCtx) {
         match HttpRequest::read_from(&mut stream) {
             Ok(None) => break, // peer closed between requests
             Ok(Some(req)) => {
-                ctl.with_stats(|st| st.http_requests += 1);
+                ctl.stats().http_requests.inc();
                 let keep = req.keep_alive() && !ctl.is_draining();
                 // a panic while serving one request must not take the
                 // worker down: answer 500, count it, close this connection
@@ -483,6 +508,16 @@ fn dispatch(
             let doc = ctl.stats_json().dump();
             write_response(stream, 200, "application/json", doc.as_bytes(), keep)
         }
+        ("GET", "/metrics") => {
+            let body = ctl.registry().render_prometheus();
+            write_response(
+                stream,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                body.as_bytes(),
+                keep,
+            )
+        }
         ("POST", "/admin/drain") => {
             ctl.drain();
             write_response(stream, 200, "application/json", b"{\"draining\":true}", false)
@@ -496,7 +531,7 @@ fn dispatch(
             if let Some(pool) = &hc.pool {
                 let kv = pool.stats();
                 if hc.shed_watermark > 0 && kv.free_pages() < hc.shed_watermark {
-                    ctl.with_stats(|st| st.shed += 1);
+                    ctl.stats().shed.inc();
                     return write_response_with(
                         stream,
                         503,
@@ -509,7 +544,7 @@ fn dispatch(
             }
             handle_generate(stream, req, keep, hc)
         }
-        (_, "/healthz" | "/stats" | "/admin/drain" | "/generate") => {
+        (_, "/healthz" | "/stats" | "/metrics" | "/admin/drain" | "/generate") => {
             write_response(stream, 405, "text/plain", b"method not allowed", keep)
         }
         _ => write_response(stream, 404, "text/plain", b"not found", keep),
@@ -609,17 +644,22 @@ fn handle_generate(
     let content_type = if sse { "text/event-stream" } else { "application/json" };
     let mut cw = ChunkedWriter::start(stream, 200, content_type, keep)?;
     let mut ev = first;
+    let mut trace: Option<String> = None;
     loop {
         let line = match &ev {
             StreamEvent::Token(t) => format!("{{\"t\":{t}}}"),
-            StreamEvent::Done(d) => obj(vec![
-                ("done", Json::Bool(true)),
-                ("generated", num(d.generated as f64)),
-                ("ttft_s", num(d.ttft_s)),
-                ("latency_s", num(d.latency_s)),
-                ("stopped", s(d.stopped.label())),
-            ])
-            .dump(),
+            StreamEvent::Done(d) => {
+                trace = Some(d.trace.header_value());
+                obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("generated", num(d.generated as f64)),
+                    ("ttft_s", num(d.ttft_s)),
+                    ("latency_s", num(d.latency_s)),
+                    ("stopped", s(d.stopped.label())),
+                    ("trace", d.trace.to_json()),
+                ])
+                .dump()
+            }
             // a rejection is always the first event; unreachable here, but
             // surface it rather than hang if that invariant ever breaks
             StreamEvent::Rejected(msg) => obj(vec![("error", s(msg))]).dump(),
@@ -637,7 +677,12 @@ fn handle_generate(
             Err(_) => break, // bridge died mid-stream; terminate the chunks
         };
     }
-    cw.finish()
+    // the per-request trace rides again as a chunked trailer, so clients
+    // that skip the body (HEAD-ish probes, loadgen) still get the span
+    match &trace {
+        Some(t) => cw.finish_with_trailers(&[("x-stbllm-trace", t)]),
+        None => cw.finish(),
+    }
 }
 
 #[cfg(test)]
@@ -685,10 +730,15 @@ mod tests {
         assert!(ctl.is_draining());
         ctl.set_gauges(3, 7);
         assert_eq!(ctl.gauges(), (3, 7));
-        // stats JSON carries the gauges and stays parseable
+        // stats JSON is the schema-2 envelope; the gauges ride under
+        // "gateway" and mirror into the registry exposition
         let doc = Json::parse(&ctl.stats_json().dump()).unwrap();
-        assert_eq!(doc.get("active").unwrap().as_usize().unwrap(), 3);
-        assert_eq!(doc.get("queued").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(doc.get("schema").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(doc.path(&["gateway", "active"]).unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.path(&["gateway", "queued"]).unwrap().as_usize().unwrap(), 7);
+        let text = ctl.registry().render_prometheus();
+        assert!(text.contains("stbllm_gateway_active 3"), "{text}");
+        assert!(text.contains("stbllm_gateway_queued 7"), "{text}");
     }
 
     #[test]

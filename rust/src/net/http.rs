@@ -279,6 +279,17 @@ impl<'w, W: Write> ChunkedWriter<'w, W> {
         self.w.write_all(b"0\r\n\r\n")?;
         self.w.flush()
     }
+
+    /// Terminate the stream with the zero-length chunk followed by
+    /// trailer headers (e.g. the `x-stbllm-trace` per-request span).
+    pub fn finish_with_trailers(self, trailers: &[(&str, &str)]) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n")?;
+        for (name, value) in trailers {
+            write!(self.w, "{name}: {value}\r\n")?;
+        }
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
 }
 
 /// Status line + headers of a response, as read by the client helpers.
@@ -357,6 +368,7 @@ pub struct BodyReader {
     chunked: bool,
     remaining_fixed: usize,
     done: bool,
+    trailers: Vec<(String, String)>,
 }
 
 impl BodyReader {
@@ -366,7 +378,20 @@ impl BodyReader {
             chunked: head.chunked(),
             remaining_fixed: head.content_length().unwrap_or(0),
             done: false,
+            trailers: Vec::new(),
         }
+    }
+
+    /// Trailer headers read after the terminating chunk (empty until the
+    /// body has been fully consumed; names lowercased).
+    pub fn trailers(&self) -> &[(String, String)] {
+        &self.trailers
+    }
+
+    /// First trailer value for `name` (case-insensitive).
+    pub fn trailer(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.trailers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
     }
 
     /// Next piece of the body: one chunk payload (chunked) or the whole
@@ -409,9 +434,18 @@ impl BodyReader {
         let size = usize::from_str_radix(size_txt.split(';').next().unwrap_or(""), 16)
             .map_err(|_| HttpError::BadRequest(format!("bad chunk size {size_txt:?}")))?;
         if size == 0 {
-            // terminator: consume the trailing CRLF
-            let mut crlf = [0u8; 2];
-            r.read_exact(&mut crlf).map_err(HttpError::Io)?;
+            // terminator: zero or more trailer lines, then an empty line
+            let mut budget = MAX_HEAD_BYTES;
+            loop {
+                let line = read_crlf_line(r, &mut budget)?;
+                if line.is_empty() {
+                    break;
+                }
+                if let Some((name, value)) = line.split_once(':') {
+                    self.trailers
+                        .push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+                }
+            }
             self.done = true;
             return Ok(None);
         }
@@ -431,6 +465,33 @@ impl BodyReader {
             out.extend_from_slice(&piece);
         }
         Ok(out)
+    }
+}
+
+/// Read one CRLF-terminated line (returned without the CRLF), debiting
+/// `budget` per byte so a malicious trailer section cannot balloon memory.
+fn read_crlf_line<R: Read>(r: &mut R, budget: &mut usize) -> Result<String, HttpError> {
+    let mut line: Vec<u8> = Vec::with_capacity(32);
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => return Err(HttpError::BadRequest("eof in chunk trailers".into())),
+            Ok(_) => {
+                if *budget == 0 {
+                    return Err(HttpError::TooLarge("chunk trailers"));
+                }
+                *budget -= 1;
+                line.push(byte[0]);
+                if line.ends_with(b"\r\n") {
+                    line.truncate(line.len() - 2);
+                    let text = std::str::from_utf8(&line)
+                        .map_err(|_| HttpError::BadRequest("non-utf8 trailer line".into()))?;
+                    return Ok(text.to_string());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(HttpError::Io(e)),
+        }
     }
 }
 
@@ -543,6 +604,31 @@ mod tests {
         assert_eq!(br.next_piece(&mut cur).unwrap().unwrap(), b"{\"done\":true}\n");
         assert!(br.next_piece(&mut cur).unwrap().is_none());
         assert!(br.next_piece(&mut cur).unwrap().is_none(), "stays done");
+        assert!(br.trailers().is_empty(), "plain finish has no trailers");
+    }
+
+    #[test]
+    fn chunked_trailers_roundtrip() {
+        let mut wire = Vec::new();
+        {
+            let mut cw = ChunkedWriter::start(&mut wire, 200, "application/json", true).unwrap();
+            cw.chunk(b"{\"t\":1}\n").unwrap();
+            cw.finish_with_trailers(&[
+                ("x-stbllm-trace", "{\"total_ms\":1.5}"),
+                ("X-Other", "v"),
+            ])
+            .unwrap();
+        }
+        let mut cur = Cursor::new(&wire[..]);
+        let head = read_response_head(&mut cur).unwrap();
+        let mut br = BodyReader::new(&head);
+        assert_eq!(br.read_all(&mut cur).unwrap(), b"{\"t\":1}\n");
+        assert_eq!(br.trailer("x-stbllm-trace"), Some("{\"total_ms\":1.5}"));
+        assert_eq!(br.trailer("X-STBLLM-TRACE"), Some("{\"total_ms\":1.5}"));
+        assert_eq!(br.trailer("x-other"), Some("v"));
+        assert_eq!(br.trailers().len(), 2);
+        // the connection stays framed: nothing left to read
+        assert_eq!(cur.position() as usize, wire.len());
     }
 
     #[test]

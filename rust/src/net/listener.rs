@@ -58,7 +58,7 @@ fn accept_loop(
     while !ctl.is_draining() {
         match listener.accept() {
             Ok((stream, _peer)) => {
-                ctl.with_stats(|s| s.connections += 1);
+                ctl.stats().connections.inc();
                 if tx.send(stream).is_err() {
                     break; // workers gone — nothing left to hand off to
                 }
@@ -132,7 +132,7 @@ mod tests {
             ctl.drain();
             server.join().unwrap();
         });
-        assert_eq!(ctl.stats_snapshot(|s| s.connections), 5);
+        assert_eq!(ctl.stats().connections.get(), 5);
     }
 
     /// A handler panic must not kill the worker pool: the panic is counted
@@ -169,6 +169,6 @@ mod tests {
             ctl.drain();
             server.join().unwrap();
         });
-        assert_eq!(ctl.stats_snapshot(|s| s.handler_panics), 1);
+        assert_eq!(ctl.stats().handler_panics.get(), 1);
     }
 }

@@ -12,12 +12,15 @@
 //!   `BatchServer` scheduling kernel and streams tokens back per tick,
 //!   with deadlines, disconnect cancellation, and graceful drain.
 //! * [`gateway`] — endpoints (`/generate`, `/healthz`, `/stats`,
-//!   `/admin/drain`), connection handling, load shedding (503 +
-//!   `Retry-After` when the KV pool nears exhaustion), the bridge panic
-//!   supervisor, and [`serve_http`] tying it all together.
-//! * [`stats`] — live [`GatewayStats`] counters (including the fault
-//!   counters: `shed`, `handler_panics`, `bridge_panics`,
-//!   `bridge_restarts`) and their JSON form.
+//!   `/metrics`, `/admin/drain`), connection handling, load shedding
+//!   (503 + `Retry-After` when the KV pool nears exhaustion), the bridge
+//!   panic supervisor, and [`serve_http`] tying it all together.
+//! * [`stats`] — registry-backed [`GatewayStats`] handles (including the
+//!   fault counters: `shed`, `handler_panics`, `bridge_panics`,
+//!   `bridge_restarts`) and the schema-2 `/stats` snapshot. The same
+//!   registry renders the `GET /metrics` Prometheus exposition, and every
+//!   `/generate` response carries a per-request trace (done-event
+//!   `"trace"` + `x-stbllm-trace` trailer).
 //!
 //! Entry points: `stbllm serve --http ADDR` (CLI), [`serve_http`]
 //! (library), [`bridge::serve_stream`] (in-process streaming without
@@ -31,4 +34,4 @@ pub mod stats;
 
 pub use bridge::{serve_stream, BridgeOpts, DoneInfo, StreamEvent, StreamRequest};
 pub use gateway::{serve_http, GatewayCtl, GatewayReport, HttpServeOpts, TickHook};
-pub use stats::{GatewayStats, StopReason};
+pub use stats::{GatewaySnapshot, GatewayStats, StopReason};

@@ -1,17 +1,22 @@
-//! Live gateway counters — what `GET /stats` serializes and what the
-//! final drain report aggregates.
+//! Gateway-side observability: registry-backed counters/gauges/histograms
+//! plus the schema-2 `/stats` snapshot.
 //!
-//! One [`GatewayStats`] lives behind a mutex shared by the HTTP workers
-//! (request/connection counters), the bridge worker (stream lifecycle,
-//! token counters, latency samples) and the `/stats` endpoint (snapshot).
-//! KV pool counters are NOT stored here — the endpoint snapshots the live
-//! [`KvPoolStats`] straight from the pool so the numbers are current, not
-//! end-of-run.
+//! [`GatewayStats`] used to be a mutex-guarded struct of plain `usize`
+//! fields; it is now a bundle of lock-free [`obs`](crate::obs) handles
+//! minted from the gateway's [`Registry`], so every bump is visible both
+//! to `GET /stats` (exact values via [`GatewayStats::snapshot`]) and to
+//! `GET /metrics` (Prometheus exposition via the shared registry). The
+//! ttft/latency sample vectors stay under a small mutex so `/stats` can
+//! report exact nearest-rank percentiles; the registry histograms carry
+//! the same samples at bucket granularity for Prometheus. KV pool counters
+//! are NOT stored here — the endpoint snapshots the live [`KvPoolStats`]
+//! straight from the pool so the numbers are current, not end-of-run.
 
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::coordinator::kvpool::KvPoolStats;
-use crate::coordinator::server::percentile;
+use crate::obs::{percentile, Counter, Gauge, Histogram, Registry, Snapshot};
 use crate::util::json::{num, obj, Json};
 
 /// Why a stream ended — reported in the final event of every stream and
@@ -35,102 +40,238 @@ impl StopReason {
     }
 }
 
-/// Counters for the HTTP gateway, accumulated across connections and
-/// streams. All derived rates are finite by construction (empty runs
-/// report zeros).
-#[derive(Debug)]
-pub struct GatewayStats {
-    /// Connections accepted by the listener.
-    pub connections: usize,
-    /// HTTP requests parsed (all endpoints).
-    pub http_requests: usize,
-    /// Generation streams admitted into the batch loop.
-    pub streams_started: usize,
-    /// Streams that ran to completion.
-    pub completed: usize,
-    /// Streams cancelled because the client disconnected mid-stream
-    /// (their KV pages were released back to the pool).
-    pub cancelled: usize,
-    /// Streams stopped by their deadline (partial output delivered).
-    pub deadline_expired: usize,
-    /// Requests refused at admission (can never fit the KV budget).
-    pub rejected: usize,
-    /// Admission backpressure events (deferred, later admitted).
-    pub deferred: usize,
-    /// New admits shed with `503 + Retry-After` because free KV pages were
-    /// below the load-shed watermark.
-    pub shed: usize,
-    /// Connection handlers that panicked (the connection got a 500 or was
-    /// dropped; the gateway kept serving).
-    pub handler_panics: usize,
-    /// Bridge decode-worker panics caught by the supervisor (each one
-    /// retired all in-flight sessions and released their KV pages).
-    pub bridge_panics: usize,
-    /// Bridge restarts performed by the supervisor after a panic.
-    pub bridge_restarts: usize,
-    /// Tokens generated across all streams.
-    pub generated_tokens: usize,
-    /// Seconds-to-first-token samples of completed streams.
+/// Latency samples kept for exact `/stats` percentiles.
+#[derive(Default)]
+struct Samples {
     ttfts: Vec<f64>,
-    /// End-to-end latency samples of completed streams.
     latencies: Vec<f64>,
+}
+
+/// Live gateway counters, registry-backed. Every field is a lock-free
+/// handle minted from the gateway's [`Registry`]; bumps are visible to
+/// clones of the handle and to the registry's `/metrics` exposition alike,
+/// with no lock on any hot path.
+pub struct GatewayStats {
+    registry: Arc<Registry>,
+    /// TCP connections accepted.
+    pub connections: Arc<Counter>,
+    /// HTTP requests parsed (all endpoints).
+    pub http_requests: Arc<Counter>,
+    /// Generation streams enqueued into the bridge.
+    pub streams_started: Arc<Counter>,
+    /// Streams that ran to completion.
+    pub completed: Arc<Counter>,
+    /// Streams cancelled by client disconnect.
+    pub cancelled: Arc<Counter>,
+    /// Streams stopped by their deadline.
+    pub deadline_expired: Arc<Counter>,
+    /// Requests refused at admission (can never fit).
+    pub rejected: Arc<Counter>,
+    /// Admission deferral events.
+    pub deferred: Arc<Counter>,
+    /// Requests shed at the KV free-page watermark.
+    pub shed: Arc<Counter>,
+    /// Connection handler panics answered with 500.
+    pub handler_panics: Arc<Counter>,
+    /// Bridge worker panics caught by the supervisor.
+    pub bridge_panics: Arc<Counter>,
+    /// Bridge worker restarts after a panic.
+    pub bridge_restarts: Arc<Counter>,
+    /// Tokens streamed to clients.
+    pub generated_tokens: Arc<Counter>,
+    /// Streams currently decoding.
+    pub active_g: Arc<Gauge>,
+    /// Streams waiting for admission.
+    pub queued_g: Arc<Gauge>,
+    /// Enqueue → first token, per finished stream.
+    pub ttft_h: Arc<Histogram>,
+    /// Enqueue → stream end, per finished stream.
+    pub latency_h: Arc<Histogram>,
+    samples: Mutex<Samples>,
     started: Instant,
 }
 
 impl Default for GatewayStats {
     fn default() -> GatewayStats {
-        GatewayStats {
-            connections: 0,
-            http_requests: 0,
-            streams_started: 0,
-            completed: 0,
-            cancelled: 0,
-            deadline_expired: 0,
-            rejected: 0,
-            deferred: 0,
-            shed: 0,
-            handler_panics: 0,
-            bridge_panics: 0,
-            bridge_restarts: 0,
-            generated_tokens: 0,
-            ttfts: Vec::new(),
-            latencies: Vec::new(),
-            started: Instant::now(),
-        }
+        GatewayStats::new(Arc::new(Registry::new()))
     }
 }
 
 impl GatewayStats {
-    /// Record a finished stream's latency samples.
-    pub fn record_finished(&mut self, ttft_s: f64, latency_s: f64) {
-        self.ttfts.push(ttft_s);
-        self.latencies.push(latency_s);
+    /// Mint the gateway's metric handles from `registry`.
+    pub fn new(registry: Arc<Registry>) -> GatewayStats {
+        let r = &registry;
+        GatewayStats {
+            connections: r.counter("stbllm_gateway_connections", "TCP connections accepted"),
+            http_requests: r.counter("stbllm_gateway_http_requests", "HTTP requests parsed"),
+            streams_started: r
+                .counter("stbllm_gateway_streams_started", "generation streams enqueued"),
+            completed: r.counter("stbllm_gateway_completed", "streams run to completion"),
+            cancelled: r
+                .counter("stbllm_gateway_cancelled", "streams cancelled by client disconnect"),
+            deadline_expired: r
+                .counter("stbllm_gateway_deadline_expired", "streams stopped by their deadline"),
+            rejected: r.counter("stbllm_gateway_rejected", "requests refused at admission"),
+            deferred: r.counter("stbllm_gateway_deferred", "admission deferral events"),
+            shed: r.counter("stbllm_gateway_shed", "requests shed at the KV free-page watermark"),
+            handler_panics: r
+                .counter("stbllm_gateway_handler_panics", "connection handler panics"),
+            bridge_panics: r.counter("stbllm_gateway_bridge_panics", "bridge worker panics"),
+            bridge_restarts: r
+                .counter("stbllm_gateway_bridge_restarts", "bridge restarts after a panic"),
+            generated_tokens: r
+                .counter("stbllm_gateway_generated_tokens", "tokens streamed to clients"),
+            active_g: r.gauge("stbllm_gateway_active", "streams currently decoding"),
+            queued_g: r.gauge("stbllm_gateway_queued", "streams waiting for admission"),
+            ttft_h: r.histogram("stbllm_gateway_ttft_seconds", "enqueue to first token"),
+            latency_h: r.histogram("stbllm_gateway_latency_seconds", "enqueue to stream end"),
+            samples: Mutex::new(Samples::default()),
+            started: Instant::now(),
+            registry,
+        }
     }
 
-    /// Wall-clock seconds since the gateway started.
+    /// The registry all handles were minted from (shared with the bridge's
+    /// batch server and the KV pool mirror; rendered by `GET /metrics`).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Record a finished stream's first-token and total latency, both in
+    /// the exact sample vectors (for `/stats` percentiles) and in the
+    /// registry histograms (for `/metrics`).
+    pub fn record_finished(&self, ttft_s: f64, latency_s: f64) {
+        self.ttft_h.record_secs(ttft_s);
+        self.latency_h.record_secs(latency_s);
+        let mut guard = self.samples.lock().unwrap_or_else(PoisonError::into_inner);
+        guard.ttfts.push(ttft_s);
+        guard.latencies.push(latency_s);
+    }
+
+    /// Seconds since the gateway started.
     pub fn uptime_s(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }
 
-    /// Aggregate decode throughput over the gateway's uptime; `0.0` when
-    /// nothing was generated (always finite).
+    /// Generated-token throughput over the gateway's lifetime.
     pub fn tokens_per_s(&self) -> f64 {
         let up = self.uptime_s();
-        if self.generated_tokens == 0 || up <= 0.0 {
-            return 0.0;
+        if up > 0.0 {
+            self.generated_tokens.get() as f64 / up
+        } else {
+            0.0
         }
-        self.generated_tokens as f64 / up
     }
 
-    /// Serialize the counters (+ a live [`KvPoolStats`] snapshot and the
-    /// current in-flight gauges) into the `/stats` JSON document.
-    pub fn to_json(&self, kv: Option<&KvPoolStats>, active: usize, queued: usize) -> Json {
-        let mut ttfts = self.ttfts.clone();
-        let mut lats = self.latencies.clone();
-        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let mut fields: Vec<(&str, Json)> = vec![
-            ("uptime_s", num(self.uptime_s())),
+    /// Freeze the live handles into a [`GatewaySnapshot`] (the `"gateway"`
+    /// section of the `/stats` envelope). `kv`, `active` and `queued` come
+    /// from the caller because they live outside this struct (the pool and
+    /// the bridge gauges).
+    pub fn snapshot(
+        &self,
+        kv: Option<KvPoolStats>,
+        active: usize,
+        queued: usize,
+    ) -> GatewaySnapshot {
+        let (ttft_p50, ttft_p95, lat_p50, lat_p95) = {
+            let mut guard = self.samples.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            guard
+                .latencies
+                .sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+            (
+                percentile(&guard.ttfts, 50.0),
+                percentile(&guard.ttfts, 95.0),
+                percentile(&guard.latencies, 50.0),
+                percentile(&guard.latencies, 95.0),
+            )
+        };
+        GatewaySnapshot {
+            uptime_s: self.uptime_s(),
+            connections: self.connections.get(),
+            http_requests: self.http_requests.get(),
+            streams_started: self.streams_started.get(),
+            completed: self.completed.get(),
+            cancelled: self.cancelled.get(),
+            deadline_expired: self.deadline_expired.get(),
+            rejected: self.rejected.get(),
+            deferred: self.deferred.get(),
+            shed: self.shed.get(),
+            handler_panics: self.handler_panics.get(),
+            bridge_panics: self.bridge_panics.get(),
+            bridge_restarts: self.bridge_restarts.get(),
+            active,
+            queued,
+            generated_tokens: self.generated_tokens.get(),
+            tokens_per_s: self.tokens_per_s(),
+            ttft_p50_s: ttft_p50,
+            ttft_p95_s: ttft_p95,
+            latency_p50_s: lat_p50,
+            latency_p95_s: lat_p95,
+            kv,
+        }
+    }
+}
+
+/// A frozen view of the gateway counters — the `"gateway"` section of the
+/// schema-2 `/stats` envelope. Field set and JSON key names match the
+/// pre-redesign flat document exactly (now nested one level down).
+#[derive(Clone, Debug)]
+pub struct GatewaySnapshot {
+    /// Seconds since the gateway started.
+    pub uptime_s: f64,
+    /// TCP connections accepted.
+    pub connections: u64,
+    /// HTTP requests parsed.
+    pub http_requests: u64,
+    /// Generation streams enqueued.
+    pub streams_started: u64,
+    /// Streams run to completion.
+    pub completed: u64,
+    /// Streams cancelled by disconnect.
+    pub cancelled: u64,
+    /// Streams stopped by deadline.
+    pub deadline_expired: u64,
+    /// Requests refused at admission.
+    pub rejected: u64,
+    /// Admission deferral events.
+    pub deferred: u64,
+    /// Requests load-shed at the watermark.
+    pub shed: u64,
+    /// Handler panics answered with 500.
+    pub handler_panics: u64,
+    /// Bridge panics caught by the supervisor.
+    pub bridge_panics: u64,
+    /// Bridge restarts after panics.
+    pub bridge_restarts: u64,
+    /// Streams currently decoding.
+    pub active: usize,
+    /// Streams waiting for admission.
+    pub queued: usize,
+    /// Tokens streamed to clients.
+    pub generated_tokens: u64,
+    /// Lifetime token throughput.
+    pub tokens_per_s: f64,
+    /// Exact nearest-rank p50 of first-token latency.
+    pub ttft_p50_s: f64,
+    /// Exact nearest-rank p95 of first-token latency.
+    pub ttft_p95_s: f64,
+    /// Exact nearest-rank p50 of stream latency.
+    pub latency_p50_s: f64,
+    /// Exact nearest-rank p95 of stream latency.
+    pub latency_p95_s: f64,
+    /// Live KV pool snapshot (`None` on flat serving).
+    pub kv: Option<KvPoolStats>,
+}
+
+impl Snapshot for GatewaySnapshot {
+    fn name(&self) -> &'static str {
+        "gateway"
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("uptime_s", num(self.uptime_s)),
             ("connections", num(self.connections as f64)),
             ("http_requests", num(self.http_requests as f64)),
             ("streams_started", num(self.streams_started as f64)),
@@ -143,82 +284,112 @@ impl GatewayStats {
             ("handler_panics", num(self.handler_panics as f64)),
             ("bridge_panics", num(self.bridge_panics as f64)),
             ("bridge_restarts", num(self.bridge_restarts as f64)),
-            ("active", num(active as f64)),
-            ("queued", num(queued as f64)),
+            ("active", num(self.active as f64)),
+            ("queued", num(self.queued as f64)),
             ("generated_tokens", num(self.generated_tokens as f64)),
-            ("tokens_per_s", num(self.tokens_per_s())),
-            ("ttft_p50_s", num(percentile(&ttfts, 50.0))),
-            ("ttft_p95_s", num(percentile(&ttfts, 95.0))),
-            ("latency_p50_s", num(percentile(&lats, 50.0))),
-            ("latency_p95_s", num(percentile(&lats, 95.0))),
+            ("tokens_per_s", num(self.tokens_per_s)),
+            ("ttft_p50_s", num(self.ttft_p50_s)),
+            ("ttft_p95_s", num(self.ttft_p95_s)),
+            ("latency_p50_s", num(self.latency_p50_s)),
+            ("latency_p95_s", num(self.latency_p95_s)),
         ];
-        if let Some(kv) = kv {
-            fields.push(("kv", kv_json(kv)));
+        if let Some(kv) = &self.kv {
+            fields.push(("kv", kv.to_json()));
         }
         obj(fields)
     }
 }
 
-/// Serialize a [`KvPoolStats`] snapshot (shared by `/stats` and the CLI's
-/// drain report).
+/// JSON form of a KV pool snapshot (used by the drain report as well as
+/// the `/stats` envelope) — delegates to the pool's [`Snapshot`] impl.
 pub fn kv_json(kv: &KvPoolStats) -> Json {
-    obj(vec![
-        ("total_pages", num(kv.total_pages as f64)),
-        ("page_size", num(kv.page_size as f64)),
-        ("pages_in_use", num(kv.pages_in_use as f64)),
-        ("pages_reserved", num(kv.pages_reserved as f64)),
-        ("peak_pages", num(kv.peak_pages as f64)),
-        ("allocated_total", num(kv.allocated_total as f64)),
-        ("cow_copies", num(kv.cow_copies as f64)),
-        ("prefix_hits", num(kv.prefix_hits as f64)),
-        ("prefix_hit_tokens", num(kv.prefix_hit_tokens as f64)),
-        ("evictions", num(kv.evictions as f64)),
-    ])
+    kv.to_json()
 }
 
 #[cfg(test)]
 mod tests {
     #![allow(clippy::unwrap_used)]
     use super::*;
+    use crate::obs::envelope;
+
+    fn finite(v: &Json, key: &str) -> f64 {
+        let f = v.get(key).and_then(Json::as_f64).unwrap_or_else(|| panic!("missing {key}"));
+        assert!(f.is_finite(), "{key} not finite: {f}");
+        f
+    }
 
     #[test]
     fn empty_stats_serialize_finite() {
-        let s = GatewayStats::default();
-        assert_eq!(s.tokens_per_s(), 0.0);
-        let j = s.to_json(None, 0, 0);
-        let parsed = Json::parse(&j.dump()).unwrap();
-        assert_eq!(parsed.get("completed").unwrap().as_f64().unwrap(), 0.0);
-        assert_eq!(parsed.get("ttft_p95_s").unwrap().as_f64().unwrap(), 0.0);
-        assert!(parsed.get("kv").is_none());
+        let st = GatewayStats::default();
+        let doc = Json::parse(&st.snapshot(None, 0, 0).to_json().dump()).unwrap();
+        for key in [
+            "uptime_s",
+            "connections",
+            "completed",
+            "generated_tokens",
+            "tokens_per_s",
+            "ttft_p50_s",
+            "latency_p95_s",
+        ] {
+            finite(&doc, key);
+        }
+        assert!(doc.get("kv").is_none());
     }
 
     #[test]
     fn fault_counters_serialize() {
-        let mut s = GatewayStats::default();
-        s.shed = 3;
-        s.handler_panics = 1;
-        s.bridge_panics = 2;
-        s.bridge_restarts = 2;
-        let j = s.to_json(None, 0, 0);
-        assert_eq!(j.get("shed").unwrap().as_f64().unwrap(), 3.0);
-        assert_eq!(j.get("handler_panics").unwrap().as_f64().unwrap(), 1.0);
-        assert_eq!(j.get("bridge_panics").unwrap().as_f64().unwrap(), 2.0);
-        assert_eq!(j.get("bridge_restarts").unwrap().as_f64().unwrap(), 2.0);
+        let st = GatewayStats::default();
+        st.shed.add(3);
+        st.handler_panics.add(2);
+        st.bridge_panics.inc();
+        st.bridge_restarts.inc();
+        let doc = st.snapshot(None, 0, 0).to_json();
+        assert_eq!(finite(&doc, "shed"), 3.0);
+        assert_eq!(finite(&doc, "handler_panics"), 2.0);
+        assert_eq!(finite(&doc, "bridge_panics"), 1.0);
+        assert_eq!(finite(&doc, "bridge_restarts"), 1.0);
     }
 
     #[test]
     fn latency_percentiles_appear_in_json() {
-        let mut s = GatewayStats::default();
+        let st = GatewayStats::default();
         for i in 1..=20 {
-            s.record_finished(i as f64 / 100.0, i as f64 / 10.0);
+            st.record_finished(i as f64 / 10.0, i as f64 / 10.0 + 0.05);
         }
-        s.completed = 20;
-        s.generated_tokens = 100;
-        let j = s.to_json(None, 2, 3);
-        assert_eq!(j.get("ttft_p50_s").unwrap().as_f64().unwrap(), 0.10);
-        assert_eq!(j.get("latency_p95_s").unwrap().as_f64().unwrap(), 1.9);
-        assert_eq!(j.get("active").unwrap().as_f64().unwrap(), 2.0);
-        assert_eq!(j.get("queued").unwrap().as_f64().unwrap(), 3.0);
+        let doc = st.snapshot(None, 2, 1).to_json();
+        assert_eq!(finite(&doc, "ttft_p50_s"), 1.0);
+        assert_eq!(finite(&doc, "ttft_p95_s"), 1.9);
+        assert!((finite(&doc, "latency_p50_s") - 1.05).abs() < 1e-9);
+        assert!((finite(&doc, "latency_p95_s") - 1.95).abs() < 1e-9);
+        assert_eq!(finite(&doc, "active"), 2.0);
+        assert_eq!(finite(&doc, "queued"), 1.0);
+        // the same samples land in the registry histograms for /metrics
+        assert_eq!(st.ttft_h.count(), 20);
+        assert_eq!(st.latency_h.count(), 20);
+    }
+
+    #[test]
+    fn snapshot_rides_in_the_schema2_envelope() {
+        let st = GatewayStats::default();
+        st.completed.add(4);
+        let snap = st.snapshot(None, 0, 0);
+        let doc = envelope(&[&snap]);
+        assert_eq!(doc.get("schema").and_then(Json::as_usize), Some(2));
+        assert_eq!(doc.path(&["gateway", "completed"]).and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn counters_mirror_into_the_prometheus_exposition() {
+        let st = GatewayStats::default();
+        st.connections.add(5);
+        st.generated_tokens.add(17);
+        st.active_g.set(2);
+        st.record_finished(0.1, 0.2);
+        let text = st.registry().render_prometheus();
+        assert!(text.contains("stbllm_gateway_connections_total 5"), "{text}");
+        assert!(text.contains("stbllm_gateway_generated_tokens_total 17"), "{text}");
+        assert!(text.contains("stbllm_gateway_active 2"), "{text}");
+        assert!(text.contains("stbllm_gateway_latency_seconds_count 1"), "{text}");
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Lock-free metric primitives: counters, gauges, log-scale histograms.
+//!
+//! Recording is a handful of `Relaxed` atomic operations — no locks, no
+//! allocation — so these can sit on the per-token decode path. Every
+//! handle carries an `on` flag fixed at mint time by its
+//! [`crate::obs::Registry`]: a handle from a disabled registry skips the
+//! atomics entirely, which is what makes the "no-op registry" baseline in
+//! the recording-overhead comparison honest.
+//!
+//! The histogram uses one bucket per bit position of a nanosecond value
+//! (64 buckets, ~2x resolution from 1 ns to centuries), so bucketing is a
+//! `leading_zeros` — no search, no configuration, and any duration fits:
+//! out-of-range values saturate into the last bucket instead of being
+//! dropped.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Number of logarithmic histogram buckets: one per bit position of a
+/// nanosecond value. Bucket 0 holds exact zeros; bucket `i` holds values
+/// in `[2^(i-1), 2^i)` ns; the last bucket also absorbs anything larger.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Monotonically increasing event count (requests, tokens, evictions).
+#[derive(Debug)]
+pub struct Counter {
+    v: AtomicU64,
+    on: bool,
+}
+
+impl Counter {
+    pub(crate) fn new(on: bool) -> Self {
+        Counter { v: AtomicU64::new(0), on }
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`. A handle minted by a disabled registry does nothing.
+    pub fn add(&self, n: u64) {
+        if self.on {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (active sessions, queued requests, pages in use).
+/// Signed so that a racy `sub` before `add` cannot wrap.
+#[derive(Debug)]
+pub struct Gauge {
+    v: AtomicI64,
+    on: bool,
+}
+
+impl Gauge {
+    pub(crate) fn new(on: bool) -> Self {
+        Gauge { v: AtomicI64::new(0), on }
+    }
+
+    /// Set the level outright.
+    pub fn set(&self, n: i64) {
+        if self.on {
+            self.v.store(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Raise the level by `n`.
+    pub fn add(&self, n: i64) {
+        if self.on {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Lower the level by `n`.
+    pub fn sub(&self, n: i64) {
+        if self.on {
+            self.v.fetch_sub(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current level.
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log2 latency histogram over nanoseconds.
+///
+/// Concurrent recording is loss-free: each sample is one `fetch_add` into
+/// its bucket plus two more for the running sum/count. Quantiles are
+/// nearest-rank at bucket granularity — the reported value is the
+/// inclusive upper bound of the bucket containing the ranked sample, so
+/// p50/p95/p99 are exact to within the ~2x bucket width and never
+/// interpolate between samples that were not observed.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum_nanos: AtomicU64,
+    total: AtomicU64,
+    on: bool,
+}
+
+impl Histogram {
+    pub(crate) fn new(on: bool) -> Self {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_nanos: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            on,
+        }
+    }
+
+    /// Bucket index for a nanosecond value: its bit length, capped so
+    /// out-of-range values saturate into the last bucket.
+    fn bucket_of(nanos: u64) -> usize {
+        ((64 - nanos.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i`, in seconds. The last bucket's
+    /// bound is the largest representable nanosecond value (it is the
+    /// saturation bucket).
+    pub fn bucket_upper_secs(i: usize) -> f64 {
+        let nanos = if i >= HIST_BUCKETS - 1 { u64::MAX } else { (1u64 << i) - 1 };
+        nanos as f64 * 1e-9
+    }
+
+    /// Record one sample of `nanos` nanoseconds.
+    pub fn record_nanos(&self, nanos: u64) {
+        if !self.on {
+            return;
+        }
+        self.counts[Self::bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one sample of `secs` seconds. Negative, NaN and infinite
+    /// inputs record as zero; durations beyond the u64-nanosecond range
+    /// saturate (`as` casts from float clamp) into the last bucket.
+    pub fn record_secs(&self, secs: f64) {
+        let nanos = if secs.is_finite() && secs > 0.0 { (secs * 1e9) as u64 } else { 0 };
+        self.record_nanos(nanos);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples, in seconds.
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Nearest-rank quantile (`p` in percent, e.g. 95.0) in seconds,
+    /// exact at bucket granularity. Returns 0.0 with no samples.
+    pub fn quantile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = (((p / 100.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Self::bucket_upper_secs(i);
+            }
+        }
+        Self::bucket_upper_secs(HIST_BUCKETS - 1)
+    }
+
+    /// Per-bucket `(upper_bound_secs, count)` pairs, trimmed to the
+    /// highest non-empty bucket (empty histogram renders no buckets).
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        let counts: Vec<u64> =
+            self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let last = match counts.iter().rposition(|&c| c > 0) {
+            Some(i) => i,
+            None => return Vec::new(),
+        };
+        counts[..=last]
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (Self::bucket_upper_secs(i), c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new(true);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new(true);
+        g.add(3);
+        g.sub(5);
+        assert_eq!(g.get(), -2); // signed: transient underflow can't wrap
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn disabled_handles_are_noops() {
+        let c = Counter::new(false);
+        c.inc();
+        assert_eq!(c.get(), 0);
+        let g = Gauge::new(false);
+        g.add(9);
+        assert_eq!(g.get(), 0);
+        let h = Histogram::new(false);
+        h.record_secs(0.5);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(50.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_zero_samples() {
+        let h = Histogram::new(true);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_secs(), 0.0);
+        assert_eq!(h.quantile(50.0), 0.0);
+        assert_eq!(h.quantile(99.0), 0.0);
+        assert!(h.buckets().is_empty());
+    }
+
+    #[test]
+    fn histogram_single_sample() {
+        let h = Histogram::new(true);
+        h.record_secs(1e-3); // 1ms = 1_000_000 ns, bit length 20
+        assert_eq!(h.count(), 1);
+        for p in [0.0, 50.0, 95.0, 99.0, 100.0] {
+            let q = h.quantile(p);
+            // every quantile of a single sample is that sample's bucket
+            // upper bound: within one bucket width (2x) of the sample
+            assert!(q >= 1e-3 && q <= 2e-3, "p{p} = {q}");
+        }
+        let b = h.buckets();
+        assert_eq!(b.last().map(|&(_, c)| c), Some(1));
+        assert_eq!(b.iter().map(|&(_, c)| c).sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn histogram_saturating_overflow() {
+        let h = Histogram::new(true);
+        h.record_secs(f64::MAX); // absurd duration: must clamp, not panic
+        h.record_nanos(u64::MAX);
+        assert_eq!(h.count(), 2);
+        let b = h.buckets();
+        assert_eq!(b.len(), HIST_BUCKETS); // landed in the last bucket
+        assert_eq!(b.last().map(|&(_, c)| c), Some(2));
+        let q = h.quantile(50.0);
+        assert!(q.is_finite() && q > 0.0);
+    }
+
+    #[test]
+    fn histogram_zero_and_negative_inputs_go_to_bucket_zero() {
+        let h = Histogram::new(true);
+        h.record_secs(0.0);
+        h.record_secs(-1.0);
+        h.record_secs(f64::NAN);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.buckets(), vec![(0.0, 3)]);
+        assert_eq!(h.quantile(99.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_nearest_rank_at_bucket_granularity() {
+        let h = Histogram::new(true);
+        // 90 fast samples (~1us) and 10 slow (~1s): p50 must report the
+        // fast bucket, p95/p99 the slow one
+        for _ in 0..90 {
+            h.record_secs(1e-6);
+        }
+        for _ in 0..10 {
+            h.record_secs(1.0);
+        }
+        assert!(h.quantile(50.0) < 1e-5);
+        assert!(h.quantile(95.0) >= 1.0);
+        assert!(h.quantile(99.0) >= 1.0);
+        assert!((h.sum_secs() - (90.0 * 1e-6 + 10.0)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn concurrent_recording_is_loss_free() {
+        const THREADS: usize = 4;
+        const PER_THREAD: u64 = 10_000;
+        let c = Counter::new(true);
+        let h = Histogram::new(true);
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let (c, h) = (&c, &h);
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        c.inc();
+                        // spread samples across several buckets
+                        h.record_nanos((t as u64 + 1) * 1000 + i % 7);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), THREADS as u64 * PER_THREAD);
+        assert_eq!(h.count(), THREADS as u64 * PER_THREAD);
+        let bucketed: u64 = h.buckets().iter().map(|&(_, n)| n).sum();
+        assert_eq!(bucketed, THREADS as u64 * PER_THREAD);
+    }
+}

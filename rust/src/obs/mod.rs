@@ -1,0 +1,36 @@
+//! Unified observability layer: metrics registry, trace spans, percentiles.
+//!
+//! Everything in here is dependency-free and cheap enough to leave on in
+//! production serving:
+//!
+//! - [`metrics`] — lock-free [`Counter`]/[`Gauge`] and a fixed-bucket
+//!   log-scale [`Histogram`] whose recording path is a couple of relaxed
+//!   atomic ops. Handles minted by a disabled registry skip even those,
+//!   so a no-op registry is genuinely free — that is the baseline the
+//!   `loadgen` overhead comparison measures against.
+//! - [`registry`] — a named-metric [`Registry`] (namespaced
+//!   `stbllm_<subsystem>_<metric>` handles) that renders Prometheus text
+//!   exposition for the gateway's `GET /metrics` endpoint.
+//! - [`trace`] — per-request [`TraceSpan`]s stamping queue-wait, prefill,
+//!   per-tick decode, packed-kernel time and KV page events, collapsed
+//!   into a [`TraceSummary`] that rides on every HTTP response.
+//! - [`percentile`] — the single nearest-rank percentile implementation
+//!   shared by server stats, gateway stats and the load generator.
+//! - [`snapshot`] — the [`Snapshot`] trait + versioned JSON [`envelope`]
+//!   behind the schema-2 `GET /stats` redesign.
+//!
+//! The registry is plumbed explicitly (each server/gateway owns an
+//! `Arc<Registry>`), keeping tests isolated; [`Registry::global`] exists
+//! for process-wide tools that don't carry one.
+
+pub mod metrics;
+pub mod percentile;
+pub mod registry;
+pub mod snapshot;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, Histogram, HIST_BUCKETS};
+pub use percentile::percentile;
+pub use registry::Registry;
+pub use snapshot::{envelope, Snapshot, STATS_SCHEMA_VERSION};
+pub use trace::{TraceSpan, TraceSummary};

@@ -1,0 +1,60 @@
+//! The one percentile implementation, shared by every stats surface.
+//!
+//! `ServerStats`, `GatewayStats`, `BenchStats` and the load generator all
+//! report latency percentiles; they used to disagree (nearest-rank here,
+//! `round((p/100)·(n-1))` interpolation there, NaN vs 0.0 on empty).
+//! This module pins ONE semantics — nearest-rank — and everything else
+//! delegates: `crate::coordinator::server::percentile` re-exports this
+//! function, and `BenchStats::percentile_s` calls it.
+
+/// Nearest-rank percentile of an ascending-sorted slice: the smallest
+/// value such that at least `p`% of the samples are ≤ it
+/// (rank = ⌈p/100 · n⌉, 1-based). Empty input yields 0.0 — the JSON
+/// sinks (`--stats-json`, `/stats`, BENCH_http.json) reject NaN/inf.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Sort a sample vector ascending (NaN-tolerant) and return it — the
+/// common prelude to [`percentile`] at every call site.
+pub fn sorted(mut samples: Vec<f64>) -> Vec<f64> {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    samples
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The shared pin for nearest-rank semantics. Every consumer
+    /// (`coordinator::server`, `net::stats`, `report::loadgen`,
+    /// `util::timer`) resolves to this implementation, so this is the one
+    /// place its contract is frozen.
+    #[test]
+    fn percentile_nearest_rank_pinned() {
+        // known vector 1..=20: p50 = 10 (rank ⌈0.5·20⌉ = 10), p95 = 19,
+        // p100 = 20, tiny p → min
+        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 10.0);
+        assert_eq!(percentile(&v, 95.0), 19.0);
+        assert_eq!(percentile(&v, 100.0), 20.0);
+        assert_eq!(percentile(&v, 1.0), 1.0);
+        // two samples: the median by nearest-rank is the FIRST, not the max
+        assert_eq!(percentile(&[1.0, 2.0], 50.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 95.0), 2.0);
+        // degenerate inputs
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[3.5], 95.0), 3.5);
+    }
+
+    #[test]
+    fn sorted_orders_ascending() {
+        assert_eq!(sorted(vec![3.0, 1.0, 2.0]), vec![1.0, 2.0, 3.0]);
+        assert!(sorted(Vec::new()).is_empty());
+    }
+}

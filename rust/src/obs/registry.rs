@@ -1,0 +1,205 @@
+//! Named-metric registry with Prometheus text exposition.
+//!
+//! Registration (`counter`/`gauge`/`histogram`) takes a short lock on a
+//! name→handle map and is meant to happen once, at wiring time; the
+//! returned `Arc` handles record lock-free forever after. Metric names
+//! follow `stbllm_<subsystem>_<metric>` (e.g. `stbllm_kv_evictions`,
+//! `stbllm_server_decode_seconds`); counters are registered WITHOUT the
+//! `_total` suffix — the renderer appends it per Prometheus convention —
+//! and histogram names end in `_seconds` (all histograms here record
+//! durations).
+//!
+//! A [`Registry::disabled`] registry mints no-op handles: every recording
+//! call compiles to a branch on a constant-false flag. `serve --no-obs`
+//! swaps one in so the recording overhead of the real registry can be
+//! measured as a tok/s delta between two otherwise identical runs.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+use crate::obs::metrics::{Counter, Gauge, Histogram};
+
+/// Process-scoped collection of named metrics.
+///
+/// Each gateway/server owns an `Arc<Registry>` (keeping tests isolated in
+/// one process); [`Registry::global`] is the fallback for tools that
+/// don't carry one.
+#[derive(Debug)]
+pub struct Registry {
+    on: bool,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
+    hists: BTreeMap<String, Arc<Histogram>>,
+    help: BTreeMap<String, String>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    /// An enabled registry: handles record, `render_prometheus` exposes.
+    pub fn new() -> Self {
+        Registry { on: true, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// A disabled registry: every minted handle is a no-op and the
+    /// exposition is empty. The baseline for overhead comparisons.
+    pub fn disabled() -> Self {
+        Registry { on: false, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Whether handles minted by this registry actually record.
+    pub fn is_enabled(&self) -> bool {
+        self.on
+    }
+
+    /// The process-wide registry, for call sites with no explicit one.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // registration-only lock; a poisoned map is still a valid map
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Get-or-create the counter `name` (no `_total` suffix — the
+    /// renderer appends it). Re-registration returns the same handle.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        debug_assert!(!name.ends_with("_total"), "register counters without _total: {name}");
+        let on = self.on;
+        let mut g = self.lock();
+        g.help.entry(name.to_string()).or_insert_with(|| help.to_string());
+        Arc::clone(g.counters.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new(on))))
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let on = self.on;
+        let mut g = self.lock();
+        g.help.entry(name.to_string()).or_insert_with(|| help.to_string());
+        Arc::clone(g.gauges.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new(on))))
+    }
+
+    /// Get-or-create the duration histogram `name` (by convention the
+    /// name ends in `_seconds`).
+    pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        let on = self.on;
+        let mut g = self.lock();
+        g.help.entry(name.to_string()).or_insert_with(|| help.to_string());
+        Arc::clone(g.hists.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(on))))
+    }
+
+    /// Render the whole registry as Prometheus text exposition (version
+    /// 0.0.4): `# HELP`/`# TYPE` preamble per metric, counters suffixed
+    /// `_total`, histograms as cumulative `_bucket{le=...}` series plus
+    /// `_sum`/`_count`. Deterministic order (name-sorted per kind).
+    pub fn render_prometheus(&self) -> String {
+        let g = self.lock();
+        let mut out = String::new();
+        for (name, c) in &g.counters {
+            let help = g.help.get(name).map(String::as_str).unwrap_or("");
+            out.push_str(&format!("# HELP {name}_total {help}\n"));
+            out.push_str(&format!("# TYPE {name}_total counter\n"));
+            out.push_str(&format!("{name}_total {}\n", c.get()));
+        }
+        for (name, gauge) in &g.gauges {
+            let help = g.help.get(name).map(String::as_str).unwrap_or("");
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} gauge\n"));
+            out.push_str(&format!("{name} {}\n", gauge.get()));
+        }
+        for (name, h) in &g.hists {
+            let help = g.help.get(name).map(String::as_str).unwrap_or("");
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (ub, count) in h.buckets() {
+                cum += count;
+                out.push_str(&format!("{name}_bucket{{le=\"{ub}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{name}_sum {}\n", h.sum_secs()));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent() {
+        let r = Registry::new();
+        let a = r.counter("stbllm_test_events", "events");
+        let b = r.counter("stbllm_test_events", "events");
+        assert!(Arc::ptr_eq(&a, &b));
+        a.inc();
+        assert_eq!(b.get(), 1); // same underlying atomic
+    }
+
+    #[test]
+    fn disabled_registry_mints_noop_handles() {
+        let r = Registry::disabled();
+        assert!(!r.is_enabled());
+        let c = r.counter("stbllm_test_events", "events");
+        c.add(10);
+        assert_eq!(c.get(), 0);
+        let h = r.histogram("stbllm_test_wait_seconds", "wait");
+        h.record_secs(1.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn renders_prometheus_exposition() {
+        let r = Registry::new();
+        r.counter("stbllm_test_events", "total events").add(3);
+        r.gauge("stbllm_test_level", "current level").set(-2);
+        let h = r.histogram("stbllm_test_wait_seconds", "wait time");
+        h.record_secs(1e-6);
+        h.record_secs(1e-3);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE stbllm_test_events_total counter\n"));
+        assert!(text.contains("stbllm_test_events_total 3\n"));
+        assert!(text.contains("# TYPE stbllm_test_level gauge\n"));
+        assert!(text.contains("stbllm_test_level -2\n"));
+        assert!(text.contains("# TYPE stbllm_test_wait_seconds histogram\n"));
+        assert!(text.contains("stbllm_test_wait_seconds_bucket{le=\"+Inf\"} 2\n"));
+        assert!(text.contains("stbllm_test_wait_seconds_count 2\n"));
+        // every non-comment line is `name[{labels}] value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut parts = line.rsplitn(2, ' ');
+            let val = parts.next().unwrap_or("");
+            assert!(val.parse::<f64>().is_ok(), "unparsable value in: {line}");
+            assert!(parts.next().is_some(), "no name in: {line}");
+        }
+        // cumulative bucket counts are non-decreasing and end at _count
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("stbllm_test_wait_seconds_bucket"))
+            .filter_map(|l| l.rsplit(' ').next())
+            .filter_map(|v| v.parse().ok())
+            .collect();
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(buckets.last(), Some(&2));
+    }
+
+    #[test]
+    fn global_registry_is_a_singleton() {
+        let a = Registry::global();
+        let b = Registry::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.is_enabled());
+    }
+}

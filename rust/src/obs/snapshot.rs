@@ -1,0 +1,60 @@
+//! The `Snapshot` trait and the versioned stats envelope (schema 2).
+//!
+//! The stats surfaces used to be five ad-hoc structs each hand-rolling
+//! its own JSON at its own top level. Schema 2 re-homes them behind one
+//! trait: a [`Snapshot`] names itself and serializes itself, and
+//! [`envelope`] assembles any set of snapshots into
+//! `{"schema": 2, "<name>": {...}, ...}`. `GET /stats`, `serve
+//! --stats-json` and the drain report all emit this envelope; `loadgen`,
+//! `chaos` and the smoke gates read it (`["gateway", "kv", ...]` paths
+//! instead of the old flat top level).
+
+use crate::util::json::{num, obj, Json};
+
+/// Version stamped into every stats envelope. Bump when the shape of any
+/// section changes incompatibly; readers assert on it.
+pub const STATS_SCHEMA_VERSION: usize = 2;
+
+/// A named, self-serializing view over observability state. Implemented
+/// by `ServerStats`, `GatewayStats` snapshots and `KvPoolStats`.
+pub trait Snapshot {
+    /// The envelope key this snapshot lives under (e.g. `"server"`).
+    fn name(&self) -> &'static str;
+    /// The snapshot body (old flat fields, preserved verbatim).
+    fn to_json(&self) -> Json;
+}
+
+/// Assemble snapshots into the versioned envelope:
+/// `{"schema": 2, "<name>": {...}, ...}`.
+pub fn envelope(parts: &[&dyn Snapshot]) -> Json {
+    let mut fields: Vec<(&str, Json)> = vec![("schema", num(STATS_SCHEMA_VERSION as f64))];
+    for p in parts {
+        fields.push((p.name(), p.to_json()));
+    }
+    obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Fake;
+    impl Snapshot for Fake {
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+        fn to_json(&self) -> Json {
+            obj(vec![("answer", num(42.0))])
+        }
+    }
+
+    #[test]
+    fn envelope_wraps_named_sections_under_schema_2() {
+        let doc = envelope(&[&Fake]);
+        assert_eq!(doc.get("schema").and_then(Json::as_usize), Some(STATS_SCHEMA_VERSION));
+        assert_eq!(doc.path(&["fake", "answer"]).and_then(Json::as_usize), Some(42));
+        // round-trips through the serializer
+        let parsed = Json::parse(&doc.dump()).expect("envelope serializes");
+        assert_eq!(parsed.get("schema").and_then(Json::as_usize), Some(2));
+    }
+}

@@ -1,0 +1,228 @@
+//! Per-request trace spans: where did this token stream spend its time?
+//!
+//! A [`TraceSpan`] is born when a request is enqueued and rides with it
+//! through the batch server: admission stamps queue-wait, every tick adds
+//! its wall time to the prefill or decode stage (whichever phase the
+//! session was in) and the packed-kernel share to `kernel`, the KV pool
+//! contributes page counts and prefix-cache reuse. At retirement the span
+//! collapses into a [`TraceSummary`] — a small `Copy` record that rides
+//! on [`crate::coordinator::server::Response`], on the gateway's
+//! streaming done-event (`"trace"`), and on the `x-stbllm-trace`
+//! response trailer.
+//!
+//! Stage accounting is conservative by construction: tick wall-times are
+//! disjoint intervals inside the span's lifetime, so
+//! `queue + prefill + decode ≤ total` always holds (the smoke gate
+//! asserts it per request).
+
+use std::time::Instant;
+
+use crate::util::json::{num, obj, Json};
+
+/// Accumulating per-request span. Owned by the batch server's queue/active
+/// entries; not thread-shared, so plain fields suffice.
+#[derive(Debug, Clone)]
+pub struct TraceSpan {
+    enqueued: Instant,
+    queue_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+    kernel_s: f64,
+    ttft_s: Option<f64>,
+    pages: usize,
+    prefix_hit_tokens: usize,
+    ticks: u32,
+}
+
+impl TraceSpan {
+    /// Open a span at enqueue time.
+    pub fn begin(now: Instant) -> Self {
+        TraceSpan {
+            enqueued: now,
+            queue_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            kernel_s: 0.0,
+            ttft_s: None,
+            pages: 0,
+            prefix_hit_tokens: 0,
+            ticks: 0,
+        }
+    }
+
+    /// Stamp admission: everything from enqueue until now was queue wait.
+    /// Returns the queue wait in seconds (for histogram recording).
+    pub fn admitted(&mut self, now: Instant) -> f64 {
+        self.queue_s = now.duration_since(self.enqueued).as_secs_f64();
+        self.queue_s
+    }
+
+    /// Add `dt_s` of tick wall time to the prefill stage.
+    pub fn add_prefill(&mut self, dt_s: f64) {
+        self.prefill_s += dt_s;
+        self.ticks += 1;
+    }
+
+    /// Add `dt_s` of tick wall time to the decode stage.
+    pub fn add_decode(&mut self, dt_s: f64) {
+        self.decode_s += dt_s;
+        self.ticks += 1;
+    }
+
+    /// Add `dt_s` of time spent inside the backend's batched kernel call
+    /// (the packed GEMV/GEMM itself, excluding scheduling and sampling).
+    pub fn add_kernel(&mut self, dt_s: f64) {
+        self.kernel_s += dt_s;
+    }
+
+    /// Stamp first-token time (from enqueue). Only the first call counts.
+    pub fn first_token(&mut self, now: Instant) {
+        if self.ttft_s.is_none() {
+            self.ttft_s = Some(now.duration_since(self.enqueued).as_secs_f64());
+        }
+    }
+
+    /// Record how many KV pages the request holds.
+    pub fn set_pages(&mut self, pages: usize) {
+        self.pages = pages;
+    }
+
+    /// Record prompt tokens served from the prefix cache instead of
+    /// being prefilled.
+    pub fn add_prefix_hit_tokens(&mut self, tokens: usize) {
+        self.prefix_hit_tokens += tokens;
+    }
+
+    /// Close the span and produce the summary that rides on the response.
+    pub fn finish(&self, now: Instant) -> TraceSummary {
+        let total_s = now.duration_since(self.enqueued).as_secs_f64();
+        TraceSummary {
+            total_ms: total_s * 1e3,
+            queue_ms: self.queue_s * 1e3,
+            prefill_ms: self.prefill_s * 1e3,
+            decode_ms: self.decode_s * 1e3,
+            kernel_ms: self.kernel_s * 1e3,
+            ttft_ms: self.ttft_s.unwrap_or(total_s) * 1e3,
+            pages: self.pages,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            ticks: self.ticks,
+        }
+    }
+}
+
+/// Closed span: the per-stage breakdown of one request, in milliseconds.
+/// `Copy` so it can ride inside channel events (`DoneInfo`) for free.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Enqueue → retirement wall time.
+    pub total_ms: f64,
+    /// Enqueue → admission (time spent waiting for batch/KV capacity).
+    pub queue_ms: f64,
+    /// Wall time of ticks spent prefilling the prompt.
+    pub prefill_ms: f64,
+    /// Wall time of ticks spent decoding new tokens.
+    pub decode_ms: f64,
+    /// Share of prefill+decode spent inside the backend kernel call.
+    pub kernel_ms: f64,
+    /// Enqueue → first emitted token.
+    pub ttft_ms: f64,
+    /// KV pages held at retirement.
+    pub pages: usize,
+    /// Prompt tokens served from the prefix cache.
+    pub prefix_hit_tokens: usize,
+    /// Number of scheduler ticks the request participated in.
+    pub ticks: u32,
+}
+
+impl TraceSummary {
+    /// JSON object used both in the stream's done-event (`"trace"` key)
+    /// and as the `x-stbllm-trace` trailer value.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("total_ms", num(self.total_ms)),
+            ("queue_ms", num(self.queue_ms)),
+            ("prefill_ms", num(self.prefill_ms)),
+            ("decode_ms", num(self.decode_ms)),
+            ("kernel_ms", num(self.kernel_ms)),
+            ("ttft_ms", num(self.ttft_ms)),
+            ("pages", num(self.pages as f64)),
+            ("prefix_hit_tokens", num(self.prefix_hit_tokens as f64)),
+            ("ticks", num(f64::from(self.ticks))),
+        ])
+    }
+
+    /// Compact single-line JSON for the `x-stbllm-trace` trailer.
+    pub fn header_value(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// The conservative-accounting invariant the smoke gate asserts:
+    /// stage times are disjoint sub-intervals of the span, so their sum
+    /// cannot exceed the total (modulo `eps_ms` of clock skew).
+    pub fn stages_within_total(&self, eps_ms: f64) -> bool {
+        self.queue_ms + self.prefill_ms + self.decode_ms <= self.total_ms + eps_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn span_stamps_queue_wait_and_stages() {
+        let t0 = Instant::now();
+        let mut span = TraceSpan::begin(t0);
+        std::thread::sleep(Duration::from_millis(5));
+        span.admitted(Instant::now());
+        span.add_prefill(0.001);
+        span.add_kernel(0.0008);
+        span.first_token(Instant::now());
+        span.add_decode(0.002);
+        span.add_kernel(0.0015);
+        let sum = span.finish(Instant::now());
+        assert!(sum.queue_ms >= 4.0, "queue wait lost: {}", sum.queue_ms);
+        assert!((sum.prefill_ms - 1.0).abs() < 1e-9);
+        assert!((sum.decode_ms - 2.0).abs() < 1e-9);
+        assert!((sum.kernel_ms - 2.3).abs() < 1e-9);
+        assert_eq!(sum.ticks, 2);
+        assert!(sum.total_ms >= sum.queue_ms);
+        assert!(sum.ttft_ms <= sum.total_ms);
+    }
+
+    #[test]
+    fn first_token_is_set_once() {
+        let t0 = Instant::now();
+        let mut span = TraceSpan::begin(t0);
+        std::thread::sleep(Duration::from_millis(2));
+        span.first_token(Instant::now());
+        let first = span.finish(Instant::now()).ttft_ms;
+        std::thread::sleep(Duration::from_millis(2));
+        span.first_token(Instant::now()); // must not move the stamp
+        let again = span.finish(Instant::now()).ttft_ms;
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn summary_json_shape_and_invariant() {
+        let sum = TraceSummary {
+            total_ms: 10.0,
+            queue_ms: 2.0,
+            prefill_ms: 3.0,
+            decode_ms: 4.0,
+            kernel_ms: 5.0,
+            ttft_ms: 6.0,
+            pages: 3,
+            prefix_hit_tokens: 8,
+            ticks: 7,
+        };
+        assert!(sum.stages_within_total(0.0)); // 2+3+4 <= 10
+        let j = sum.to_json();
+        assert_eq!(j.path(&["queue_ms"]).and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.path(&["pages"]).and_then(Json::as_usize), Some(3));
+        let parsed = Json::parse(&sum.header_value()).expect("trailer value parses");
+        assert_eq!(parsed.get("ticks").and_then(Json::as_usize), Some(7));
+        let busted = TraceSummary { queue_ms: 9.0, ..sum };
+        assert!(!busted.stages_within_total(0.5)); // 9+3+4 > 10.5
+    }
+}

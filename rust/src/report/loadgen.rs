@@ -4,12 +4,22 @@
 //! Drives N keep-alive connections against `POST /generate`, measuring
 //! time-to-first-token and end-to-end latency per request from the
 //! client's side of the socket (the numbers the serving trajectory in
-//! EXPERIMENTS.md tracks), then snapshots `GET /stats` for the server-side
-//! prefix-cache counters and writes `reports/BENCH_http.json`.
+//! EXPERIMENTS.md tracks), then snapshots `GET /stats` (schema-2
+//! envelope) for the server-side prefix-cache counters and writes
+//! `reports/BENCH_http.json`.
+//!
+//! With `--metrics-check` the run also scrapes `GET /metrics` before and
+//! after the workload and gates on the observability contract: the
+//! exposition parses, counters are monotone, the server-side token count
+//! matches the client-observed total, the per-stage histograms are
+//! populated, and every per-request trace obeys
+//! `queue + prefill + decode ≤ total`. The scraped exposition is saved
+//! next to the bench JSON as `metrics.prom`.
 //!
 //! Built on the same `net::http` client helpers the integration tests
 //! use — real sockets, no mocks.
 
+use std::collections::BTreeMap;
 use std::io::Write as _;
 use std::net::TcpStream;
 use std::path::PathBuf;
@@ -17,7 +27,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::server::percentile;
 use crate::net::http::{read_response_head, BodyReader};
@@ -43,6 +53,9 @@ pub struct LoadgenOpts {
     /// `POST /admin/drain` after the workload (the CI job uses this to
     /// shut the server down and collect its drain report).
     pub drain: bool,
+    /// Scrape `GET /metrics` before/after the run and gate on the
+    /// observability contract (see module docs); errors fail the run.
+    pub metrics_check: bool,
     /// Where to write `BENCH_http.json`; `None` = `reports/`.
     pub out: Option<PathBuf>,
 }
@@ -60,6 +73,7 @@ impl LoadgenOpts {
             max_new: 8,
             shared_prompt: true,
             drain: false,
+            metrics_check: false,
             out: None,
         }
     }
@@ -99,6 +113,8 @@ struct Sample {
     ttft_s: f64,
     latency_s: f64,
     tokens: usize,
+    /// Parsed `x-stbllm-trace` trailer (per-request span breakdown).
+    trace: Option<Json>,
 }
 
 /// Deterministic prompt for request index `i` (all-same when shared).
@@ -173,7 +189,8 @@ fn run_request(stream: &mut TcpStream, body: &str) -> Result<Attempt> {
         return Err(anyhow!("stream ended without a done event ({tokens} tokens in)"));
     }
     let latency_s = t0.elapsed().as_secs_f64();
-    Ok(Attempt::Done(Sample { ttft_s: ttft.unwrap_or(latency_s), latency_s, tokens }))
+    let trace = reader.trailer("x-stbllm-trace").and_then(|t| Json::parse(t).ok());
+    Ok(Attempt::Done(Sample { ttft_s: ttft.unwrap_or(latency_s), latency_s, tokens, trace }))
 }
 
 /// Max wire attempts per request (first try + shed retries).
@@ -217,10 +234,96 @@ fn simple_request(target: &str, method: &str, path: &str) -> Result<Vec<u8>> {
     Ok(body)
 }
 
+/// Parse a Prometheus text exposition into `series name → value`. The
+/// series name keeps its label part (`..._bucket{le="..."}`), so every
+/// sample line maps to a unique key. Errors on any malformed line — this
+/// is the `--metrics-check` "exposition parses" gate.
+fn parse_exposition(text: &str) -> Result<BTreeMap<String, f64>> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, value) =
+            line.rsplit_once(' ').ok_or_else(|| anyhow!("bad exposition line {line:?}"))?;
+        if name.is_empty() {
+            bail!("bad exposition line {line:?}");
+        }
+        let v: f64 =
+            value.parse().map_err(|_| anyhow!("bad value in exposition line {line:?}"))?;
+        out.insert(name.to_string(), v);
+    }
+    Ok(out)
+}
+
+/// The `--metrics-check` gates, run against the before/after scrapes and
+/// the per-request traces. Any violation is an error (CI fails the job).
+fn check_metrics(
+    before: &BTreeMap<String, f64>,
+    after: &BTreeMap<String, f64>,
+    samples: &[Sample],
+    client_tokens: usize,
+) -> Result<()> {
+    // counters (and histogram counts) never go backwards
+    for (name, b) in before {
+        if !(name.ends_with("_total") || name.ends_with("_count")) {
+            continue;
+        }
+        let a = after
+            .get(name)
+            .ok_or_else(|| anyhow!("counter {name} vanished between scrapes"))?;
+        if a < b {
+            bail!("counter {name} went backwards: {b} -> {a}");
+        }
+    }
+    // server-side token accounting matches what the clients saw
+    let tokens = "stbllm_gateway_generated_tokens_total";
+    let delta = after.get(tokens).copied().unwrap_or(0.0)
+        - before.get(tokens).copied().unwrap_or(0.0);
+    if delta != client_tokens as f64 {
+        bail!("{tokens} grew by {delta} but clients observed {client_tokens} tokens");
+    }
+    // the per-stage histograms actually saw the workload
+    for stage in ["queue", "prefill", "decode", "kernel"] {
+        let name = format!("stbllm_server_{stage}_seconds_count");
+        let n = after.get(&name).copied().unwrap_or(0.0);
+        if n <= 0.0 {
+            bail!("stage histogram {name} is empty after the workload");
+        }
+    }
+    // every stream carried a trace obeying conservative stage accounting
+    for (i, s) in samples.iter().enumerate() {
+        let t = s
+            .trace
+            .as_ref()
+            .ok_or_else(|| anyhow!("request {i}: no x-stbllm-trace trailer"))?;
+        let get = |k: &str| {
+            t.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("request {i}: trace missing {k}: {}", t.dump()))
+        };
+        let (total, queue, prefill, decode) =
+            (get("total_ms")?, get("queue_ms")?, get("prefill_ms")?, get("decode_ms")?);
+        if queue + prefill + decode > total + 0.5 {
+            bail!(
+                "request {i}: stages exceed total ({queue} + {prefill} + {decode} > {total})"
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Run the workload, snapshot `/stats`, write `BENCH_http.json`.
 pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     let connections = opts.connections.max(1);
     let requests = opts.requests.max(1);
+    let metrics_before = if opts.metrics_check {
+        let body = simple_request(&opts.target, "GET", "/metrics")
+            .context("pre-run /metrics scrape")?;
+        Some(parse_exposition(&String::from_utf8_lossy(&body)).context("pre-run exposition")?)
+    } else {
+        None
+    };
     let samples: Mutex<Vec<Sample>> = Mutex::new(Vec::with_capacity(requests));
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let retries = AtomicUsize::new(0);
@@ -295,21 +398,43 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     }
 
     // server-side counters AFTER the workload so prefix hits are visible
+    // (schema-2 envelope: kv counters nest under "gateway")
     let prefix_hits = match simple_request(&opts.target, "GET", "/stats") {
         Ok(body) => Json::parse(&String::from_utf8_lossy(&body))
             .ok()
-            .and_then(|j| j.path(&["kv", "prefix_hits"]).and_then(Json::as_usize))
+            .and_then(|j| j.path(&["gateway", "kv", "prefix_hits"]).and_then(Json::as_usize))
             .unwrap_or(0),
         Err(e) => {
             eprintln!("[loadgen] stats fetch failed: {e:#}");
             0
         }
     };
+    let generated_tokens: usize = samples.iter().map(|s| s.tokens).sum();
+    if let Some(before) = &metrics_before {
+        let raw = simple_request(&opts.target, "GET", "/metrics")
+            .context("post-run /metrics scrape")?;
+        let text = String::from_utf8_lossy(&raw).into_owned();
+        let after = parse_exposition(&text).context("post-run exposition")?;
+        check_metrics(before, &after, &samples, generated_tokens)?;
+        let prom_path = match &opts.out {
+            Some(p) => p.with_file_name("metrics.prom"),
+            None => crate::report::reports_dir().join("metrics.prom"),
+        };
+        if let Some(dir) = prom_path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&prom_path, &text)
+            .with_context(|| format!("write {}", prom_path.display()))?;
+        eprintln!(
+            "[loadgen] metrics check passed ({} series); exposition saved to {}",
+            after.len(),
+            prom_path.display()
+        );
+    }
     if opts.drain {
         simple_request(&opts.target, "POST", "/admin/drain").context("drain request")?;
     }
 
-    let generated_tokens: usize = samples.iter().map(|s| s.tokens).sum();
     let mut ttfts: Vec<f64> = samples.iter().map(|s| s.ttft_s).collect();
     let mut lats: Vec<f64> = samples.iter().map(|s| s.latency_s).collect();
     ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
@@ -359,6 +484,7 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         ("latency_p50_s", num(report.latency_p50_s)),
         ("latency_p95_s", num(report.latency_p95_s)),
         ("prefix_hits", num(prefix_hits as f64)),
+        ("metrics_check", Json::Bool(opts.metrics_check)),
     ]);
     std::fs::write(&json_path, doc.dump())
         .with_context(|| format!("write {}", json_path.display()))?;
@@ -400,5 +526,57 @@ mod tests {
         let doc = Json::parse(&body).unwrap();
         assert_eq!(doc.get("prompt").unwrap().as_arr().unwrap().len(), 10);
         assert_eq!(doc.get("max_new").unwrap().as_usize().unwrap(), 8);
+    }
+
+    #[test]
+    fn exposition_parser_accepts_real_lines_and_rejects_garbage() {
+        let text = "# HELP stbllm_x_total things\n# TYPE stbllm_x_total counter\n\
+                    stbllm_x_total 5\n\
+                    stbllm_h_seconds_bucket{le=\"0.001\"} 2\n\
+                    stbllm_h_seconds_sum 0.004\n\
+                    stbllm_h_seconds_count 2\n";
+        let m = parse_exposition(text).unwrap();
+        assert_eq!(m.get("stbllm_x_total"), Some(&5.0));
+        assert_eq!(m.get("stbllm_h_seconds_bucket{le=\"0.001\"}"), Some(&2.0));
+        assert_eq!(m.len(), 4);
+        assert!(parse_exposition("not a metric line").is_err());
+        assert!(parse_exposition("stbllm_x_total five").is_err());
+    }
+
+    fn sample_with_trace(total: f64, queue: f64, prefill: f64, decode: f64) -> Sample {
+        let trace = format!(
+            "{{\"total_ms\":{total},\"queue_ms\":{queue},\"prefill_ms\":{prefill},\"decode_ms\":{decode}}}"
+        );
+        Sample { ttft_s: 0.01, latency_s: 0.02, tokens: 4, trace: Json::parse(&trace).ok() }
+    }
+
+    #[test]
+    fn metrics_check_gates_fire() {
+        let mut before = BTreeMap::new();
+        before.insert("stbllm_gateway_generated_tokens_total".to_string(), 0.0);
+        let mut after = before.clone();
+        after.insert("stbllm_gateway_generated_tokens_total".to_string(), 4.0);
+        for stage in ["queue", "prefill", "decode", "kernel"] {
+            after.insert(format!("stbllm_server_{stage}_seconds_count"), 1.0);
+        }
+        let good = vec![sample_with_trace(10.0, 1.0, 2.0, 3.0)];
+        check_metrics(&before, &after, &good, 4).unwrap();
+
+        // token mismatch
+        assert!(check_metrics(&before, &after, &good, 5).is_err());
+        // counter regression
+        let mut shrunk = after.clone();
+        shrunk.insert("stbllm_gateway_generated_tokens_total".to_string(), -1.0);
+        assert!(check_metrics(&before, &shrunk, &good, 4).is_err());
+        // empty stage histogram
+        let mut hollow = after.clone();
+        hollow.insert("stbllm_server_decode_seconds_count".to_string(), 0.0);
+        assert!(check_metrics(&before, &hollow, &good, 4).is_err());
+        // stage times exceeding the total
+        let bad = vec![sample_with_trace(5.0, 4.0, 4.0, 4.0)];
+        assert!(check_metrics(&before, &after, &bad, 4).is_err());
+        // missing trace trailer
+        let untraced = vec![Sample { trace: None, ..sample_with_trace(1.0, 0.0, 0.0, 0.0) }];
+        assert!(check_metrics(&before, &after, &untraced, 4).is_err());
     }
 }

@@ -83,7 +83,7 @@ impl Args {
     }
 
     /// Boolean flags used across the stbllm CLI / examples / benches.
-    pub const COMMON_FLAGS: [&'static str; 12] = [
+    pub const COMMON_FLAGS: [&'static str; 14] = [
         "verbose",
         "fast",
         "full",
@@ -96,6 +96,8 @@ impl Args {
         "smoke",
         "flat-kv",
         "drain",
+        "metrics-check",
+        "no-obs",
     ];
 
     pub fn from_env() -> Args {

@@ -61,14 +61,15 @@ impl BenchStats {
         self.samples_s.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Nearest-rank percentile via the shared `obs::percentile`
+    /// implementation (`NaN` on an empty sample set, matching the old
+    /// bench behavior; the shared function itself returns `0.0`).
     pub fn percentile_s(&self, p: f64) -> f64 {
         if self.samples_s.is_empty() {
             return f64::NAN;
         }
-        let mut xs = self.samples_s.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (xs.len() - 1) as f64).round() as usize;
-        xs[idx.min(xs.len() - 1)]
+        let xs = crate::obs::percentile::sorted(self.samples_s.clone());
+        crate::obs::percentile(&xs, p)
     }
 
     /// Throughput in ops/sec given `work` per run.

@@ -93,10 +93,19 @@ fn post_generate(addr: SocketAddr, prompt: &[u8], max_new: usize) -> (Vec<u8>, J
     (tokens, done.expect("stream must end with a done event"))
 }
 
+/// `GET /stats`, asserting the schema-2 envelope and returning the
+/// `"gateway"` section (where all the serving fields live).
 fn stats(addr: SocketAddr) -> Json {
     let (status, bytes) = fetch(addr, "GET", "/stats", "");
     assert_eq!(status, 200);
-    Json::parse(&String::from_utf8_lossy(&bytes)).expect("stats json")
+    let doc = Json::parse(&String::from_utf8_lossy(&bytes)).expect("stats json");
+    assert_eq!(
+        doc.get("schema").and_then(Json::as_usize),
+        Some(2),
+        "/stats must be a schema-2 envelope: {}",
+        doc.dump()
+    );
+    doc.get("gateway").cloned().expect("envelope carries a gateway section")
 }
 
 /// Poll `/stats` until `pred` holds (the bridge retires asynchronously).
@@ -148,6 +157,76 @@ fn http_streams_match_batch_run_and_drain_is_leak_free() {
     assert_eq!(report.completed, 3);
     assert_eq!(report.generated_tokens, 12);
     assert_eq!(report.leaked_pages, 0, "drain leaked KV pages: {report:?}");
+}
+
+/// `/metrics` must render a Prometheus exposition with populated
+/// per-stage histograms, and each `/generate` response must carry a
+/// matching per-request trace: a `"trace"` object on the done event plus
+/// an identical `x-stbllm-trace` chunked trailer.
+#[test]
+fn metrics_exposition_and_trace_trailers() {
+    let (cfg, w) = tiny();
+    let gw = Gateway::start(&cfg, &w, 2);
+
+    // manual request so the chunked trailer stays observable
+    let mut s = TcpStream::connect(gw.addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    let body = generate_body(&[1, 2, 3], 4);
+    write!(
+        s,
+        "POST /generate HTTP/1.1\r\nhost: t\r\nconnection: close\r\ncontent-length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let head = read_response_head(&mut s).expect("head");
+    assert_eq!(head.status, 200);
+    let mut reader = BodyReader::new(&head);
+    let bytes = reader.read_all(&mut s).expect("stream body");
+    let done = String::from_utf8_lossy(&bytes)
+        .lines()
+        .map(|l| Json::parse(l).expect("stream line"))
+        .find(|d| d.get("t").is_none())
+        .expect("done event");
+
+    // the done event and the trailer carry the same trace
+    let trace = done.get("trace").expect("done event carries a trace").clone();
+    let trailer = reader.trailer("x-stbllm-trace").expect("x-stbllm-trace trailer");
+    assert_eq!(Json::parse(trailer).expect("trailer json"), trace);
+    let ms = |k: &str| trace.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("trace.{k}"));
+    let staged = ms("queue_ms") + ms("prefill_ms") + ms("decode_ms");
+    assert!(staged <= ms("total_ms") + 0.5, "stages exceed total: {}", trace.dump());
+    assert!(ms("decode_ms") > 0.0, "decode stage must be timed: {}", trace.dump());
+    assert!(trace.get("ticks").and_then(Json::as_usize) >= Some(1), "trace: {}", trace.dump());
+
+    // wait for retirement so the gateway-side histograms populate too
+    wait_for(gw.addr, "stream retired", |d| {
+        d.get("completed").and_then(Json::as_usize) == Some(1)
+    });
+
+    let (status, bytes) = fetch(gw.addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(bytes).expect("exposition is utf-8");
+    let value_of = |name: &str| -> f64 {
+        text.lines()
+            .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.strip_prefix(' ')))
+            .unwrap_or_else(|| panic!("missing {name} in exposition:\n{text}"))
+            .parse()
+            .expect("metric value")
+    };
+    for stage in ["queue", "prefill", "decode", "kernel"] {
+        assert!(
+            value_of(&format!("stbllm_server_{stage}_seconds_count")) >= 1.0,
+            "stage histogram {stage} must be populated:\n{text}"
+        );
+    }
+    assert_eq!(value_of("stbllm_gateway_completed_total"), 1.0);
+    assert_eq!(value_of("stbllm_gateway_generated_tokens_total"), 4.0);
+    assert!(value_of("stbllm_gateway_latency_seconds_count") >= 1.0);
+    assert!(text.contains("# TYPE stbllm_gateway_completed_total counter"));
+    assert!(text.contains("# TYPE stbllm_server_decode_seconds histogram"));
+
+    let report = gw.drain();
+    assert_eq!(report.leaked_pages, 0);
 }
 
 /// Closing the socket mid-stream must cancel the request and hand its KV
