@@ -118,6 +118,24 @@ impl KvPoolStats {
     pub fn free_pages(&self) -> usize {
         self.total_pages.saturating_sub(self.pages_reserved)
     }
+
+    /// Fold another pool's counters into this one — how the gateway
+    /// aggregates per-replica pools into ONE `"kv"` stats section. Every
+    /// counter sums; `page_size` keeps `self`'s value (replica slices are
+    /// built identically), so merging a single snapshot is the identity.
+    pub fn merge(&mut self, other: &KvPoolStats) {
+        self.total_pages += other.total_pages;
+        self.pages_in_use += other.pages_in_use;
+        self.pages_reserved += other.pages_reserved;
+        self.peak_pages += other.peak_pages;
+        self.allocated_total += other.allocated_total;
+        self.cow_copies += other.cow_copies;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_hit_partial += other.prefix_hit_partial;
+        self.prefix_hit_tokens += other.prefix_hit_tokens;
+        self.registered += other.registered;
+        self.evictions += other.evictions;
+    }
 }
 
 impl Snapshot for KvPoolStats {
@@ -161,17 +179,48 @@ struct KvMetrics {
 }
 
 impl KvMetrics {
-    fn new(reg: &Registry) -> KvMetrics {
+    fn new(reg: &Registry, labels: &str) -> KvMetrics {
         KvMetrics {
-            allocated: reg.counter("stbllm_kv_pages_allocated", "physical page allocations"),
-            cow: reg.counter("stbllm_kv_cow_copies", "copy-on-write page duplications"),
-            evictions: reg.counter("stbllm_kv_evictions", "cached pages evicted under pressure"),
-            prefix_hits: reg.counter("stbllm_kv_prefix_hits", "pages mapped from the prefix cache"),
-            prefix_hit_tokens: reg
-                .counter("stbllm_kv_prefix_hit_tokens", "prompt tokens served from cache"),
-            registered: reg.counter("stbllm_kv_prefix_registered", "pages registered for reuse"),
-            in_use: reg.gauge("stbllm_kv_pages_in_use", "physical pages live right now"),
-            reserved: reg.gauge("stbllm_kv_pages_reserved", "pages promised to live sessions"),
+            allocated: reg.counter_with(
+                "stbllm_kv_pages_allocated",
+                labels,
+                "physical page allocations",
+            ),
+            cow: reg.counter_with(
+                "stbllm_kv_cow_copies",
+                labels,
+                "copy-on-write page duplications",
+            ),
+            evictions: reg.counter_with(
+                "stbllm_kv_evictions",
+                labels,
+                "cached pages evicted under pressure",
+            ),
+            prefix_hits: reg.counter_with(
+                "stbllm_kv_prefix_hits",
+                labels,
+                "pages mapped from the prefix cache",
+            ),
+            prefix_hit_tokens: reg.counter_with(
+                "stbllm_kv_prefix_hit_tokens",
+                labels,
+                "prompt tokens served from cache",
+            ),
+            registered: reg.counter_with(
+                "stbllm_kv_prefix_registered",
+                labels,
+                "pages registered for reuse",
+            ),
+            in_use: reg.gauge_with(
+                "stbllm_kv_pages_in_use",
+                labels,
+                "physical pages live right now",
+            ),
+            reserved: reg.gauge_with(
+                "stbllm_kv_pages_reserved",
+                labels,
+                "pages promised to live sessions",
+            ),
         }
     }
 }
@@ -258,11 +307,28 @@ impl KvPool {
     /// late-attached registry still reads monotonic, truthful values;
     /// re-attaching to the same registry re-uses the same handles.
     pub fn attach_registry(&self, registry: &Registry) {
+        self.attach_registry_with(registry, "");
+    }
+
+    /// [`attach_registry`](KvPool::attach_registry) with a fixed label set
+    /// on every series (e.g. `replica="0"`) — how multi-replica serving
+    /// keeps each pool slice's `stbllm_kv_*` series apart in one registry.
+    /// Attach-same-registry idempotence still applies, so a later
+    /// unlabeled attach (the bridge's default) is a no-op.
+    pub fn attach_registry_with(&self, registry: &Registry, labels: &str) {
         let reg_id = std::ptr::from_ref(registry) as usize;
-        let m = KvMetrics::new(registry);
+        {
+            let g = self.inner.lock().unwrap();
+            if g.metrics_reg == reg_id {
+                return; // already mirroring into this registry
+            }
+        }
+        // mint outside the pool lock; a benign double-attach race just
+        // re-uses the same registry handles
+        let m = KvMetrics::new(registry, labels);
         let mut g = self.inner.lock().unwrap();
         if g.metrics_reg == reg_id {
-            return; // already mirroring into this registry
+            return;
         }
         g.metrics_reg = reg_id;
         m.allocated.add(g.stats.allocated_total as u64);

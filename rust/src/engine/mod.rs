@@ -531,16 +531,31 @@ impl Engine {
         server.run(requests)
     }
 
+    /// The serving configuration for this engine, bound to `addr`: the
+    /// engine's serving knobs (`max_batch`, `kv_pages`, `page_size`,
+    /// `flat_kv`) pre-filled, everything else at its default. Callers (the
+    /// CLI, tests, embedders) adjust the returned [`ServeConfig`] and hand
+    /// it to [`Engine::serve_http`] — ONE struct end to end, instead of
+    /// the builder → gateway field-by-field copying this replaced.
+    pub fn serve_config(&self, addr: &str) -> crate::net::ServeConfig {
+        let mut cfg = crate::net::ServeConfig::new(addr);
+        cfg.max_batch = self.max_batch;
+        cfg.kv_pages = self.kv_pages;
+        cfg.page_size = self.page_size;
+        cfg.flat_kv = self.flat_kv;
+        cfg
+    }
+
     /// Serve over HTTP (`stbllm serve --http ADDR`): stream tokens to
     /// network clients through the same continuous-batching scheduler
     /// [`Engine::serve`] uses, so HTTP output is byte-identical to a
-    /// direct batch run. The engine's serving knobs (`max_batch`,
-    /// `kv_pages`, `page_size`, `flat_kv`) override the corresponding
-    /// fields of `opts`; blocks until `ctl` drains and returns the final
-    /// gateway report (check `leaked_pages == 0`).
+    /// direct batch run — at any `opts.replicas` count, since every
+    /// replica borrows this engine's ONE resident weight set. Start from
+    /// [`Engine::serve_config`]; blocks until `ctl` drains and returns
+    /// the final gateway report (check `leaked_pages == 0`).
     pub fn serve_http(
         &self,
-        mut opts: crate::net::HttpServeOpts,
+        opts: &crate::net::ServeConfig,
         ctl: &crate::net::GatewayCtl,
     ) -> Result<crate::net::GatewayReport> {
         if !self.backend.capabilities().decode {
@@ -550,11 +565,7 @@ impl Engine {
             }
             .into());
         }
-        opts.max_batch = self.max_batch;
-        opts.kv_pages = self.kv_pages;
-        opts.page_size = self.page_size;
-        opts.flat_kv = self.flat_kv;
-        crate::net::serve_http(self.backend.as_ref(), &opts, ctl)
+        crate::net::serve_http(self.backend.as_ref(), opts, ctl)
     }
 
     /// Synthetic serving workload: `n_req` prompts sliced from the prose

@@ -1,7 +1,7 @@
 //! The chaos gauntlets: scripted fault injection with hard gates.
 //!
-//! [`run_chaos`] runs two gauntlets against the real implementations (no
-//! mocks) and records one [`FaultOutcome`] per injected fault:
+//! [`run_chaos`] runs three gauntlets against the real implementations
+//! (no mocks) and records one [`FaultOutcome`] per injected fault:
 //!
 //! 1. **Artifacts** — a tiny packed model is saved as a v2 `.stbp` and a
 //!    `SBW2` weights file, then corrupted per the [`FaultPlan`]: seeded
@@ -20,6 +20,11 @@
 //!    (supervisor restart + a fresh stream on the same channel).
 //!    `/healthz` must answer 200 after every fault and the final drain
 //!    must report zero leaked KV pages.
+//! 3. **Replica death** — a second, two-replica gateway
+//!    (`max_bridge_restarts = 0`) loses replica 0 to an armed panic
+//!    while probe requests sit queued on its channel: the probes must
+//!    migrate to the survivor and complete, `/healthz` must stay green,
+//!    and the drain must again leak zero pages across both pools.
 //!
 //! The report always lands on disk (default
 //! `reports/CHAOS_report.json`) before the pass/fail verdict, so CI can
@@ -39,7 +44,7 @@ use crate::faults::plan::{flip_bit, FaultPlan};
 use crate::model::config::ModelConfig;
 use crate::model::weights::{parse_stbw, ModelWeights};
 use crate::net::http::{read_response_head, BodyReader};
-use crate::net::{serve_http, GatewayCtl, HttpServeOpts};
+use crate::net::{serve_http, GatewayCtl, GenerateEvent, GenerateRequest, Router, ServeConfig};
 use crate::packed::PackedModel;
 use crate::util::artifact::ArtifactError;
 use crate::util::json::{arr, num, obj, s, Json};
@@ -121,6 +126,7 @@ pub fn run_chaos(opts: &ChaosOpts) -> Result<ChaosReport> {
     let mut outcomes = Vec::new();
     artifact_gauntlet(&plan, &mut outcomes)?;
     serving_gauntlet(&plan, &mut outcomes)?;
+    replica_gauntlet(&mut outcomes)?;
 
     let passed = outcomes.iter().all(|o| o.ok);
     let json_path = opts
@@ -385,10 +391,10 @@ fn healthz_ok(addr: SocketAddr) -> bool {
     matches!(fetch(addr, "GET", "/healthz", ""), Ok((200, _, _)))
 }
 
-/// Fetch `/stats` and return its `"gateway"` section, asserting the
-/// schema-2 envelope on every read (the chaos run doubles as a gate on
-/// the stats API contract).
-fn stats(addr: SocketAddr) -> Result<Json> {
+/// Fetch `/stats` and return the whole document, asserting the schema-2
+/// envelope on every read (the chaos run doubles as a gate on the stats
+/// API contract).
+fn stats_doc(addr: SocketAddr) -> Result<Json> {
     let (status, _, bytes) = fetch(addr, "GET", "/stats", "")?;
     if status != 200 {
         anyhow::bail!("/stats answered {status}");
@@ -398,6 +404,12 @@ fn stats(addr: SocketAddr) -> Result<Json> {
     if doc.get("schema").and_then(Json::as_usize) != Some(2) {
         anyhow::bail!("/stats is not a schema-2 envelope: {}", doc.dump());
     }
+    Ok(doc)
+}
+
+/// Fetch `/stats` and return its `"gateway"` section.
+fn stats(addr: SocketAddr) -> Result<Json> {
+    let doc = stats_doc(addr)?;
     doc.get("gateway")
         .cloned()
         .ok_or_else(|| anyhow::anyhow!("/stats envelope missing \"gateway\": {}", doc.dump()))
@@ -423,8 +435,7 @@ fn wait_stats(
 }
 
 fn generate_body(prompt: &[u8], max_new: usize) -> String {
-    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-    format!("{{\"prompt\":[{}],\"max_new\":{max_new}}}", toks.join(","))
+    GenerateRequest::tokens(prompt.to_vec(), max_new).to_body()
 }
 
 /// Streamed `POST /generate` that completed: returns the token count once
@@ -439,12 +450,10 @@ fn run_stream(addr: SocketAddr, prompt: &[u8], max_new: usize) -> Result<usize> 
     let mut tokens = 0usize;
     let mut done = false;
     for line in text.lines() {
-        let doc =
-            Json::parse(line).map_err(|e| anyhow::anyhow!("bad stream line {line:?}: {e}"))?;
-        if doc.get("t").is_some() {
-            tokens += 1;
-        } else if doc.get("done").is_some() {
-            done = true;
+        match GenerateEvent::parse(line).map_err(|e| anyhow::anyhow!("bad stream line: {e}"))? {
+            GenerateEvent::Token(_) => tokens += 1,
+            GenerateEvent::Done(_) => done = true,
+            GenerateEvent::Error(msg) => anyhow::bail!("stream error event: {msg}"),
         }
     }
     if !done {
@@ -460,7 +469,7 @@ fn serving_gauntlet(plan: &FaultPlan, outcomes: &mut Vec<FaultOutcome>) -> Resul
         Arc::new(TickChaos { stall_ms: AtomicU64::new(0), panic_armed: AtomicBool::new(false) });
     {
         let cs = chaos_state.clone();
-        ctl.set_tick_hook(Some(Arc::new(move |_tick| {
+        ctl.set_tick_hook(Some(Arc::new(move |_replica, _tick| {
             if cs.panic_armed.swap(false, Ordering::SeqCst) {
                 panic!("chaos: injected bridge panic");
             }
@@ -474,7 +483,7 @@ fn serving_gauntlet(plan: &FaultPlan, outcomes: &mut Vec<FaultOutcome>) -> Resul
     let ctl2 = ctl.clone();
     let handle = std::thread::spawn(move || {
         let be = NativeBackend::new(cfg, w);
-        let mut opts = HttpServeOpts::new("127.0.0.1:0");
+        let mut opts = ServeConfig::new("127.0.0.1:0");
         opts.threads = 4;
         opts.max_batch = CHAOS_MAX_BATCH;
         opts.kv_pages = CHAOS_KV_PAGES;
@@ -648,6 +657,211 @@ fn serving_gauntlet(plan: &FaultPlan, outcomes: &mut Vec<FaultOutcome>) -> Resul
         format!(
             "{} completed, {} cancelled, {} leaked pages",
             report.completed, report.cancelled, report.leaked_pages
+        ),
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// gauntlet 3: replica death and migration
+// ---------------------------------------------------------------------
+
+/// Queued probes that must migrate off the killed replica.
+const MIGRATE_PROBES: usize = 2;
+
+/// Fetch the `/metrics` Prometheus exposition.
+fn fetch_metrics(addr: SocketAddr) -> Result<String> {
+    let (status, _, bytes) = fetch(addr, "GET", "/metrics", "")?;
+    if status != 200 {
+        anyhow::bail!("/metrics answered {status}");
+    }
+    Ok(String::from_utf8_lossy(&bytes).into_owned())
+}
+
+/// Value of one series in a `/metrics` exposition, matched by its full
+/// series name including any labels (`0.0` if absent).
+fn metric_value(text: &str, series: &str) -> f64 {
+    text.lines()
+        .find_map(|l| {
+            l.strip_prefix(series)
+                .and_then(|rest| rest.strip_prefix(' '))
+                .and_then(|rest| rest.trim().parse::<f64>().ok())
+        })
+        .unwrap_or(0.0)
+}
+
+/// Poll the `/stats` `"replicas"` section until `pred` holds.
+fn wait_replicas(
+    addr: SocketAddr,
+    what: &str,
+    pred: impl Fn(&[Json]) -> bool,
+) -> Result<Json> {
+    let deadline = Instant::now() + WAIT;
+    loop {
+        let doc = stats_doc(addr)?;
+        let rows = doc
+            .get("replicas")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("/stats missing \"replicas\": {}", doc.dump()))?;
+        if pred(rows) {
+            return Ok(doc);
+        }
+        if Instant::now() >= deadline {
+            anyhow::bail!("timed out waiting for {what}: {}", doc.dump());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// A two-replica gateway loses replica 0 for good (`max_bridge_restarts
+/// = 0`). The victim stream dies with the decode loop — that is the
+/// single-replica contract already gated above — but requests still
+/// queued on the dead replica's channel must be re-dispatched to the
+/// survivor and complete, `/healthz` must stay green throughout, and
+/// the drain must still leak zero pages across both pools.
+fn replica_gauntlet(outcomes: &mut Vec<FaultOutcome>) -> Result<()> {
+    let (cfg, w) = tiny_model(1)?;
+    let ctl = GatewayCtl::new();
+    // replica 0's tick hook stalls in short armed-checking slices, so
+    // the panic fires mid-tick — while later requests for replica 0
+    // still sit in its channel rather than its scheduler queue
+    let armed = Arc::new(AtomicBool::new(false));
+    {
+        let armed = armed.clone();
+        ctl.set_tick_hook(Some(Arc::new(move |replica, _tick| {
+            if replica != 0 {
+                return;
+            }
+            for _ in 0..3000 {
+                if armed.swap(false, Ordering::SeqCst) {
+                    panic!("chaos: injected replica-0 panic");
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })));
+    }
+
+    let ctl2 = ctl.clone();
+    let handle = std::thread::spawn(move || {
+        let be = NativeBackend::new(cfg, w);
+        let mut opts = ServeConfig::new("127.0.0.1:0");
+        opts.threads = 4;
+        opts.max_batch = CHAOS_MAX_BATCH;
+        opts.kv_pages = CHAOS_KV_PAGES * 2;
+        opts.page_size = CHAOS_PAGE_SIZE;
+        opts.keepalive_ms = 50;
+        opts.replicas = 2;
+        opts.max_bridge_restarts = 0;
+        serve_http(&be, &opts, &ctl2)
+    });
+    let addr = ctl.wait_bound(WAIT).context("replica gateway never bound")?;
+    if !healthz_ok(addr) {
+        anyhow::bail!("replica gateway unhealthy before any fault");
+    }
+
+    // prompts the router provably maps to replica 0
+    let affine0: Vec<u8> = (0u8..=255)
+        .filter(|&b| Router::affine_replica(&[b], 2) == 0)
+        .take(MIGRATE_PROBES + 1)
+        .collect();
+    if affine0.len() < MIGRATE_PROBES + 1 {
+        anyhow::bail!("could not find enough replica-0 affine prompts");
+    }
+
+    // ---- fault: replica 0 dies with requests queued on its channel --
+    let victim = {
+        let body = generate_body(&[affine0[0]], 8);
+        std::thread::spawn(move || fetch(addr, "POST", "/generate", &body))
+    };
+    // once the victim is decoding, replica 0's bridge is inside its
+    // stalled tick and everything dispatched next stays in the channel
+    wait_replicas(addr, "victim active on replica 0", |rows| {
+        rows.first().and_then(|r| r.get("active").and_then(Json::as_usize)) >= Some(1)
+    })?;
+    let probes: Vec<_> = affine0[1..=MIGRATE_PROBES]
+        .iter()
+        .map(|&b| std::thread::spawn(move || run_stream(addr, &[b], 3)))
+        .collect();
+    // the routed counter ticks at dispatch time, so it proves the
+    // probes reached replica 0's channel before the panic is armed
+    let routed_deadline = Instant::now() + WAIT;
+    loop {
+        let m = fetch_metrics(addr)?;
+        if metric_value(&m, "stbllm_router_routed_total{replica=\"0\"}")
+            >= (1 + MIGRATE_PROBES) as f64
+        {
+            break;
+        }
+        if Instant::now() >= routed_deadline {
+            anyhow::bail!("probes never routed to replica 0");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    armed.store(true, Ordering::SeqCst);
+
+    let mut probe_notes = Vec::new();
+    let mut migrated_ok = 0usize;
+    for p in probes {
+        match p.join().map_err(|_| anyhow::anyhow!("probe thread panicked"))? {
+            Ok(tokens) => {
+                if tokens == 3 {
+                    migrated_ok += 1;
+                }
+                probe_notes.push(format!("ok({tokens} tok)"));
+            }
+            Err(e) => probe_notes.push(format!("err({e:#})")),
+        }
+    }
+    let victim_note = match victim.join().map_err(|_| anyhow::anyhow!("victim panicked"))? {
+        Ok((code, _, _)) => format!("victim answered {code}"),
+        Err(e) => format!("victim stream cut: {e:#}"),
+    };
+    let doc = wait_replicas(addr, "replica 0 marked dead", |rows| {
+        rows.first().is_some_and(|r| {
+            r.get("dead") == Some(&Json::Bool(true))
+                && r.get("panics").and_then(Json::as_usize) >= Some(1)
+        })
+    })?;
+    let panics = doc
+        .get("replicas")
+        .and_then(Json::as_arr)
+        .and_then(|rows| rows.first())
+        .and_then(|r| r.get("panics"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0);
+    let migrated = metric_value(&fetch_metrics(addr)?, "stbllm_router_migrated_total") as usize;
+    // even replica-0-affine prompts must now route to the survivor
+    let survivor_ok = run_stream(addr, &[affine0[0], 1], 3).is_ok();
+    gate(
+        outcomes,
+        "replica-kill-migrate",
+        migrated_ok == MIGRATE_PROBES
+            && migrated >= MIGRATE_PROBES
+            && survivor_ok
+            && healthz_ok(addr),
+        format!(
+            "{victim_note}; probes [{}] after {migrated} migration(s), \
+             replica 0 dead with {panics} panic(s), survivor serves",
+            probe_notes.join(", ")
+        ),
+    );
+
+    // ---- drain: both pools leak-free with one replica dead ---------
+    let (status, _, _) = fetch(addr, "POST", "/admin/drain", "")?;
+    if status != 200 {
+        anyhow::bail!("drain answered {status}");
+    }
+    let report = handle
+        .join()
+        .map_err(|_| anyhow::anyhow!("replica gateway thread panicked"))?
+        .context("replica gateway errored")?;
+    gate(
+        outcomes,
+        "replica-drain-leak-free",
+        report.leaked_pages == 0,
+        format!(
+            "{} completed, {} leaked pages across both replica pools",
+            report.completed, report.leaked_pages
         ),
     );
     Ok(())

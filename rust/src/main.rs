@@ -116,7 +116,8 @@ OPTIONS
   --stbp PATH        serve: save + reload the .stbp deployment container
                      and serve from the reloaded store (packed backend)
   --stats-json PATH  serve: write the schema-2 stats envelope (server
-                     section + KV pool counters) as JSON
+                     section + KV pool counters) as JSON; with --http,
+                     written at drain with per-replica rows
   --smoke            serve: scripted shared-prompt workload + CI gate
                      (asserts prefix reuse saves pages, no bad rejections)
   --http ADDR        serve: bind the streaming HTTP gateway on ADDR
@@ -129,8 +130,17 @@ OPTIONS
   --addr-file PATH   serve --http: write the bound address to PATH (CI
                      uses this to discover a --http :0 port)
   --shed-watermark N serve --http: shed new /generate admits with 503 +
-                     Retry-After when free KV pages drop below N
-                     (0 = auto: an eighth of the pool, min 1)
+                     Retry-After when every replica's free KV pages drop
+                     below N (0 = auto: an eighth of one replica's pool,
+                     min 1)
+  --replicas R       serve --http: decode replicas over the shared packed
+                     weights (default {replicas}) — each gets its own
+                     scheduler + KV pool slice; streams route by prompt-
+                     prefix affinity with least-loaded fallback
+  --max-bridge-restarts N
+                     serve --http: decode-loop panic restarts a replica
+                     gets before it is marked dead and its queued
+                     requests migrate to survivors (default 8)
   --no-obs           serve --http: disable the metrics registry (no-op
                      counters/histograms; the A/B baseline for measuring
                      recording overhead — /metrics renders empty)
@@ -174,6 +184,7 @@ OPTIONS
         page_size = defaults::PAGE_SIZE,
         http_threads = defaults::HTTP_THREADS,
         keepalive_ms = defaults::HTTP_KEEPALIVE_MS,
+        replicas = defaults::REPLICAS,
         lg_conns = defaults::LOADGEN_CONNECTIONS,
     )
 }
@@ -440,22 +451,26 @@ fn serve(args: &Args) -> Result<()> {
 /// pool reports leaked pages.
 fn serve_http(args: &Args, addr: &str) -> Result<()> {
     let engine = build_engine(args, defaults::SERVE_BACKEND)?;
-    let mut opts = stbllm::net::HttpServeOpts::new(addr);
+    let mut opts = engine.serve_config(addr);
     opts.threads = args.get_usize("http-threads", defaults::HTTP_THREADS).max(1);
     opts.keepalive_ms =
         args.get_usize("keepalive-ms", defaults::HTTP_KEEPALIVE_MS as usize) as u64;
     opts.default_deadline_ms = args.get("deadline-ms").and_then(|v| v.parse().ok());
     opts.addr_file = args.get("addr-file").map(|s| s.to_string());
     opts.shed_watermark = args.get_usize("shed-watermark", 0);
+    opts.replicas = args.get_usize("replicas", defaults::REPLICAS).max(1);
+    opts.max_bridge_restarts =
+        args.get_usize("max-bridge-restarts", opts.max_bridge_restarts);
 
     let r = engine.quantize();
     println!(
-        "http serve {} [{}, {:.2} bits, {} backend] batch={} on {}",
+        "http serve {} [{}, {:.2} bits, {} backend] batch={} replicas={} on {}",
         r.model,
         r.method,
         r.avg_bits,
         engine.backend().label(),
         args.get_usize("batch", defaults::MAX_BATCH),
+        opts.replicas,
         addr
     );
     // --no-obs: a disabled registry turns every counter/histogram into a
@@ -465,7 +480,17 @@ fn serve_http(args: &Args, addr: &str) -> Result<()> {
     } else {
         stbllm::net::GatewayCtl::new()
     };
-    let report = engine.serve_http(opts, &ctl)?;
+    let report = engine.serve_http(&opts, &ctl)?;
+    // the final stats envelope (gateway section + per-replica rows) is
+    // also written on request, mirroring offline serve's --stats-json
+    if let Some(p) = args.get("stats-json") {
+        let p = std::path::PathBuf::from(p);
+        if let Some(dir) = p.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(&p, ctl.stats_json().dump())?;
+        println!("stats JSON -> {}", p.display());
+    }
     println!("drain report: {}", report.to_json().dump());
     if report.leaked_pages != 0 {
         bail!("http serve FAILED: {} KV pages still reserved after drain", report.leaked_pages);
@@ -516,7 +541,10 @@ fn loadgen(args: &Args) -> Result<()> {
         rep.latency_p50_s * 1e3,
         rep.latency_p95_s * 1e3
     );
-    println!("  prefix hits    : {} (server-side)", rep.prefix_hits);
+    println!(
+        "  prefix hits    : {} (server-side, {} on the affine replica of {})",
+        rep.prefix_hits, rep.affine_prefix_hits, rep.replicas
+    );
     println!("BENCH_http.json -> {}", rep.json_path.display());
 
     if smoke {
@@ -532,6 +560,11 @@ fn loadgen(args: &Args) -> Result<()> {
         }
         if rep.prefix_hits == 0 {
             bail!("loadgen smoke gate FAILED: shared-prompt workload never hit the prefix cache");
+        }
+        // the shared prompt routes to ONE replica by prefix affinity, so
+        // that replica's own pool must show the hits (router-smoke gate)
+        if rep.affine_prefix_hits == 0 {
+            bail!("loadgen smoke gate FAILED: no prefix hits on the affine replica");
         }
         println!(
             "loadgen smoke gate OK: {} completed, 0 errors, {} prefix page hits",

@@ -1,0 +1,426 @@
+//! The versioned `/generate` wire schema: one typed parse/serialize pair
+//! shared by the gateway (server side), the load generator, the chaos
+//! harness and the integration tests (client side).
+//!
+//! Before this module, the request body and the stream-event JSON were
+//! hand-rolled at every call site; a field change had to be replayed in
+//! five places. Now [`GenerateRequest`] and [`GenerateEvent`] are the only
+//! encode/decode path.
+//!
+//! Versioning contract:
+//!
+//! * Requests MAY carry `"schema": 3` (the current version). A missing
+//!   `schema` field is accepted for back-compatibility with pre-redesign
+//!   clients; any other value is refused with a typed 400
+//!   ([`ApiError::UnsupportedSchema`]).
+//! * Unknown fields are ignored on both requests and events, so additive
+//!   evolution never breaks an older peer.
+//! * Parse failures are typed ([`ApiError`]) and render to the exact 400
+//!   message the gateway returns — clients can match on text they can
+//!   also produce locally.
+
+use std::time::Duration;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// The `/generate` wire-schema version this build speaks.
+pub const API_SCHEMA_VERSION: usize = 3;
+
+/// Upper bound on `max_new` accepted over HTTP.
+pub const MAX_MAX_NEW: usize = 4096;
+/// `max_new` when the request omits it.
+pub const DEFAULT_MAX_NEW: usize = 16;
+
+/// Why a request body (or a stream event) failed to parse. Rendering via
+/// `Display` gives the exact 400 body the gateway answers with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ApiError {
+    /// The body is not valid UTF-8.
+    NotUtf8,
+    /// The body is not valid JSON.
+    BadJson(String),
+    /// The request names a schema version this build does not speak.
+    UnsupportedSchema(f64),
+    /// No `"prompt"` field (string or token array).
+    MissingPrompt,
+    /// The prompt is present but empty.
+    EmptyPrompt,
+    /// A prompt-array entry is not an integer in `0..=255`.
+    BadPromptToken(f64),
+    /// `max_new` is not an integer in `1..=MAX_MAX_NEW`.
+    BadMaxNew,
+    /// `deadline_ms` is not a non-negative number.
+    BadDeadline,
+    /// A stream line is not a recognizable [`GenerateEvent`].
+    BadEvent(String),
+}
+
+impl std::fmt::Display for ApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApiError::NotUtf8 => write!(f, "body is not utf-8"),
+            ApiError::BadJson(e) => write!(f, "bad json: {e}"),
+            ApiError::UnsupportedSchema(v) => {
+                write!(f, "unsupported schema {v} (this server speaks schema {API_SCHEMA_VERSION})")
+            }
+            ApiError::MissingPrompt => write!(f, "missing \"prompt\" (string or token array)"),
+            ApiError::EmptyPrompt => write!(f, "empty prompt"),
+            ApiError::BadPromptToken(n) => write!(f, "prompt token {n} out of range 0..=255"),
+            ApiError::BadMaxNew => {
+                write!(f, "max_new must be an integer in 1..={MAX_MAX_NEW}")
+            }
+            ApiError::BadDeadline => write!(f, "deadline_ms must be a non-negative number"),
+            ApiError::BadEvent(line) => write!(f, "unrecognized stream event: {line}"),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+/// A `/generate` prompt: either free text (byte-tokenized server-side) or
+/// explicit token ids.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Prompt {
+    /// Byte-tokenized server-side, wrapped into the model vocabulary.
+    Text(String),
+    /// Explicit token ids, each `0..=255` on the wire.
+    Tokens(Vec<u8>),
+}
+
+/// A typed, versioned `/generate` request — the only request body shape
+/// the gateway parses and the only one in-tree clients produce.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenerateRequest {
+    /// What to prefill.
+    pub prompt: Prompt,
+    /// Tokens to generate; `None` = server default ([`DEFAULT_MAX_NEW`]).
+    pub max_new: Option<usize>,
+    /// Per-request deadline in milliseconds from admission.
+    pub deadline_ms: Option<u64>,
+}
+
+impl GenerateRequest {
+    /// A text-prompt request.
+    pub fn text(prompt: &str, max_new: usize) -> GenerateRequest {
+        GenerateRequest {
+            prompt: Prompt::Text(prompt.to_string()),
+            max_new: Some(max_new),
+            deadline_ms: None,
+        }
+    }
+
+    /// A token-prompt request.
+    pub fn tokens(toks: Vec<u8>, max_new: usize) -> GenerateRequest {
+        GenerateRequest { prompt: Prompt::Tokens(toks), max_new: Some(max_new), deadline_ms: None }
+    }
+
+    /// Attach a deadline.
+    pub fn with_deadline_ms(mut self, ms: u64) -> GenerateRequest {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Serialize to the schema-3 request body.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![("schema", num(API_SCHEMA_VERSION as f64))];
+        match &self.prompt {
+            Prompt::Text(t) => fields.push(("prompt", s(t))),
+            Prompt::Tokens(toks) => fields.push((
+                "prompt",
+                Json::Arr(toks.iter().map(|&t| num(t as f64)).collect()),
+            )),
+        }
+        if let Some(n) = self.max_new {
+            fields.push(("max_new", num(n as f64)));
+        }
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms", num(ms as f64)));
+        }
+        obj(fields)
+    }
+
+    /// The request body bytes (what goes on the wire).
+    pub fn to_body(&self) -> String {
+        self.to_json().dump()
+    }
+
+    /// Parse and validate a request body. Unknown fields are ignored; a
+    /// missing `schema` is accepted (pre-versioning clients), any value
+    /// other than [`API_SCHEMA_VERSION`] is a typed refusal.
+    pub fn parse(body: &[u8]) -> Result<GenerateRequest, ApiError> {
+        let text = std::str::from_utf8(body).map_err(|_| ApiError::NotUtf8)?;
+        let doc = Json::parse(text).map_err(ApiError::BadJson)?;
+        if let Some(v) = doc.get("schema") {
+            match v.as_f64() {
+                Some(n) if n == API_SCHEMA_VERSION as f64 => {}
+                Some(n) => return Err(ApiError::UnsupportedSchema(n)),
+                None => return Err(ApiError::UnsupportedSchema(f64::NAN)),
+            }
+        }
+        let prompt = match doc.get("prompt") {
+            Some(Json::Str(t)) if !t.is_empty() => Prompt::Text(t.clone()),
+            Some(Json::Arr(items)) if !items.is_empty() => {
+                let mut toks = Vec::with_capacity(items.len());
+                for item in items {
+                    let n = item.as_f64().ok_or(ApiError::BadPromptToken(f64::NAN))?;
+                    if !(0.0..=255.0).contains(&n) || n.fract() != 0.0 {
+                        return Err(ApiError::BadPromptToken(n));
+                    }
+                    toks.push(n as u8);
+                }
+                Prompt::Tokens(toks)
+            }
+            Some(Json::Str(_)) | Some(Json::Arr(_)) => return Err(ApiError::EmptyPrompt),
+            _ => return Err(ApiError::MissingPrompt),
+        };
+        let max_new = match doc.get("max_new") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(n) if (1.0..=MAX_MAX_NEW as f64).contains(&n) && n.fract() == 0.0 => {
+                    Some(n as usize)
+                }
+                _ => return Err(ApiError::BadMaxNew),
+            },
+        };
+        let deadline_ms = match doc.get("deadline_ms") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(ms) if ms >= 0.0 => Some(ms as u64),
+                _ => return Err(ApiError::BadDeadline),
+            },
+        };
+        Ok(GenerateRequest { prompt, max_new, deadline_ms })
+    }
+
+    /// The prompt as model tokens, wrapped into a vocabulary of `vocab`.
+    pub fn prompt_tokens(&self, vocab: usize) -> Vec<u8> {
+        let vocab = vocab.max(1) as u32;
+        match &self.prompt {
+            Prompt::Text(t) => t.bytes().map(|b| (b as u32 % vocab) as u8).collect(),
+            Prompt::Tokens(toks) => toks.iter().map(|&t| (t as u32 % vocab) as u8).collect(),
+        }
+    }
+
+    /// `max_new` with the server default applied.
+    pub fn effective_max_new(&self) -> usize {
+        self.max_new.unwrap_or(DEFAULT_MAX_NEW)
+    }
+
+    /// The deadline as a `Duration` from admission, if any.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.deadline_ms.map(Duration::from_millis)
+    }
+}
+
+/// The terminal accounting of a finished stream, as it appears on the
+/// wire (the `{"done":true,...}` line).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DoneEvent {
+    /// Tokens generated (may be short of `max_new` on a deadline stop).
+    pub generated: usize,
+    /// Seconds from admission to first token.
+    pub ttft_s: f64,
+    /// Seconds from admission to the end of the stream.
+    pub latency_s: f64,
+    /// Stop-reason label: `"completed"` or `"deadline"`.
+    pub stopped: String,
+    /// Per-request trace summary (absent only if the server elides it).
+    pub trace: Option<Json>,
+}
+
+/// One line of a `/generate` stream: zero or more `Token`s, then exactly
+/// one `Done` (or `Error` on a mid-stream fault).
+#[derive(Clone, Debug, PartialEq)]
+pub enum GenerateEvent {
+    /// One generated token: `{"t":N}`.
+    Token(u8),
+    /// The stream ended: `{"done":true,...}`.
+    Done(DoneEvent),
+    /// A terminal error document: `{"error":"..."}`.
+    Error(String),
+}
+
+impl GenerateEvent {
+    /// Serialize to the exact wire line (no trailing newline — the
+    /// framing layer owns that).
+    pub fn to_line(&self) -> String {
+        match self {
+            // token lines are the hot path: formatted directly
+            GenerateEvent::Token(t) => format!("{{\"t\":{t}}}"),
+            GenerateEvent::Done(d) => {
+                let mut fields = vec![
+                    ("done", Json::Bool(true)),
+                    ("generated", num(d.generated as f64)),
+                    ("ttft_s", num(d.ttft_s)),
+                    ("latency_s", num(d.latency_s)),
+                    ("stopped", s(&d.stopped)),
+                ];
+                if let Some(trace) = &d.trace {
+                    fields.push(("trace", trace.clone()));
+                }
+                obj(fields).dump()
+            }
+            GenerateEvent::Error(msg) => obj(vec![("error", s(msg))]).dump(),
+        }
+    }
+
+    /// Parse one stream line. Tolerant of unknown fields; a line that is
+    /// neither a token, a done document nor an error is a typed failure.
+    pub fn parse(line: &str) -> Result<GenerateEvent, ApiError> {
+        let doc = Json::parse(line.trim()).map_err(ApiError::BadJson)?;
+        if let Some(t) = doc.get("t") {
+            let n = t.as_f64().ok_or_else(|| ApiError::BadEvent(line.to_string()))?;
+            if !(0.0..=255.0).contains(&n) || n.fract() != 0.0 {
+                return Err(ApiError::BadEvent(line.to_string()));
+            }
+            return Ok(GenerateEvent::Token(n as u8));
+        }
+        if doc.get("done").is_some() {
+            let f = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            return Ok(GenerateEvent::Done(DoneEvent {
+                generated: f("generated") as usize,
+                ttft_s: f("ttft_s"),
+                latency_s: f("latency_s"),
+                stopped: doc
+                    .get("stopped")
+                    .and_then(Json::as_str)
+                    .unwrap_or("completed")
+                    .to_string(),
+                trace: doc.get("trace").cloned(),
+            }));
+        }
+        if let Some(e) = doc.get("error") {
+            return Ok(GenerateEvent::Error(
+                e.as_str().map(str::to_string).unwrap_or_else(|| e.dump()),
+            ));
+        }
+        Err(ApiError::BadEvent(line.to_string()))
+    }
+}
+
+/// Split a streamed body buffer into complete JSON lines, returning the
+/// unconsumed tail. Chunked transfer can split a line across reads; the
+/// client keeps the tail and re-feeds it with the next chunk.
+pub fn split_lines(buf: &str) -> (Vec<&str>, &str) {
+    match buf.rfind('\n') {
+        Some(last) => {
+            let lines = buf[..last].lines().filter(|l| !l.trim().is_empty()).collect();
+            (lines, &buf[last + 1..])
+        }
+        None => (Vec::new(), buf),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_through_the_wire_body() {
+        for req in [
+            GenerateRequest::text("once upon a time", 32),
+            GenerateRequest::tokens(vec![1, 2, 255], 8).with_deadline_ms(250),
+            GenerateRequest { prompt: Prompt::Text("x".into()), max_new: None, deadline_ms: None },
+        ] {
+            let body = req.to_body();
+            assert!(body.contains("\"schema\":3"), "{body}");
+            let back = GenerateRequest::parse(body.as_bytes()).unwrap();
+            assert_eq!(back, req);
+        }
+    }
+
+    #[test]
+    fn missing_schema_is_accepted_other_versions_refused() {
+        assert!(GenerateRequest::parse(br#"{"prompt": "hi"}"#).is_ok());
+        assert!(GenerateRequest::parse(br#"{"prompt": "hi", "schema": 3}"#).is_ok());
+        for bad in [br#"{"prompt": "hi", "schema": 2}"#.as_slice(),
+            br#"{"prompt": "hi", "schema": 4}"#,
+            br#"{"prompt": "hi", "schema": "3"}"#]
+        {
+            match GenerateRequest::parse(bad) {
+                Err(ApiError::UnsupportedSchema(_)) => {}
+                other => panic!("expected UnsupportedSchema, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_fields_are_ignored() {
+        let req = GenerateRequest::parse(
+            br#"{"prompt": [7], "max_new": 2, "stream_style": "fancy", "client": {"v": 9}}"#,
+        )
+        .unwrap();
+        assert_eq!(req.prompt, Prompt::Tokens(vec![7]));
+        assert_eq!(req.max_new, Some(2));
+    }
+
+    #[test]
+    fn typed_request_errors() {
+        for (body, want) in [
+            (&b"\xff\xfe"[..], ApiError::NotUtf8),
+            (b"not json", ApiError::BadJson(String::new())),
+            (br#"{}"#, ApiError::MissingPrompt),
+            (br#"{"prompt": ""}"#, ApiError::EmptyPrompt),
+            (br#"{"prompt": []}"#, ApiError::EmptyPrompt),
+            (br#"{"prompt": [300]}"#, ApiError::BadPromptToken(300.0)),
+            (br#"{"prompt": "a", "max_new": 0}"#, ApiError::BadMaxNew),
+            (br#"{"prompt": "a", "max_new": 99999}"#, ApiError::BadMaxNew),
+            (br#"{"prompt": "a", "deadline_ms": -5}"#, ApiError::BadDeadline),
+        ] {
+            let got = GenerateRequest::parse(body).unwrap_err();
+            assert_eq!(
+                std::mem::discriminant(&got),
+                std::mem::discriminant(&want),
+                "body {body:?}: got {got:?}"
+            );
+            assert!(!got.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn prompt_tokens_wrap_into_the_vocab() {
+        assert_eq!(GenerateRequest::text("hi", 1).prompt_tokens(32), vec![b'h' % 32, b'i' % 32]);
+        assert_eq!(GenerateRequest::tokens(vec![1, 40], 1).prompt_tokens(32), vec![1, 8]);
+        assert_eq!(GenerateRequest::text("a", 1).effective_max_new(), 1);
+        let dflt = GenerateRequest { prompt: Prompt::Text("a".into()), max_new: None, deadline_ms: None };
+        assert_eq!(dflt.effective_max_new(), DEFAULT_MAX_NEW);
+    }
+
+    #[test]
+    fn events_roundtrip_and_tolerate_unknown_fields() {
+        let tok = GenerateEvent::Token(42);
+        assert_eq!(tok.to_line(), r#"{"t":42}"#);
+        assert_eq!(GenerateEvent::parse(&tok.to_line()).unwrap(), tok);
+
+        let done = GenerateEvent::Done(DoneEvent {
+            generated: 8,
+            ttft_s: 0.25,
+            latency_s: 0.5,
+            stopped: "completed".into(),
+            trace: Some(obj(vec![("total_ms", num(3.0))])),
+        });
+        assert_eq!(GenerateEvent::parse(&done.to_line()).unwrap(), done);
+
+        let err = GenerateEvent::Error("kv pool exhausted, retry".into());
+        assert_eq!(GenerateEvent::parse(&err.to_line()).unwrap(), err);
+
+        // additive fields on a future server must not break this client
+        let future = r#"{"t": 7, "replica": 3}"#;
+        assert_eq!(GenerateEvent::parse(future).unwrap(), GenerateEvent::Token(7));
+        match GenerateEvent::parse(r#"{"mystery": true}"#) {
+            Err(ApiError::BadEvent(_)) => {}
+            other => panic!("expected BadEvent, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn split_lines_keeps_partial_tail() {
+        let (lines, tail) = split_lines("{\"t\":1}\n{\"t\":2}\n{\"do");
+        assert_eq!(lines, vec![r#"{"t":1}"#, r#"{"t":2}"#]);
+        assert_eq!(tail, "{\"do");
+        let (lines, tail) = split_lines("no newline yet");
+        assert!(lines.is_empty());
+        assert_eq!(tail, "no newline yet");
+    }
+}

@@ -23,7 +23,6 @@
 //!   reserved pages remain (asserted by the gateway's drain report).
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -34,8 +33,13 @@ use crate::coordinator::kvpool::KvPool;
 use crate::coordinator::server::{BatchServer, Queued, Request, ServeError};
 use crate::engine::Backend;
 use crate::net::gateway::GatewayCtl;
+use crate::net::router::{Router, Seat};
 use crate::net::stats::StopReason;
 use crate::obs::TraceSummary;
+
+/// Default panic restarts per bridge worker before its supervisor gives
+/// up (see `net::gateway::supervise_bridge`).
+pub const MAX_BRIDGE_RESTARTS: usize = 8;
 
 /// A generation request entering the bridge, with its event channel.
 pub struct StreamRequest {
@@ -87,6 +91,8 @@ pub struct BridgeOpts {
     /// Head-of-line age boost threshold (see
     /// [`BatchServer::hol_boost_deferrals`]).
     pub hol_boost_deferrals: u32,
+    /// Panic restarts before the supervisor gives up on this worker.
+    pub max_restarts: usize,
 }
 
 impl BridgeOpts {
@@ -96,6 +102,7 @@ impl BridgeOpts {
             max_batch,
             pool: None,
             hol_boost_deferrals: crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS,
+            max_restarts: MAX_BRIDGE_RESTARTS,
         }
     }
 
@@ -126,6 +133,7 @@ pub fn run_bridge(
     opts: &BridgeOpts,
     rx: &mpsc::Receiver<StreamRequest>,
     ctl: &GatewayCtl,
+    seat: &Seat,
 ) -> Result<()> {
     // the gateway's registry backs the server's stage histograms and the
     // pool's counter mirror, so `GET /metrics` sees all three layers
@@ -148,7 +156,7 @@ pub fn run_bridge(
         //    only when there is no decode work at all
         if !senders_gone && active.is_empty() && queue.is_empty() {
             match rx.recv_timeout(IDLE_POLL) {
-                Ok(sr) => enqueue(sr, &mut next_id, &mut queue, &mut meta, ctl),
+                Ok(sr) => enqueue(sr, &mut next_id, &mut queue, &mut meta, ctl, seat),
                 Err(mpsc::RecvTimeoutError::Timeout) => {}
                 Err(mpsc::RecvTimeoutError::Disconnected) => senders_gone = true,
             }
@@ -156,7 +164,7 @@ pub fn run_bridge(
         if !senders_gone {
             loop {
                 match rx.try_recv() {
-                    Ok(sr) => enqueue(sr, &mut next_id, &mut queue, &mut meta, ctl),
+                    Ok(sr) => enqueue(sr, &mut next_id, &mut queue, &mut meta, ctl, seat),
                     Err(mpsc::TryRecvError::Empty) => break,
                     Err(mpsc::TryRecvError::Disconnected) => {
                         senders_gone = true;
@@ -208,7 +216,8 @@ pub fn run_bridge(
             }
         }
 
-        ctl.set_gauges(active.len(), queue.len());
+        seat.set_load(active.len(), queue.len());
+        ctl.republish_gauges();
 
         if active.is_empty() {
             if senders_gone && queue.is_empty() {
@@ -256,7 +265,7 @@ pub fn run_bridge(
         //    The tick hook fires first — the chaos harness injects bridge
         //    panics here, and an unwind at this point drops every in-flight
         //    session (KV pages return to the pool, stream senders vanish).
-        ctl.fire_tick_hook(tick_no);
+        ctl.fire_tick_hook(seat.id() as u64, tick_no);
         tick_no += 1;
         let t = server.tick(&mut active)?;
         if !t.emitted.is_empty() {
@@ -296,14 +305,17 @@ pub fn run_bridge(
                     }));
                 }
                 ctl.stats().completed.inc();
+                seat.note_completed();
                 ctl.stats().record_finished(ttft, lat);
             } else {
                 ctl.stats().cancelled.inc();
             }
         }
-        ctl.set_gauges(active.len(), queue.len());
+        seat.set_load(active.len(), queue.len());
+        ctl.republish_gauges();
     }
-    ctl.set_gauges(0, 0);
+    seat.set_load(0, 0);
+    ctl.republish_gauges();
     Ok(())
 }
 
@@ -313,6 +325,7 @@ fn enqueue(
     queue: &mut VecDeque<Queued>,
     meta: &mut HashMap<u64, Meta>,
     ctl: &GatewayCtl,
+    seat: &Seat,
 ) {
     let id = *next_id;
     *next_id += 1;
@@ -320,7 +333,7 @@ fn enqueue(
     queue.push_back(Queued::new(Request { id, prompt: sr.prompt, max_new: sr.max_new.max(1) }));
     ctl.stats().streams_started.inc();
     ctl.stats().queued_g.add(1);
-    ctl.queued_gauge().fetch_add(1, Ordering::Relaxed);
+    seat.note_enqueued();
 }
 
 /// Channel facade: spawn a bridge worker thread owning `backend`; returns
@@ -335,8 +348,14 @@ pub fn serve_stream(
     ctl: GatewayCtl,
 ) -> (mpsc::SyncSender<StreamRequest>, std::thread::JoinHandle<Result<()>>) {
     let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
+    // a single anonymous seat behind a one-replica router; the CALLER owns
+    // the only request sender (the seat keeps none), so dropping the
+    // returned sender remains the drain signal
+    let seat = Arc::new(Seat::new(0, opts.pool.clone(), None, None));
+    let router = Arc::new(Router::new(vec![seat], 0, &ctl.registry()));
+    ctl.set_router(Some(router.clone()));
     let handle = std::thread::spawn(move || {
-        crate::net::gateway::supervise_bridge(&*backend, &opts, &rx, &ctl)
+        crate::net::gateway::supervise_bridge(&*backend, &opts, &rx, &ctl, &router, 0)
     });
     (tx, handle)
 }
@@ -345,6 +364,8 @@ pub fn serve_stream(
 mod tests {
     #![allow(clippy::unwrap_used)]
     use super::*;
+    use std::sync::atomic::Ordering;
+
     use crate::coordinator::server::{BatchServer, Request};
     use crate::engine::NativeBackend;
     use crate::model::config::ModelConfig;
@@ -527,7 +548,7 @@ mod tests {
         // one-shot injected panic: fires on the first scheduler tick only
         let armed = Arc::new(std::sync::atomic::AtomicBool::new(true));
         let a2 = armed.clone();
-        ctl.set_tick_hook(Some(Arc::new(move |_| {
+        ctl.set_tick_hook(Some(Arc::new(move |_replica, _tick| {
             if a2.swap(false, Ordering::SeqCst) {
                 panic!("injected bridge panic");
             }

@@ -1,38 +1,50 @@
 //! The HTTP gateway: endpoints, per-connection protocol handling, and the
 //! lifecycle that ties the [listener](crate::net::listener) to the
-//! [bridge](crate::net::bridge).
+//! per-replica [bridge](crate::net::bridge) workers through the
+//! [router](crate::net::router).
 //!
 //! Endpoints:
 //!
-//! * `POST /generate` — body `{"prompt": "..." | [tokens], "max_new": N,
-//!   "deadline_ms": M}`. Streams one JSON line per token
-//!   (`{"t":N}`) over chunked transfer encoding, ending with a
-//!   `{"done":true, ...}` line; with `Accept: text/event-stream` the same
-//!   documents arrive as SSE `data:` events. Impossible requests get `413`
-//!   before any stream bytes; closing the connection mid-stream cancels
-//!   the request and releases its KV pages.
+//! * `POST /generate` — body is a schema-3 [`GenerateRequest`]
+//!   (`{"prompt": "..." | [tokens], "max_new": N, "deadline_ms": M}`;
+//!   an explicit `"schema": 3` is accepted, other versions get a typed
+//!   `400`). Streams one JSON line per token (`{"t":N}`) over chunked
+//!   transfer encoding, ending with a `{"done":true, ...}` line; with
+//!   `Accept: text/event-stream` the same documents arrive as SSE `data:`
+//!   events. Impossible requests get `413` before any stream bytes;
+//!   closing the connection mid-stream cancels the request and releases
+//!   its KV pages.
 //! * `GET /healthz` — liveness probe.
 //! * `GET /stats` — the schema-2 stats envelope:
-//!   `{"schema": 2, "gateway": {... counters, percentiles, "kv": {...}}}`.
+//!   `{"schema": 2, "gateway": {...}, "replicas": [...]}` (the flat
+//!   `"gateway"` section is unchanged from single-replica serving; the
+//!   `"replicas"` array adds per-replica id/load/fault/kv rows).
 //! * `GET /metrics` — Prometheus text exposition of the gateway's
-//!   [`Registry`]: gateway counters, the bridge server's per-stage
-//!   latency histograms, and the KV pool mirror.
+//!   [`Registry`]: gateway counters, router decisions, the bridge
+//!   servers' per-stage latency histograms, and the KV pool mirrors —
+//!   with `replica="N"`-labeled series when serving more than one
+//!   replica.
 //! * `POST /admin/drain` — stop accepting connections, finish in-flight
 //!   streams, then [`serve_http`] returns a [`GatewayReport`] whose
-//!   `leaked_pages` must be 0.
+//!   `leaked_pages` (summed across every replica's pool) must be 0.
 //!
 //! Every `/generate` response carries a per-request trace: a `"trace"`
 //! object on the final done-event and an `x-stbllm-trace` chunked
 //! trailer with the same JSON (queue/prefill/decode/kernel breakdown).
 //!
-//! The gateway holds no decode state of its own: every generation request
-//! funnels into the single bridge worker, which runs the same
-//! `BatchServer` scheduling kernel as offline serving — HTTP-streamed
-//! tokens are byte-identical to a direct batch run.
+//! With `--replicas R` the gateway runs R decode workers over ONE
+//! resident model (each replica borrows the same backend; only KV state
+//! is per-replica). The [`Router`] assigns each stream by prompt-prefix
+//! affinity with least-loaded fallback; a replica that exhausts its
+//! panic restarts has its queued requests migrated to survivors. Every
+//! replica runs the same `BatchServer` scheduling kernel as offline
+//! serving, and greedy decode makes each stream a pure function of its
+//! prompt — so streamed tokens are byte-identical to a direct batch run
+//! at ANY replica count.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -41,23 +53,27 @@ use anyhow::{bail, Result};
 use crate::coordinator::kvpool::{KvPool, KvPoolStats};
 use crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS;
 use crate::engine::Backend;
-use crate::net::bridge::{run_bridge, BridgeOpts, StreamEvent, StreamRequest};
+use crate::net::api::{DoneEvent, GenerateEvent, GenerateRequest};
+use crate::net::bridge::{
+    run_bridge, BridgeOpts, StreamEvent, StreamRequest, MAX_BRIDGE_RESTARTS,
+};
 use crate::net::http::{
     write_response, write_response_with, ChunkedWriter, HttpError, HttpRequest,
 };
 use crate::net::listener::serve_connections;
+use crate::net::router::{Admission, DispatchError, Router, Seat};
 use crate::net::stats::GatewayStats;
 use crate::obs::{envelope, Registry};
 use crate::util::cli::defaults;
-use crate::util::json::{num, obj, s, Json};
+use crate::util::json::{num, obj, Json};
 
-/// Per-tick callback the bridge fires before each scheduler tick — the
-/// chaos harness's fault-injection point.
-pub type TickHook = Arc<dyn Fn(u64) + Send + Sync>;
+/// Per-tick callback each bridge fires before a scheduler tick, with its
+/// `(replica, tick)` — the chaos harness's fault-injection point.
+pub type TickHook = Arc<dyn Fn(u64, u64) + Send + Sync>;
 
 /// Shared control handle for a running gateway: drain flag, live stats,
-/// bound address, and the KV pool (for `/stats` and leak checks). Clone
-/// freely — all clones share one state.
+/// bound address, and the replica router (for `/stats` and leak checks).
+/// Clone freely — all clones share one state.
 #[derive(Clone, Default)]
 pub struct GatewayCtl {
     inner: Arc<CtlInner>,
@@ -69,9 +85,7 @@ struct CtlInner {
     stats: GatewayStats,
     bound: Mutex<Option<SocketAddr>>,
     bound_cv: Condvar,
-    active: AtomicUsize,
-    queued: AtomicUsize,
-    pool: Mutex<Option<Arc<KvPool>>>,
+    router: Mutex<Option<Arc<Router>>>,
     tick_hook: Mutex<Option<TickHook>>,
     panic_logged: AtomicBool,
 }
@@ -112,28 +126,38 @@ impl GatewayCtl {
     }
 
     /// The metrics registry backing this gateway (rendered by `/metrics`;
-    /// also wired into the bridge's batch server and the KV pool).
+    /// also wired into the bridge's batch servers and the KV pools).
     pub fn registry(&self) -> Arc<Registry> {
         self.inner.stats.registry().clone()
     }
 
-    /// Publish the in-flight gauges (bridge-internal).
-    pub(crate) fn set_gauges(&self, active: usize, queued: usize) {
-        self.inner.active.store(active, Ordering::Relaxed);
-        self.inner.queued.store(queued, Ordering::Relaxed);
+    /// Install the replica router once serving starts.
+    pub(crate) fn set_router(&self, router: Option<Arc<Router>>) {
+        *self.inner.router.lock().expect("router slot poisoned") = router;
+    }
+
+    /// The replica router, once serving has started.
+    pub(crate) fn router(&self) -> Option<Arc<Router>> {
+        self.inner.router.lock().expect("router slot poisoned").clone()
+    }
+
+    /// Current `(active, queued)` stream gauges, summed across replicas.
+    pub fn gauges(&self) -> (usize, usize) {
+        self.router().map_or((0, 0), |r| r.loads())
+    }
+
+    /// Refresh the aggregate gauges from the per-replica seat loads
+    /// (bridge-internal, after a seat's load changes).
+    pub(crate) fn republish_gauges(&self) {
+        let (active, queued) = self.gauges();
         self.inner.stats.active_g.set(active as i64);
         self.inner.stats.queued_g.set(queued as i64);
     }
 
-    /// The queued-streams gauge (bridge-internal; bumped at enqueue so
-    /// `/stats` sees requests the scheduler has not looked at yet).
-    pub(crate) fn queued_gauge(&self) -> &AtomicUsize {
-        &self.inner.queued
-    }
-
-    /// Current `(active, queued)` stream gauges.
-    pub fn gauges(&self) -> (usize, usize) {
-        (self.inner.active.load(Ordering::Relaxed), self.inner.queued.load(Ordering::Relaxed))
+    /// The first replica's KV pool, once serving has started (`None` on
+    /// flat KV). Per-replica pools hang off the router's seats.
+    pub fn pool(&self) -> Option<Arc<KvPool>> {
+        self.router().and_then(|r| r.seats().first().and_then(|s| s.pool().cloned()))
     }
 
     fn set_bound(&self, addr: SocketAddr) {
@@ -163,18 +187,10 @@ impl GatewayCtl {
         }
     }
 
-    fn set_pool(&self, pool: Option<Arc<KvPool>>) {
-        *self.inner.pool.lock().expect("pool slot poisoned") = pool;
-    }
-
-    /// The gateway's KV pool, once serving has started (None on flat KV).
-    pub fn pool(&self) -> Option<Arc<KvPool>> {
-        self.inner.pool.lock().expect("pool slot poisoned").clone()
-    }
-
-    /// Install (or clear) the per-tick callback the bridge fires right
-    /// before each scheduler tick. The chaos harness uses this to inject a
-    /// bridge panic at a chosen tick.
+    /// Install (or clear) the per-tick callback the bridges fire right
+    /// before each scheduler tick, as `hook(replica, tick)`. The chaos
+    /// harness uses this to inject a bridge panic at a chosen tick on a
+    /// chosen replica.
     pub fn set_tick_hook(&self, hook: Option<TickHook>) {
         *self.inner.tick_hook.lock().expect("tick hook poisoned") = hook;
     }
@@ -182,10 +198,10 @@ impl GatewayCtl {
     /// Fire the tick hook (bridge-internal). The hook is cloned out of the
     /// lock BEFORE the call, so a panicking hook unwinds the bridge without
     /// poisoning the hook slot — the supervisor can restart cleanly.
-    pub(crate) fn fire_tick_hook(&self, tick: u64) {
+    pub(crate) fn fire_tick_hook(&self, replica: u64, tick: u64) {
         let hook = self.inner.tick_hook.lock().expect("tick hook poisoned").clone();
         if let Some(h) = hook {
-            h(tick);
+            h(replica, tick);
         }
     }
 
@@ -201,28 +217,40 @@ impl GatewayCtl {
         }
     }
 
-    /// The `/stats` document: the schema-2 envelope with the gateway
-    /// snapshot (counters + gauges + a live KV section) under `"gateway"`.
+    /// The `/stats` document: the schema-2 envelope with the aggregate
+    /// gateway snapshot under `"gateway"` (byte-compatible with
+    /// single-replica serving — the KV section is the merged counters of
+    /// every replica's pool) plus a `"replicas"` array with one
+    /// id/load/fault/kv row per replica.
     pub fn stats_json(&self) -> Json {
-        let kv = self.pool().map(|p| p.stats());
-        let (active, queued) = self.gauges();
-        let snap = self.inner.stats.snapshot(kv, active, queued);
-        envelope(&[&snap])
+        match self.router() {
+            Some(r) => {
+                let (active, queued) = r.loads();
+                let snap = self.inner.stats.snapshot(r.kv_stats(), active, queued);
+                let reps = r.snapshot();
+                envelope(&[&snap, &reps])
+            }
+            None => envelope(&[&self.inner.stats.snapshot(None, 0, 0)]),
+        }
     }
 }
 
-/// Configuration for [`serve_http`].
+/// Serving configuration — the ONE struct consumed by the CLI, the engine
+/// builder and [`serve_http`] alike (it replaced the field-by-field
+/// `EngineBuilder` → gateway option copying, so a new serving knob cannot
+/// silently miss one of those paths).
 #[derive(Clone, Debug)]
-pub struct HttpServeOpts {
+pub struct ServeConfig {
     /// Bind address, e.g. `127.0.0.1:8090` (`:0` picks a free port —
     /// recover it via [`GatewayCtl::wait_bound`] or `addr_file`).
     pub addr: String,
     /// HTTP worker threads (concurrent connections being handled).
     pub threads: usize,
-    /// Max concurrently decoding streams (continuous batching width).
+    /// Max concurrently decoding streams PER REPLICA (continuous batching
+    /// width of each replica's scheduler).
     pub max_batch: usize,
-    /// KV pool size in pages; `0` auto-sizes to `max_batch` worst-case
-    /// sessions.
+    /// Total KV pool budget in pages, split evenly across replicas; `0`
+    /// auto-sizes each replica to `max_batch` worst-case sessions.
     pub kv_pages: usize,
     /// KV page size in token slots.
     pub page_size: usize,
@@ -238,18 +266,27 @@ pub struct HttpServeOpts {
     pub addr_file: Option<String>,
     /// Head-of-line age boost threshold for the admission queue.
     pub hol_boost_deferrals: u32,
-    /// Load-shed watermark in free KV pages: when `total - reserved` drops
-    /// below this, new `/generate` admits get `503 + Retry-After` instead
-    /// of queueing indefinitely. `0` auto-sizes to an eighth of the pool
-    /// (min 1). Ignored on flat (unpaged) serving.
+    /// Load-shed watermark in free KV pages, applied per replica: when a
+    /// replica's `total - reserved` drops below this it is not routable,
+    /// and when NO replica is, new `/generate` admits get `503 +
+    /// Retry-After` instead of queueing indefinitely. `0` auto-sizes to an
+    /// eighth of one replica's pool (min 1). Ignored on flat serving.
     pub shed_watermark: usize,
+    /// Decode replicas over the shared resident weights — each gets its
+    /// own `BatchServer`, bridge thread and KV pool slice, behind the
+    /// prefix-affinity [`Router`].
+    pub replicas: usize,
+    /// Panic restarts per replica before its supervisor gives up; a dead
+    /// replica's queued requests migrate to survivors (with one replica,
+    /// exhaustion fails the gateway, as before).
+    pub max_bridge_restarts: usize,
 }
 
-impl HttpServeOpts {
+impl ServeConfig {
     /// Defaults: 8 HTTP threads, the CLI's serving batch width, auto-sized
-    /// paged KV, 1s keep-alive polls, no default deadline.
-    pub fn new(addr: &str) -> HttpServeOpts {
-        HttpServeOpts {
+    /// paged KV, 1s keep-alive polls, no default deadline, one replica.
+    pub fn new(addr: &str) -> ServeConfig {
+        ServeConfig {
             addr: addr.to_string(),
             threads: defaults::HTTP_THREADS,
             max_batch: defaults::MAX_BATCH,
@@ -261,6 +298,8 @@ impl HttpServeOpts {
             addr_file: None,
             hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
             shed_watermark: 0,
+            replicas: defaults::REPLICAS,
+            max_bridge_restarts: MAX_BRIDGE_RESTARTS,
         }
     }
 }
@@ -279,10 +318,12 @@ pub struct GatewayReport {
     pub rejected: usize,
     /// Total tokens generated.
     pub generated_tokens: usize,
-    /// Final KV pool counters (`None` on flat serving).
+    /// Final KV pool counters, merged across replicas (`None` on flat
+    /// serving).
     pub kv: Option<KvPoolStats>,
-    /// Pages still reserved after the drain — MUST be 0; anything else
-    /// means a session leaked its reservation.
+    /// Pages still reserved after the drain, summed over every replica's
+    /// pool — MUST be 0; anything else means a session leaked its
+    /// reservation.
     pub leaked_pages: usize,
 }
 
@@ -305,29 +346,56 @@ impl GatewayReport {
 }
 
 /// Serve HTTP on `opts.addr` until `ctl` drains; returns the final
-/// [`GatewayReport`]. Spawns one bridge worker (the decode loop) plus
-/// `opts.threads` connection workers, all scoped to this call — nothing
-/// outlives it.
+/// [`GatewayReport`]. Spawns `opts.replicas` supervised bridge workers
+/// (the decode loops, all borrowing ONE backend) plus `opts.threads`
+/// connection workers, all scoped to this call — nothing outlives it.
 pub fn serve_http(
     backend: &dyn Backend,
-    opts: &HttpServeOpts,
+    opts: &ServeConfig,
     ctl: &GatewayCtl,
 ) -> Result<GatewayReport> {
     let cfg = backend.cfg();
-    let pool = if !opts.flat_kv && backend.capabilities().paged_kv {
-        let page_size = opts.page_size.max(1);
-        let pages = if opts.kv_pages == 0 {
-            // mirror BatchServer::with_kv_pool's auto-size: max_batch
-            // worst-case flat sessions
-            opts.max_batch.max(1) * (4 * cfg.seq_len).div_ceil(page_size)
+    let replicas = opts.replicas.max(1);
+    let paged = !opts.flat_kv && backend.capabilities().paged_kv;
+    let registry = ctl.registry();
+
+    let mut seats: Vec<Arc<Seat>> = Vec::with_capacity(replicas);
+    let mut channels = Vec::with_capacity(replicas);
+    for id in 0..replicas {
+        let pool = if paged {
+            let page_size = opts.page_size.max(1);
+            let pages = if opts.kv_pages == 0 {
+                // mirror BatchServer::with_kv_pool's auto-size, per
+                // replica: max_batch worst-case flat sessions
+                opts.max_batch.max(1) * (4 * cfg.seq_len).div_ceil(page_size)
+            } else {
+                (opts.kv_pages / replicas).max(1)
+            };
+            let pool = Arc::new(KvPool::new(cfg, pages, page_size));
+            if replicas > 1 {
+                // label this slice's stbllm_kv_* series before the bridge's
+                // unlabeled attach (which then no-ops, being same-registry)
+                pool.attach_registry_with(&registry, &format!("replica=\"{id}\""));
+            }
+            Some(pool)
         } else {
-            opts.kv_pages
+            None
         };
-        Some(Arc::new(KvPool::new(cfg, pages, page_size)))
+        let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
+        let labeled = if replicas > 1 { Some(registry.as_ref()) } else { None };
+        seats.push(Arc::new(Seat::new(id, pool, Some(tx), labeled)));
+        channels.push(rx);
+    }
+
+    let shed_watermark = if !paged {
+        0
+    } else if opts.shed_watermark == 0 {
+        seats[0].pool().map_or(0, |p| (p.total_pages() / 8).max(1))
     } else {
-        None
+        opts.shed_watermark
     };
-    ctl.set_pool(pool.clone());
+    let router = Arc::new(Router::new(seats, shed_watermark, &registry));
+    ctl.set_router(Some(router.clone()));
 
     let listener = TcpListener::bind(&opts.addr)?;
     let local = listener.local_addr()?;
@@ -336,45 +404,48 @@ pub fn serve_http(
     }
     ctl.set_bound(local);
     eprintln!("[gateway] listening on http://{local}");
-
-    let bopts = BridgeOpts {
-        max_batch: opts.max_batch.max(1),
-        pool: pool.clone(),
-        hol_boost_deferrals: opts.hol_boost_deferrals,
-    };
-    let (tx, rx) = mpsc::sync_channel::<StreamRequest>(1024);
-
-    let shed_watermark = match (&pool, opts.shed_watermark) {
-        (None, _) => 0,
-        (Some(p), 0) => (p.total_pages() / 8).max(1),
-        (Some(_), w) => w,
-    };
+    if replicas > 1 {
+        eprintln!("[gateway] {replicas} decode replicas over shared weights");
+    }
 
     std::thread::scope(|scope| -> Result<()> {
-        let bridge = scope.spawn(|| supervise_bridge(backend, &bopts, &rx, ctl));
+        let mut bridges = Vec::with_capacity(replicas);
+        for (idx, rx) in channels.into_iter().enumerate() {
+            let bopts = BridgeOpts {
+                max_batch: opts.max_batch.max(1),
+                pool: router.seats()[idx].pool().cloned(),
+                hol_boost_deferrals: opts.hol_boost_deferrals,
+                max_restarts: opts.max_bridge_restarts,
+            };
+            let router = Arc::clone(&router);
+            bridges
+                .push(scope.spawn(move || supervise_bridge(backend, &bopts, &rx, ctl, &router, idx)));
+        }
         let hc = HandlerCtx {
-            tx,
+            router: router.clone(),
             default_deadline: opts.default_deadline_ms.map(Duration::from_millis),
             keepalive: Duration::from_millis(opts.keepalive_ms.max(10)),
             vocab: cfg.vocab,
-            pool: pool.clone(),
-            shed_watermark,
         };
         let listened = serve_connections(listener, ctl, opts.threads.max(1), |stream| {
             handle_connection(stream, ctl, &hc);
         });
-        // dropping the request sender is the bridge's drain signal: it
-        // finishes everything in flight, then exits
-        drop(hc);
-        let bridged = match bridge.join() {
-            Ok(r) => r,
-            Err(_) => Err(anyhow::anyhow!("bridge supervisor panicked")),
-        };
+        // dropping every seat's request sender is the drain signal: each
+        // bridge finishes everything in flight, then exits
+        router.close();
+        let mut bridged: Result<()> = Ok(());
+        for b in bridges {
+            match b.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => bridged = Err(e),
+                Err(_) => bridged = Err(anyhow::anyhow!("bridge supervisor panicked")),
+            }
+        }
         listened?;
         bridged
     })?;
 
-    let kv = pool.as_ref().map(|p| p.stats());
+    let kv = router.kv_stats();
     let leaked_pages = kv.as_ref().map_or(0, |k| k.pages_reserved);
     let st = ctl.stats();
     Ok(GatewayReport {
@@ -388,55 +459,80 @@ pub fn serve_http(
     })
 }
 
-/// Max automatic bridge restarts before the gateway gives up and errors
-/// out — a backstop against a deterministic crash loop.
-const MAX_BRIDGE_RESTARTS: usize = 8;
-
-/// Run the bridge under a supervisor: a panic inside the decode loop
-/// unwinds the bridge (dropping every in-flight session, which releases
-/// its KV pages back to the pool and disconnects its stream senders, so
-/// each waiting handler answers 500 / terminates its chunk stream) and the
-/// bridge is restarted on the same request channel — queued requests that
-/// had not been ingested yet survive the crash.
+/// Run one replica's bridge under a supervisor. A panic inside the decode
+/// loop unwinds the bridge (dropping every in-flight session, which
+/// releases its KV pages back to the pool and disconnects its stream
+/// senders, so each waiting handler answers 500 / terminates its chunk
+/// stream) and the bridge is restarted on the same request channel —
+/// queued requests that had not been ingested yet survive the crash.
+///
+/// When `opts.max_restarts` is exhausted the replica dies for good: its
+/// seat is marked dead (the router stops picking it) and, if other
+/// replicas survive, this supervisor becomes a forwarder pump that
+/// migrates everything still queued on the dead replica's channel to the
+/// survivors via [`Router::redispatch`]. Only when NO replica survives
+/// does the gateway fail, as single-replica serving always did.
 pub(crate) fn supervise_bridge(
     backend: &dyn Backend,
     opts: &BridgeOpts,
     rx: &mpsc::Receiver<StreamRequest>,
     ctl: &GatewayCtl,
+    router: &Router,
+    idx: usize,
 ) -> Result<()> {
+    let seat = &router.seats()[idx];
     let mut restarts = 0usize;
     loop {
-        match catch_unwind(AssertUnwindSafe(|| run_bridge(backend, opts, rx, ctl))) {
+        match catch_unwind(AssertUnwindSafe(|| run_bridge(backend, opts, rx, ctl, seat))) {
             Ok(r) => return r,
             Err(_) => {
-                ctl.set_gauges(0, 0);
+                seat.set_load(0, 0);
+                ctl.republish_gauges();
                 ctl.stats().bridge_panics.inc();
-                if restarts >= MAX_BRIDGE_RESTARTS {
-                    bail!("bridge worker panicked; {restarts} restarts exhausted");
+                seat.note_panic();
+                if restarts >= opts.max_restarts {
+                    seat.mark_dead();
+                    seat.close();
+                    if router.alive() == 0 {
+                        bail!("bridge worker panicked; {restarts} restarts exhausted");
+                    }
+                    eprintln!(
+                        "[gateway] replica {idx} gave up after {restarts} restarts; \
+                         migrating its queued requests to surviving replicas"
+                    );
+                    // forwarder pump: requests still queued on the dead
+                    // replica's channel migrate instead of dying with it
+                    loop {
+                        match rx.recv() {
+                            Ok(sr) => {
+                                if !router.redispatch(sr, idx) {
+                                    ctl.stats().rejected.inc();
+                                }
+                            }
+                            Err(_) => return Ok(()),
+                        }
+                    }
                 }
                 restarts += 1;
                 ctl.stats().bridge_restarts.inc();
+                seat.note_restart();
                 eprintln!(
                     "[gateway] bridge worker panicked; in-flight sessions retired, \
-                     restarting ({restarts}/{MAX_BRIDGE_RESTARTS})"
+                     restarting ({restarts}/{})",
+                    opts.max_restarts
                 );
             }
         }
     }
 }
 
-/// Everything one connection handler needs; owns a clone-free handle on
-/// the bridge's request sender (dropping the ctx after the listener exits
-/// is what drains the bridge).
+/// Everything one connection handler needs: the router (which owns each
+/// replica's request sender) and the per-request defaults.
 struct HandlerCtx {
-    tx: mpsc::SyncSender<StreamRequest>,
+    router: Arc<Router>,
     default_deadline: Option<Duration>,
     keepalive: Duration,
     vocab: usize,
-    /// The paged KV pool, for the load-shed free-page check.
-    pool: Option<Arc<KvPool>>,
-    /// Shed new admits when free pages drop below this (0 disables).
-    shed_watermark: usize,
 }
 
 /// Keep-alive connection loop: parse requests until the peer closes, a
@@ -525,25 +621,16 @@ fn dispatch(
         ("POST", "/generate") if ctl.is_draining() => {
             write_response(stream, 503, "text/plain", b"draining", false)
         }
-        ("POST", "/generate") => {
-            // load shedding: when the pool is nearly exhausted, refuse the
-            // admit NOW with a retry hint instead of deferring indefinitely
-            if let Some(pool) = &hc.pool {
-                let kv = pool.stats();
-                if hc.shed_watermark > 0 && kv.free_pages() < hc.shed_watermark {
-                    ctl.stats().shed.inc();
-                    return write_response_with(
-                        stream,
-                        503,
-                        "application/json",
-                        &[("retry-after", "1")],
-                        b"{\"error\":\"kv pool exhausted, retry\"}",
-                        keep,
-                    );
-                }
+        // load shedding: when every routable replica is at its free-page
+        // watermark, refuse the admit NOW with a retry hint instead of
+        // deferring indefinitely
+        ("POST", "/generate") => match hc.router.admission() {
+            Admission::Open => handle_generate(stream, req, keep, ctl, hc),
+            Admission::Shed => shed_response(stream, ctl, keep),
+            Admission::Closed => {
+                write_response(stream, 503, "text/plain", b"server shutting down", false)
             }
-            handle_generate(stream, req, keep, hc)
-        }
+        },
         (_, "/healthz" | "/stats" | "/metrics" | "/admin/drain" | "/generate") => {
             write_response(stream, 405, "text/plain", b"method not allowed", keep)
         }
@@ -551,84 +638,49 @@ fn dispatch(
     }
 }
 
-/// Upper bound on `max_new` accepted over HTTP.
-const MAX_MAX_NEW: usize = 4096;
-/// `max_new` when the request omits it.
-const DEFAULT_MAX_NEW: usize = 16;
-
-struct GenSpec {
-    prompt: Vec<u8>,
-    max_new: usize,
-    deadline_ms: Option<u64>,
+fn shed_response(stream: &mut TcpStream, ctl: &GatewayCtl, keep: bool) -> std::io::Result<()> {
+    ctl.stats().shed.inc();
+    write_response_with(
+        stream,
+        503,
+        "application/json",
+        &[("retry-after", "1")],
+        b"{\"error\":\"kv pool exhausted, retry\"}",
+        keep,
+    )
 }
 
-fn parse_generate(body: &[u8], vocab: usize) -> Result<GenSpec, String> {
-    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
-    let doc = Json::parse(text).map_err(|e| format!("bad json: {e}"))?;
-    let vocab = vocab.max(1) as u32;
-    let prompt: Vec<u8> = match doc.get("prompt") {
-        // string prompts are byte-tokenized, wrapped into the model vocab
-        Some(Json::Str(st)) if !st.is_empty() => {
-            st.bytes().map(|b| (b as u32 % vocab) as u8).collect()
-        }
-        Some(Json::Arr(items)) if !items.is_empty() => {
-            let mut toks = Vec::with_capacity(items.len());
-            for item in items {
-                let n = item
-                    .as_f64()
-                    .ok_or_else(|| "prompt array entries must be numbers".to_string())?;
-                if !(0.0..=255.0).contains(&n) || n.fract() != 0.0 {
-                    return Err(format!("prompt token {n} out of range 0..=255"));
-                }
-                toks.push((n as u32 % vocab) as u8);
-            }
-            toks
-        }
-        Some(Json::Str(_)) | Some(Json::Arr(_)) => return Err("empty prompt".to_string()),
-        _ => return Err("missing \"prompt\" (string or token array)".to_string()),
-    };
-    let max_new = match doc.get("max_new") {
-        None => DEFAULT_MAX_NEW,
-        Some(v) => match v.as_f64() {
-            Some(n) if (1.0..=MAX_MAX_NEW as f64).contains(&n) && n.fract() == 0.0 => {
-                n as usize
-            }
-            _ => return Err(format!("max_new must be an integer in 1..={MAX_MAX_NEW}")),
-        },
-    };
-    let deadline_ms = match doc.get("deadline_ms") {
-        None => None,
-        Some(v) => match v.as_f64() {
-            Some(ms) if ms >= 0.0 => Some(ms as u64),
-            _ => return Err("deadline_ms must be a non-negative number".to_string()),
-        },
-    };
-    Ok(GenSpec { prompt, max_new, deadline_ms })
-}
-
-/// `POST /generate`: admit the request into the bridge and stream its
-/// tokens back. The status line is withheld until the FIRST stream event,
-/// so a rejection is a clean `413` rather than a broken 200-stream.
+/// `POST /generate`: parse the schema-3 request, route it to a replica,
+/// and stream its tokens back. The status line is withheld until the
+/// FIRST stream event, so a rejection is a clean `413` rather than a
+/// broken 200-stream.
 fn handle_generate(
     stream: &mut TcpStream,
     req: &HttpRequest,
     keep: bool,
+    ctl: &GatewayCtl,
     hc: &HandlerCtx,
 ) -> std::io::Result<()> {
-    let spec = match parse_generate(&req.body, hc.vocab) {
-        Ok(spec) => spec,
-        Err(msg) => return write_response(stream, 400, "text/plain", msg.as_bytes(), keep),
+    let greq = match GenerateRequest::parse(&req.body) {
+        Ok(r) => r,
+        Err(e) => {
+            return write_response(stream, 400, "text/plain", e.to_string().as_bytes(), keep)
+        }
     };
-    let deadline = spec
-        .deadline_ms
-        .map(Duration::from_millis)
-        .or(hc.default_deadline)
-        .map(|d| Instant::now() + d);
+    let deadline = greq.deadline().or(hc.default_deadline).map(|d| Instant::now() + d);
     let (etx, erx) = mpsc::channel::<StreamEvent>();
-    let sr =
-        StreamRequest { prompt: spec.prompt, max_new: spec.max_new, deadline, tx: etx };
-    if hc.tx.send(sr).is_err() {
-        return write_response(stream, 503, "text/plain", b"server shutting down", false);
+    let sr = StreamRequest {
+        prompt: greq.prompt_tokens(hc.vocab),
+        max_new: greq.effective_max_new(),
+        deadline,
+        tx: etx,
+    };
+    match hc.router.dispatch(sr) {
+        Ok(_replica) => {}
+        Err(DispatchError::Shed(_)) => return shed_response(stream, ctl, keep),
+        Err(DispatchError::Unavailable(_)) => {
+            return write_response(stream, 503, "text/plain", b"server shutting down", false)
+        }
     }
     let first = match erx.recv() {
         Ok(ev) => ev,
@@ -637,7 +689,7 @@ fn handle_generate(
         }
     };
     if let StreamEvent::Rejected(msg) = first {
-        let doc = obj(vec![("error", s(&msg))]).dump();
+        let doc = GenerateEvent::Error(msg).to_line();
         return write_response(stream, 413, "application/json", doc.as_bytes(), keep);
     }
     let sse = req.wants_sse();
@@ -647,22 +699,21 @@ fn handle_generate(
     let mut trace: Option<String> = None;
     loop {
         let line = match &ev {
-            StreamEvent::Token(t) => format!("{{\"t\":{t}}}"),
+            StreamEvent::Token(t) => GenerateEvent::Token(*t).to_line(),
             StreamEvent::Done(d) => {
                 trace = Some(d.trace.header_value());
-                obj(vec![
-                    ("done", Json::Bool(true)),
-                    ("generated", num(d.generated as f64)),
-                    ("ttft_s", num(d.ttft_s)),
-                    ("latency_s", num(d.latency_s)),
-                    ("stopped", s(d.stopped.label())),
-                    ("trace", d.trace.to_json()),
-                ])
-                .dump()
+                GenerateEvent::Done(DoneEvent {
+                    generated: d.generated,
+                    ttft_s: d.ttft_s,
+                    latency_s: d.latency_s,
+                    stopped: d.stopped.label().to_string(),
+                    trace: Some(d.trace.to_json()),
+                })
+                .to_line()
             }
             // a rejection is always the first event; unreachable here, but
             // surface it rather than hang if that invariant ever breaks
-            StreamEvent::Rejected(msg) => obj(vec![("error", s(msg))]).dump(),
+            StreamEvent::Rejected(msg) => GenerateEvent::Error(msg.clone()).to_line(),
         };
         if sse {
             cw.sse_event(&line)?;
@@ -689,46 +740,30 @@ fn handle_generate(
 mod tests {
     #![allow(clippy::unwrap_used)]
     use super::*;
+    use std::sync::atomic::AtomicUsize;
 
-    #[test]
-    fn parse_generate_accepts_string_and_array_prompts() {
-        let spec =
-            parse_generate(br#"{"prompt": "hi", "max_new": 3}"#, 32).expect("string prompt");
-        assert_eq!(spec.prompt, vec![b'h' % 32, b'i' % 32]);
-        assert_eq!(spec.max_new, 3);
-        assert_eq!(spec.deadline_ms, None);
-
-        let spec = parse_generate(br#"{"prompt": [1, 2, 40], "deadline_ms": 250}"#, 32)
-            .expect("array prompt");
-        assert_eq!(spec.prompt, vec![1, 2, 40 % 32]);
-        assert_eq!(spec.max_new, DEFAULT_MAX_NEW);
-        assert_eq!(spec.deadline_ms, Some(250));
-    }
-
-    #[test]
-    fn parse_generate_rejects_bad_bodies() {
-        for (body, why) in [
-            (&b"not json"[..], "garbage"),
-            (br#"{}"#, "missing prompt"),
-            (br#"{"prompt": ""}"#, "empty string prompt"),
-            (br#"{"prompt": []}"#, "empty array prompt"),
-            (br#"{"prompt": [1, "x"]}"#, "non-numeric token"),
-            (br#"{"prompt": [300]}"#, "token out of range"),
-            (br#"{"prompt": "a", "max_new": 0}"#, "zero max_new"),
-            (br#"{"prompt": "a", "max_new": 99999}"#, "huge max_new"),
-            (br#"{"prompt": "a", "deadline_ms": -5}"#, "negative deadline"),
-        ] {
-            assert!(parse_generate(body, 32).is_err(), "should reject: {why}");
-        }
+    fn ctl_with_seats(n: usize) -> (GatewayCtl, Arc<Router>) {
+        let ctl = GatewayCtl::new();
+        let reg = ctl.registry();
+        let seats = (0..n)
+            .map(|id| {
+                let labeled = if n > 1 { Some(reg.as_ref()) } else { None };
+                Arc::new(Seat::new(id, None, None, labeled))
+            })
+            .collect();
+        let router = Arc::new(Router::new(seats, 0, &reg));
+        ctl.set_router(Some(router.clone()));
+        (ctl, router)
     }
 
     #[test]
     fn ctl_drain_flag_and_gauges() {
-        let ctl = GatewayCtl::new();
+        let (ctl, router) = ctl_with_seats(1);
         assert!(!ctl.is_draining());
         ctl.drain();
         assert!(ctl.is_draining());
-        ctl.set_gauges(3, 7);
+        router.seats()[0].set_load(3, 7);
+        ctl.republish_gauges();
         assert_eq!(ctl.gauges(), (3, 7));
         // stats JSON is the schema-2 envelope; the gauges ride under
         // "gateway" and mirror into the registry exposition
@@ -739,6 +774,27 @@ mod tests {
         let text = ctl.registry().render_prometheus();
         assert!(text.contains("stbllm_gateway_active 3"), "{text}");
         assert!(text.contains("stbllm_gateway_queued 7"), "{text}");
+    }
+
+    #[test]
+    fn stats_json_carries_a_replicas_section() {
+        let (ctl, router) = ctl_with_seats(2);
+        router.seats()[1].set_load(1, 2);
+        router.seats()[1].note_completed();
+        ctl.republish_gauges();
+        let doc = Json::parse(&ctl.stats_json().dump()).unwrap();
+        let rows = doc.get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("id").and_then(Json::as_usize), Some(0));
+        assert_eq!(rows[1].get("active").and_then(Json::as_usize), Some(1));
+        assert_eq!(rows[1].get("completed").and_then(Json::as_usize), Some(1));
+        // the flat gateway section stays: aggregate gauges sum the seats
+        assert_eq!(doc.path(&["gateway", "active"]).and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.path(&["gateway", "queued"]).and_then(Json::as_usize), Some(2));
+        // and per-replica labeled series land in the exposition
+        let text = ctl.registry().render_prometheus();
+        assert!(text.contains("stbllm_gateway_active{replica=\"1\"} 1"), "{text}");
+        assert!(text.contains("stbllm_gateway_completed_total{replica=\"1\"} 1"), "{text}");
     }
 
     #[test]
@@ -755,18 +811,19 @@ mod tests {
         let ctl = GatewayCtl::new();
         let count = Arc::new(AtomicUsize::new(0));
         let c2 = count.clone();
-        ctl.set_tick_hook(Some(Arc::new(move |t| {
+        ctl.set_tick_hook(Some(Arc::new(move |replica, t| {
+            assert_eq!(replica, 3, "hook must see the firing replica");
             c2.fetch_add(t as usize + 1, Ordering::SeqCst);
         })));
-        ctl.fire_tick_hook(0);
-        ctl.fire_tick_hook(1);
+        ctl.fire_tick_hook(3, 0);
+        ctl.fire_tick_hook(3, 1);
         assert_eq!(count.load(Ordering::SeqCst), 3);
         // the hook is called OUTSIDE the slot lock: a panicking hook
         // unwinds the caller but the slot stays usable
-        ctl.set_tick_hook(Some(Arc::new(|_| panic!("injected hook panic"))));
-        assert!(catch_unwind(AssertUnwindSafe(|| ctl.fire_tick_hook(2))).is_err());
+        ctl.set_tick_hook(Some(Arc::new(|_, _| panic!("injected hook panic"))));
+        assert!(catch_unwind(AssertUnwindSafe(|| ctl.fire_tick_hook(0, 2))).is_err());
         ctl.set_tick_hook(None);
-        ctl.fire_tick_hook(3); // must not panic on a poisoned lock
+        ctl.fire_tick_hook(0, 3); // must not panic on a poisoned lock
     }
 
     #[test]

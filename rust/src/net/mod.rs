@@ -2,19 +2,28 @@
 //!
 //! Dependency-free (`std::net` only) HTTP/1.1 serving for the packed
 //! sub-1-bit model: many concurrent clients share ONE resident model
-//! through the same continuous-batching scheduler offline serving uses.
+//! through the same continuous-batching scheduler offline serving uses —
+//! optionally as several decode replicas over the shared weights, behind
+//! a prefix-affinity router.
 //!
 //! Module map:
+//! * [`api`] — the versioned wire schema: typed [`GenerateRequest`] /
+//!   [`GenerateEvent`] with one parse/serialize pair shared by the
+//!   gateway, the load generator, the chaos harness and the tests.
 //! * [`http`] — request parsing, fixed/chunked/SSE response writing, and
 //!   the client-side helpers the load generator uses.
 //! * [`listener`] — nonblocking acceptor + bounded worker pool.
 //! * [`bridge`] — the decode-side worker: feeds requests into the shared
 //!   `BatchServer` scheduling kernel and streams tokens back per tick,
 //!   with deadlines, disconnect cancellation, and graceful drain.
+//! * [`router`] — replica seats and the [`Router`]: prompt-prefix
+//!   affinity, least-loaded fallback, per-replica shed watermarks, and
+//!   dead-replica request migration.
 //! * [`gateway`] — endpoints (`/generate`, `/healthz`, `/stats`,
 //!   `/metrics`, `/admin/drain`), connection handling, load shedding
-//!   (503 + `Retry-After` when the KV pool nears exhaustion), the bridge
-//!   panic supervisor, and [`serve_http`] tying it all together.
+//!   (503 + `Retry-After` when every replica's KV pool nears
+//!   exhaustion), the bridge panic supervisor, and [`serve_http`] tying
+//!   it all together.
 //! * [`stats`] — registry-backed [`GatewayStats`] handles (including the
 //!   fault counters: `shed`, `handler_panics`, `bridge_panics`,
 //!   `bridge_restarts`) and the schema-2 `/stats` snapshot. The same
@@ -22,16 +31,25 @@
 //!   `/generate` response carries a per-request trace (done-event
 //!   `"trace"` + `x-stbllm-trace` trailer).
 //!
-//! Entry points: `stbllm serve --http ADDR` (CLI), [`serve_http`]
-//! (library), [`bridge::serve_stream`] (in-process streaming without
-//! sockets).
+//! Entry points: `stbllm serve --http ADDR [--replicas R]` (CLI),
+//! [`serve_http`] (library), [`bridge::serve_stream`] (in-process
+//! streaming without sockets).
 
+pub mod api;
 pub mod bridge;
 pub mod gateway;
 pub mod http;
 pub mod listener;
+pub mod router;
 pub mod stats;
 
+pub use api::{
+    split_lines, ApiError, DoneEvent, GenerateEvent, GenerateRequest, Prompt, API_SCHEMA_VERSION,
+};
 pub use bridge::{serve_stream, BridgeOpts, DoneInfo, StreamEvent, StreamRequest};
-pub use gateway::{serve_http, GatewayCtl, GatewayReport, HttpServeOpts, TickHook};
+pub use gateway::{serve_http, GatewayCtl, GatewayReport, ServeConfig, TickHook};
+pub use router::{
+    Admission, DispatchError, ReplicaSnapshot, ReplicasSnapshot, Router, Seat,
+    AFFINITY_PREFIX_TOKENS,
+};
 pub use stats::{GatewaySnapshot, GatewayStats, StopReason};

@@ -1,0 +1,672 @@
+//! Prefix-affinity routing across shared-weight engine replicas.
+//!
+//! `serve_http --replicas R` runs R independent decode workers — each its
+//! own `BatchServer`, bridge thread and KV pool slice — over ONE resident
+//! set of packed weights (every replica borrows the same `&dyn Backend`;
+//! sub-1-bit packing is what makes R decode loops per host affordable).
+//! The [`Router`] is the admission seam between the HTTP handlers and
+//! those workers:
+//!
+//! * **Prefix affinity** — a request is routed by a hash of its prompt
+//!   prefix ([`Router::affine_replica`]), so repeated prompts land on the
+//!   replica whose KV pool already holds their prefix pages and the
+//!   prefix cache keeps hitting across replicas.
+//! * **Least-loaded fallback** — if the affine replica is dead or below
+//!   its free-page watermark, the stream goes to the alive replica with
+//!   the fewest in-flight streams instead.
+//! * **Shed** — if no replica can take the stream, admission refuses it
+//!   (`503 + Retry-After` at the gateway) rather than queueing forever.
+//! * **Migration on replica death** — when a replica exhausts its panic
+//!   restarts, its supervisor turns into a forwarder pump: requests still
+//!   queued on the dead replica's channel are re-dispatched through
+//!   [`Router::redispatch`] to surviving replicas instead of dying with
+//!   the worker.
+//!
+//! Every decision is counted (`stbllm_router_affinity`,
+//! `stbllm_router_fallback`, `stbllm_router_migrated`) and the pick +
+//! channel handoff is timed (`stbllm_router_dispatch_seconds`). With more
+//! than one replica, each [`Seat`] additionally publishes the existing
+//! gateway gauges and fault counters under a `replica="N"` label.
+//!
+//! Greedy decode makes a stream's bytes a pure function of its prompt, so
+//! routing — whichever replica wins — can never change what a client
+//! receives; the `--replicas 2` parity test pins that.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, PoisonError};
+use std::time::Instant;
+
+use crate::coordinator::kvpool::{KvPool, KvPoolStats};
+use crate::net::bridge::{StreamEvent, StreamRequest};
+use crate::obs::{Counter, Gauge, Histogram, Registry, Snapshot};
+use crate::util::json::{num, obj, Json};
+
+/// How many leading prompt tokens feed the affinity hash. Matches the
+/// scale of a few KV pages, so prompts sharing a cacheable prefix share a
+/// replica even when their tails differ.
+pub const AFFINITY_PREFIX_TOKENS: usize = 16;
+
+/// Labeled per-replica handles, minted only when `replicas > 1` — with a
+/// single seat the unlabeled aggregate series already tell the whole
+/// story, and minting both would double-publish.
+struct SeatMetrics {
+    active_g: Arc<Gauge>,
+    queued_g: Arc<Gauge>,
+    completed: Arc<Counter>,
+    panics: Arc<Counter>,
+    restarts: Arc<Counter>,
+    routed: Arc<Counter>,
+}
+
+/// One replica as the router sees it: its request channel, KV pool slice,
+/// live load, and fault history. The plain atomics are authoritative (the
+/// `/stats` replicas section reads them); the optional labeled registry
+/// handles mirror them into `/metrics`.
+pub struct Seat {
+    id: usize,
+    pool: Option<Arc<KvPool>>,
+    tx: Mutex<Option<mpsc::SyncSender<StreamRequest>>>,
+    active: AtomicUsize,
+    queued: AtomicUsize,
+    dead: AtomicBool,
+    completed: AtomicU64,
+    panics: AtomicU64,
+    restarts: AtomicU64,
+    metrics: Option<SeatMetrics>,
+}
+
+impl Seat {
+    /// Build a seat. `labeled` is the registry to mint `replica="id"`
+    /// series from — pass `Some` only when serving more than one replica.
+    pub(crate) fn new(
+        id: usize,
+        pool: Option<Arc<KvPool>>,
+        tx: Option<mpsc::SyncSender<StreamRequest>>,
+        labeled: Option<&Registry>,
+    ) -> Seat {
+        let metrics = labeled.map(|r| {
+            let l = format!("replica=\"{id}\"");
+            SeatMetrics {
+                active_g: r.gauge_with("stbllm_gateway_active", &l, "streams currently decoding"),
+                queued_g: r.gauge_with(
+                    "stbllm_gateway_queued",
+                    &l,
+                    "streams waiting for admission",
+                ),
+                completed: r.counter_with(
+                    "stbllm_gateway_completed",
+                    &l,
+                    "streams run to completion",
+                ),
+                panics: r.counter_with("stbllm_gateway_bridge_panics", &l, "bridge worker panics"),
+                restarts: r.counter_with(
+                    "stbllm_gateway_bridge_restarts",
+                    &l,
+                    "bridge restarts after a panic",
+                ),
+                routed: r.counter_with(
+                    "stbllm_router_routed",
+                    &l,
+                    "streams handed to this replica",
+                ),
+            }
+        });
+        Seat {
+            id,
+            pool,
+            tx: Mutex::new(tx),
+            active: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+            completed: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+            metrics,
+        }
+    }
+
+    /// This replica's index (also its `replica="N"` label value).
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// The replica's KV pool slice (`None` on flat serving).
+    pub fn pool(&self) -> Option<&Arc<KvPool>> {
+        self.pool.as_ref()
+    }
+
+    /// Live KV counters for this replica's pool slice.
+    pub fn kv_stats(&self) -> Option<KvPoolStats> {
+        self.pool.as_ref().map(|p| p.stats())
+    }
+
+    /// Pages not promised to a live session; `usize::MAX` on flat serving
+    /// (an unpaged replica never sheds on pool pressure).
+    pub fn free_pages(&self) -> usize {
+        self.pool.as_ref().map_or(usize::MAX, |p| p.stats().free_pages())
+    }
+
+    /// Whether the replica can still take work (its supervisor has not
+    /// given up).
+    pub fn is_alive(&self) -> bool {
+        !self.dead.load(Ordering::SeqCst)
+    }
+
+    /// In-flight load (decoding + waiting) — the least-loaded sort key.
+    pub fn load(&self) -> usize {
+        self.active.load(Ordering::Relaxed) + self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Current `(active, queued)` for this replica.
+    pub fn gauges(&self) -> (usize, usize) {
+        (self.active.load(Ordering::Relaxed), self.queued.load(Ordering::Relaxed))
+    }
+
+    fn tx_clone(&self) -> Option<mpsc::SyncSender<StreamRequest>> {
+        self.tx.lock().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Hand a request to this replica's bridge. The sender is cloned out
+    /// of the lock first — the channel is bounded and a send may block.
+    pub(crate) fn send(&self, req: StreamRequest) -> Result<(), StreamRequest> {
+        match self.tx_clone() {
+            Some(tx) => tx.send(req).map_err(|e| e.0),
+            None => Err(req),
+        }
+    }
+
+    /// Drop this seat's request sender. The seat holds the only long-lived
+    /// sender for its replica, so this is the replica's drain signal.
+    pub(crate) fn close(&self) {
+        self.tx.lock().unwrap_or_else(PoisonError::into_inner).take();
+    }
+
+    /// Mark the replica unroutable (supervisor gave up restarting it).
+    pub(crate) fn mark_dead(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+    }
+
+    /// Publish this replica's scheduler gauges (bridge-internal, once per
+    /// tick).
+    pub(crate) fn set_load(&self, active: usize, queued: usize) {
+        self.active.store(active, Ordering::Relaxed);
+        self.queued.store(queued, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.active_g.set(active as i64);
+            m.queued_g.set(queued as i64);
+        }
+    }
+
+    /// Count a request entering this replica's admission queue.
+    pub(crate) fn note_enqueued(&self) {
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.queued_g.add(1);
+        }
+    }
+
+    /// Count a stream this replica ran to completion.
+    pub(crate) fn note_completed(&self) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.completed.inc();
+        }
+    }
+
+    /// Count a decode-loop panic caught by this replica's supervisor.
+    pub(crate) fn note_panic(&self) {
+        self.panics.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.panics.inc();
+        }
+    }
+
+    /// Count a post-panic restart of this replica's bridge.
+    pub(crate) fn note_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = &self.metrics {
+            m.restarts.inc();
+        }
+    }
+
+    fn note_routed(&self) {
+        if let Some(m) = &self.metrics {
+            m.routed.inc();
+        }
+    }
+
+    /// Freeze this replica's row of the `/stats` `"replicas"` section.
+    pub fn snapshot(&self) -> ReplicaSnapshot {
+        let (active, queued) = self.gauges();
+        ReplicaSnapshot {
+            id: self.id,
+            active,
+            queued,
+            completed: self.completed.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            restarts: self.restarts.load(Ordering::Relaxed),
+            dead: !self.is_alive(),
+            kv: self.kv_stats(),
+        }
+    }
+}
+
+/// Why [`Router::dispatch`] refused a request (the request comes back so
+/// the caller can answer its stream).
+pub enum DispatchError {
+    /// Every alive replica is below its free-page watermark — shed with a
+    /// retry hint.
+    Shed(StreamRequest),
+    /// No replica can ever take it (all dead or draining).
+    Unavailable(StreamRequest),
+}
+
+/// What `/generate` admission would do right now (checked before the body
+/// is even parsed, mirroring the single-replica pre-admit shed).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// At least one replica is routable.
+    Open,
+    /// Alive replicas exist but all are at their watermark.
+    Shed,
+    /// No alive, un-drained replica remains.
+    Closed,
+}
+
+/// The replica router: owns the seats and every routing decision. Shared
+/// (`Arc`) between the HTTP handlers, the per-replica supervisors, and
+/// the control handle's `/stats` path.
+pub struct Router {
+    seats: Vec<Arc<Seat>>,
+    /// Per-replica free-page shed watermark (0 disables shedding).
+    watermark: usize,
+    affinity_c: Arc<Counter>,
+    fallback_c: Arc<Counter>,
+    migrated_c: Arc<Counter>,
+    dispatch_h: Arc<Histogram>,
+}
+
+impl Router {
+    /// Build a router over `seats` with a per-replica free-page shed
+    /// `watermark`, minting the routing metrics from `registry`.
+    pub(crate) fn new(seats: Vec<Arc<Seat>>, watermark: usize, registry: &Registry) -> Router {
+        assert!(!seats.is_empty(), "router needs at least one replica seat");
+        Router {
+            seats,
+            watermark,
+            affinity_c: registry
+                .counter("stbllm_router_affinity", "streams routed to their affine replica"),
+            fallback_c: registry.counter(
+                "stbllm_router_fallback",
+                "streams routed least-loaded off their affine replica",
+            ),
+            migrated_c: registry
+                .counter("stbllm_router_migrated", "streams migrated off a dead replica"),
+            dispatch_h: registry
+                .histogram("stbllm_router_dispatch_seconds", "routing pick + channel handoff"),
+        }
+    }
+
+    /// The replica a prompt is affine to: an FNV-1a hash of its first
+    /// [`AFFINITY_PREFIX_TOKENS`] tokens, mod the replica count. Pure and
+    /// public so tests (and operators) can predict placement.
+    pub fn affine_replica(prompt: &[u8], replicas: usize) -> usize {
+        if replicas <= 1 {
+            return 0;
+        }
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in prompt.iter().take(AFFINITY_PREFIX_TOKENS) {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        (h % replicas as u64) as usize
+    }
+
+    /// The seats, indexed by replica id.
+    pub fn seats(&self) -> &[Arc<Seat>] {
+        &self.seats
+    }
+
+    /// Alive replica count.
+    pub fn alive(&self) -> usize {
+        self.seats.iter().filter(|s| s.is_alive()).count()
+    }
+
+    /// Summed `(active, queued)` across replicas — the aggregate gauges.
+    pub fn loads(&self) -> (usize, usize) {
+        self.seats.iter().fold((0, 0), |(a, q), s| {
+            let (sa, sq) = s.gauges();
+            (a + sa, q + sq)
+        })
+    }
+
+    /// Merged KV counters across every replica's pool slice (`None` on
+    /// flat serving). For one replica this is exactly that pool's stats,
+    /// which keeps the single-replica `/stats` document byte-compatible.
+    pub fn kv_stats(&self) -> Option<KvPoolStats> {
+        let mut merged: Option<KvPoolStats> = None;
+        for s in &self.seats {
+            if let Some(kv) = s.kv_stats() {
+                match &mut merged {
+                    None => merged = Some(kv),
+                    Some(m) => m.merge(&kv),
+                }
+            }
+        }
+        merged
+    }
+
+    fn routable(&self, seat: &Seat) -> bool {
+        seat.is_alive() && (self.watermark == 0 || seat.free_pages() >= self.watermark)
+    }
+
+    /// What admission would decide right now.
+    pub fn admission(&self) -> Admission {
+        let mut any_alive = false;
+        for s in &self.seats {
+            if !s.is_alive() || s.tx_clone().is_none() {
+                continue;
+            }
+            any_alive = true;
+            if self.routable(s) {
+                return Admission::Open;
+            }
+        }
+        if any_alive {
+            Admission::Shed
+        } else {
+            Admission::Closed
+        }
+    }
+
+    /// Candidate order for a request: the affine replica first, then the
+    /// rest least-loaded (ties broken by id, so the order — and therefore
+    /// single-replica behavior — is deterministic).
+    fn candidate_order(&self, affine: usize, exclude: Option<usize>) -> Vec<usize> {
+        let mut order: Vec<usize> =
+            (0..self.seats.len()).filter(|&i| Some(i) != exclude).collect();
+        order.sort_by_key(|&i| (self.seats[i].load(), i));
+        if let Some(pos) = order.iter().position(|&i| i == affine) {
+            let a = order.remove(pos);
+            order.insert(0, a);
+        }
+        order
+    }
+
+    /// Route one stream: affine replica if routable, else least-loaded
+    /// alive replica above the watermark, else a typed refusal. A send
+    /// that fails because a replica's channel vanished marks that seat
+    /// dead and falls through to the next candidate.
+    pub(crate) fn dispatch(&self, req: StreamRequest) -> Result<usize, DispatchError> {
+        let t0 = Instant::now();
+        let affine = Router::affine_replica(&req.prompt, self.seats.len());
+        let mut req = req;
+        for i in self.candidate_order(affine, None) {
+            let seat = &self.seats[i];
+            if !self.routable(seat) {
+                continue;
+            }
+            match seat.send(req) {
+                Ok(()) => {
+                    if i == affine {
+                        self.affinity_c.inc();
+                    } else {
+                        self.fallback_c.inc();
+                    }
+                    seat.note_routed();
+                    self.dispatch_h.record_secs(t0.elapsed().as_secs_f64());
+                    return Ok(i);
+                }
+                Err(r) => {
+                    // disconnected channel: the replica's supervisor is
+                    // gone for good (a drained seat is skipped above by
+                    // its taken sender)
+                    if seat.tx_clone().is_some() {
+                        seat.mark_dead();
+                    }
+                    req = r;
+                }
+            }
+        }
+        match self.admission() {
+            Admission::Shed => Err(DispatchError::Shed(req)),
+            _ => Err(DispatchError::Unavailable(req)),
+        }
+    }
+
+    /// Migrate a request off dead replica `from` to the least-loaded
+    /// survivor, ignoring the watermark (migrating beats dying). Returns
+    /// `true` on success; on total failure the stream is answered with a
+    /// terminal `Rejected` event.
+    pub(crate) fn redispatch(&self, req: StreamRequest, from: usize) -> bool {
+        let mut req = req;
+        for i in self.candidate_order(from, Some(from)) {
+            let seat = &self.seats[i];
+            if !seat.is_alive() {
+                continue;
+            }
+            match seat.send(req) {
+                Ok(()) => {
+                    self.migrated_c.inc();
+                    seat.note_routed();
+                    return true;
+                }
+                Err(r) => req = r,
+            }
+        }
+        let _ = req.tx.send(StreamEvent::Rejected("no replicas available".to_string()));
+        false
+    }
+
+    /// Drop every seat's request sender — the gateway-wide drain signal:
+    /// each bridge finishes its in-flight work and exits.
+    pub(crate) fn close(&self) {
+        for s in &self.seats {
+            s.close();
+        }
+    }
+
+    /// Freeze the `/stats` `"replicas"` section.
+    pub fn snapshot(&self) -> ReplicasSnapshot {
+        ReplicasSnapshot { replicas: self.seats.iter().map(|s| s.snapshot()).collect() }
+    }
+}
+
+/// One replica's row in the `/stats` `"replicas"` section.
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    /// Replica id (the `replica="N"` label value).
+    pub id: usize,
+    /// Streams decoding on this replica.
+    pub active: usize,
+    /// Streams waiting in its admission queue.
+    pub queued: usize,
+    /// Streams it ran to completion.
+    pub completed: u64,
+    /// Decode-loop panics its supervisor caught.
+    pub panics: u64,
+    /// Post-panic bridge restarts.
+    pub restarts: u64,
+    /// Whether its supervisor has given up (requests migrate away).
+    pub dead: bool,
+    /// Its KV pool slice counters (`None` on flat serving).
+    pub kv: Option<KvPoolStats>,
+}
+
+impl ReplicaSnapshot {
+    /// JSON row for the `"replicas"` array.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", num(self.id as f64)),
+            ("active", num(self.active as f64)),
+            ("queued", num(self.queued as f64)),
+            ("completed", num(self.completed as f64)),
+            ("panics", num(self.panics as f64)),
+            ("restarts", num(self.restarts as f64)),
+            ("dead", Json::Bool(self.dead)),
+        ];
+        if let Some(kv) = &self.kv {
+            fields.push(("kv", kv.to_json()));
+        }
+        obj(fields)
+    }
+}
+
+/// The `"replicas"` section of the schema-2 `/stats` envelope: one row
+/// per replica.
+#[derive(Clone, Debug)]
+pub struct ReplicasSnapshot {
+    /// Per-replica rows, indexed by id.
+    pub replicas: Vec<ReplicaSnapshot>,
+}
+
+impl Snapshot for ReplicasSnapshot {
+    fn name(&self) -> &'static str {
+        "replicas"
+    }
+
+    fn to_json(&self) -> Json {
+        Json::Arr(self.replicas.iter().map(ReplicaSnapshot::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+    use std::time::Duration;
+
+    fn seat_with_chan(
+        id: usize,
+        reg: Option<&Registry>,
+    ) -> (Arc<Seat>, mpsc::Receiver<StreamRequest>) {
+        let (tx, rx) = mpsc::sync_channel(64);
+        (Arc::new(Seat::new(id, None, Some(tx), reg)), rx)
+    }
+
+    fn req(prompt: Vec<u8>) -> (StreamRequest, mpsc::Receiver<StreamEvent>) {
+        let (tx, rx) = mpsc::channel();
+        (StreamRequest { prompt, max_new: 1, deadline: None, tx }, rx)
+    }
+
+    #[test]
+    fn affinity_is_deterministic_and_prefix_based() {
+        let a = Router::affine_replica(&[1, 2, 3, 4], 4);
+        assert_eq!(a, Router::affine_replica(&[1, 2, 3, 4], 4), "must be stable");
+        // only the first AFFINITY_PREFIX_TOKENS tokens matter
+        let mut long = vec![7u8; AFFINITY_PREFIX_TOKENS];
+        let base = Router::affine_replica(&long, 4);
+        long.push(99);
+        long.push(123);
+        assert_eq!(base, Router::affine_replica(&long, 4), "tail must not change affinity");
+        assert_eq!(Router::affine_replica(&[9, 9], 1), 0);
+        // the hash actually spreads: some pair of small prompts differs
+        let spread: std::collections::BTreeSet<usize> =
+            (0u8..32).map(|b| Router::affine_replica(&[b], 4)).collect();
+        assert!(spread.len() > 1, "all prompts hashed to one replica");
+    }
+
+    #[test]
+    fn dispatch_prefers_the_affine_seat() {
+        let reg = Registry::new();
+        let (s0, rx0) = seat_with_chan(0, None);
+        let (s1, rx1) = seat_with_chan(1, None);
+        let router = Router::new(vec![s0, s1], 0, &reg);
+        // find prompts affine to each replica
+        let p0 = (0u8..64).find(|&b| Router::affine_replica(&[b], 2) == 0).unwrap();
+        let p1 = (0u8..64).find(|&b| Router::affine_replica(&[b], 2) == 1).unwrap();
+        let (r, _e0) = req(vec![p0]);
+        assert_eq!(router.dispatch(r).ok(), Some(0));
+        let (r, _e1) = req(vec![p1]);
+        assert_eq!(router.dispatch(r).ok(), Some(1));
+        assert!(rx0.try_recv().is_ok());
+        assert!(rx1.try_recv().is_ok());
+        assert_eq!(router.affinity_c.get(), 2);
+        assert_eq!(router.fallback_c.get(), 0);
+        assert_eq!(router.dispatch_h.count(), 2);
+    }
+
+    #[test]
+    fn dead_affine_seat_falls_back_least_loaded() {
+        let reg = Registry::new();
+        let (s0, _rx0) = seat_with_chan(0, None);
+        let (s1, rx1) = seat_with_chan(1, None);
+        let (s2, rx2) = seat_with_chan(2, None);
+        s2.set_load(5, 2); // busier than s1
+        let router = Router::new(vec![s0.clone(), s1, s2], 0, &reg);
+        s0.mark_dead();
+        let p0 = (0u8..255).find(|&b| Router::affine_replica(&[b], 3) == 0).unwrap();
+        let (r, _e) = req(vec![p0]);
+        assert_eq!(router.dispatch(r).ok(), Some(1), "least-loaded survivor must win");
+        assert!(rx1.try_recv().is_ok());
+        assert!(rx2.try_recv().is_err());
+        assert_eq!(router.fallback_c.get(), 1);
+    }
+
+    #[test]
+    fn admission_shed_and_closed_states() {
+        let reg = Registry::new();
+        let (s0, _rx0) = seat_with_chan(0, None);
+        let (s1, _rx1) = seat_with_chan(1, None);
+        // watermark > 0 with no pool: free_pages() is usize::MAX => open
+        let router = Router::new(vec![s0.clone(), s1.clone()], 4, &reg);
+        assert_eq!(router.admission(), Admission::Open);
+        s0.mark_dead();
+        assert_eq!(router.admission(), Admission::Open);
+        s1.close(); // drained
+        assert_eq!(router.admission(), Admission::Closed);
+        let (r, erx) = req(vec![1]);
+        assert!(matches!(router.dispatch(r), Err(DispatchError::Unavailable(_))));
+        drop(erx);
+    }
+
+    #[test]
+    fn redispatch_migrates_and_rejects_when_no_survivor() {
+        let reg = Registry::new();
+        let (s0, _rx0) = seat_with_chan(0, None);
+        let (s1, rx1) = seat_with_chan(1, None);
+        let router = Router::new(vec![s0.clone(), s1.clone()], 0, &reg);
+        s0.mark_dead();
+        let (r, erx) = req(vec![42]);
+        assert!(router.redispatch(r, 0), "must migrate to the survivor");
+        assert!(rx1.try_recv().is_ok());
+        assert_eq!(router.migrated_c.get(), 1);
+        drop(erx);
+        // no survivor left: the stream gets a terminal Rejected event
+        s1.mark_dead();
+        let (r, erx) = req(vec![42]);
+        assert!(!router.redispatch(r, 0));
+        match erx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            StreamEvent::Rejected(msg) => assert!(msg.contains("no replicas"), "{msg}"),
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn labeled_seats_publish_per_replica_series() {
+        let reg = Registry::new();
+        let (s0, _rx0) = seat_with_chan(0, Some(&reg));
+        let (s1, _rx1) = seat_with_chan(1, Some(&reg));
+        s0.set_load(2, 1);
+        s1.note_completed();
+        s1.note_panic();
+        s1.note_restart();
+        let router = Router::new(vec![s0, s1], 0, &reg);
+        assert_eq!(router.loads(), (2, 1));
+        let text = reg.render_prometheus();
+        assert!(text.contains("stbllm_gateway_active{replica=\"0\"} 2"), "{text}");
+        assert!(text.contains("stbllm_gateway_queued{replica=\"0\"} 1"), "{text}");
+        assert!(text.contains("stbllm_gateway_completed_total{replica=\"1\"} 1"), "{text}");
+        assert!(text.contains("stbllm_gateway_bridge_panics_total{replica=\"1\"} 1"), "{text}");
+        let snap = router.snapshot();
+        assert_eq!(snap.replicas.len(), 2);
+        assert_eq!(snap.replicas[1].panics, 1);
+        assert_eq!(snap.replicas[1].restarts, 1);
+        let doc = Json::parse(&snap.to_json().dump()).unwrap();
+        let rows = doc.as_arr().unwrap();
+        assert_eq!(rows[0].get("id").and_then(Json::as_usize), Some(0));
+        assert_eq!(rows[0].get("active").and_then(Json::as_usize), Some(2));
+        assert_eq!(rows[1].get("completed").and_then(Json::as_usize), Some(1));
+        assert_eq!(rows[1].get("dead"), Some(&Json::Bool(false)));
+    }
+}

@@ -13,6 +13,12 @@
 //! call compiles to a branch on a constant-false flag. `serve --no-obs`
 //! swaps one in so the recording overhead of the real registry can be
 //! measured as a tok/s delta between two otherwise identical runs.
+//!
+//! Series can carry a fixed label set (`counter_with`/`gauge_with`/
+//! `histogram_with` with e.g. `replica="0"`): same-name series share one
+//! `# HELP`/`# TYPE` preamble and render as `name{labels} value`. The
+//! multi-replica gateway uses this to expose per-replica views of the
+//! serving metrics next to the unlabeled aggregates.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
@@ -30,12 +36,36 @@ pub struct Registry {
     inner: Mutex<Inner>,
 }
 
+/// One series = a metric name plus a (possibly empty) rendered label set
+/// like `replica="0"`. BTreeMap ordering keeps all series of one name
+/// adjacent (empty labels first), so the renderer emits the preamble once
+/// per name.
+type SeriesKey = (String, String);
+
 #[derive(Debug, Default)]
 struct Inner {
-    counters: BTreeMap<String, Arc<Counter>>,
-    gauges: BTreeMap<String, Arc<Gauge>>,
-    hists: BTreeMap<String, Arc<Histogram>>,
+    counters: BTreeMap<SeriesKey, Arc<Counter>>,
+    gauges: BTreeMap<SeriesKey, Arc<Gauge>>,
+    hists: BTreeMap<SeriesKey, Arc<Histogram>>,
     help: BTreeMap<String, String>,
+}
+
+/// `name{labels}` (or just `name` for the unlabeled series).
+fn series(name: &str, suffix: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        format!("{name}{suffix}")
+    } else {
+        format!("{name}{suffix}{{{labels}}}")
+    }
+}
+
+/// Bucket series name with `le` merged after any fixed labels.
+fn bucket_series(name: &str, labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{name}_bucket{{le=\"{le}\"}}")
+    } else {
+        format!("{name}_bucket{{{labels},le=\"{le}\"}}")
+    }
 }
 
 impl Default for Registry {
@@ -75,61 +105,108 @@ impl Registry {
     /// Get-or-create the counter `name` (no `_total` suffix — the
     /// renderer appends it). Re-registration returns the same handle.
     pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, "", help)
+    }
+
+    /// [`Registry::counter`] with a fixed label set, e.g.
+    /// `counter_with("stbllm_gateway_completed", "replica=\"0\"", ...)`.
+    /// Each distinct `(name, labels)` pair is its own series.
+    pub fn counter_with(&self, name: &str, labels: &str, help: &str) -> Arc<Counter> {
         debug_assert!(!name.ends_with("_total"), "register counters without _total: {name}");
+        debug_assert!(!labels.contains(['{', '}', '\n']), "bad label set: {labels}");
         let on = self.on;
         let mut g = self.lock();
         g.help.entry(name.to_string()).or_insert_with(|| help.to_string());
-        Arc::clone(g.counters.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new(on))))
+        Arc::clone(
+            g.counters
+                .entry((name.to_string(), labels.to_string()))
+                .or_insert_with(|| Arc::new(Counter::new(on))),
+        )
     }
 
     /// Get-or-create the gauge `name`.
     pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_with(name, "", help)
+    }
+
+    /// [`Registry::gauge`] with a fixed label set.
+    pub fn gauge_with(&self, name: &str, labels: &str, help: &str) -> Arc<Gauge> {
+        debug_assert!(!labels.contains(['{', '}', '\n']), "bad label set: {labels}");
         let on = self.on;
         let mut g = self.lock();
         g.help.entry(name.to_string()).or_insert_with(|| help.to_string());
-        Arc::clone(g.gauges.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new(on))))
+        Arc::clone(
+            g.gauges
+                .entry((name.to_string(), labels.to_string()))
+                .or_insert_with(|| Arc::new(Gauge::new(on))),
+        )
     }
 
     /// Get-or-create the duration histogram `name` (by convention the
     /// name ends in `_seconds`).
     pub fn histogram(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.histogram_with(name, "", help)
+    }
+
+    /// [`Registry::histogram`] with a fixed label set (the `le` bucket
+    /// label is appended after the fixed labels by the renderer).
+    pub fn histogram_with(&self, name: &str, labels: &str, help: &str) -> Arc<Histogram> {
+        debug_assert!(!labels.contains(['{', '}', '\n']), "bad label set: {labels}");
         let on = self.on;
         let mut g = self.lock();
         g.help.entry(name.to_string()).or_insert_with(|| help.to_string());
-        Arc::clone(g.hists.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(on))))
+        Arc::clone(
+            g.hists
+                .entry((name.to_string(), labels.to_string()))
+                .or_insert_with(|| Arc::new(Histogram::new(on))),
+        )
     }
 
     /// Render the whole registry as Prometheus text exposition (version
-    /// 0.0.4): `# HELP`/`# TYPE` preamble per metric, counters suffixed
-    /// `_total`, histograms as cumulative `_bucket{le=...}` series plus
-    /// `_sum`/`_count`. Deterministic order (name-sorted per kind).
+    /// 0.0.4): `# HELP`/`# TYPE` preamble per metric name (shared by all
+    /// its labeled series), counters suffixed `_total`, histograms as
+    /// cumulative `_bucket{le=...}` series plus `_sum`/`_count`.
+    /// Deterministic order (name-sorted per kind, unlabeled series first
+    /// within a name).
     pub fn render_prometheus(&self) -> String {
         let g = self.lock();
         let mut out = String::new();
-        for (name, c) in &g.counters {
-            let help = g.help.get(name).map(String::as_str).unwrap_or("");
-            out.push_str(&format!("# HELP {name}_total {help}\n"));
-            out.push_str(&format!("# TYPE {name}_total counter\n"));
-            out.push_str(&format!("{name}_total {}\n", c.get()));
+        let mut last = "";
+        for ((name, labels), c) in &g.counters {
+            if name != last {
+                let help = g.help.get(name).map(String::as_str).unwrap_or("");
+                out.push_str(&format!("# HELP {name}_total {help}\n"));
+                out.push_str(&format!("# TYPE {name}_total counter\n"));
+                last = name;
+            }
+            out.push_str(&format!("{} {}\n", series(name, "_total", labels), c.get()));
         }
-        for (name, gauge) in &g.gauges {
-            let help = g.help.get(name).map(String::as_str).unwrap_or("");
-            out.push_str(&format!("# HELP {name} {help}\n"));
-            out.push_str(&format!("# TYPE {name} gauge\n"));
-            out.push_str(&format!("{name} {}\n", gauge.get()));
+        last = "";
+        for ((name, labels), gauge) in &g.gauges {
+            if name != last {
+                let help = g.help.get(name).map(String::as_str).unwrap_or("");
+                out.push_str(&format!("# HELP {name} {help}\n"));
+                out.push_str(&format!("# TYPE {name} gauge\n"));
+                last = name;
+            }
+            out.push_str(&format!("{} {}\n", series(name, "", labels), gauge.get()));
         }
-        for (name, h) in &g.hists {
-            let help = g.help.get(name).map(String::as_str).unwrap_or("");
-            out.push_str(&format!("# HELP {name} {help}\n"));
-            out.push_str(&format!("# TYPE {name} histogram\n"));
+        last = "";
+        for ((name, labels), h) in &g.hists {
+            if name != last {
+                let help = g.help.get(name).map(String::as_str).unwrap_or("");
+                out.push_str(&format!("# HELP {name} {help}\n"));
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                last = name;
+            }
             let mut cum = 0u64;
             for (ub, count) in h.buckets() {
                 cum += count;
-                out.push_str(&format!("{name}_bucket{{le=\"{ub}\"}} {cum}\n"));
+                out.push_str(&format!("{} {cum}\n", bucket_series(name, labels, &ub.to_string())));
             }
-            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
-            out.push_str(&format!("{name}_sum {}\n", h.sum_secs()));
-            out.push_str(&format!("{name}_count {}\n", h.count()));
+            out.push_str(&format!("{} {}\n", bucket_series(name, labels, "+Inf"), h.count()));
+            out.push_str(&format!("{} {}\n", series(name, "_sum", labels), h.sum_secs()));
+            out.push_str(&format!("{} {}\n", series(name, "_count", labels), h.count()));
         }
         out
     }
@@ -193,6 +270,34 @@ mod tests {
             .collect();
         assert!(buckets.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(buckets.last(), Some(&2));
+    }
+
+    #[test]
+    fn labeled_series_share_one_preamble() {
+        let r = Registry::new();
+        r.counter("stbllm_test_routed", "requests routed").add(9);
+        r.counter_with("stbllm_test_routed", "replica=\"0\"", "requests routed").add(4);
+        r.counter_with("stbllm_test_routed", "replica=\"1\"", "requests routed").add(5);
+        r.gauge_with("stbllm_test_depth", "replica=\"0\"", "queue depth").set(3);
+        r.histogram_with("stbllm_test_wait_seconds", "replica=\"1\"", "wait").record_secs(0.01);
+        let text = r.render_prometheus();
+        // one HELP/TYPE per metric name, shared by all its labeled series
+        assert_eq!(text.matches("# TYPE stbllm_test_routed_total counter").count(), 1);
+        assert!(text.contains("stbllm_test_routed_total 9\n"), "{text}");
+        assert!(text.contains("stbllm_test_routed_total{replica=\"0\"} 4\n"), "{text}");
+        assert!(text.contains("stbllm_test_routed_total{replica=\"1\"} 5\n"), "{text}");
+        assert!(text.contains("stbllm_test_depth{replica=\"0\"} 3\n"), "{text}");
+        // histogram labels merge before the le bucket label
+        assert!(
+            text.contains("stbllm_test_wait_seconds_bucket{replica=\"1\",le=\"+Inf\"} 1\n"),
+            "{text}"
+        );
+        assert!(text.contains("stbllm_test_wait_seconds_count{replica=\"1\"} 1\n"), "{text}");
+        // distinct label sets are distinct series
+        let a = r.counter_with("stbllm_test_routed", "replica=\"0\"", "");
+        let b = r.counter_with("stbllm_test_routed", "replica=\"1\"", "");
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(a.get(), 4);
     }
 
     #[test]

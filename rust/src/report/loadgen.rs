@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::server::percentile;
+use crate::net::api::{split_lines, GenerateEvent, GenerateRequest};
 use crate::net::http::{read_response_head, BodyReader};
 use crate::util::json::{num, obj, Json};
 use crate::util::rng::Pcg32;
@@ -103,8 +104,16 @@ pub struct LoadgenReport {
     pub latency_p50_s: f64,
     /// 95th-percentile latency.
     pub latency_p95_s: f64,
-    /// Server-side prefix-cache hits (from `GET /stats` after the run).
+    /// Server-side prefix-cache hits, merged across replicas (from
+    /// `GET /stats` after the run).
     pub prefix_hits: usize,
+    /// Decode replicas the server reported (1 when the stats document
+    /// carries no `replicas` section).
+    pub replicas: usize,
+    /// Max prefix hits held by a single replica's pool — with a shared
+    /// prompt, the affinity router should concentrate (almost) all hits
+    /// on one replica, so this is what the smoke gate checks.
+    pub affine_prefix_hits: usize,
     /// Where `BENCH_http.json` was written.
     pub json_path: PathBuf,
 }
@@ -124,9 +133,7 @@ fn prompt_tokens(opts: &LoadgenOpts, i: usize) -> Vec<u8> {
 }
 
 fn body_for(opts: &LoadgenOpts, i: usize) -> String {
-    let toks: Vec<String> =
-        prompt_tokens(opts, i).iter().map(|t| t.to_string()).collect();
-    format!("{{\"prompt\":[{}],\"max_new\":{}}}", toks.join(","), opts.max_new)
+    GenerateRequest::tokens(prompt_tokens(opts, i), opts.max_new).to_body()
 }
 
 /// Outcome of one wire attempt of a `/generate` request.
@@ -171,17 +178,33 @@ fn run_request(stream: &mut TcpStream, body: &str) -> Result<Attempt> {
     let mut ttft = None;
     let mut tokens = 0usize;
     let mut done = false;
+    // chunk boundaries need not align with event lines: buffer the tail
+    // and parse only complete lines through the typed schema
+    let mut buf = String::new();
     while let Some(piece) = reader.next_piece(stream).map_err(|e| anyhow!("stream: {e}"))? {
-        let text = String::from_utf8_lossy(&piece);
-        for line in text.lines() {
-            if line.contains("\"t\":") {
-                tokens += 1;
-                if ttft.is_none() {
-                    ttft = Some(t0.elapsed().as_secs_f64());
+        buf.push_str(&String::from_utf8_lossy(&piece));
+        let (events, rest) = {
+            let (lines, tail) = split_lines(&buf);
+            let mut evs = Vec::new();
+            for line in lines {
+                if line.trim().is_empty() {
+                    continue;
                 }
+                evs.push(GenerateEvent::parse(line).map_err(|e| anyhow!("event line: {e}"))?);
             }
-            if line.contains("\"done\":true") {
-                done = true;
+            (evs, tail.to_string())
+        };
+        buf = rest;
+        for ev in events {
+            match ev {
+                GenerateEvent::Token(_) => {
+                    tokens += 1;
+                    if ttft.is_none() {
+                        ttft = Some(t0.elapsed().as_secs_f64());
+                    }
+                }
+                GenerateEvent::Done(_) => done = true,
+                GenerateEvent::Error(msg) => return Err(anyhow!("stream error event: {msg}")),
             }
         }
     }
@@ -398,17 +421,35 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
     }
 
     // server-side counters AFTER the workload so prefix hits are visible
-    // (schema-2 envelope: kv counters nest under "gateway")
-    let prefix_hits = match simple_request(&opts.target, "GET", "/stats") {
-        Ok(body) => Json::parse(&String::from_utf8_lossy(&body))
-            .ok()
-            .and_then(|j| j.path(&["gateway", "kv", "prefix_hits"]).and_then(Json::as_usize))
-            .unwrap_or(0),
+    // (schema-2 envelope: the merged kv counters nest under "gateway",
+    // per-replica rows under "replicas")
+    let stats_doc = match simple_request(&opts.target, "GET", "/stats") {
+        Ok(body) => Json::parse(&String::from_utf8_lossy(&body)).ok(),
         Err(e) => {
             eprintln!("[loadgen] stats fetch failed: {e:#}");
-            0
+            None
         }
     };
+    let prefix_hits = stats_doc
+        .as_ref()
+        .and_then(|j| j.path(&["gateway", "kv", "prefix_hits"]).and_then(Json::as_usize))
+        .unwrap_or(0);
+    // with a shared prompt, affinity routes every stream to ONE replica —
+    // its pool should hold (almost) all the hits, so the per-replica MAX
+    // is the gate value (equals the aggregate on single-replica servers)
+    let (replicas, affine_prefix_hits) = stats_doc
+        .as_ref()
+        .and_then(|j| j.get("replicas"))
+        .and_then(Json::as_arr)
+        .map(|rows| {
+            let best = rows
+                .iter()
+                .filter_map(|r| r.path(&["kv", "prefix_hits"]).and_then(Json::as_usize))
+                .max()
+                .unwrap_or(prefix_hits);
+            (rows.len().max(1), best)
+        })
+        .unwrap_or((1, prefix_hits));
     let generated_tokens: usize = samples.iter().map(|s| s.tokens).sum();
     if let Some(before) = &metrics_before {
         let raw = simple_request(&opts.target, "GET", "/metrics")
@@ -416,6 +457,10 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         let text = String::from_utf8_lossy(&raw).into_owned();
         let after = parse_exposition(&text).context("post-run exposition")?;
         check_metrics(before, &after, &samples, generated_tokens)?;
+        // a multi-replica server must expose per-replica labeled series
+        if replicas > 1 && !after.keys().any(|k| k.contains("replica=\"")) {
+            bail!("{replicas} replicas served but no replica=\"N\"-labeled series in /metrics");
+        }
         let prom_path = match &opts.out {
             Some(p) => p.with_file_name("metrics.prom"),
             None => crate::report::reports_dir().join("metrics.prom"),
@@ -456,6 +501,8 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         latency_p50_s: percentile(&lats, 50.0),
         latency_p95_s: percentile(&lats, 95.0),
         prefix_hits,
+        replicas,
+        affine_prefix_hits,
         json_path: PathBuf::new(),
     };
 
@@ -484,6 +531,8 @@ pub fn run_loadgen(opts: &LoadgenOpts) -> Result<LoadgenReport> {
         ("latency_p50_s", num(report.latency_p50_s)),
         ("latency_p95_s", num(report.latency_p95_s)),
         ("prefix_hits", num(prefix_hits as f64)),
+        ("replicas", num(replicas as f64)),
+        ("affine_prefix_hits", num(affine_prefix_hits as f64)),
         ("metrics_check", Json::Bool(opts.metrics_check)),
     ]);
     std::fs::write(&json_path, doc.dump())

@@ -38,6 +38,8 @@ pub mod defaults {
     pub const HTTP_THREADS: usize = 8;
     /// Keep-alive idle read timeout (ms) for `serve --http`.
     pub const HTTP_KEEPALIVE_MS: u64 = 1000;
+    /// Decode replicas over the shared weights for `serve --http`.
+    pub const REPLICAS: usize = 1;
     /// Concurrent connections for `stbllm loadgen`.
     pub const LOADGEN_CONNECTIONS: usize = 4;
     /// Total requests for `stbllm loadgen`.

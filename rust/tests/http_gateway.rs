@@ -2,14 +2,17 @@
 //!
 //! The contract under test: tokens streamed over `POST /generate` are
 //! byte-identical to a direct `BatchServer::run` of the same workload
-//! (both paths share one scheduling kernel), and neither a graceful drain
-//! nor a mid-stream client disconnect leaves reserved pages behind in the
-//! KV pool.
+//! (both paths share one scheduling kernel), replica routing never
+//! changes a stream's bytes, and neither a graceful drain, a mid-stream
+//! client disconnect, nor a dead replica leaves reserved pages behind in
+//! the KV pool.
 //!
 //! Artifact-free: preset configs + synthetic weights only.
 
 use std::io::{Read as _, Write as _};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -18,7 +21,8 @@ use stbllm::engine::NativeBackend;
 use stbllm::model::config::ModelConfig;
 use stbllm::model::ModelWeights;
 use stbllm::net::http::{read_response_head, BodyReader};
-use stbllm::net::{serve_http, GatewayCtl, GatewayReport, HttpServeOpts};
+use stbllm::net::{serve_http, GatewayCtl, GatewayReport, GenerateEvent, GenerateRequest};
+use stbllm::net::{Router, ServeConfig};
 use stbllm::util::json::Json;
 
 fn tiny() -> (ModelConfig, ModelWeights) {
@@ -35,15 +39,27 @@ struct Gateway {
 
 impl Gateway {
     fn start(cfg: &ModelConfig, w: &ModelWeights, max_batch: usize) -> Gateway {
+        Gateway::start_with(cfg, w, max_batch, |_| {})
+    }
+
+    /// Like [`Gateway::start`] with a final tweak of the [`ServeConfig`]
+    /// (replica count, restart budget, pool sizing).
+    fn start_with(
+        cfg: &ModelConfig,
+        w: &ModelWeights,
+        max_batch: usize,
+        tune: impl FnOnce(&mut ServeConfig) + Send + 'static,
+    ) -> Gateway {
         let ctl = GatewayCtl::new();
         let (cfg, w, ctl2) = (cfg.clone(), w.clone(), ctl.clone());
         let handle = std::thread::spawn(move || {
             let be = NativeBackend::new(cfg, w);
-            let mut opts = HttpServeOpts::new("127.0.0.1:0");
+            let mut opts = ServeConfig::new("127.0.0.1:0");
             opts.max_batch = max_batch;
             opts.page_size = 4;
             opts.threads = 4;
             opts.keepalive_ms = 50; // fast idle polls => fast drains
+            tune(&mut opts);
             serve_http(&be, &opts, &ctl2)
         });
         let addr = ctl.wait_bound(Duration::from_secs(30)).expect("gateway never bound");
@@ -73,8 +89,7 @@ fn fetch(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Vec<u8
 }
 
 fn generate_body(prompt: &[u8], max_new: usize) -> String {
-    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-    format!("{{\"prompt\":[{}],\"max_new\":{max_new}}}", toks.join(","))
+    GenerateRequest::tokens(prompt.to_vec(), max_new).to_body()
 }
 
 /// `POST /generate`, collecting streamed tokens and the final done event.
@@ -84,18 +99,18 @@ fn post_generate(addr: SocketAddr, prompt: &[u8], max_new: usize) -> (Vec<u8>, J
     let mut tokens = Vec::new();
     let mut done = None;
     for line in String::from_utf8_lossy(&bytes).lines() {
-        let doc = Json::parse(line).unwrap_or_else(|e| panic!("bad stream line {line:?}: {e}"));
-        match doc.get("t") {
-            Some(t) => tokens.push(t.as_usize().expect("token") as u8),
-            None => done = Some(doc),
+        match GenerateEvent::parse(line).unwrap_or_else(|e| panic!("bad stream line: {e}")) {
+            GenerateEvent::Token(t) => tokens.push(t),
+            GenerateEvent::Done(_) => done = Some(Json::parse(line).expect("done json")),
+            GenerateEvent::Error(msg) => panic!("stream error event: {msg}"),
         }
     }
     (tokens, done.expect("stream must end with a done event"))
 }
 
-/// `GET /stats`, asserting the schema-2 envelope and returning the
-/// `"gateway"` section (where all the serving fields live).
-fn stats(addr: SocketAddr) -> Json {
+/// `GET /stats`, asserting the schema-2 envelope and returning the whole
+/// document.
+fn stats_doc(addr: SocketAddr) -> Json {
     let (status, bytes) = fetch(addr, "GET", "/stats", "");
     assert_eq!(status, 200);
     let doc = Json::parse(&String::from_utf8_lossy(&bytes)).expect("stats json");
@@ -105,7 +120,13 @@ fn stats(addr: SocketAddr) -> Json {
         "/stats must be a schema-2 envelope: {}",
         doc.dump()
     );
-    doc.get("gateway").cloned().expect("envelope carries a gateway section")
+    doc
+}
+
+/// `GET /stats`, returning the `"gateway"` section (where all the flat
+/// serving fields live).
+fn stats(addr: SocketAddr) -> Json {
+    stats_doc(addr).get("gateway").cloned().expect("envelope carries a gateway section")
 }
 
 /// Poll `/stats` until `pred` holds (the bridge retires asynchronously).
@@ -119,6 +140,34 @@ fn wait_for(addr: SocketAddr, what: &str, pred: impl Fn(&Json) -> bool) -> Json 
         assert!(Instant::now() < deadline, "timed out waiting for {what}: {}", doc.dump());
         std::thread::sleep(Duration::from_millis(20));
     }
+}
+
+/// Poll the full `/stats` document until `pred` holds.
+fn wait_doc(addr: SocketAddr, what: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let doc = stats_doc(addr);
+        if pred(&doc) {
+            return doc;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}: {}", doc.dump());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Value of one `/metrics` series, matched by its full name including
+/// any labels (`0.0` if absent).
+fn metric_value(addr: SocketAddr, series: &str) -> f64 {
+    let (status, bytes) = fetch(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    String::from_utf8_lossy(&bytes)
+        .lines()
+        .find_map(|l| {
+            l.strip_prefix(series)
+                .and_then(|rest| rest.strip_prefix(' '))
+                .and_then(|rest| rest.trim().parse::<f64>().ok())
+        })
+        .unwrap_or(0.0)
 }
 
 /// HTTP-streamed tokens must be byte-identical to a direct batch run of
@@ -367,7 +416,7 @@ fn exhausted_pool_sheds_with_retry_after() {
     let (cfg2, w2, ctl2) = (cfg.clone(), w.clone(), ctl.clone());
     let handle = std::thread::spawn(move || {
         let be = NativeBackend::new(cfg2, w2);
-        let mut opts = HttpServeOpts::new("127.0.0.1:0");
+        let mut opts = ServeConfig::new("127.0.0.1:0");
         opts.max_batch = 2;
         opts.kv_pages = 16;
         opts.page_size = 4;
@@ -381,7 +430,7 @@ fn exhausted_pool_sheds_with_retry_after() {
     // slow each scheduler tick down so the saturating streams are still
     // holding their reservations when the probe lands (the tiny model
     // would otherwise finish 24 tokens in milliseconds)
-    ctl.set_tick_hook(Some(std::sync::Arc::new(|_| {
+    ctl.set_tick_hook(Some(Arc::new(|_replica, _tick| {
         std::thread::sleep(Duration::from_millis(10));
     })));
 
@@ -443,4 +492,137 @@ fn exhausted_pool_sheds_with_retry_after() {
     ctl.drain();
     let report = handle.join().expect("gateway panicked").expect("gateway errored");
     assert_eq!(report.leaked_pages, 0, "shedding leaked KV pages: {report:?}");
+}
+
+/// Replica routing must be invisible in the stream bytes: the same
+/// prompt set through `--replicas 2` yields token streams byte-identical
+/// to a single replica (greedy decode is a pure function of the prompt),
+/// the `/stats` document gains one `"replicas"` row per replica while
+/// keeping the flat `"gateway"` section, and both drains are leak-free.
+#[test]
+fn two_replicas_stream_byte_identical_to_one() {
+    let (cfg, w) = tiny();
+    let prompts: Vec<Vec<u8>> = (0..6u8).map(|i| vec![i, i + 1, i + 2]).collect();
+
+    let single = Gateway::start(&cfg, &w, 2);
+    let baseline: Vec<(Vec<u8>, Json)> =
+        prompts.iter().map(|p| post_generate(single.addr, p, 4)).collect();
+    let report = single.drain();
+    assert_eq!(report.leaked_pages, 0, "single-replica drain leaked pages: {report:?}");
+
+    let duo = Gateway::start_with(&cfg, &w, 2, |o| o.replicas = 2);
+    for (p, (want, _)) in prompts.iter().zip(&baseline) {
+        let (got, done) = post_generate(duo.addr, p, 4);
+        assert_eq!(&got, want, "prompt {p:?}: replica routing changed the stream bytes");
+        assert_eq!(done.get("stopped").unwrap().as_str(), Some("completed"));
+    }
+
+    let doc = wait_doc(duo.addr, "completions across both replicas", |d| {
+        d.get("replicas").and_then(Json::as_arr).is_some_and(|rows| {
+            rows.len() == 2
+                && rows
+                    .iter()
+                    .map(|r| r.get("completed").and_then(Json::as_usize).unwrap_or(0))
+                    .sum::<usize>()
+                    == prompts.len()
+        })
+    });
+    // the flat schema-2 sections survive alongside the new rows
+    assert_eq!(doc.path(&["gateway", "completed"]).and_then(Json::as_usize), Some(prompts.len()));
+    assert!(doc.path(&["gateway", "kv", "prefix_hits"]).is_some(), "merged kv: {}", doc.dump());
+
+    let report = duo.drain();
+    assert_eq!(report.completed, prompts.len());
+    assert_eq!(report.leaked_pages, 0, "two-replica drain leaked pages: {report:?}");
+}
+
+/// A replica that exhausts its restart budget must not take queued work
+/// with it: requests still on the dead replica's channel migrate to the
+/// survivor and complete, the router stops routing to the corpse, and
+/// the drain still accounts every page across both pools.
+#[test]
+fn dead_replica_migrates_queued_requests() {
+    let (cfg, w) = tiny();
+    let gw = Gateway::start_with(&cfg, &w, 2, |o| {
+        o.replicas = 2;
+        o.max_bridge_restarts = 0; // first panic is fatal for the replica
+    });
+
+    // replica 0's tick hook stalls in short armed-checking slices, so the
+    // panic fires mid-tick — while probes for replica 0 still sit in its
+    // channel rather than its scheduler queue
+    let armed = Arc::new(AtomicBool::new(false));
+    {
+        let armed = armed.clone();
+        gw.ctl.set_tick_hook(Some(Arc::new(move |replica, _tick| {
+            if replica != 0 {
+                return;
+            }
+            for _ in 0..3000 {
+                if armed.swap(false, Ordering::SeqCst) {
+                    panic!("test: injected replica-0 panic");
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        })));
+    }
+
+    // prompts the router provably maps to replica 0
+    let affine0: Vec<u8> =
+        (0u8..=255).filter(|&b| Router::affine_replica(&[b], 2) == 0).take(3).collect();
+    assert_eq!(affine0.len(), 3, "need three replica-0 affine prompts");
+
+    let addr = gw.addr;
+    let victim = {
+        let body = generate_body(&[affine0[0]], 8);
+        std::thread::spawn(move || fetch(addr, "POST", "/generate", &body))
+    };
+    wait_doc(addr, "victim active on replica 0", |d| {
+        d.get("replicas")
+            .and_then(Json::as_arr)
+            .and_then(|rows| rows.first())
+            .and_then(|r| r.get("active"))
+            .and_then(Json::as_usize)
+            >= Some(1)
+    });
+    let probes: Vec<_> = affine0[1..]
+        .iter()
+        .map(|&b| std::thread::spawn(move || post_generate(addr, &[b], 3)))
+        .collect();
+    // the routed counter ticks at dispatch time: once it covers the
+    // victim plus both probes, the probes are in replica 0's channel
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metric_value(addr, "stbllm_router_routed_total{replica=\"0\"}") < 3.0 {
+        assert!(Instant::now() < deadline, "probes never reached replica 0's channel");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    armed.store(true, Ordering::SeqCst);
+
+    for p in probes {
+        let (tokens, done) = p.join().expect("migrated probe panicked");
+        assert_eq!(tokens.len(), 3, "migrated stream must run to completion");
+        assert_eq!(done.get("stopped").unwrap().as_str(), Some("completed"));
+    }
+    // the victim dies with the decode loop (500 or a cut stream) — that
+    // is the pre-existing single-replica panic contract
+    let _ = victim.join();
+
+    wait_doc(addr, "replica 0 marked dead", |d| {
+        d.get("replicas").and_then(Json::as_arr).and_then(|rows| rows.first()).is_some_and(|r| {
+            r.get("dead") == Some(&Json::Bool(true))
+                && r.get("panics").and_then(Json::as_usize) >= Some(1)
+        })
+    });
+    assert!(
+        metric_value(addr, "stbllm_router_migrated_total") >= 2.0,
+        "both probes must be counted as migrated"
+    );
+
+    // even replica-0-affine traffic now lands on the survivor
+    let (tokens, done) = post_generate(addr, &[affine0[0], 9], 3);
+    assert_eq!(tokens.len(), 3);
+    assert_eq!(done.get("stopped").unwrap().as_str(), Some("completed"));
+
+    let report = gw.drain();
+    assert_eq!(report.leaked_pages, 0, "replica death leaked KV pages: {report:?}");
 }
