@@ -33,6 +33,28 @@
 //! its age; once the age reaches [`BatchServer::hol_boost_deferrals`] the
 //! bypass is switched off and admission holds until the aged head fits.
 //!
+//! ## Chunked prefill
+//!
+//! Prompt consumption is budgeted per tick: each prefilling session
+//! consumes up to [`BatchServer::prefill_chunk`] prompt tokens per tick
+//! (default [`DEFAULT_PREFILL_CHUNK`]; 1 reproduces the legacy
+//! one-token-per-tick scheduler exactly). A multi-token chunk runs as ONE
+//! batched forward through [`DecodeSession::prefill`] — the packed backend
+//! decodes each 6-bit weight word once per chunk instead of once per
+//! token — while sessions with one prompt token left and all decoding
+//! sessions still share the fused [`Backend::decode_batch`] tick. The
+//! budget is the fairness knob: a P-token prompt spreads over
+//! `ceil(P / prefill_chunk)` ticks instead of monopolizing one giant
+//! forward, so co-scheduled decode streams keep emitting a token every
+//! tick. Chunking is orthogonal to admission — the KV budget and
+//! head-of-line aging operate on whole requests *before* chunking begins —
+//! and prefix-cache hits simply shrink the prompt remainder the budget
+//! applies to (resume lands mid-prompt at any offset). Chunked and
+//! single-token prefill produce bit-identical logits, so the budget never
+//! changes the emitted streams, only their timing; per-tick prefill tokens
+//! are stamped into trace spans and the
+//! `stbllm_server_prefill_tokens_total` counter.
+//!
 //! The per-tick scheduling itself (`top_up` + `tick`) is shared verbatim
 //! with the streaming HTTP bridge (`crate::net::bridge`), so tokens
 //! streamed over the network are byte-identical to a direct
@@ -241,6 +263,7 @@ pub(crate) struct ServerMetrics {
     pub(crate) deferred: Arc<Counter>,
     pub(crate) completed: Arc<Counter>,
     pub(crate) tokens: Arc<Counter>,
+    pub(crate) prefill_tokens: Arc<Counter>,
     pub(crate) queue_h: Arc<Histogram>,
     pub(crate) prefill_h: Arc<Histogram>,
     pub(crate) decode_h: Arc<Histogram>,
@@ -259,6 +282,8 @@ impl ServerMetrics {
             deferred: reg.counter("stbllm_server_deferred", "admission backpressure events"),
             completed: reg.counter("stbllm_server_completed", "requests retired complete"),
             tokens: reg.counter("stbllm_server_generated_tokens", "tokens generated"),
+            prefill_tokens: reg
+                .counter("stbllm_server_prefill_tokens", "prompt tokens prefilled"),
             queue_h: reg.histogram("stbllm_server_queue_seconds", "enqueue to admission wait"),
             prefill_h: reg
                 .histogram("stbllm_server_prefill_seconds", "per-tick prefill wall time"),
@@ -286,6 +311,12 @@ pub struct BatchServer<'a> {
     /// admission holds (no bypass) until it fits, so a large request
     /// cannot be starved forever by a stream of small ones.
     pub hol_boost_deferrals: u32,
+    /// Per-tick prefill-token budget per session: a prefilling sequence
+    /// consumes up to this many prompt tokens per tick, multi-token chunks
+    /// running as one batched [`DecodeSession::prefill`] forward. `1`
+    /// reproduces the legacy one-token-per-tick scheduler exactly; any
+    /// value yields bit-identical streams (see the module docs).
+    pub prefill_chunk: usize,
     pool: Option<Arc<KvPool>>,
     registry: Arc<Registry>,
     metrics: ServerMetrics,
@@ -294,6 +325,12 @@ pub struct BatchServer<'a> {
 /// Default [`BatchServer::hol_boost_deferrals`]: a deferred head tolerates
 /// this many bypass rounds before it locks the admission queue.
 pub const DEFAULT_HOL_BOOST_DEFERRALS: u32 = 8;
+
+/// Default [`BatchServer::prefill_chunk`]: enough tokens per tick that the
+/// packed GEMM amortizes each weight-word decode well past the memory-bound
+/// knee, small enough that a long prompt cannot stall co-scheduled decode
+/// streams for more than one chunk's worth of work per tick.
+pub const DEFAULT_PREFILL_CHUNK: usize = 32;
 
 impl<'a> BatchServer<'a> {
     pub fn new(backend: &'a dyn Backend, max_batch: usize) -> Self {
@@ -307,6 +344,7 @@ impl<'a> BatchServer<'a> {
             max_batch,
             kv_capacity,
             hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
             pool: None,
             registry,
             metrics,
@@ -498,11 +536,13 @@ impl<'a> BatchServer<'a> {
         Ok(out)
     }
 
-    /// One decode tick over `active`: pick each sequence's input token
-    /// (prefill consumes the prompt, decode feeds the greedy argmax), run
-    /// ONE [`Backend::decode_batch`] across every stepping sequence, and
-    /// report the tokens generated plus which slots finished. The caller
-    /// retires `finished` in descending index order (`swap_remove`).
+    /// One decode tick over `active`: pick each sequence's input (prefill
+    /// consumes up to [`BatchServer::prefill_chunk`] prompt tokens, decode
+    /// feeds the greedy argmax), run each multi-token chunk as one batched
+    /// prefill forward and ONE [`Backend::decode_batch`] across every
+    /// single-token-stepping sequence, and report the tokens generated
+    /// plus which slots finished. The caller retires `finished` in
+    /// descending index order (`swap_remove`).
     ///
     /// This is THE scheduling kernel: `run` and the HTTP streaming bridge
     /// both call it, which is what makes network-streamed tokens
@@ -518,13 +558,25 @@ impl<'a> BatchServer<'a> {
         let mut tokens: Vec<u8> = Vec::with_capacity(active.len());
         let mut emitted: Vec<(usize, u8)> = Vec::new();
         let mut finished: Vec<usize> = Vec::new();
+        // `(slot, tokens to consume)` for sessions taking a multi-token
+        // prefill chunk this tick — they run their own batched prefill
+        // forward (phase 2a) instead of joining the fused decode_batch
+        let budget = self.prefill_chunk.max(1);
+        let mut chunked: Vec<(usize, usize)> = Vec::new();
         for (i, a) in active.iter_mut().enumerate() {
             if a.prefill_pos < a.req.prompt.len() {
-                // prefill one token per tick (chunked prefill)
-                tokens.push(a.req.prompt[a.prefill_pos]);
-                a.prefill_pos += 1;
-                stepping.push(i);
-                prefilling.push(true);
+                // prefill up to `prefill_chunk` prompt tokens this tick
+                let take = (a.req.prompt.len() - a.prefill_pos).min(budget);
+                if take >= 2 {
+                    chunked.push((i, take));
+                } else {
+                    // a single remaining token rides the fused
+                    // decode_batch tick with the decoding sessions
+                    tokens.push(a.req.prompt[a.prefill_pos]);
+                    a.prefill_pos += 1;
+                    stepping.push(i);
+                    prefilling.push(true);
+                }
             } else {
                 // greedy decode
                 let next = argmax(&a.last_logits);
@@ -544,6 +596,26 @@ impl<'a> BatchServer<'a> {
             }
         }
         self.metrics.tokens.add(emitted.len() as u64);
+        // Phase 2a: chunked prefill — one batched multi-token forward per
+        // chunked session ([`DecodeSession::prefill`]): the packed backend
+        // decodes each 6-bit weight word once per chunk instead of once
+        // per token. Logits are bit-identical to single-token prefill, so
+        // the budget never changes the emitted streams.
+        for &(i, take) in &chunked {
+            let a = &mut active[i];
+            let chunk0 = Instant::now();
+            let from = a.prefill_pos;
+            let logits = a.session.prefill(&a.req.prompt[from..from + take], false)?;
+            a.prefill_pos += take;
+            a.last_logits = logits.data;
+            let dt = chunk0.elapsed().as_secs_f64();
+            a.span.add_prefill(dt);
+            a.span.add_kernel(dt);
+            a.span.add_prefill_tokens(take);
+            self.metrics.prefill_h.record_secs(dt);
+            self.metrics.kernel_h.record_secs(dt);
+            self.metrics.prefill_tokens.add(take as u64);
+        }
         // Phase 2: ONE decode_batch per tick — a fused backend runs a
         // single packed GEMM per projection across every stepping
         // sequence (the weight stream is read once per tick, not once
@@ -579,7 +651,9 @@ impl<'a> BatchServer<'a> {
                 let a = &mut active[i];
                 if pf {
                     a.span.add_prefill(tick_s);
+                    a.span.add_prefill_tokens(1);
                     self.metrics.prefill_h.record_secs(tick_s);
+                    self.metrics.prefill_tokens.add(1);
                 } else {
                     a.span.add_decode(tick_s);
                     self.metrics.decode_h.record_secs(tick_s);
@@ -798,6 +872,53 @@ mod tests {
         for (a, b) in fused.iter().zip(&solo) {
             assert_eq!(a.id, b.id);
             assert_eq!(a.tokens, b.tokens, "req {}: fused tick must match solo decode", a.id);
+        }
+    }
+
+    /// Chunked prefill (any budget) must produce exactly the streams the
+    /// one-token-per-tick scheduler produces. Staggered prompt lengths
+    /// force ticks that mix a chunked prefill with ongoing decode streams;
+    /// shared prompt prefixes on the paged pool force mid-prompt
+    /// prefix-cache resumes into a chunk. Exercised on the fused packed
+    /// backend (paged pool) and native (flat).
+    #[test]
+    fn chunked_prefill_serving_matches_single_token_serving() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 13);
+        let packed = crate::engine::PackedBackend::from_weights(&cfg, &w).unwrap();
+        let native = NativeBackend::borrowed(&cfg, &w);
+        let backends: [(&dyn Backend, bool); 2] = [(&packed, true), (&native, false)];
+        let reqs: Vec<Request> = (0..4u64)
+            .map(|id| Request {
+                id,
+                prompt: (0..3 + 5 * id as usize).map(|i| (i * 7 % 32) as u8).collect(),
+                max_new: 3,
+            })
+            .collect();
+        for (be, paged) in backends {
+            let mk = |chunk: usize| {
+                let mut s = BatchServer::new(be, 2);
+                s.prefill_chunk = chunk;
+                if paged {
+                    s = s.with_kv_pool(0, 4);
+                }
+                s
+            };
+            let (mut want, _) = mk(1).run(reqs.clone()).unwrap();
+            want.sort_by_key(|r| r.id);
+            for chunk in [3usize, 8, 32] {
+                let (mut got, _) = mk(chunk).run(reqs.clone()).unwrap();
+                got.sort_by_key(|r| r.id);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(
+                        a.tokens, b.tokens,
+                        "chunk={chunk} paged={paged} req {}: streams must match chunk=1",
+                        a.id
+                    );
+                }
+            }
         }
     }
 
@@ -1043,10 +1164,15 @@ mod tests {
             assert!(r.trace.prefill_ms > 0.0, "prefill ticks untraced");
             assert!(r.trace.decode_ms > 0.0, "decode ticks untraced");
             assert!(r.trace.ticks >= 1);
+            assert_eq!(r.trace.prefill_tokens, 3, "whole prompt must be stamped as prefilled");
         }
         let text = server.registry().render_prometheus();
         assert!(text.contains("stbllm_server_completed_total 3"));
         assert!(text.contains("stbllm_server_generated_tokens_total 12"));
+        assert!(
+            text.contains("stbllm_server_prefill_tokens_total 9"),
+            "3 requests x 3 prompt tokens must be counted"
+        );
         for h in ["queue", "prefill", "decode", "kernel", "ttft", "latency"] {
             let needle = format!("stbllm_server_{h}_seconds_count");
             let line = text

@@ -54,6 +54,13 @@ pub struct Capabilities {
     /// once per session). Backends without it still serve batches — the
     /// default `decode_batch` steps each session independently.
     pub fused_decode: bool,
+    /// [`DecodeSession::prefill`] consumes multi-token chunks through one
+    /// batched forward per layer ([`DecodeState::prefill_chunk`]): each
+    /// packed weight word is decoded once per chunk instead of once per
+    /// token, with output bit-identical to token-by-token stepping.
+    /// Backends without it still accept `prefill` — the default steps one
+    /// token at a time.
+    pub chunked_prefill: bool,
     /// [`Backend::begin_decode_with`] accepts a shared
     /// [`KvPool`] — sessions borrow fixed-size KV pages (with prefix
     /// reuse + copy-on-write) instead of owning flat buffers. The server
@@ -85,6 +92,28 @@ impl SessionOpts<'_> {
 pub trait DecodeSession {
     /// Feed one token; returns logits over the vocabulary.
     fn step(&mut self, token: u8) -> Result<Vec<f32>>;
+    /// Feed a chunk of prompt tokens; returns logits as a Mat — all rows
+    /// when `all_logits` is set (the eval path), else only the final row
+    /// (serving). The chunk may start anywhere (prefix-cache resume lands
+    /// mid-prompt), and the result is bit-identical to feeding the tokens
+    /// through [`DecodeSession::step`] one at a time. This default does
+    /// exactly that; backends reporting [`Capabilities::chunked_prefill`]
+    /// override it with the batched chunk forward.
+    fn prefill(&mut self, tokens: &[u8], all_logits: bool) -> Result<Mat> {
+        let mut rows: Vec<Vec<f32>> = Vec::new();
+        for (i, &t) in tokens.iter().enumerate() {
+            let lg = self.step(t)?;
+            if all_logits || i + 1 == tokens.len() {
+                rows.push(lg);
+            }
+        }
+        let cols = rows.first().map_or(0, |r| r.len());
+        let mut out = Mat::zeros(rows.len(), cols);
+        for (i, r) in rows.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(r);
+        }
+        Ok(out)
+    }
     /// Number of tokens consumed so far.
     fn pos(&self) -> usize;
     /// The underlying KV-cache [`DecodeState`] when this session is backed

@@ -169,6 +169,7 @@ pub struct EngineBuilder {
     kv_pages: usize,
     page_size: usize,
     flat_kv: bool,
+    prefill_chunk: usize,
     synthetic_fallback: bool,
     backend_fallback: bool,
 }
@@ -187,6 +188,7 @@ impl Default for EngineBuilder {
             kv_pages: defaults::KV_PAGES,
             page_size: defaults::PAGE_SIZE,
             flat_kv: false,
+            prefill_chunk: defaults::PREFILL_CHUNK,
             synthetic_fallback: false,
             backend_fallback: false,
         }
@@ -251,6 +253,16 @@ impl EngineBuilder {
     /// buffers (the legacy path; results are bit-identical either way).
     pub fn flat_kv(mut self, yes: bool) -> Self {
         self.flat_kv = yes;
+        self
+    }
+
+    /// Per-tick prefill-token budget per session (`--prefill-chunk`): the
+    /// batch server consumes up to `n` prompt tokens per scheduler tick as
+    /// one multi-token chunk through the decode path's batched packed
+    /// GEMM. `1` restores the legacy one-token-per-tick prefill; generated
+    /// streams are bit-identical at any setting.
+    pub fn prefill_chunk(mut self, n: usize) -> Self {
+        self.prefill_chunk = n.max(1);
         self
     }
 
@@ -377,6 +389,7 @@ impl EngineBuilder {
             kv_pages: self.kv_pages,
             page_size: self.page_size,
             flat_kv: self.flat_kv,
+            prefill_chunk: self.prefill_chunk,
         })
     }
 }
@@ -437,6 +450,8 @@ pub struct Engine {
     page_size: usize,
     /// serve with flat per-session KV buffers instead of the pool
     flat_kv: bool,
+    /// per-tick prefill-token budget per session (1 = legacy)
+    prefill_chunk: usize,
 }
 
 impl Engine {
@@ -522,6 +537,7 @@ impl Engine {
             .into());
         }
         let mut server = BatchServer::new(self.backend.as_ref(), self.max_batch);
+        server.prefill_chunk = self.prefill_chunk;
         if let Some(reg) = registry {
             server = server.with_registry(reg);
         }
@@ -543,6 +559,7 @@ impl Engine {
         cfg.kv_pages = self.kv_pages;
         cfg.page_size = self.page_size;
         cfg.flat_kv = self.flat_kv;
+        cfg.prefill_chunk = self.prefill_chunk;
         cfg
     }
 

@@ -64,6 +64,10 @@ impl Backend for NativeBackend<'_> {
             // dense `proj` (matmul_bt) is not row-wise bit-consistent with
             // `proj_vec` (matvec), so native keeps per-session stepping
             fused_decode: false,
+            // chunked prefill stays bit-exact here: the default
+            // `proj_chunk_into` seam routes every chunk row through the
+            // same `matvec` the decode step uses
+            chunked_prefill: true,
             paged_kv: true,
         }
     }
@@ -93,6 +97,10 @@ struct NativeSession<'a, 'w> {
 impl DecodeSession for NativeSession<'_, '_> {
     fn step(&mut self, token: u8) -> Result<Vec<f32>> {
         Ok(self.st.step(&self.be.cfg, self.be.weights.get(), token))
+    }
+
+    fn prefill(&mut self, tokens: &[u8], all_logits: bool) -> Result<Mat> {
+        Ok(self.st.prefill_chunk(&self.be.cfg, self.be.weights.get(), tokens, all_logits))
     }
 
     fn pos(&self) -> usize {
@@ -126,6 +134,26 @@ mod tests {
         for (a, b) in last.iter().zip(full.row(toks.len() - 1)) {
             assert!((a - b).abs() < 1e-3);
         }
+    }
+
+    /// Native chunked prefill must bit-match per-token stepping — the
+    /// default `proj_chunk_into` seam reuses the decode row kernel.
+    #[test]
+    fn session_prefill_bitmatches_stepping() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 14);
+        let be = NativeBackend::borrowed(&cfg, &w);
+        assert!(be.capabilities().chunked_prefill);
+        let toks: Vec<u8> = vec![5, 3, 8, 1, 9, 2, 7];
+        let mut stepper = be.begin_decode(16).unwrap();
+        let want: Vec<Vec<f32>> = toks.iter().map(|&t| stepper.step(t).unwrap()).collect();
+        let mut chunked = be.begin_decode(16).unwrap();
+        let lg = chunked.prefill(&toks, true).unwrap();
+        assert_eq!(lg.rows, toks.len());
+        for (r, wrow) in want.iter().enumerate() {
+            assert_eq!(lg.row(r), &wrow[..], "row {r} must bit-match stepping");
+        }
+        assert_eq!(chunked.pos(), toks.len());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! `PackedBackend` — the deployment backend: every projection of the
 //! forward and of the KV-cache decode runs through the sub-1-bit 2:4 packed
-//! kernels (`packed::gemm::packed_gemm` / `packed_gemv`) directly on
+//! kernels (`packed::gemm::packed_gemm4` / `packed_gemv`) directly on
 //! [`Packed24`] weights from the `.stbp` store. Weights are never expanded
 //! to dense f32, so the resident projection footprint is the paper's ~0.55
 //! bit/weight artifact (§4.3, Appendix C) — this wires the packed path into
@@ -18,7 +18,9 @@ use crate::model::config::ModelConfig;
 use crate::model::transformer::{self, DecodeState, ModelOps};
 use crate::model::ModelWeights;
 use crate::packed::format::Packed24;
-use crate::packed::gemm::{packed_gemm_par, packed_gemv_par, packed_gemv_par_into};
+use crate::packed::gemm::{
+    packed_gemm4_par, packed_gemm4_par_into, packed_gemv_par, packed_gemv_par_into,
+};
 use crate::packed::store::PackedModel;
 use crate::tensor::Mat;
 
@@ -127,7 +129,9 @@ impl ModelOps for PackedBackend {
     }
 
     fn proj(&self, layer: usize, name: &str, x: &Mat) -> Mat {
-        packed_gemm_par(x, &self.layers[layer].mats[name], self.workers)
+        // v4 multi-column tile: each meta word decoded once per 4 batch
+        // rows; bit-identical to the v3 GEMM (and to per-row GEMV)
+        packed_gemm4_par(x, &self.layers[layer].mats[name], self.workers)
     }
 
     fn proj_vec(&self, layer: usize, name: &str, x: &[f32]) -> Vec<f32> {
@@ -136,6 +140,13 @@ impl ModelOps for PackedBackend {
 
     fn proj_vec_into(&self, layer: usize, name: &str, x: &[f32], out: &mut [f32]) {
         packed_gemv_par_into(&self.layers[layer].mats[name], x, out, self.workers);
+    }
+
+    fn proj_chunk_into(&self, layer: usize, name: &str, x: &Mat, out: &mut Mat) {
+        // the chunked-prefill hot path: amortize each 6-bit meta-word
+        // decode over all chunk columns while staying bit-identical to the
+        // per-token GEMV (shared row kernel)
+        packed_gemm4_par_into(x, &self.layers[layer].mats[name], out, self.workers);
     }
 
     fn embed_mat(&self) -> &Mat {
@@ -167,6 +178,7 @@ impl Backend for PackedBackend {
             fixed_seq_len: None,
             sub_1bit_storage: true,
             fused_decode: true,
+            chunked_prefill: true,
             paged_kv: true,
         }
     }
@@ -219,6 +231,10 @@ struct PackedSession<'a> {
 impl DecodeSession for PackedSession<'_> {
     fn step(&mut self, token: u8) -> Result<Vec<f32>> {
         Ok(self.st.step_ops(&self.be.cfg, self.be, token))
+    }
+
+    fn prefill(&mut self, tokens: &[u8], all_logits: bool) -> Result<Mat> {
+        Ok(self.st.prefill_chunk(&self.be.cfg, self.be, tokens, all_logits))
     }
 
     fn pos(&self) -> usize {
@@ -326,6 +342,30 @@ mod tests {
             for (a, b) in g.iter().zip(w) {
                 assert_eq!(a, b, "session {i}: fused logits must bit-match per-session");
             }
+        }
+    }
+
+    /// Chunked prefill through the v4 multi-column GEMM must bit-match
+    /// per-token stepping — across chunk sizes, incl. a word-unaligned
+    /// prompt length, with the parallel kernel path engaged.
+    #[test]
+    fn session_prefill_bitmatches_per_token_stepping() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let (_, pm) = exact_24(&cfg, 26);
+        let be = PackedBackend::from_store(&cfg, &pm).unwrap().with_workers(2);
+        assert!(be.capabilities().chunked_prefill);
+        let toks: Vec<u8> = (0..13).map(|i| (i * 5 % 32) as u8).collect();
+        let mut stepper = be.begin_decode(32).unwrap();
+        let want: Vec<Vec<f32>> = toks.iter().map(|&t| stepper.step(t).unwrap()).collect();
+        for cs in [3usize, 8, 32] {
+            let mut sess = be.begin_decode(32).unwrap();
+            let mut got: Vec<Vec<f32>> = Vec::new();
+            for chunk in toks.chunks(cs) {
+                let lg = sess.prefill(chunk, true).unwrap();
+                got.extend((0..lg.rows).map(|r| lg.row(r).to_vec()));
+            }
+            assert_eq!(sess.pos(), toks.len());
+            assert_eq!(got, want, "cs={cs}: chunked prefill must bit-match stepping");
         }
     }
 

@@ -111,7 +111,9 @@ impl Backend for PjrtBackend<'_> {
             fixed_seq_len: Some(self.cfg.seq_len),
             sub_1bit_storage: false,
             fused_decode: false,
-            // no decode path at all, so no paged-KV sessions either
+            // no decode path at all, so no chunked prefill or paged-KV
+            // sessions either
+            chunked_prefill: false,
             paged_kv: false,
         }
     }

@@ -7,6 +7,14 @@
 //! constraint is satisfied by construction (windows are exactly `seq_len`
 //! tokens), which is what the old hand-rolled PJRT loop did.
 //!
+//! Backends reporting [`Capabilities::chunked_prefill`] evaluate each
+//! window through `DecodeSession::prefill` instead of `Backend::forward`:
+//! one chunked decode-path pass per window, so eval rides the same
+//! decode-amortized packed GEMM as serving. The two routes are pinned
+//! against each other by test (`chunked_eval_bitmatches_token_by_token`).
+//!
+//! [`Capabilities::chunked_prefill`]: crate::engine::backend::Capabilities::chunked_prefill
+//!
 //! Perplexity is exp(mean NLL) of next-token prediction, matching
 //! `python/compile/model.py::next_token_loss`.
 
@@ -53,10 +61,22 @@ pub fn perplexity_par(backend: &dyn Backend, tokens: &[u8], workers: usize) -> R
         starts.push(i);
         i += win;
     }
+    let caps = backend.capabilities();
+    let chunked = caps.chunked_prefill && caps.decode;
     let per_window = crate::coordinator::scheduler::run(starts, workers.max(1), |i| {
         let ctx = &tokens[i..i + win];
         let tgt = &tokens[i + 1..i + win + 1];
-        backend.forward(ctx).map(|logits| nll_sum(&logits, tgt))
+        if chunked {
+            // decode-path window: one chunked prefill instead of a full
+            // forward — the packed backend reads each weight word once per
+            // window here rather than once per token
+            backend
+                .begin_decode(win)
+                .and_then(|mut sess| sess.prefill(ctx, true))
+                .map(|logits| nll_sum(&logits, tgt))
+        } else {
+            backend.forward(ctx).map(|logits| nll_sum(&logits, tgt))
+        }
     });
     let mut total = 0.0f64;
     let mut count = 0usize;
@@ -129,6 +149,36 @@ mod tests {
         let via_wrapper = ppl_native(&cfg, &w, &toks);
         let via_generic = perplexity(&NativeBackend::borrowed(&cfg, &w), &toks).unwrap();
         assert!((via_wrapper - via_generic).abs() < 1e-12);
+    }
+
+    /// The chunked-prefill eval route must bit-match evaluating the same
+    /// windows one `step` at a time through a decode session.
+    #[test]
+    fn chunked_eval_bitmatches_token_by_token() {
+        let cfg = ModelConfig::preset("llama1-7b").unwrap();
+        let w = ModelWeights::synthetic(&cfg, 8);
+        let toks = corpus::corpus_tokens("wikitext2s", 3 * 129, 5);
+        let be = NativeBackend::borrowed(&cfg, &w);
+        assert!(be.capabilities().chunked_prefill);
+        let got = perplexity(&be, &toks).unwrap();
+
+        let win = cfg.seq_len;
+        let (mut total, mut count) = (0.0f64, 0usize);
+        let mut i = 0usize;
+        while i + win + 1 <= toks.len() {
+            let ctx = &toks[i..i + win];
+            let tgt = &toks[i + 1..i + win + 1];
+            let mut sess = be.begin_decode(win).unwrap();
+            let mut logits = Mat::zeros(win, cfg.vocab);
+            for (r, &t) in ctx.iter().enumerate() {
+                logits.row_mut(r).copy_from_slice(&sess.step(t).unwrap());
+            }
+            total += nll_sum(&logits, tgt);
+            count += win;
+            i += win;
+        }
+        let want = (total / count.max(1) as f64).exp();
+        assert!((got - want).abs() == 0.0, "{got} vs {want}");
     }
 
     /// Window-parallel evaluation reduces the per-window sums in window

@@ -113,6 +113,10 @@ OPTIONS
                      (default {page_size}); pages/request =
                      ceil((prompt + max-new) / page-size)
   --flat-kv          serve: disable the paged pool (flat per-session KV)
+  --prefill-chunk N  serve: prompt tokens a prefilling stream may consume
+                     per scheduler tick as ONE batched packed GEMM
+                     (default {prefill_chunk}; 1 = legacy one-token-per-
+                     tick; streams are bit-identical at any setting)
   --stbp PATH        serve: save + reload the .stbp deployment container
                      and serve from the reloaded store (packed backend)
   --stats-json PATH  serve: write the schema-2 stats envelope (server
@@ -146,6 +150,9 @@ OPTIONS
                      recording overhead — /metrics renders empty)
   --seed N           chaos: fault-plan seed (default 7; CI pins 7)
   --target H:P       loadgen: gateway address to drive (required)
+  --prompt-tokens N  loadgen: prompt length in tokens (alias of --prompt;
+                     sized to exercise chunked prefill — TTFT p50/p95 in
+                     the report show the amortization)
   --connections N    loadgen: concurrent connections (default {lg_conns})
                      (--requests/--prompt/--max-new shape the workload;
                      --drain sends POST /admin/drain afterwards;
@@ -182,6 +189,7 @@ OPTIONS
         workers = defaults::WORKERS,
         kv_pages = defaults::KV_PAGES,
         page_size = defaults::PAGE_SIZE,
+        prefill_chunk = defaults::PREFILL_CHUNK,
         http_threads = defaults::HTTP_THREADS,
         keepalive_ms = defaults::HTTP_KEEPALIVE_MS,
         replicas = defaults::REPLICAS,
@@ -214,6 +222,7 @@ fn build_engine(args: &Args, backend_default: &str) -> Result<Engine> {
         .kv_pages(args.get_usize("kv-pages", defaults::KV_PAGES))
         .page_size(args.get_usize("page-size", defaults::PAGE_SIZE))
         .flat_kv(args.flag("flat-kv"))
+        .prefill_chunk(args.get_usize("prefill-chunk", defaults::PREFILL_CHUNK))
         .synthetic_fallback(args.flag("synthetic"))
         .build()?;
     Ok(engine)
@@ -345,6 +354,8 @@ fn serve(args: &Args) -> Result<()> {
             be.bits_per_weight()
         );
         let mut server = BatchServer::new(&be, batch);
+        server.prefill_chunk =
+            args.get_usize("prefill-chunk", defaults::PREFILL_CHUNK).max(1);
         if !flat_kv {
             server = server.with_kv_pool(kv_pages, page_size);
         }
@@ -513,7 +524,9 @@ fn loadgen(args: &Args) -> Result<()> {
             target: target.to_string(),
             connections: args.get_usize("connections", defaults::LOADGEN_CONNECTIONS).max(1),
             requests: args.get_usize("requests", defaults::LOADGEN_REQUESTS).max(1),
-            prompt_len: args.get_usize("prompt", defaults::PROMPT_LEN).max(1),
+            prompt_len: args
+                .get_usize("prompt-tokens", args.get_usize("prompt", defaults::PROMPT_LEN))
+                .max(1),
             max_new: args.get_usize("max-new", defaults::MAX_NEW).max(1),
             shared_prompt: true,
             drain: false,
@@ -643,7 +656,13 @@ fn bench_kernels(args: &Args) -> Result<()> {
         if !out.fused_beats_per_session {
             bail!("bench-kernels gate FAILED: fused decode_batch slower than per-session decode");
         }
-        println!("smoke gate OK: packed >= 2-bit, fused >= per-session");
+        if !out.chunked_prefill_beats_token {
+            bail!(
+                "bench-kernels gate FAILED: chunked prefill (gemm, chunk 32) slower than \
+                 token-by-token prefill (gemv) on the largest shape"
+            );
+        }
+        println!("smoke gate OK: packed >= 2-bit, fused >= per-session, chunked >= token-by-token");
     }
     Ok(())
 }

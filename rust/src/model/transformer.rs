@@ -41,6 +41,23 @@ pub trait ModelOps {
     fn proj_vec_into(&self, layer: usize, name: &str, x: &[f32], out: &mut [f32]) {
         out.copy_from_slice(&self.proj_vec(layer, name, x));
     }
+    /// Chunk projection into caller-owned storage: `out = x @ W^T` for a
+    /// (C, in) block of activation rows — the chunked-prefill seam
+    /// ([`DecodeState::prefill_chunk`]). `out` must be (C, out_rows).
+    ///
+    /// The default routes every row through [`ModelOps::proj_vec_into`],
+    /// which makes chunked prefill bit-identical to token-by-token decode
+    /// *by construction*. Representations whose batched GEMM shares the
+    /// decode row kernel (the packed LUT kernels: `packed_gemm4` funnels
+    /// through the same per-word accumulation as `packed_gemv`) override
+    /// this to amortize each weight read across all C columns while
+    /// preserving that bit identity.
+    fn proj_chunk_into(&self, layer: usize, name: &str, x: &Mat, out: &mut Mat) {
+        debug_assert_eq!(x.rows, out.rows);
+        for b in 0..x.rows {
+            self.proj_vec_into(layer, name, x.row(b), out.row_mut(b));
+        }
+    }
     /// Tied embedding matrix — (vocab, dim).
     fn embed_mat(&self) -> &Mat;
     /// Learned positional embeddings (OPT family only).
@@ -591,6 +608,154 @@ impl DecodeState {
         rmsnorm_vec_into(&sc.x, ops.ln_f(), cfg.norm_eps, &mut sc.xn);
         crate::tensor::matvec(ops.embed_mat(), &sc.xn)
     }
+
+    /// Process a chunk of C prompt tokens in one pass — the chunked-prefill
+    /// fast path. Projections run once per layer over the stacked (C, ·)
+    /// activation block via [`ModelOps::proj_chunk_into`], so a packed
+    /// representation decodes each 6-bit meta word once per chunk instead of
+    /// once per token; attention is causal within the chunk and reads
+    /// earlier context from the KV store exactly like
+    /// [`DecodeState::step_ops`].
+    ///
+    /// Returns logits as a Mat: all C rows when `all_logits` is true (the
+    /// perplexity path), else just the final row (serving, where only the
+    /// next-token distribution matters). The chunk may start at any
+    /// position — prefix-cache resume lands mid-prompt at arbitrary,
+    /// page-aligned-but-chunk-unaligned offsets — and the output is
+    /// bit-identical to feeding the same tokens through `step_ops` one at a
+    /// time, on flat and paged KV alike: per-position math only couples
+    /// positions through the KV rows, every KV row written here is the same
+    /// f32s `step_ops` would write, and the projections either reuse the
+    /// decode row kernel verbatim (default seam) or share its per-word
+    /// accumulation (packed v4 GEMM).
+    pub fn prefill_chunk(
+        &mut self,
+        cfg: &ModelConfig,
+        ops: &dyn ModelOps,
+        tokens: &[u8],
+        all_logits: bool,
+    ) -> Mat {
+        let c = tokens.len();
+        if c == 0 {
+            return Mat::zeros(0, ops.embed_mat().rows);
+        }
+        if c == 1 {
+            // single-token chunks take the scalar hot path untouched
+            let lg = self.step_ops(cfg, ops, tokens[0]);
+            let n = lg.len();
+            return Mat::from_vec(1, n, lg);
+        }
+        assert!(self.pos + c <= self.capacity, "KV cache capacity exceeded");
+        let d = cfg.dim;
+        let nh = cfg.n_heads();
+        let p0 = self.pos;
+        let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+        let (cos, sin) = (&self.rope.0, &self.rope.1);
+
+        // stacked embeddings for the chunk
+        let mut x = Mat::zeros(c, d);
+        let emb = ops.embed_mat();
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(emb.row(t as usize));
+            if let Some(pos_emb) = ops.pos_mat() {
+                for (a, b) in x.row_mut(i).iter_mut().zip(pos_emb.row((p0 + i) % pos_emb.rows)) {
+                    *a += b;
+                }
+            }
+        }
+
+        let mut xn = Mat::zeros(c, d);
+        let mut q = Mat::zeros(c, d);
+        let mut k = Mat::zeros(c, d);
+        let mut v = Mat::zeros(c, d);
+        let mut attn_out = Mat::zeros(c, d);
+        let mut proj = Mat::zeros(c, d);
+        let mut g = Mat::zeros(c, cfg.ffn_hidden);
+        let mut u = Mat::zeros(c, cfg.ffn_hidden);
+        let mut ffn = Mat::zeros(c, d);
+
+        for li in 0..ops.n_layers() {
+            for i in 0..c {
+                rmsnorm_vec_into(x.row(i), ops.ln1(li), cfg.norm_eps, xn.row_mut(i));
+            }
+            ops.proj_chunk_into(li, "wq", &xn, &mut q);
+            ops.proj_chunk_into(li, "wk", &xn, &mut k);
+            ops.proj_chunk_into(li, "wv", &xn, &mut v);
+            // rotate + append the whole chunk's KV rows before attending:
+            // position p0+i only ever reads rows ≤ p0+i, so writing the
+            // later rows early cannot leak acausal context
+            for i in 0..c {
+                let p = p0 + i;
+                if cfg.family != Family::Opt {
+                    for h in 0..nh {
+                        let hd = h * HEAD_DIM..(h + 1) * HEAD_DIM;
+                        apply_rope_vec(&mut q.row_mut(i)[hd.clone()], cos, sin, p);
+                        apply_rope_vec(&mut k.row_mut(i)[hd], cos, sin, p);
+                    }
+                }
+                self.kv.write(li, p, k.row(i), v.row(i));
+            }
+            attn_out.data.fill(0.0);
+            for i in 0..c {
+                let p = p0 + i;
+                let lo = if cfg.window > 0 { (p + 1).saturating_sub(cfg.window) } else { 0 };
+                let att = &mut self.scratch.att[..p + 1];
+                for h in 0..nh {
+                    let hoff = h * HEAD_DIM;
+                    let qh = &q.row(i)[hoff..hoff + HEAD_DIM];
+                    for j in lo..=p {
+                        let kj = &self.kv.k_row(li, j)[hoff..hoff + HEAD_DIM];
+                        att[j] = crate::tensor::dot(qh, kj) * scale;
+                    }
+                    softmax_inplace(&mut att[lo..=p]);
+                    for j in lo..=p {
+                        let wgt = att[j];
+                        let vj = &self.kv.v_row(li, j)[hoff..hoff + HEAD_DIM];
+                        for (o, vv) in
+                            attn_out.row_mut(i)[hoff..hoff + HEAD_DIM].iter_mut().zip(vj)
+                        {
+                            *o += wgt * vv;
+                        }
+                    }
+                }
+            }
+            ops.proj_chunk_into(li, "wo", &attn_out, &mut proj);
+            x.add_assign(&proj);
+
+            for i in 0..c {
+                rmsnorm_vec_into(x.row(i), ops.ln2(li), cfg.norm_eps, xn.row_mut(i));
+            }
+            if cfg.family == Family::Opt {
+                ops.proj_chunk_into(li, "w1", &xn, &mut g);
+                g.data.iter_mut().for_each(|t| *t = gelu(*t));
+                ops.proj_chunk_into(li, "w2", &g, &mut ffn);
+            } else {
+                ops.proj_chunk_into(li, "w1", &xn, &mut g);
+                ops.proj_chunk_into(li, "w3", &xn, &mut u);
+                for (gi, ui) in g.data.iter_mut().zip(&u.data) {
+                    *gi = silu(*gi) * ui;
+                }
+                ops.proj_chunk_into(li, "w2", &g, &mut ffn);
+            }
+            x.add_assign(&ffn);
+        }
+        self.pos += c;
+        // deferred page-publication hooks, in token order: by now every
+        // layer's rows for the chunk are written, so each completed page is
+        // whole when its boundary token publishes it — same page/hash
+        // sequence the token-by-token path produces
+        for &t in tokens {
+            self.kv.on_token(t);
+        }
+
+        let first = if all_logits { 0 } else { c - 1 };
+        let mut out = Mat::zeros(c - first, emb.rows);
+        for (r, i) in (first..c).enumerate() {
+            rmsnorm_vec_into(x.row(i), ops.ln_f(), cfg.norm_eps, &mut self.scratch.xn);
+            crate::tensor::matvec_into(emb, &self.scratch.xn, out.row_mut(r));
+        }
+        out
+    }
 }
 
 /// One fused decode tick over any representation: step each session one
@@ -873,6 +1038,91 @@ mod tests {
         for (p, &t) in toks.iter().enumerate().skip(matched) {
             let got = second.step_ops(&cfg, &w, t);
             assert_eq!(got, want[p], "prefix-matched logits must bit-match");
+        }
+    }
+
+    /// Chunked prefill must reproduce token-by-token stepping bit-for-bit:
+    /// every chunk size {1, 3, 8, 32}, a word-unaligned prompt length, all
+    /// model families (incl. the sliding-window one), flat KV.
+    #[test]
+    fn prefill_chunk_bitmatches_step_ops_flat() {
+        for name in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+            let (cfg, w) = tiny(name);
+            let toks: Vec<u8> = (0..13).map(|i| (i * 5 % 32) as u8).collect();
+            let mut base = DecodeState::new(&cfg, 64);
+            let want: Vec<Vec<f32>> = toks.iter().map(|&t| base.step_ops(&cfg, &w, t)).collect();
+            for cs in [1usize, 3, 8, 32] {
+                let mut st = DecodeState::new(&cfg, 64);
+                let mut got: Vec<Vec<f32>> = Vec::new();
+                for chunk in toks.chunks(cs) {
+                    let lg = st.prefill_chunk(&cfg, &w, chunk, true);
+                    assert_eq!((lg.rows, lg.cols), (chunk.len(), cfg.vocab));
+                    got.extend((0..lg.rows).map(|r| lg.row(r).to_vec()));
+                }
+                assert_eq!(st.pos, toks.len());
+                for (p, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a, b, "{name} cs={cs} pos={p}");
+                }
+            }
+        }
+    }
+
+    /// `all_logits: false` keeps only the final row; the empty chunk is a
+    /// position-preserving no-op.
+    #[test]
+    fn prefill_chunk_last_row_and_empty_chunk() {
+        let (cfg, w) = tiny("llama1-7b");
+        let toks: Vec<u8> = vec![3, 1, 4, 1, 5, 9, 2];
+        let mut a = DecodeState::new(&cfg, 32);
+        let full = a.prefill_chunk(&cfg, &w, &toks, true);
+        let mut b = DecodeState::new(&cfg, 32);
+        let last = b.prefill_chunk(&cfg, &w, &toks, false);
+        assert_eq!((last.rows, last.cols), (1, cfg.vocab));
+        assert_eq!(last.row(0), full.row(full.rows - 1));
+        let e = b.prefill_chunk(&cfg, &w, &[], true);
+        assert_eq!((e.rows, e.cols), (0, cfg.vocab));
+        assert_eq!(b.pos, toks.len());
+    }
+
+    /// Chunked prefill over paged KV bit-matches flat, and per-token decode
+    /// continues seamlessly from the chunked state.
+    #[test]
+    fn prefill_chunk_paged_bitmatches_flat() {
+        for name in ["llama1-7b", "opt-1.3b", "mistral-7b"] {
+            let (cfg, w) = tiny(name);
+            let toks: Vec<u8> = (0..14).map(|i| (i * 3 % 32) as u8).collect();
+            let mut flat = DecodeState::new(&cfg, 32);
+            let want = flat.prefill_chunk(&cfg, &w, &toks, true);
+            let pool = Arc::new(KvPool::new(&cfg, 16, 4));
+            let mut paged = DecodeState::new_paged(&cfg, 32, &pool, &toks).unwrap();
+            assert_eq!(paged.pos, 0, "fresh pool must not prefix-match");
+            let got = paged.prefill_chunk(&cfg, &w, &toks, true);
+            assert_eq!(got.data, want.data, "{name}: paged chunk must bit-match flat");
+            let a = flat.step_ops(&cfg, &w, 9);
+            let b = paged.step_ops(&cfg, &w, 9);
+            assert_eq!(a, b, "{name}: decode after chunked prefill must bit-match");
+        }
+    }
+
+    /// Prefix-cache resume lands at page-aligned but chunk-unaligned
+    /// positions; `prefill_chunk` must continue bit-exactly from there.
+    #[test]
+    fn prefill_chunk_resumes_mid_prompt_after_prefix_hit() {
+        let (cfg, w) = tiny("llama1-7b");
+        let toks: Vec<u8> = (0..19).map(|i| (i * 3 % 32) as u8).collect();
+        let pool = Arc::new(KvPool::new(&cfg, 32, 4));
+        let mut first = DecodeState::new_paged(&cfg, 32, &pool, &toks).unwrap();
+        let mut want = Vec::new();
+        for &t in &toks {
+            want.push(first.step_ops(&cfg, &w, t));
+        }
+        let mut second = DecodeState::new_paged(&cfg, 32, &pool, &toks).unwrap();
+        let matched = second.pos;
+        assert!(matched >= 16, "expected ≥4 reused pages, matched {matched}");
+        let got = second.prefill_chunk(&cfg, &w, &toks[matched..], true);
+        assert_eq!(got.rows, toks.len() - matched);
+        for (r, p) in (matched..toks.len()).enumerate() {
+            assert_eq!(got.row(r), &want[p][..], "resume pos {p} must bit-match");
         }
     }
 

@@ -91,6 +91,9 @@ pub struct BridgeOpts {
     /// Head-of-line age boost threshold (see
     /// [`BatchServer::hol_boost_deferrals`]).
     pub hol_boost_deferrals: u32,
+    /// Per-tick prefill-token budget per session (see
+    /// [`BatchServer::prefill_chunk`]; 1 = legacy one-token-per-tick).
+    pub prefill_chunk: usize,
     /// Panic restarts before the supervisor gives up on this worker.
     pub max_restarts: usize,
 }
@@ -102,6 +105,7 @@ impl BridgeOpts {
             max_batch,
             pool: None,
             hol_boost_deferrals: crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS,
+            prefill_chunk: crate::coordinator::server::DEFAULT_PREFILL_CHUNK,
             max_restarts: MAX_BRIDGE_RESTARTS,
         }
     }
@@ -140,6 +144,7 @@ pub fn run_bridge(
     let mut server =
         BatchServer::new(backend, opts.max_batch.max(1)).with_registry(ctl.registry());
     server.hol_boost_deferrals = opts.hol_boost_deferrals;
+    server.prefill_chunk = opts.prefill_chunk.max(1);
     if let Some(pool) = &opts.pool {
         server = server.with_pool(pool.clone());
     }

@@ -51,7 +51,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coordinator::kvpool::{KvPool, KvPoolStats};
-use crate::coordinator::server::DEFAULT_HOL_BOOST_DEFERRALS;
+use crate::coordinator::server::{DEFAULT_HOL_BOOST_DEFERRALS, DEFAULT_PREFILL_CHUNK};
 use crate::engine::Backend;
 use crate::net::api::{DoneEvent, GenerateEvent, GenerateRequest};
 use crate::net::bridge::{
@@ -266,6 +266,12 @@ pub struct ServeConfig {
     pub addr_file: Option<String>,
     /// Head-of-line age boost threshold for the admission queue.
     pub hol_boost_deferrals: u32,
+    /// Per-tick prefill-token budget per session (`--prefill-chunk`): a
+    /// prefilling stream consumes up to this many prompt tokens per
+    /// scheduler tick, multi-token chunks running as one batched packed
+    /// GEMM. `1` = legacy one-token-per-tick; streams are byte-identical
+    /// either way.
+    pub prefill_chunk: usize,
     /// Load-shed watermark in free KV pages, applied per replica: when a
     /// replica's `total - reserved` drops below this it is not routable,
     /// and when NO replica is, new `/generate` admits get `503 +
@@ -297,6 +303,7 @@ impl ServeConfig {
             keepalive_ms: defaults::HTTP_KEEPALIVE_MS,
             addr_file: None,
             hol_boost_deferrals: DEFAULT_HOL_BOOST_DEFERRALS,
+            prefill_chunk: DEFAULT_PREFILL_CHUNK,
             shed_watermark: 0,
             replicas: defaults::REPLICAS,
             max_bridge_restarts: MAX_BRIDGE_RESTARTS,
@@ -415,6 +422,7 @@ pub fn serve_http(
                 max_batch: opts.max_batch.max(1),
                 pool: router.seats()[idx].pool().cloned(),
                 hol_boost_deferrals: opts.hol_boost_deferrals,
+                prefill_chunk: opts.prefill_chunk,
                 max_restarts: opts.max_bridge_restarts,
             };
             let router = Arc::clone(&router);

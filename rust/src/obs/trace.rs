@@ -31,6 +31,7 @@ pub struct TraceSpan {
     ttft_s: Option<f64>,
     pages: usize,
     prefix_hit_tokens: usize,
+    prefill_tokens: usize,
     ticks: u32,
 }
 
@@ -46,6 +47,7 @@ impl TraceSpan {
             ttft_s: None,
             pages: 0,
             prefix_hit_tokens: 0,
+            prefill_tokens: 0,
             ticks: 0,
         }
     }
@@ -93,6 +95,13 @@ impl TraceSpan {
         self.prefix_hit_tokens += tokens;
     }
 
+    /// Record prompt tokens actually prefilled this tick (the chunked
+    /// scheduler consumes up to `prefill_chunk` per tick; 1 per tick on
+    /// the legacy path).
+    pub fn add_prefill_tokens(&mut self, tokens: usize) {
+        self.prefill_tokens += tokens;
+    }
+
     /// Close the span and produce the summary that rides on the response.
     pub fn finish(&self, now: Instant) -> TraceSummary {
         let total_s = now.duration_since(self.enqueued).as_secs_f64();
@@ -105,6 +114,7 @@ impl TraceSpan {
             ttft_ms: self.ttft_s.unwrap_or(total_s) * 1e3,
             pages: self.pages,
             prefix_hit_tokens: self.prefix_hit_tokens,
+            prefill_tokens: self.prefill_tokens,
             ticks: self.ticks,
         }
     }
@@ -130,6 +140,9 @@ pub struct TraceSummary {
     pub pages: usize,
     /// Prompt tokens served from the prefix cache.
     pub prefix_hit_tokens: usize,
+    /// Prompt tokens actually prefilled (chunked prefill may consume many
+    /// per tick; `prefix_hit_tokens + prefill_tokens` covers the prompt).
+    pub prefill_tokens: usize,
     /// Number of scheduler ticks the request participated in.
     pub ticks: u32,
 }
@@ -147,6 +160,7 @@ impl TraceSummary {
             ("ttft_ms", num(self.ttft_ms)),
             ("pages", num(self.pages as f64)),
             ("prefix_hit_tokens", num(self.prefix_hit_tokens as f64)),
+            ("prefill_tokens", num(self.prefill_tokens as f64)),
             ("ticks", num(f64::from(self.ticks))),
         ])
     }
@@ -214,12 +228,14 @@ mod tests {
             ttft_ms: 6.0,
             pages: 3,
             prefix_hit_tokens: 8,
+            prefill_tokens: 5,
             ticks: 7,
         };
         assert!(sum.stages_within_total(0.0)); // 2+3+4 <= 10
         let j = sum.to_json();
         assert_eq!(j.path(&["queue_ms"]).and_then(Json::as_f64), Some(2.0));
         assert_eq!(j.path(&["pages"]).and_then(Json::as_usize), Some(3));
+        assert_eq!(j.path(&["prefill_tokens"]).and_then(Json::as_usize), Some(5));
         let parsed = Json::parse(&sum.header_value()).expect("trailer value parses");
         assert_eq!(parsed.get("ticks").and_then(Json::as_usize), Some(7));
         let busted = TraceSummary { queue_ms: 9.0, ..sum };

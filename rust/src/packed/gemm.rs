@@ -28,6 +28,19 @@
 //!     bit-identical per element — which is what lets the fused
 //!     cross-session `decode_batch` path reproduce per-session decode
 //!     token-for-token.
+//!   * v4 — [`packed_gemm4`] (`packed_gemm` v4): multi-column prefill
+//!     kernel. A 4-row × 4-column register tile ([`packed_row_dot4x4`])
+//!     reads each `u16` meta word + `u8` sign byte ONCE and FMAs its LUT
+//!     coefficient quads (`word_coefs` / `word_dot_c` — the exact
+//!     arithmetic `word_dot` is composed from) into all 4 activation
+//!     columns, raising arithmetic intensity ×chunk on the metadata
+//!     stream: chunked prefill decodes each packed weight word once per
+//!     4 prompt tokens instead of once per token. Per-element
+//!     accumulation order is unchanged — the tile only changes which
+//!     loads are shared — so v4 outputs are bit-identical to v3 (and
+//!     remainder rows/columns literally run the v3 row kernel), which is
+//!     what lets chunked prefill reproduce token-by-token decode
+//!     stream-for-stream.
 
 use super::format::Packed24;
 use crate::tensor::Mat;
@@ -57,21 +70,39 @@ const fn build_group_coef() -> [[f32; 4]; 64] {
     lut
 }
 
+/// Decode one meta word + sign byte into its 4 LUT coefficient quads.
+/// This is the load the v4 tile shares across activation columns: one
+/// `word_coefs` feeds up to 4 [`word_dot_c`] applications.
+#[inline(always)]
+fn word_coefs(m: u16, s: u8) -> [&'static [f32; 4]; 4] {
+    let m = m as usize;
+    let s = s as usize;
+    [
+        &GROUP_COEF[(m & 0xf) | ((s & 0x3) << 4)],
+        &GROUP_COEF[((m >> 4) & 0xf) | (((s >> 2) & 0x3) << 4)],
+        &GROUP_COEF[((m >> 8) & 0xf) | (((s >> 4) & 0x3) << 4)],
+        &GROUP_COEF[((m >> 12) & 0xf) | (((s >> 6) & 0x3) << 4)],
+    ]
+}
+
+/// Apply pre-decoded word coefficients to a 16-wide activation block:
+/// 16 FMAs + the fixed pairwise reduction `(a0 + a1) + (a2 + a3)`. The
+/// ONE word-level arithmetic every LUT kernel (v3 and v4) runs, so
+/// sharing the decode cannot change a single output bit.
+#[inline(always)]
+fn word_dot_c(c: &[&'static [f32; 4]; 4], xb: &[f32]) -> f32 {
+    let a0 = c[0][0] * xb[0] + c[0][1] * xb[1] + c[0][2] * xb[2] + c[0][3] * xb[3];
+    let a1 = c[1][0] * xb[4] + c[1][1] * xb[5] + c[1][2] * xb[6] + c[1][3] * xb[7];
+    let a2 = c[2][0] * xb[8] + c[2][1] * xb[9] + c[2][2] * xb[10] + c[2][3] * xb[11];
+    let a3 = c[3][0] * xb[12] + c[3][1] * xb[13] + c[3][2] * xb[14] + c[3][3] * xb[15];
+    (a0 + a1) + (a2 + a3)
+}
+
 /// Dot of one meta word (4 groups = 16 weights) with a 16-wide activation
 /// block. `xb` must have at least 16 elements.
 #[inline(always)]
 fn word_dot(m: u16, s: u8, xb: &[f32]) -> f32 {
-    let m = m as usize;
-    let s = s as usize;
-    let c0 = &GROUP_COEF[(m & 0xf) | ((s & 0x3) << 4)];
-    let c1 = &GROUP_COEF[((m >> 4) & 0xf) | (((s >> 2) & 0x3) << 4)];
-    let c2 = &GROUP_COEF[((m >> 8) & 0xf) | (((s >> 4) & 0x3) << 4)];
-    let c3 = &GROUP_COEF[((m >> 12) & 0xf) | (((s >> 6) & 0x3) << 4)];
-    let a0 = c0[0] * xb[0] + c0[1] * xb[1] + c0[2] * xb[2] + c0[3] * xb[3];
-    let a1 = c1[0] * xb[4] + c1[1] * xb[5] + c1[2] * xb[6] + c1[3] * xb[7];
-    let a2 = c2[0] * xb[8] + c2[1] * xb[9] + c2[2] * xb[10] + c2[3] * xb[11];
-    let a3 = c3[0] * xb[12] + c3[1] * xb[13] + c3[2] * xb[14] + c3[3] * xb[15];
-    (a0 + a1) + (a2 + a3)
+    word_dot_c(&word_coefs(m, s), xb)
 }
 
 /// Scalar single-group dot (head/tail of word-unaligned rows). `gi` is the
@@ -129,6 +160,46 @@ fn packed_row_dot4(meta: &[u16], signs: &[u8], w0: usize, wpr: usize, xr: &[f32]
         acc[1] += word_dot(m1[wi], s1[wi], xb);
         acc[2] += word_dot(m2[wi], s2[wi], xb);
         acc[3] += word_dot(m3[wi], s3[wi], xb);
+    }
+    acc
+}
+
+/// The v4 register tile: 4 consecutive word-aligned weight rows × 4
+/// activation columns. Each meta word + sign byte is decoded ONCE per
+/// `wi` ([`word_coefs`]) and its coefficient quads are FMAed into all 4
+/// columns' accumulators — the decode-amortization chunked prefill is
+/// built on. `acc[b][r]` accumulates `word_dot_c` over ascending `wi`,
+/// exactly the order [`packed_row_dot4`] uses per column, so the tile is
+/// bit-identical to running the v3 kernel on each column independently.
+#[inline(always)]
+fn packed_row_dot4x4(
+    meta: &[u16],
+    signs: &[u8],
+    w0: usize,
+    wpr: usize,
+    xs: &[&[f32]; 4],
+) -> [[f32; 4]; 4] {
+    let m0 = &meta[w0..w0 + wpr];
+    let m1 = &meta[w0 + wpr..w0 + 2 * wpr];
+    let m2 = &meta[w0 + 2 * wpr..w0 + 3 * wpr];
+    let m3 = &meta[w0 + 3 * wpr..w0 + 4 * wpr];
+    let s0 = &signs[w0..w0 + wpr];
+    let s1 = &signs[w0 + wpr..w0 + 2 * wpr];
+    let s2 = &signs[w0 + 2 * wpr..w0 + 3 * wpr];
+    let s3 = &signs[w0 + 3 * wpr..w0 + 4 * wpr];
+    let mut acc = [[0.0f32; 4]; 4];
+    for wi in 0..wpr {
+        let c0 = word_coefs(m0[wi], s0[wi]);
+        let c1 = word_coefs(m1[wi], s1[wi]);
+        let c2 = word_coefs(m2[wi], s2[wi]);
+        let c3 = word_coefs(m3[wi], s3[wi]);
+        for (b, xcol) in xs.iter().enumerate() {
+            let xb = &xcol[wi * 16..wi * 16 + 16];
+            acc[b][0] += word_dot_c(&c0, xb);
+            acc[b][1] += word_dot_c(&c1, xb);
+            acc[b][2] += word_dot_c(&c2, xb);
+            acc[b][3] += word_dot_c(&c3, xb);
+        }
     }
     acc
 }
@@ -281,6 +352,113 @@ pub fn packed_gemm_par_into(x: &Mat, w: &Packed24, y: &mut Mat, workers: usize) 
 pub fn packed_gemm_par(x: &Mat, w: &Packed24, workers: usize) -> Mat {
     let mut y = Mat::zeros(x.rows, w.rows);
     packed_gemm_par_into(x, w, &mut y, workers);
+    y
+}
+
+// ---------------------------------------------------------------------------
+// GEMM — v4: 4-row × 4-column tile, each meta word decoded once per tile
+// ---------------------------------------------------------------------------
+
+/// Batch rows `[b0, b0 + yseg.len() / w.rows)` of the v4 tile kernel.
+/// Word-aligned weight rows run the [`packed_row_dot4x4`] tile; remainder
+/// output rows, remainder batch columns and word-unaligned shapes fall
+/// back to the v3 row kernel — every path produces the same per-element
+/// accumulation, so v4 is bit-identical to v3 at any partition.
+fn gemm4_batch_range(x: &Mat, w: &Packed24, b0: usize, yseg: &mut [f32]) {
+    let n_out = w.rows;
+    let nb = yseg.len() / n_out;
+    let g = w.cols / 4;
+    let aligned = g % 4 == 0 && g > 0;
+    let mut bi = 0usize;
+    if aligned {
+        let wpr = g / 4;
+        while bi + 4 <= nb {
+            let xs = [
+                x.row(b0 + bi),
+                x.row(b0 + bi + 1),
+                x.row(b0 + bi + 2),
+                x.row(b0 + bi + 3),
+            ];
+            let mut n = 0usize;
+            while n + 4 <= n_out {
+                let acc = packed_row_dot4x4(&w.meta, &w.signs, n * wpr, wpr, &xs);
+                for (c, col) in acc.iter().enumerate() {
+                    let yr = &mut yseg[(bi + c) * n_out..(bi + c + 1) * n_out];
+                    yr[n] = col[0] * w.alpha[n];
+                    yr[n + 1] = col[1] * w.alpha[n + 1];
+                    yr[n + 2] = col[2] * w.alpha[n + 2];
+                    yr[n + 3] = col[3] * w.alpha[n + 3];
+                }
+                n += 4;
+            }
+            while n < n_out {
+                for (c, xr) in xs.iter().enumerate() {
+                    yseg[(bi + c) * n_out + n] =
+                        packed_row_dot(&w.meta, &w.signs, n * g, g, xr) * w.alpha[n];
+                }
+                n += 1;
+            }
+            bi += 4;
+        }
+    }
+    while bi < nb {
+        packed_rows_kernel(w, x.row(b0 + bi), &mut yseg[bi * n_out..(bi + 1) * n_out]);
+        bi += 1;
+    }
+}
+
+/// y = x @ W_packed^T through the v4 4×4 tile into a caller-owned output
+/// matrix (zero allocations). Bit-identical to [`packed_gemm_into`].
+pub fn packed_gemm4_into(x: &Mat, w: &Packed24, y: &mut Mat) {
+    assert_eq!(x.cols, w.cols, "K mismatch");
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "output shape mismatch");
+    gemm4_batch_range(x, w, 0, &mut y.data);
+}
+
+/// y = x @ W_packed^T — the v4 multi-column tile kernel (allocating
+/// wrapper over [`packed_gemm4_into`]).
+pub fn packed_gemm4(x: &Mat, w: &Packed24) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.rows);
+    packed_gemm4_into(x, w, &mut y);
+    y
+}
+
+/// Parallel v4 GEMM: batch rows split across the scheduler pool in
+/// multiples of 4 so every worker keeps full 4-column tiles (the tail
+/// worker takes the remainder); a single activation row degrades to
+/// [`packed_gemv_par_into`]; serial below the [`PAR_MIN_MACS`] cutoff.
+/// Bit-identical to serial v4 (and so to v3) at any worker count —
+/// partitioning only changes which columns share a tile's decode, never
+/// any element's accumulation order.
+pub fn packed_gemm4_par_into(x: &Mat, w: &Packed24, y: &mut Mat, workers: usize) {
+    assert_eq!(x.cols, w.cols, "K mismatch");
+    assert_eq!((y.rows, y.cols), (x.rows, w.rows), "output shape mismatch");
+    let macs = x.rows * w.rows * (w.cols / 2);
+    if workers <= 1 || macs < PAR_MIN_MACS {
+        return packed_gemm4_into(x, w, y);
+    }
+    if x.rows == 1 {
+        return packed_gemv_par_into(w, x.row(0), y.row_mut(0), workers);
+    }
+    let parts = workers.min(x.rows.div_ceil(4));
+    let chunk = x.rows.div_ceil(parts).div_ceil(4) * 4;
+    let n = w.rows;
+    let mut jobs: Vec<(usize, &mut [f32])> = Vec::with_capacity(parts);
+    let mut b0 = 0usize;
+    for seg in y.data.chunks_mut(chunk * n) {
+        let nb = seg.len() / n;
+        jobs.push((b0, seg));
+        b0 += nb;
+    }
+    crate::coordinator::scheduler::run(jobs, parts, |(b0, yseg)| {
+        gemm4_batch_range(x, w, b0, yseg);
+    });
+}
+
+/// Allocating wrapper over [`packed_gemm4_par_into`].
+pub fn packed_gemm4_par(x: &Mat, w: &Packed24, workers: usize) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.rows);
+    packed_gemm4_par_into(x, w, &mut y, workers);
     y
 }
 
@@ -637,6 +815,56 @@ mod tests {
         let serial = packed_gemv(&packed, &xv);
         let par = packed_gemv_par(&packed, &xv, 4);
         assert_eq!(serial, par, "parallel GEMV must bit-match serial");
+    }
+
+    /// v4 (4×4 tile) must BIT-match v3 on every shape class: word-aligned
+    /// and unaligned columns, 4-row remainders, and batch sizes spanning
+    /// full tiles, remainders and single columns.
+    #[test]
+    fn gemm4_bitmatches_v3_across_shapes_and_batches() {
+        prop_check("v4 tile bit-matches v3", 25, |rng| {
+            let rows = 1 + rng.bounded(13) as usize;
+            let cols = 4 * (1 + rng.bounded(31) as usize); // frequently % 16 != 0
+            let (packed, _) = random_sb24(rows, cols, rng);
+            for batch in [1usize, 3, 5, 8, 32] {
+                let x = Mat::random(batch, cols, 1.0, rng);
+                let v3 = packed_gemm(&x, &packed);
+                let v4 = packed_gemm4(&x, &packed);
+                prop_assert!(
+                    v3.data == v4.data,
+                    "v4 diverged from v3 on {rows}x{cols} batch {batch}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Parallel v4 must bit-match serial v4 past the PAR_MIN_MACS cutoff,
+    /// including a batch size that is not a multiple of the 4-column tile.
+    #[test]
+    fn gemm4_parallel_bitmatches_serial() {
+        let mut rng = Pcg32::seeded(12);
+        let (packed, _) = random_sb24(256, 512, &mut rng);
+        for batch in [8usize, 10] {
+            let x = Mat::random(batch, 512, 1.0, &mut rng);
+            assert!(x.rows * packed.rows * (packed.cols / 2) >= PAR_MIN_MACS);
+            let serial = packed_gemm4(&x, &packed);
+            let par = packed_gemm4_par(&x, &packed, 4);
+            assert_eq!(serial.data, par.data, "parallel v4 must bit-match serial (batch {batch})");
+            let v3 = packed_gemm(&x, &packed);
+            assert_eq!(serial.data, v3.data, "v4 must bit-match v3 (batch {batch})");
+        }
+    }
+
+    #[test]
+    fn gemm4_into_writes_in_place() {
+        let mut rng = Pcg32::seeded(13);
+        let (packed, _) = random_sb24(24, 64, &mut rng);
+        let x = Mat::random(6, 64, 1.0, &mut rng);
+        let want = packed_gemm(&x, &packed);
+        let mut y = Mat::zeros(6, 24);
+        packed_gemm4_into(&x, &packed, &mut y);
+        assert_eq!(want.data, y.data);
     }
 
     #[test]

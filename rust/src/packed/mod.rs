@@ -11,7 +11,8 @@ pub mod store;
 
 pub use format::{enforce_24, Packed24};
 pub use gemm::{
-    gemm_2bit, gemm_f32, packed_gemm, packed_gemm_into, packed_gemm_onthefly, packed_gemm_par,
+    gemm_2bit, gemm_f32, packed_gemm, packed_gemm4, packed_gemm4_into, packed_gemm4_par,
+    packed_gemm4_par_into, packed_gemm_into, packed_gemm_onthefly, packed_gemm_par,
     packed_gemm_par_into, packed_gemm_scratch, packed_gemv, packed_gemv_into, packed_gemv_onthefly,
     packed_gemv_par, packed_gemv_par_into, Dense2Bit, PAR_MIN_MACS,
 };

@@ -1,7 +1,8 @@
 //! `stbllm bench-kernels` — the packed-kernel performance trajectory.
 //!
-//! Times the §Perf kernel lineage (v1 on-the-fly → v2 scratch → v3 LUT,
-//! serial vs parallel, fused vs per-session decode) against the dense
+//! Times the §Perf kernel lineage (v1 on-the-fly → v2 scratch → v3 LUT →
+//! v4 4x4 tile, serial vs parallel, fused vs per-session decode, chunked
+//! prefill vs token-by-token) against the dense
 //! 2-bit and f32 baselines, prints the table, and emits
 //! `reports/BENCH_kernels.json` so every PR has before/after numbers.
 //! All kernels are timed in the same process/run, so machine contention
@@ -17,8 +18,9 @@ use crate::engine::{Backend, PackedBackend};
 use crate::model::config::{Family, ModelConfig};
 use crate::model::ModelWeights;
 use crate::packed::{
-    enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm_onthefly, packed_gemm_par,
-    packed_gemm_scratch, packed_gemv, packed_gemv_onthefly, packed_gemv_par, Dense2Bit, Packed24,
+    enforce_24, gemm_2bit, gemm_f32, packed_gemm, packed_gemm4, packed_gemm_onthefly,
+    packed_gemm_par, packed_gemm_scratch, packed_gemv, packed_gemv_onthefly, packed_gemv_par,
+    Dense2Bit, Packed24,
 };
 use crate::report::{reports_dir, Report};
 use crate::tensor::{matvec, Mat};
@@ -58,6 +60,10 @@ pub struct KernelBenchOutcome {
     /// fused `decode_batch` at least as fast as per-session decode, within
     /// [`GATE_NOISE_MARGIN`]
     pub fused_beats_per_session: bool,
+    /// chunked prefill (v4 gemm, chunk 32) at least as fast per token as
+    /// token-by-token prefill (one gemv per token) on the largest shape,
+    /// within [`GATE_NOISE_MARGIN`]
+    pub chunked_prefill_beats_token: bool,
 }
 
 struct GemvRow {
@@ -82,6 +88,19 @@ struct GemmRow {
     par_s: f64,
     two_bit_s: f64,
     f32_s: f64,
+}
+
+/// One prefill measurement: a `chunk`-token prompt slice through one
+/// weight matrix, token-by-token (chunk gemv calls, re-reading the packed
+/// store per token) vs one chunked GEMM (v3 row-loop vs the v4 4x4 tile).
+struct PrefillRow {
+    rows: usize,
+    cols: usize,
+    chunk: usize,
+    token_s: f64,
+    v3_s: f64,
+    v4_s: f64,
+    packed_bytes: usize,
 }
 
 fn pack_random(rows: usize, cols: usize, rng: &mut Pcg32) -> Result<(Mat, Packed24, Dense2Bit)> {
@@ -186,6 +205,46 @@ pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Result<KernelBenchOutcome> {
             two_bit_s: two_bit.min_s(),
             f32_s: f32_t.min_s(),
         });
+    }
+
+    // ---- chunked prefill: token-by-token gemv vs v3/v4 chunk GEMM ---------
+    // the serving question behind `--prefill-chunk`: how much does reading
+    // each packed weight word once per CHUNK (instead of once per token)
+    // buy at the kernel level?
+    let prefill_shapes: &[(usize, usize)] = if opts.tiny {
+        &[(64, 64)]
+    } else if opts.smoke {
+        &[(1024, 1024)]
+    } else {
+        &[(1024, 1024), (4096, 4096)]
+    };
+    let prefill_chunks: &[usize] = &[1, 8, 32];
+    let mut prefill_rows: Vec<PrefillRow> = Vec::new();
+    for &(n, k) in prefill_shapes {
+        let (_w, packed, _two) = pack_random(n, k, &mut rng)?;
+        for &chunk in prefill_chunks {
+            let x = Mat::random(chunk, k, 1.0, &mut rng);
+            let token = BenchStats::measure(warmup, samples, || {
+                for b in 0..chunk {
+                    black_box(packed_gemv(&packed, x.row(b)));
+                }
+            });
+            let v3 = BenchStats::measure(warmup, samples, || {
+                black_box(packed_gemm(&x, &packed));
+            });
+            let v4 = BenchStats::measure(warmup, samples, || {
+                black_box(packed_gemm4(&x, &packed));
+            });
+            prefill_rows.push(PrefillRow {
+                rows: n,
+                cols: k,
+                chunk,
+                token_s: token.min_s(),
+                v3_s: v3.min_s(),
+                v4_s: v4.min_s(),
+                packed_bytes: packed.bytes(),
+            });
+        }
     }
 
     // ---- fused vs per-session decode (batch >= 4) -------------------------
@@ -318,6 +377,33 @@ pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Result<KernelBenchOutcome> {
             format!("{:.2}x", r.v1_s / r.f32_s),
         ]);
     }
+    for r in &prefill_rows {
+        let shape = format!("{}x{} chunk {}", r.rows, r.cols, r.chunk);
+        // token-by-token re-reads the packed store once per token; the
+        // chunked GEMM reads it once per chunk — the GB/s column is
+        // effective packed-store bandwidth either way
+        rep.row(vec![
+            "prefill token-by-token".into(),
+            shape.clone(),
+            fmt_t(r.token_s),
+            format!("{:.2}", (r.packed_bytes * r.chunk) as f64 / r.token_s / 1e9),
+            format!("{:.1} tok/s", r.chunk as f64 / r.token_s),
+        ]);
+        rep.row(vec![
+            "prefill gemm v3 (LUT)".into(),
+            shape.clone(),
+            fmt_t(r.v3_s),
+            format!("{:.2}", r.packed_bytes as f64 / r.v3_s / 1e9),
+            format!("{:.1} tok/s", r.chunk as f64 / r.v3_s),
+        ]);
+        rep.row(vec![
+            "prefill gemm v4 (4x4)".into(),
+            shape,
+            fmt_t(r.v4_s),
+            format!("{:.2}", r.packed_bytes as f64 / r.v4_s / 1e9),
+            format!("{:.1} tok/s", r.chunk as f64 / r.v4_s),
+        ]);
+    }
     rep.row(vec![
         "decode per-session".into(),
         format!("batch {batch} x {ticks}"),
@@ -339,6 +425,10 @@ pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Result<KernelBenchOutcome> {
     let gemv_speedup = largest.v1_s / largest.v2_s;
     let packed_beats_2bit = largest.v2_s <= largest.two_bit_s * (1.0 + GATE_NOISE_MARGIN);
     let fused_beats_per_session = fused_tok_s >= per_session_tok_s * (1.0 - GATE_NOISE_MARGIN);
+    // the --prefill-chunk gate: on the largest shape's widest chunk, the
+    // v4 chunk GEMM must not be slower than issuing one gemv per token
+    let widest = prefill_rows.last().expect("at least one prefill row");
+    let chunked_prefill_beats_token = widest.v4_s <= widest.token_s * (1.0 + GATE_NOISE_MARGIN);
     let j = obj(vec![
         ("schema", s("stbllm-kernel-bench-v1")),
         ("smoke", Json::Bool(opts.smoke)),
@@ -394,6 +484,29 @@ pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Result<KernelBenchOutcome> {
             ),
         ),
         (
+            "prefill",
+            Json::Arr(
+                prefill_rows
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("rows", num(r.rows as f64)),
+                            ("cols", num(r.cols as f64)),
+                            ("chunk", num(r.chunk as f64)),
+                            ("token_by_token_s", num(r.token_s)),
+                            ("v3_s", num(r.v3_s)),
+                            ("v4_s", num(r.v4_s)),
+                            ("token_tok_s", num(r.chunk as f64 / r.token_s)),
+                            ("v4_tok_s", num(r.chunk as f64 / r.v4_s)),
+                            ("v4_gb_s", num(r.packed_bytes as f64 / r.v4_s / 1e9)),
+                            ("v4_speedup_vs_token", num(r.token_s / r.v4_s)),
+                            ("v4_speedup_vs_v3", num(r.v3_s / r.v4_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
             "decode",
             obj(vec![
                 ("batch", num(batch as f64)),
@@ -409,6 +522,7 @@ pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Result<KernelBenchOutcome> {
                 ("gemv_v2_speedup_on_largest", num(gemv_speedup)),
                 ("packed_ge_2bit_on_largest", Json::Bool(packed_beats_2bit)),
                 ("fused_ge_per_session", Json::Bool(fused_beats_per_session)),
+                ("chunked_ge_token_by_token", Json::Bool(chunked_prefill_beats_token)),
             ]),
         ),
     ]);
@@ -423,6 +537,7 @@ pub fn run_kernel_bench(opts: &KernelBenchOpts) -> Result<KernelBenchOutcome> {
         gemv_speedup_on_largest: gemv_speedup,
         packed_beats_2bit,
         fused_beats_per_session,
+        chunked_prefill_beats_token,
     })
 }
 
@@ -458,6 +573,9 @@ mod tests {
         assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "stbllm-kernel-bench-v1");
         assert!(j.path(&["decode", "fused_tok_s"]).unwrap().as_f64().unwrap() > 0.0);
         assert!(!j.get("gemv").unwrap().as_arr().unwrap().is_empty());
+        // prefill section: chunks {1, 8, 32} per shape, gate bool present
+        assert_eq!(j.get("prefill").unwrap().as_arr().unwrap().len(), 3);
+        assert!(j.path(&["checks", "chunked_ge_token_by_token"]).is_some());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -44,6 +44,9 @@ pub mod defaults {
     pub const LOADGEN_CONNECTIONS: usize = 4;
     /// Total requests for `stbllm loadgen`.
     pub const LOADGEN_REQUESTS: usize = 16;
+    /// Per-tick prefill-token budget per session for `serve`
+    /// (`--prefill-chunk`; 1 = legacy one-token-per-tick).
+    pub const PREFILL_CHUNK: usize = 32;
 }
 
 /// Parsed command-line arguments: options + positionals.

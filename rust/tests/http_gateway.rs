@@ -536,6 +536,51 @@ fn two_replicas_stream_byte_identical_to_one() {
     assert_eq!(report.leaked_pages, 0, "two-replica drain leaked pages: {report:?}");
 }
 
+/// Chunked prefill must be invisible in the stream bytes: the same
+/// prompts through the default chunk budget (32) and a mid-prompt chunk
+/// size (3, so a 10-token prompt spans four ticks) yield token streams
+/// byte-identical to `--prefill-chunk 1` (the legacy one-token-per-tick
+/// path), and every drain is leak-free.
+#[test]
+fn chunked_prefill_streams_byte_identical_to_token_by_token() {
+    let (cfg, w) = tiny();
+    // 10-token prompts with shared prefixes so chunked prefill also meets
+    // mid-chunk prefix-cache resumes
+    let prompts: Vec<Vec<u8>> =
+        (0..4u8).map(|i| (0..10u8).map(|j| (i / 2) * 7 + j).collect()).collect();
+
+    let legacy = Gateway::start_with(&cfg, &w, 2, |o| o.prefill_chunk = 1);
+    let baseline: Vec<Vec<u8>> =
+        prompts.iter().map(|p| post_generate(legacy.addr, p, 4).0).collect();
+    let report = legacy.drain();
+    assert_eq!(report.leaked_pages, 0, "chunk-1 drain leaked pages: {report:?}");
+
+    for chunk in [3usize, 32] {
+        let gw = Gateway::start_with(&cfg, &w, 2, move |o| o.prefill_chunk = chunk);
+        for (p, want) in prompts.iter().zip(&baseline) {
+            let (got, done) = post_generate(gw.addr, p, 4);
+            assert_eq!(
+                &got, want,
+                "prompt {p:?}: prefill chunk {chunk} changed the stream bytes"
+            );
+            assert_eq!(done.get("stopped").unwrap().as_str(), Some("completed"));
+            // the trace must account the whole prompt between the prefix
+            // cache and actual prefill work
+            let trace = done.get("trace").expect("done event carries a trace");
+            let n = |k: &str| trace.get(k).and_then(Json::as_usize).unwrap_or(0);
+            assert_eq!(
+                n("prefill_tokens") + n("prefix_hit_tokens"),
+                p.len(),
+                "chunk {chunk}: trace must cover the prompt: {}",
+                trace.dump()
+            );
+        }
+        let report = gw.drain();
+        assert_eq!(report.completed, prompts.len());
+        assert_eq!(report.leaked_pages, 0, "chunk-{chunk} drain leaked pages: {report:?}");
+    }
+}
+
 /// A replica that exhausts its restart budget must not take queued work
 /// with it: requests still on the dead replica's channel migrate to the
 /// survivor and complete, the router stops routing to the corpse, and
